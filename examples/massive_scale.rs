@@ -1,0 +1,89 @@
+//! Massive-scale simulation (paper §5.8): thousands of DNN fragments,
+//! far beyond what a single testbed GPU could host.  Compares the total
+//! GPU share allocated by Graft (merging threshold 0.01 as in the
+//! paper), GSLICE, GSLICE⁺ and Static, and reports scheduler wall time.
+//!
+//!   cargo run --release --example massive_scale -- [n_fragments] [model]
+
+use std::time::Instant;
+
+use graft::config::Config;
+use graft::coordinator::baselines::{gslice, gslice_plus};
+use graft::coordinator::merging::MergeOptions;
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::experiments::common::random_fragments;
+use graft::profiler::{AllocConstraints, CostModel};
+use graft::sim::pack;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args
+        .first()
+        .map(|s| s.parse().expect("n_fragments"))
+        .unwrap_or(2000);
+    let model = args.get(1).map(String::as_str).unwrap_or("inc");
+
+    let cm = CostModel::new(Config::embedded());
+    let mi = cm.model_index(model).expect("known model");
+    let frags = random_fragments(&cm, mi, n, 0xBEEF);
+    let cons = AllocConstraints::default();
+    println!("massive_scale: {n} random {model} fragments\n");
+    println!(
+        "{:<10} {:>12} {:>8} {:>10} {:>10}",
+        "system", "share_total", "gpus", "sets", "time_ms"
+    );
+
+    // Graft (merging threshold 0.01 per §5.8)
+    let sched = Scheduler::new(
+        cm.clone(),
+        SchedulerOptions {
+            merge: MergeOptions { threshold: 0.01, ..Default::default() },
+            pool_size: 4,
+            ..Default::default()
+        },
+    );
+    let t0 = Instant::now();
+    let (plan, stats) = sched.plan(&frags);
+    let graft_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let gpus = pack(&cm, &plan, None).map(|p| p.gpus).unwrap_or(0);
+    println!(
+        "{:<10} {:>12} {:>8} {:>10} {:>10.1}",
+        "graft",
+        plan.total_share(),
+        gpus,
+        plan.sets.len(),
+        graft_ms
+    );
+    println!(
+        "  (merge {} -> {} fragments in {:.1} ms; {} groups)",
+        stats.n_input, stats.n_after_merge, stats.merge_ms, stats.n_groups
+    );
+
+    type Baseline = fn(
+        &CostModel,
+        &[graft::coordinator::FragmentSpec],
+        &AllocConstraints,
+    ) -> graft::coordinator::ExecutionPlan;
+    let baselines: [(&str, Baseline); 2] =
+        [("gslice", gslice), ("gslice+", gslice_plus)];
+    for (name, build) in baselines {
+        let t = Instant::now();
+        let p = build(&cm, &frags, &cons);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{:<10} {:>12} {:>8} {:>10} {:>10.1}",
+            name,
+            p.total_share(),
+            pack(&cm, &p, None).map(|x| x.gpus).unwrap_or(0),
+            p.sets.len(),
+            ms
+        );
+    }
+    println!(
+        "\nGraft vs GSLICE: {:.1}% less GPU share",
+        100.0
+            * (1.0
+                - plan.total_share() as f64
+                    / gslice(&cm, &frags, &cons).total_share() as f64)
+    );
+}

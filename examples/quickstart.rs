@@ -1,0 +1,86 @@
+//! Quickstart: the Graft public API in ~60 lines.
+//!
+//! 1. load the canonical config and cost model;
+//! 2. describe a handful of hybrid-DL fragment demands;
+//! 3. run the Graft scheduler (merge → group → re-partition);
+//! 4. inspect the plan and compare against GSLICE;
+//! 5. (if `make artifacts` has run) execute one fragment on PJRT.
+//!
+//!   cargo run --release --example quickstart
+
+use graft::config::Config;
+use graft::coordinator::baselines::gslice;
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::coordinator::{ClientId, FragmentSpec};
+use graft::profiler::{AllocConstraints, CostModel};
+use graft::runtime::{default_artifacts_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    // 1. configuration + analytical cost model (calibrated to Table 2)
+    let cm = CostModel::new(Config::embedded());
+    let inc = cm.model_index("inc").unwrap();
+
+    // 2. five Inception clients with misaligned partition points — the
+    //    exact situation of the paper's Fig 1/Fig 3
+    let demands: Vec<FragmentSpec> = [
+        (0u32, 2usize, 110.0),
+        (1, 2, 95.0),
+        (2, 3, 100.0),
+        (3, 4, 120.0),
+        (4, 5, 90.0),
+    ]
+    .iter()
+    .map(|&(id, p, budget_ms)| {
+        FragmentSpec::single(ClientId(id), inc, p, budget_ms, 30.0)
+    })
+    .collect();
+
+    // 3. Graft plan
+    let scheduler = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let (plan, stats) = scheduler.plan(&demands);
+    println!(
+        "Graft: {} demands -> {} re-aligned sets in {:.2} ms",
+        demands.len(),
+        plan.sets.len(),
+        stats.total_ms
+    );
+    for set in &plan.sets {
+        println!(
+            "  re-partition@{:<2} members={} shared: batch={} share={}% x{}",
+            set.point,
+            set.members.len(),
+            set.shared.alloc.batch,
+            set.shared.alloc.share,
+            set.shared.alloc.instances
+        );
+    }
+
+    // 4. compare with GSLICE (no re-alignment)
+    let baseline = gslice(&cm, &demands, &AllocConstraints::default());
+    println!(
+        "total GPU share: graft={}%  gslice={}%  (saving {:.0}%)",
+        plan.total_share(),
+        baseline.total_share(),
+        100.0
+            * (1.0
+                - plan.total_share() as f64
+                    / baseline.total_share() as f64)
+    );
+
+    // 5. run a real fragment if the AOT artifacts are present
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::new(&dir)?;
+        let dims = engine.manifest().models["inc"].dims.clone();
+        let x: Vec<Vec<f32>> = vec![vec![0.1; dims[2]]; 2];
+        let out = engine.run("inc", 2, dims.len() - 1, &x)?;
+        println!(
+            "PJRT: executed inc fragment [2..{}] on batch 2 -> {} logits/row",
+            dims.len() - 1,
+            out.dim_out
+        );
+    } else {
+        println!("(run `make artifacts` to enable the PJRT demo step)");
+    }
+    Ok(())
+}

@@ -1,0 +1,271 @@
+//! End-to-end driver (DESIGN.md §6): replay a 5G trace for a small fleet
+//! of hybrid-DL clients against the *real* serving stack — TCP ingress,
+//! Graft scheduling, batch queues, and PJRT execution of the AOT
+//! artifacts — and report latency/throughput/SLO attainment.
+//!
+//! The run proceeds in epochs: at each epoch boundary every client
+//! re-partitions against its current bandwidth (Neurosurgeon restricted
+//! to the compiled point set), Graft re-plans, and the executor is
+//! re-deployed (the paper's trigger-based re-planning; outdated
+//! instances terminate at the swap).
+//!
+//! On machines with few cores, real-time pacing is noisy (scheduling
+//! delays rival the modeled GPU latencies); `TIME_SCALE` runs the whole
+//! data path in slowed virtual time — arrivals, pacing and budgets all
+//! scale together and every reported number is in *modeled* (GPU-time)
+//! milliseconds, so results are machine-independent.
+//!
+//!   cargo run --release --example serve_trace -- [model] [clients] [epochs] [epoch_s] [time_scale]
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use graft::config::Config;
+use graft::coordinator::repartition::RepartitionOptions;
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::experiments::common::{fleet, Scale};
+use graft::hybrid::ClientSim;
+use graft::metrics::LatencyStats;
+use graft::profiler::CostModel;
+use graft::runtime::{default_artifacts_dir, Engine};
+use graft::serving::{Request, Server, ServerOptions, TcpClient, TcpFront};
+use graft::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("vgg").to_string();
+    let n_clients: usize =
+        args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let epochs: usize =
+        args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let epoch_s: f64 =
+        args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(5.0);
+    // wall milliseconds per modeled GPU millisecond; sized for 1-core CI
+    let time_scale: f64 =
+        args.get(4).map(|s| s.parse()).transpose()?.unwrap_or(6.0);
+
+    let cm = CostModel::new(Config::embedded());
+    let mi = cm.model_index(&model).expect("known model");
+    let spec = &cm.config().models[mi];
+    let engine = Arc::new(Engine::new(&default_artifacts_dir())?);
+
+    // clients restricted to compiled partition points (p < layers)
+    let points = spec.points();
+    let clients: Vec<ClientSim> = fleet(
+        &cm,
+        mi,
+        Scale::SmallHeter,
+        cm.config().slo_ratio_default,
+        7,
+    )
+    .into_iter()
+    .take(n_clients)
+    .map(|c| c.with_candidates(points[..points.len() - 1].to_vec()))
+    .collect();
+
+    println!(
+        "serve_trace: model={model} clients={n_clients} epochs={epochs} \
+         epoch={epoch_s}s rate={} RPS/client",
+        spec.rate_rps
+    );
+
+    let mut all = LatencyStats::new();
+    let mut total_sent = 0u64;
+    let mut total_served = 0u64;
+    let mut total_dropped = 0u64;
+    let mut slo_ok = 0u64;
+    let mut total_batches = 0u64;
+    let mut total_batched_reqs = 0u64;
+    let wall0 = Instant::now();
+
+    for epoch in 0..epochs {
+        let t_trace = epoch as f64 * epoch_s;
+        // 1. snapshot demands; re-plan (the trigger-based re-schedule)
+        let mut specs = Vec::new();
+        let mut states = Vec::new();
+        for c in &clients {
+            let st = c.state_at(&cm, t_trace);
+            if let Some(s) = st.spec.clone() {
+                specs.push(s);
+            }
+            states.push(st);
+        }
+        let sched = Scheduler::new(
+            cm.clone(),
+            SchedulerOptions {
+                repartition: RepartitionOptions {
+                    point_set: Some(points.clone()),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let (plan, stats) = sched.plan(&specs);
+        println!(
+            "epoch {epoch}: {} demands -> {} sets, {}% share, planned in {:.1} ms",
+            specs.len(),
+            plan.sets.len(),
+            plan.total_share(),
+            stats.total_ms
+        );
+
+        // 2. deploy (warm up the PJRT executables first: lazy compilation
+        //    takes ~1 s per fragment and would pollute the epoch's tail)
+        let frags: Vec<(String, usize, usize)> = plan
+            .sets
+            .iter()
+            .flat_map(|set| {
+                let name = cm.config().models[set.model].name.clone();
+                let mut v = vec![(
+                    name.clone(),
+                    set.shared.frag.start,
+                    set.shared.frag.end,
+                )];
+                v.extend(set.members.iter().filter_map(|m| {
+                    m.align
+                        .as_ref()
+                        .map(|a| (name.clone(), a.frag.start, a.frag.end))
+                }));
+                v
+            })
+            .collect();
+        let n_warm = engine.warmup(&frags)?;
+        println!("  warmed {n_warm} executables");
+        let server = Arc::new(Server::start(
+            engine.clone(),
+            &cm,
+            &plan,
+            ServerOptions { time_scale, drop_on_slo: true },
+        ));
+        let front = TcpFront::start("127.0.0.1:0", server.clone())?;
+        let addr = front.addr;
+
+        // 3. drive the clients for one epoch (threads; real TCP loopback)
+        let mut handles = Vec::new();
+        for (ci, c) in clients.iter().enumerate() {
+            let st = states[ci].clone();
+            let Some(cspec) = st.spec.clone() else { continue };
+            let dims = cm.config().models[mi].dims.clone();
+            let rate = spec.rate_rps / time_scale; // virtual-time arrivals
+            let slo_ms = st.slo_ms;
+            let client_id = c.id.0;
+            let epoch_wall_s = epoch_s * time_scale;
+            handles.push(std::thread::spawn(move || {
+                let tcp = TcpClient::connect(addr).expect("connect");
+                let mut tcp_w = tcp.try_clone().expect("clone");
+                let (rtx, rrx) = mpsc::channel();
+                let reader = std::thread::spawn(move || {
+                    let mut tcp_r = tcp;
+                    while let Ok(resp) = tcp_r.recv() {
+                        if rtx.send(resp).is_err() {
+                            break;
+                        }
+                    }
+                });
+                let mut rng = Rng::seed_from_u64(1000 + client_id as u64);
+                let gap = Duration::from_secs_f64(1.0 / rate);
+                let start = Instant::now();
+                let mut sent = 0u64;
+                let mut seq = 0u32;
+                while start.elapsed().as_secs_f64() < epoch_wall_s {
+                    let payload: Vec<f32> = (0..dims[cspec.p])
+                        .map(|_| rng.normal() as f32)
+                        .collect();
+                    tcp_w
+                        .send(&Request {
+                            client_id,
+                            model: 0,
+                            p: cspec.p as u16,
+                            seq,
+                            t_capture_ms: 0.0,
+                            upstream_ms: st.mobile_ms + st.transfer_ms,
+                            budget_ms: cspec.budget_ms,
+                            payload,
+                        })
+                        .expect("send");
+                    sent += 1;
+                    seq += 1;
+                    std::thread::sleep(gap);
+                }
+                // grace period for in-flight responses, then hang up
+                // (explicit shutdown: the reader clone keeps the fd open)
+                std::thread::sleep(Duration::from_millis(400));
+                tcp_w.shutdown();
+                drop(tcp_w);
+                let mut lat = LatencyStats::new();
+                let mut served = 0u64;
+                let mut dropped = 0u64;
+                let mut ok = 0u64;
+                for resp in rrx.try_iter() {
+                    if resp.dropped {
+                        dropped += 1;
+                    } else {
+                        served += 1;
+                        lat.record(resp.e2e_ms);
+                        if resp.e2e_ms <= slo_ms {
+                            ok += 1;
+                        }
+                    }
+                }
+                drop(reader); // detached; socket closes when tcp_r errors
+                (sent, served, dropped, ok, lat)
+            }));
+        }
+        for h in handles {
+            let (sent, served, dropped, ok, lat) = h.join().unwrap();
+            total_sent += sent;
+            total_served += served;
+            total_dropped += dropped;
+            slo_ok += ok;
+            all.merge(&lat);
+        }
+        use std::sync::atomic::Ordering;
+        total_batches += server.counters.batches.load(Ordering::Relaxed);
+        total_batched_reqs +=
+            server.counters.batched_requests.load(Ordering::Relaxed);
+        println!(
+            "  epoch {epoch}: served={} dropped={} budget_violations={}",
+            server.counters.served.load(Ordering::Relaxed),
+            server.counters.dropped.load(Ordering::Relaxed),
+            server.counters.budget_violations.load(Ordering::Relaxed)
+        );
+        front.stop();
+        if let Ok(s) = Arc::try_unwrap(server) {
+            s.shutdown();
+        }
+    }
+
+    let wall = wall0.elapsed().as_secs_f64();
+    let virt = wall / time_scale;
+    println!("\n=== serve_trace summary ({model}) ===");
+    println!(
+        "wall time           : {wall:.1} s ({virt:.1} virtual s at x{time_scale})"
+    );
+    println!("requests sent       : {total_sent}");
+    println!(
+        "served / dropped    : {total_served} / {total_dropped} ({:.1}% dropped)",
+        100.0 * total_dropped as f64 / total_sent.max(1) as f64
+    );
+    println!(
+        "throughput          : {:.1} req/s served (virtual time)",
+        total_served as f64 / virt
+    );
+    println!(
+        "mean batch size     : {:.2}",
+        total_batched_reqs as f64 / total_batches.max(1) as f64
+    );
+    if !all.is_empty() {
+        println!(
+            "e2e latency (ms)    : p50 {:.1}  p95 {:.1}  p99 {:.1}  mean {:.1}",
+            all.percentile(50.0),
+            all.percentile(95.0),
+            all.percentile(99.0),
+            all.mean()
+        );
+        println!(
+            "SLO attainment      : {:.1}% of served",
+            100.0 * slo_ok as f64 / total_served.max(1) as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT pipeline: lower model fragments to HLO text + weight blobs.
+
+``make artifacts`` runs this once; afterwards Python never touches the
+request path.  For every fragment ``(model, start, end)`` in the compile
+spec and every bucketed batch size we emit
+``artifacts/<model>_s<start>_e<end>_b<batch>.hlo.txt`` plus one
+``artifacts/weights_<model>.bin`` per model and a ``manifest.json`` the
+Rust runtime indexes by ``(model, start, end, batch)``.
+
+Interchange format is **HLO text** (not ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the ``xla`` 0.1.6 crate links) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+The compile spec covers every fragment the executor-backed scheduler can
+pick: for each model, the candidate point set is
+``{0} | common_starts | {L}``; artifacts exist for all ordered pairs
+drawn from it.  The simulation experiments (most paper figures) use the
+analytical profiler and need no artifacts at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import itertools
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import build_models, load_config
+
+DEFAULT_MODELS = ["inc", "res", "vgg", "mob", "vit"]
+DEFAULT_BATCHES = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def fragment_points(model_cfg: dict) -> list[int]:
+    """Candidate (re-)partition points: {0} | common_starts | {L}."""
+    pts = {0, model_cfg["layers"], *model_cfg["common_starts"]}
+    return sorted(pts)
+
+
+def compile_spec(config: dict, model_names: list[str],
+                 batches: list[int]) -> list[tuple[str, int, int, int]]:
+    """All (model, start, end, batch) tuples to lower."""
+    spec = []
+    by_name = {m["name"]: m for m in config["models"]}
+    for name in model_names:
+        pts = fragment_points(by_name[name])
+        for start, end in itertools.combinations(pts, 2):
+            for b in batches:
+                spec.append((name, start, end, b))
+    return spec
+
+
+def lower_fragment(model, start: int, end: int, batch: int) -> str:
+    fn = model.fragment_fn(start, end)
+    specs = model.fragment_arg_specs(start, end, batch)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def config_digest(config: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(config, sort_keys=True).encode()
+    ).hexdigest()[:16]
+
+
+def build_artifacts(out_dir: str, model_names: list[str],
+                    batches: list[int], config: dict | None = None,
+                    verbose: bool = True) -> dict:
+    """Lower the full compile spec into ``out_dir``; returns the manifest."""
+    config = config or load_config()
+    models = build_models(config)
+    by_name = {m["name"]: m for m in config["models"]}
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = []
+    for name in model_names:
+        model = models[name]
+        wpath = f"weights_{name}.bin"
+        with open(os.path.join(out_dir, wpath), "wb") as f:
+            f.write(model.weights_blob())
+        if verbose:
+            print(f"[aot] {name}: wrote {wpath} "
+                  f"({len(model.weights_blob()) // 1024} KiB)")
+
+    spec = compile_spec(config, model_names, batches)
+    for i, (name, start, end, batch) in enumerate(spec):
+        model = models[name]
+        fname = f"{name}_s{start}_e{end}_b{batch}.hlo.txt"
+        text = lower_fragment(model, start, end, batch)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "model": name,
+            "start": start,
+            "end": end,
+            "batch": batch,
+            "path": fname,
+            "weights": f"weights_{name}.bin",
+            "input_shape": [batch, model.dims[start]],
+            "output_shape": [batch, model.dims[end]],
+            # layer j (1-indexed, in [start+1, end]) contributes params
+            # (w:[dims[j-1],dims[j]], b:[dims[j]]) in order after x.
+            "param_layers": list(range(start + 1, end + 1)),
+        })
+        if verbose and (i % 20 == 0 or i == len(spec) - 1):
+            print(f"[aot] lowered {i + 1}/{len(spec)}: {fname}")
+
+    manifest = {
+        "config_digest": config_digest(config),
+        "models": {
+            name: {"dims": by_name[name]["dims"],
+                   "points": fragment_points(by_name[name])}
+            for name in model_names
+        },
+        "batches": batches,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] manifest: {len(entries)} artifacts in {out_dir}")
+    return manifest
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS),
+                    help="comma-separated model names (or 'all')")
+    ap.add_argument("--batches", default=",".join(map(str, DEFAULT_BATCHES)))
+    args = ap.parse_args(argv)
+
+    config = load_config()
+    names = ([m["name"] for m in config["models"]]
+             if args.models == "all" else args.models.split(","))
+    batches = [int(b) for b in args.batches.split(",")]
+    build_artifacts(args.out, names, batches, config)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

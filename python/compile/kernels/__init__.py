@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles."""
+
+from .linear_block import linear_block, mxu_utilisation, vmem_bytes
+from .ref import fragment_ref, linear_block_ref
+
+__all__ = [
+    "linear_block",
+    "linear_block_ref",
+    "fragment_ref",
+    "vmem_bytes",
+    "mxu_utilisation",
+]

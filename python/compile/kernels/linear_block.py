@@ -1,0 +1,150 @@
+"""L1: tiled linear-block Pallas kernel — the per-layer compute hot-spot.
+
+Every layer of the five stand-in DNNs is a ``linear_block``:
+``y = act(x @ w + b)`` over ``x:[M,K] w:[K,N] b:[N]``.  The paper's hot
+spot is CUDA kernels executed under MPS shares; the TPU re-think (see
+DESIGN.md §3) is an MXU-tiled matmul with VMEM-resident blocks:
+
+* the grid is ``(M/bm, N/bn, K/bk)`` — the K axis is the innermost,
+  sequential, accumulation axis (double-buffered HBM->VMEM streaming is
+  expressed by the BlockSpec index maps, the analogue of the paper's
+  threadblock tiling);
+* each grid step multiplies a ``(bm,bk)`` x ``(bk,bn)`` tile pair on the
+  MXU and accumulates into the ``(bm,bn)`` output tile kept in VMEM;
+* bias add + activation are fused into the last K step, so the block is
+  a single kernel (the paper's fused conv+bias+relu analogue).
+
+``interpret=True`` is mandatory: this repo executes on CPU PJRT, and a
+real-TPU lowering would emit a Mosaic custom-call the CPU plugin cannot
+run.  Real-TPU performance is *estimated* from the VMEM footprint / MXU
+utilisation of the chosen block shapes (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  The stand-in widths are <= 512, so a whole layer's
+# working set fits VMEM comfortably:
+#   x-tile bm*bk + w-tile bk*bn + o-tile bm*bn  (f32)
+# at bm=32, bk=bn=512: (32*512 + 512*512 + 32*512) * 4B = 1.13 MiB << 16 MiB.
+# We therefore default to whole-matrix tiles (grid collapses to the batch
+# axis): one MXU pass per layer instead of (N/64)*(K/64) sequential grid
+# steps.  This matters doubly here because interpret-mode lowering turns
+# every grid step into an XLA while-loop iteration with dynamic slices —
+# the 64x64 default cost ~20-60 ms per fragment on the CPU PJRT hot path
+# vs ~1 ms with whole-matrix tiles (EXPERIMENTS.md §Perf, L1 iteration 1).
+# For layers wider than VMEM allows, pass explicit bn/bk (the kernel keeps
+# full tiling support; tests sweep small tiles).
+DEFAULT_BN = 512
+DEFAULT_BK = 512
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+}
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One grid step: accumulate x-tile @ w-tile; finalise on last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalise():
+        o_ref[...] = _ACTIVATIONS[act](o_ref[...] + b_ref[...][None, :])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
+def linear_block(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    bm: int | None = None,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      act: one of ``none|relu|gelu``.
+      bm/bn/bk: tile sizes; must divide (padded) M/N/K.
+      interpret: keep True for CPU PJRT (see module docstring).
+
+    Returns:
+      ``[M, N]`` output, same dtype as ``x``.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(
+            f"linear_block expects x:[M,K] w:[K,N] b:[N], got "
+            f"{x.shape}/{w.shape}/{b.shape}"
+        )
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(
+            f"shape mismatch: x:{x.shape} w:{w.shape} b:{b.shape}"
+        )
+    if act not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if n % bn or k % bk:
+        raise ValueError(f"tile sizes bn={bn},bk={bk} must divide N={n},K={k}")
+
+    # The batch axis is small in serving (<=32); pad it to the tile size so
+    # the grid stays rectangular (bucketed batching pads on the Rust side
+    # too, so the padding here is usually a no-op).
+    bm = bm or min(16, m)
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mp = m + pad_m
+
+    nk = k // bk
+    grid = (mp // bm, n // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+    return out[:m] if pad_m else out
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate for one grid step (perf model input)."""
+    return (bm * bk + bk * bn + bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilisation(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for a (bm,bk)x(bk,bn) tile matmul."""
+    return min(1.0, bm / mxu) * min(1.0, bn / mxu) * min(1.0, bk / mxu)

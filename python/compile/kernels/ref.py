@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernels and the AOT-compiled fragments are
+validated against in ``python/tests/``.  They use only ``jax.numpy`` so any
+numerical divergence is attributable to the kernel implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+}
+
+
+def linear_block_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "relu"
+) -> jax.Array:
+    """Reference ``act(x @ w + b)``."""
+    return _ACTIVATIONS[act](jnp.dot(x, w) + b[None, :])
+
+
+def fragment_ref(x: jax.Array, layer_params, acts) -> jax.Array:
+    """Reference forward through a list of ``(w, b)`` layers.
+
+    ``acts`` is the per-layer activation name list (same length as
+    ``layer_params``).
+    """
+    for (w, b), act in zip(layer_params, acts):
+        x = linear_block_ref(x, w, b, act=act)
+    return x

@@ -1,0 +1,162 @@
+"""L2: the five stand-in DNNs as JAX layer graphs (build-time only).
+
+Each of the paper's TorchVision models (Inception-v3, ResNet-101, VGG11,
+DeepLabV3-MobileNetV3-L, ViT-B16) is represented by a stand-in network
+with the same layer count (Table 2) whose per-layer widths come from
+``configs/models.json`` — the single source of truth shared with the Rust
+profiler.  Layer ``i`` (1-indexed) maps ``dims[i-1] -> dims[i]`` through
+the fused :func:`~compile.kernels.linear_block` Pallas kernel; the final
+layer uses no activation (classification/regression head).
+
+A *fragment* ``(start, end)`` is the sub-network of layers
+``start+1 .. end``; hybrid DL runs fragment ``(0, p)`` on the mobile
+device and ``(p, L)`` on the server, and Graft's re-alignment additionally
+creates alignment-stage fragments ``(p_i, p')`` plus one shared fragment
+``(p', L)``.
+
+Weights are deterministic (He-init from a per-model seed) so the Rust
+runtime and the Python oracle agree bit-for-bit on the same weight file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import fragment_ref, linear_block
+
+_CONFIG_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "configs",
+    "models.json",
+)
+
+
+def load_config(path: str | None = None) -> dict:
+    """Load configs/models.json (canonical model tables)."""
+    with open(path or _CONFIG_PATH) as f:
+        return json.load(f)
+
+
+@dataclass
+class StandInModel:
+    """A stand-in DNN: widths, deterministic weights, fragment forwards."""
+
+    name: str
+    dims: list[int]
+    seed: int
+    params: list[tuple[np.ndarray, np.ndarray]] = field(default_factory=list)
+
+    @property
+    def layers(self) -> int:
+        return len(self.dims) - 1
+
+    def __post_init__(self):
+        if not self.params:
+            self.params = self._init_params()
+
+    def _init_params(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """He-init weights from the per-model seed (deterministic)."""
+        rng = np.random.default_rng(self.seed)
+        params = []
+        for i in range(self.layers):
+            fan_in, fan_out = self.dims[i], self.dims[i + 1]
+            w = rng.normal(0.0, np.sqrt(2.0 / fan_in), (fan_in, fan_out))
+            b = rng.normal(0.0, 0.01, (fan_out,))
+            params.append((w.astype(np.float32), b.astype(np.float32)))
+        return params
+
+    def acts(self, start: int, end: int) -> list[str]:
+        """Per-layer activation names for fragment (start, end)."""
+        return [
+            "none" if i == self.layers else "relu"
+            for i in range(start + 1, end + 1)
+        ]
+
+    def fragment_params(self, start: int, end: int):
+        """The (w, b) pairs of layers start+1..end."""
+        self._check_range(start, end)
+        return self.params[start:end]
+
+    def fragment_fn(self, start: int, end: int):
+        """A jittable ``f(x, *flat_params) -> (y,)`` for the fragment.
+
+        Weights are *parameters* (not baked constants) to keep the HLO
+        text small; the Rust runtime feeds them from the weight file.
+        Returns a 1-tuple to match the ``return_tuple=True`` lowering.
+        """
+        self._check_range(start, end)
+        acts = self.acts(start, end)
+
+        def fn(x, *flat):
+            assert len(flat) == 2 * len(acts)
+            for j, act in enumerate(acts):
+                x = linear_block(x, flat[2 * j], flat[2 * j + 1], act=act)
+            return (x,)
+
+        return fn
+
+    def fragment_ref_fn(self, start: int, end: int):
+        """Pure-jnp oracle for the same fragment (same weights)."""
+        self._check_range(start, end)
+        params = [(jnp.asarray(w), jnp.asarray(b))
+                  for w, b in self.fragment_params(start, end)]
+        acts = self.acts(start, end)
+        return lambda x: fragment_ref(x, params, acts)
+
+    def fragment_arg_specs(self, start: int, end: int, batch: int):
+        """ShapeDtypeStructs for ``fragment_fn``'s arguments."""
+        self._check_range(start, end)
+        specs = [jax.ShapeDtypeStruct((batch, self.dims[start]), jnp.float32)]
+        for w, b in self.fragment_params(start, end):
+            specs.append(jax.ShapeDtypeStruct(w.shape, jnp.float32))
+            specs.append(jax.ShapeDtypeStruct(b.shape, jnp.float32))
+        return specs
+
+    def flat_fragment_params(self, start: int, end: int):
+        """Weights flattened in ``fragment_fn`` argument order."""
+        flat = []
+        for w, b in self.fragment_params(start, end):
+            flat.extend((jnp.asarray(w), jnp.asarray(b)))
+        return flat
+
+    def weights_blob(self) -> bytes:
+        """All layers' (w, b) as little-endian f32, layer-major.
+
+        Layout (layer i = 1..L): w_i row-major [dims[i-1], dims[i]] then
+        b_i [dims[i]].  Offsets are derivable from ``dims`` alone, which
+        is how the Rust runtime indexes into the file.
+        """
+        chunks = []
+        for w, b in self.params:
+            chunks.append(w.astype("<f4").tobytes())
+            chunks.append(b.astype("<f4").tobytes())
+        return b"".join(chunks)
+
+    def _check_range(self, start: int, end: int) -> None:
+        if not (0 <= start < end <= self.layers):
+            raise ValueError(
+                f"bad fragment ({start},{end}) for {self.name} "
+                f"with {self.layers} layers"
+            )
+
+
+_SEED_BASE = 0x67AF7  # "Graft"
+
+
+def model_seed(name: str) -> int:
+    return _SEED_BASE + sum(ord(c) * 31 ** i for i, c in enumerate(name))
+
+
+def build_models(config: dict | None = None) -> dict[str, StandInModel]:
+    """Instantiate all stand-in models from the canonical config."""
+    config = config or load_config()
+    return {
+        m["name"]: StandInModel(m["name"], list(m["dims"]),
+                                model_seed(m["name"]))
+        for m in config["models"]
+    }

@@ -1,0 +1,80 @@
+"""AOT pipeline: manifest consistency + HLO text validity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import (
+    build_artifacts,
+    compile_spec,
+    config_digest,
+    fragment_points,
+    lower_fragment,
+)
+from compile.model import build_models, load_config
+
+CONFIG = load_config()
+MODELS = build_models(CONFIG)
+
+
+def test_fragment_points_include_bounds():
+    for m in CONFIG["models"]:
+        pts = fragment_points(m)
+        assert pts[0] == 0 and pts[-1] == m["layers"]
+        assert pts == sorted(set(pts))
+
+
+def test_compile_spec_covers_all_pairs():
+    spec = compile_spec(CONFIG, ["vgg"], [1, 4])
+    pts = fragment_points(next(m for m in CONFIG["models"]
+                               if m["name"] == "vgg"))
+    npairs = len(pts) * (len(pts) - 1) // 2
+    assert len(spec) == npairs * 2
+    assert all(s < e for (_, s, e, _) in spec)
+
+
+def test_lowered_hlo_is_text_with_entry():
+    text = lower_fragment(MODELS["vgg"], 4, 6, 2)
+    assert "ENTRY" in text and "HloModule" in text
+    # parameters of the ENTRY computation: x + 2 layers * (w, b)
+    entry = text[text.index("ENTRY"):]
+    entry = entry[: entry.index("\n}")]
+    assert entry.count("parameter(") == 1 + 2 * 2
+
+
+def test_build_artifacts_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = build_artifacts(out, ["vgg"], [1, 2], CONFIG, verbose=False)
+    assert manifest["config_digest"] == config_digest(CONFIG)
+    disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert disk["entries"] == manifest["entries"]
+    for e in manifest["entries"]:
+        path = os.path.join(out, e["path"])
+        assert os.path.exists(path), e["path"]
+        assert e["input_shape"][0] == e["batch"]
+        dims = manifest["models"][e["model"]]["dims"]
+        assert e["input_shape"][1] == dims[e["start"]]
+        assert e["output_shape"][1] == dims[e["end"]]
+    # one weight blob with the full parameter set
+    wpath = os.path.join(out, "weights_vgg.bin")
+    m = MODELS["vgg"]
+    assert os.path.getsize(wpath) == len(m.weights_blob())
+
+
+def test_weight_blob_roundtrip_matches_params(tmp_path):
+    out = str(tmp_path / "artifacts")
+    build_artifacts(out, ["vgg"], [1], CONFIG, verbose=False)
+    m = MODELS["vgg"]
+    blob = np.fromfile(os.path.join(out, "weights_vgg.bin"), dtype="<f4")
+    off = 0
+    for i in range(m.layers):
+        wlen = m.dims[i] * m.dims[i + 1]
+        w = blob[off:off + wlen].reshape(m.dims[i], m.dims[i + 1])
+        off += wlen
+        b = blob[off:off + m.dims[i + 1]]
+        off += m.dims[i + 1]
+        np.testing.assert_array_equal(w, m.params[i][0])
+        np.testing.assert_array_equal(b, m.params[i][1])
+    assert off == blob.size

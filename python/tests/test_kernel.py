@@ -1,0 +1,86 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (tile-divisible and ragged batch), dtypes and
+activations; every case asserts allclose against ``ref.py``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    linear_block,
+    linear_block_ref,
+    mxu_utilisation,
+    vmem_bytes,
+)
+
+DIMS = st.sampled_from([64, 128, 192, 256])
+BATCH = st.integers(min_value=1, max_value=17)
+ACT = st.sampled_from(["none", "relu", "gelu"])
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(dtype)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=BATCH, k=DIMS, n=DIMS, act=ACT, seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref(m, k, n, act, seed):
+    x = _rand((m, k), seed)
+    w = _rand((k, n), seed + 1) * np.float32(np.sqrt(1.0 / k))
+    b = _rand((n,), seed + 2)
+    got = np.asarray(linear_block(x, w, b, act=act))
+    want = np.asarray(linear_block_ref(x, w, b, act=act))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_kernel_bfloat16(m, seed):
+    k = n = 128
+    x = _rand((m, k), seed).astype(jnp.bfloat16)
+    w = (_rand((k, n), seed + 1) * np.float32(0.1)).astype(jnp.bfloat16)
+    b = _rand((n,), seed + 2).astype(jnp.bfloat16)
+    got = np.asarray(linear_block(x, w, b, act="relu").astype(jnp.float32))
+    want = np.asarray(
+        linear_block_ref(x, w, b, act="relu").astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 64, 64), (16, 64, 128)])
+def test_tile_size_variants(bm, bn, bk):
+    x, w, b = _rand((5, 128), 0), _rand((128, 128), 1), _rand((128,), 2)
+    got = np.asarray(linear_block(x, w, b, act="relu", bm=bm, bn=bn, bk=bk))
+    want = np.asarray(linear_block_ref(x, w, b, act="relu"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rejects_bad_shapes():
+    x, w, b = _rand((4, 128), 0), _rand((64, 128), 1), _rand((128,), 2)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        linear_block(x, w, b)
+
+
+def test_rejects_non_dividing_tiles():
+    # defaults clamp tiles to the full matrix, so force small tiles
+    x, w, b = _rand((4, 100), 0), _rand((100, 128), 1), _rand((128,), 2)
+    with pytest.raises(ValueError, match="must divide"):
+        linear_block(x, w, b, bk=64)
+
+
+def test_rejects_unknown_activation():
+    x, w, b = _rand((4, 64), 0), _rand((64, 64), 1), _rand((64,), 2)
+    with pytest.raises(ValueError, match="unknown activation"):
+        linear_block(x, w, b, act="swish")
+
+
+def test_vmem_estimate_within_budget():
+    # default tiles must fit VMEM (16 MiB) with huge headroom
+    assert vmem_bytes(16, 64, 64) < 64 * 1024
+    assert 0.0 < mxu_utilisation(16, 64, 64) <= 1.0
+    assert mxu_utilisation(128, 128, 128) == 1.0

@@ -1,0 +1,111 @@
+"""Stand-in model invariants: shapes, determinism, fragment composition."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import StandInModel, build_models, load_config, model_seed
+
+CONFIG = load_config()
+MODELS = build_models(CONFIG)
+NAMES = sorted(MODELS)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_layer_counts_match_config(name):
+    cfg = next(m for m in CONFIG["models"] if m["name"] == name)
+    assert MODELS[name].layers == cfg["layers"]
+    assert len(cfg["rel_cost"]) == cfg["layers"]
+    assert len(cfg["act_kb"]) == cfg["layers"]
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_weights_deterministic(name):
+    a = StandInModel(name, MODELS[name].dims, model_seed(name))
+    b = StandInModel(name, MODELS[name].dims, model_seed(name))
+    for (wa, ba), (wb, bb) in zip(a.params, b.params):
+        np.testing.assert_array_equal(wa, wb)
+        np.testing.assert_array_equal(ba, bb)
+
+
+def test_weights_blob_layout():
+    m = MODELS["vgg"]
+    blob = m.weights_blob()
+    expect = sum(
+        m.dims[i] * m.dims[i + 1] + m.dims[i + 1] for i in range(m.layers)
+    )
+    assert len(blob) == 4 * expect
+    # first weight round-trips
+    w0 = np.frombuffer(
+        blob[: 4 * m.dims[0] * m.dims[1]], dtype="<f4"
+    ).reshape(m.dims[0], m.dims[1])
+    np.testing.assert_array_equal(w0, m.params[0][0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(NAMES),
+    data=st.data(),
+)
+def test_fragment_composition(name, data):
+    """frag(mid,end) o frag(start,mid) == frag(start,end)."""
+    m = MODELS[name]
+    start = data.draw(st.integers(0, m.layers - 2))
+    mid = data.draw(st.integers(start + 1, m.layers - 1))
+    end = data.draw(st.integers(mid + 1, m.layers))
+    x = jnp.asarray(
+        np.random.default_rng(7).normal(size=(2, m.dims[start]))
+        .astype(np.float32)
+    )
+    whole = m.fragment_ref_fn(start, end)(x)
+    composed = m.fragment_ref_fn(mid, end)(m.fragment_ref_fn(start, mid)(x))
+    np.testing.assert_allclose(whole, composed, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_pallas_fragment_matches_ref(name):
+    m = MODELS[name]
+    start, end = 0, min(3, m.layers)
+    x = jnp.asarray(
+        np.random.default_rng(11).normal(size=(4, m.dims[start]))
+        .astype(np.float32)
+    )
+    got = jax.jit(m.fragment_fn(start, end))(
+        x, *m.flat_fragment_params(start, end)
+    )[0]
+    want = m.fragment_ref_fn(start, end)(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_final_layer_has_no_activation():
+    m = MODELS["vgg"]
+    acts = m.acts(m.layers - 2, m.layers)
+    assert acts == ["relu", "none"]
+    # the head can go negative (no relu clamp)
+    x = jnp.asarray(
+        -np.abs(np.random.default_rng(3).normal(size=(8, m.dims[0])))
+        .astype(np.float32)
+    )
+    y = np.asarray(m.fragment_ref_fn(0, m.layers)(x))
+    assert (y < 0).any()
+
+
+def test_bad_fragment_ranges_rejected():
+    m = MODELS["inc"]
+    for start, end in [(-1, 3), (3, 3), (5, 2), (0, m.layers + 1)]:
+        with pytest.raises(ValueError):
+            m.fragment_params(start, end)
+
+
+def test_activation_magnitudes_stable():
+    """He-init keeps activations O(1) through the deepest model."""
+    m = MODELS["mob"]
+    x = jnp.asarray(
+        np.random.default_rng(5).normal(size=(4, m.dims[0]))
+        .astype(np.float32)
+    )
+    y = np.asarray(m.fragment_ref_fn(0, m.layers)(x))
+    rms = float(np.sqrt((y ** 2).mean()))
+    assert 1e-3 < rms < 1e3, rms

@@ -1,0 +1,89 @@
+//! End-to-end experiment benches: the time to regenerate each paper
+//! table/figure family (useful to track harness regressions and the
+//! scheduler's scaling behaviour at experiment workloads).
+//!
+//!   cargo bench --bench experiments
+
+use graft::config::Config;
+use graft::experiments;
+use graft::profiler::CostModel;
+use graft::util::bench::{bench_with, run_group};
+
+fn main() {
+    let cm = CostModel::new(Config::embedded());
+    // one timed iteration per experiment is plenty — these are seconds-
+    // scale end-to-end regenerations
+    let quick = |id: &'static str, cm: &CostModel| {
+        bench_with(
+            id,
+            0,
+            2,
+            std::time::Duration::from_millis(1),
+            &mut || experiments::run(id, cm).unwrap().rows.len(),
+        )
+    };
+    run_group(
+        "motivation (fig2/fig4/tab2/fig6)",
+        vec![
+            quick("fig2", &cm),
+            quick("fig4", &cm),
+            quick("tab2", &cm),
+            quick("fig6", &cm),
+        ],
+    );
+    run_group(
+        "ablations (fig11..fig16)",
+        vec![
+            quick("fig11", &cm),
+            quick("fig12", &cm),
+            quick("fig13", &cm),
+            quick("fig14", &cm),
+            quick("fig15", &cm),
+            quick("fig16", &cm),
+        ],
+    );
+    run_group(
+        "latency distributions (fig8..fig10)",
+        vec![quick("fig8", &cm), quick("fig9", &cm), quick("fig10", &cm)],
+    );
+    run_group(
+        "scale (fig17/fig18/fig20/fig21)",
+        vec![
+            quick("fig17", &cm),
+            quick("fig18", &cm),
+            quick("fig20", &cm),
+            quick("fig21", &cm),
+        ],
+    );
+    // fig7/tab3 (10 repetitions x 4 scales x 5 models x 6 systems) and
+    // fig19 (contains the exponential Optimal run) are minutes-scale;
+    // bench one representative slice instead of the whole table.
+    let specs = experiments::common::random_fragments(
+        &cm,
+        cm.model_index("inc").unwrap(),
+        20,
+        7,
+    );
+    run_group(
+        "fig7 slice (one snapshot, all systems)",
+        vec![bench_with(
+            "compare_systems n=20",
+            1,
+            5,
+            std::time::Duration::from_millis(200),
+            &mut || {
+                use graft::coordinator::baselines::{gslice, gslice_plus};
+                use graft::profiler::AllocConstraints;
+                let cons = AllocConstraints::default();
+                let g = gslice(&cm, &specs, &cons).total_share();
+                let gp = gslice_plus(&cm, &specs, &cons).total_share();
+                let sched = graft::coordinator::scheduler::Scheduler::new(
+                    cm.clone(),
+                    Default::default(),
+                );
+                let (plan, _) = sched.plan(&specs);
+                (g, gp, plan.total_share())
+            },
+        )],
+    );
+}

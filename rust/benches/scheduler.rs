@@ -1,0 +1,56 @@
+//! Scheduler benches: the L3 hot paths (min_alloc, merging, grouping,
+//! Algorithm 1, full plan) at several fragment counts.
+//!
+//!   cargo bench --bench scheduler
+
+use graft::config::Config;
+use graft::coordinator::grouping::{group_fragments, GroupOptions};
+use graft::coordinator::merging::{merge_fragments, MergeOptions};
+use graft::coordinator::repartition::{realign_group, RepartitionOptions};
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::experiments::common::random_fragments;
+use graft::profiler::{AllocConstraints, CostModel, FragmentId};
+use graft::util::bench::{bench, run_group};
+
+fn main() {
+    let cm = CostModel::new(Config::embedded());
+    let inc = cm.model_index("inc").unwrap();
+    let frag = FragmentId::new(inc, 2, 17);
+
+    run_group(
+        "profiler",
+        vec![
+            bench("min_alloc (feasible)", || {
+                cm.min_alloc(frag, 40.0, 120.0, AllocConstraints::default())
+            }),
+            bench("min_alloc (infeasible)", || {
+                cm.min_alloc(frag, 0.4, 5000.0, AllocConstraints::default())
+            }),
+            bench("latency_ms", || cm.latency_ms(frag, 8, 35)),
+        ],
+    );
+
+    for &n in &[10usize, 50, 200] {
+        let frags = random_fragments(&cm, inc, n, 42);
+        let merge_opts = MergeOptions::default();
+        let group_opts = GroupOptions::default();
+        let mut benches = vec![
+            bench(&format!("merge n={n}"), || {
+                merge_fragments(&cm, &frags, &merge_opts)
+            }),
+            bench(&format!("group n={n}"), || {
+                group_fragments(&frags, &group_opts)
+            }),
+        ];
+        if n == 10 {
+            let small: Vec<_> = frags[..5].to_vec();
+            benches.push(bench("realign group-of-5", || {
+                realign_group(&cm, &small, &RepartitionOptions::default())
+            }));
+        }
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        benches
+            .push(bench(&format!("full plan n={n}"), || sched.plan(&frags)));
+        run_group(&format!("scheduler n={n}"), benches);
+    }
+}

@@ -1,0 +1,122 @@
+//! Serving data-path benches: wire protocol, batch queue, PJRT fragment
+//! execution (needs `make artifacts`), and the in-process serving loop.
+//!
+//!   cargo bench --bench serving
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use graft::config::Config;
+use graft::coordinator::repartition::{realign_group, RepartitionOptions};
+use graft::coordinator::{ClientId, FragmentSpec};
+use graft::profiler::CostModel;
+use graft::serving::{
+    BatchQueue, MockExecutor, Request, Server, ServerOptions, WorkItem,
+};
+use graft::util::bench::{bench, run_group};
+use graft::util::Rng;
+
+fn main() {
+    let cm = CostModel::new(Config::embedded());
+    let mi = cm.model_index("vgg").unwrap();
+    let dims = cm.config().models[mi].dims.clone();
+
+    // wire protocol
+    let mut rng = Rng::seed_from_u64(3);
+    let req = Request {
+        client_id: 1,
+        model: mi as u16,
+        p: 1,
+        seq: 9,
+        t_capture_ms: 0.0,
+        upstream_ms: 50.0,
+        budget_ms: 80.0,
+        payload: (0..dims[1]).map(|_| rng.normal() as f32).collect(),
+    };
+    let encoded = req.encode();
+    run_group(
+        "protocol",
+        vec![
+            bench("request encode (512-wide payload)", || req.encode()),
+            bench("request decode", || Request::decode(&encoded).unwrap()),
+        ],
+    );
+
+    // batch queue
+    run_group(
+        "batch queue",
+        vec![bench("push+pop batch of 8", || {
+            let q: BatchQueue<u32> = BatchQueue::new();
+            for i in 0..8 {
+                q.push(WorkItem {
+                    payload: vec![0.0; 8],
+                    server_arrival: std::time::Instant::now(),
+                    budget_ms: 100.0,
+                    accumulated_ms: 0.0,
+                    ctx: i,
+                });
+            }
+            q.pop_batch(8).unwrap().len()
+        })],
+    );
+
+    // in-process serving loop with the mock executor (no pacing)
+    let specs = vec![
+        FragmentSpec::single(ClientId(0), mi, 1, 90.0, 30.0),
+        FragmentSpec::single(ClientId(1), mi, 2, 80.0, 30.0),
+    ];
+    let plan = realign_group(&cm, &specs, &RepartitionOptions::default());
+    let dims_map: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    let server = Server::start(
+        Arc::new(MockExecutor { dims: dims_map }),
+        &cm,
+        &plan,
+        ServerOptions { time_scale: 0.0, drop_on_slo: false },
+    );
+    let payload: Vec<f32> = vec![0.5; dims[1]];
+    run_group(
+        "serving loop (mock executor)",
+        vec![bench("submit -> response", || {
+            let (tx, rx) = mpsc::channel();
+            server.submit(
+                Request {
+                    client_id: 0,
+                    model: mi as u16,
+                    p: 1,
+                    seq: 0,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: payload.clone(),
+                },
+                tx,
+            );
+            rx.recv().unwrap()
+        })],
+    );
+    server.shutdown();
+
+    // real PJRT execution (skipped without artifacts)
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = graft::runtime::Engine::new(&dir).unwrap();
+        let _ = engine.run("vgg", 0, 6, &[vec![0.1; dims[0]]]); // compile
+        let rows1 = vec![vec![0.1f32; dims[0]]];
+        let rows8: Vec<Vec<f32>> = vec![vec![0.1; dims[0]]; 8];
+        run_group(
+            "PJRT fragment execution (vgg 0..6)",
+            vec![
+                bench("batch 1", || engine.run("vgg", 0, 6, &rows1).unwrap()),
+                bench("batch 8", || engine.run("vgg", 0, 6, &rows8).unwrap()),
+            ],
+        );
+    } else {
+        println!("(artifacts missing; PJRT benches skipped)");
+    }
+}

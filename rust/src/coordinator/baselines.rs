@@ -1,0 +1,194 @@
+//! The paper's baselines (§5.1):
+//!
+//! * **GSLICE** — fine-grained MPS shares (like Graft) but *no
+//!   re-alignment*: every client's fragment is provisioned separately.
+//! * **GSLICE⁺** — GSLICE plus the best merging strategy: all uniform
+//!   fragments (same partition point + budget) merged before
+//!   provisioning, enabling batching within a uniform class.
+//! * **Static / Static⁺** — provision once from each client's *average*
+//!   bandwidth (no dynamic re-planning); ⁺ merges uniform fragments.
+//!   Static's resource number is what the average-bandwidth fragments
+//!   cost; its SLO behaviour under a varying trace is evaluated by the
+//!   latency simulator.
+//!
+//! None of these re-partition; that is exactly Graft's delta.
+
+use super::fragment::FragmentSpec;
+use super::merging::{merge_fragments, MergeOptions};
+use super::plan::ExecutionPlan;
+use super::repartition::no_realign_plan;
+use crate::hybrid::{choose_partition, BandwidthTrace, DeviceKind};
+use crate::profiler::{AllocConstraints, CostModel};
+
+/// GSLICE: per-fragment fine-grained allocation, no merging, no realign.
+pub fn gslice(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    cons: &AllocConstraints,
+) -> ExecutionPlan {
+    no_realign_plan(cm, specs, cons)
+}
+
+/// GSLICE⁺: merge all uniform fragments, then per-fragment allocation.
+pub fn gslice_plus(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    cons: &AllocConstraints,
+) -> ExecutionPlan {
+    let merged = merge_fragments(
+        cm,
+        specs,
+        &MergeOptions { constraints: *cons, ..MergeOptions::merge_all() },
+    );
+    no_realign_plan(cm, &merged, cons)
+}
+
+/// Inputs for the Static baselines: the client's device/model plus its
+/// bandwidth trace (Static provisions for the trace *mean*).
+#[derive(Debug, Clone)]
+pub struct StaticClient {
+    pub spec_seed: FragmentSpec, // carries client id / model / rate
+    pub device: DeviceKind,
+    pub trace: BandwidthTrace,
+    pub slo_ratio: f64,
+}
+
+/// Compute the average-bandwidth fragment specs the Static baselines
+/// provision for.
+pub fn static_specs(
+    cm: &CostModel,
+    clients: &[StaticClient],
+    candidates: Option<&[usize]>,
+) -> Vec<FragmentSpec> {
+    let mut out = Vec::new();
+    for c in clients {
+        let m = &cm.config().models[c.spec_seed.model];
+        let slo = c.device.slo_ms(m, c.slo_ratio);
+        if let Some(part) = choose_partition(
+            cm,
+            c.spec_seed.model,
+            c.device,
+            c.trace.mean(),
+            slo,
+            candidates,
+        )
+        .partition()
+        {
+            let mut s = c.spec_seed.clone();
+            s.p = part.p;
+            s.budget_ms = part.server_budget_ms;
+            out.push(s);
+        }
+        // infeasible at mean bandwidth -> the static system simply cannot
+        // serve this client; it contributes no provisioning.
+    }
+    out
+}
+
+/// Static: average-bandwidth provisioning, no merging.
+pub fn static_alloc(
+    cm: &CostModel,
+    clients: &[StaticClient],
+    cons: &AllocConstraints,
+    candidates: Option<&[usize]>,
+) -> ExecutionPlan {
+    no_realign_plan(cm, &static_specs(cm, clients, candidates), cons)
+}
+
+/// Static⁺: average-bandwidth provisioning with full uniform merging.
+pub fn static_plus(
+    cm: &CostModel,
+    clients: &[StaticClient],
+    cons: &AllocConstraints,
+    candidates: Option<&[usize]>,
+) -> ExecutionPlan {
+    let specs = static_specs(cm, clients, candidates);
+    let merged = merge_fragments(
+        cm,
+        &specs,
+        &MergeOptions { constraints: *cons, ..MergeOptions::merge_all() },
+    );
+    no_realign_plan(cm, &merged, cons)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::fragment::ClientId;
+    use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+    use crate::hybrid::TraceParams;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn uniform_specs(cm: &CostModel, n: u32) -> Vec<FragmentSpec> {
+        let inc = cm.model_index("inc").unwrap();
+        (0..n)
+            .map(|i| FragmentSpec::single(ClientId(i), inc, 3, 100.0, 30.0))
+            .collect()
+    }
+
+    #[test]
+    fn gslice_plus_never_worse_than_gslice() {
+        let cm = cm();
+        let specs = uniform_specs(&cm, 10);
+        let cons = AllocConstraints::default();
+        let g = gslice(&cm, &specs, &cons);
+        let gp = gslice_plus(&cm, &specs, &cons);
+        assert!(gp.total_share() <= g.total_share());
+        assert!(gp.total_share() < g.total_share(), "merging should help");
+    }
+
+    #[test]
+    fn graft_never_worse_than_gslice_plus() {
+        let cm = cm();
+        let inc = cm.model_index("inc").unwrap();
+        // mildly heterogeneous fleet
+        let specs: Vec<FragmentSpec> = (0..10)
+            .map(|i| {
+                FragmentSpec::single(
+                    ClientId(i),
+                    inc,
+                    2 + (i as usize % 3),
+                    90.0 + 5.0 * (i % 4) as f64,
+                    30.0,
+                )
+            })
+            .collect();
+        let cons = AllocConstraints::default();
+        let gp = gslice_plus(&cm, &specs, &cons);
+        let (graft, _) = Scheduler::new(cm.clone(), SchedulerOptions::default())
+            .plan(&specs);
+        assert!(
+            graft.total_share() <= gp.total_share(),
+            "graft {} > gslice+ {}",
+            graft.total_share(),
+            gp.total_share()
+        );
+    }
+
+    #[test]
+    fn static_uses_mean_bandwidth() {
+        let cm = cm();
+        let inc = cm.model_index("inc").unwrap();
+        let clients: Vec<StaticClient> = (0..4)
+            .map(|i| StaticClient {
+                spec_seed: FragmentSpec::single(ClientId(i), inc, 0, 0.0, 30.0),
+                device: DeviceKind::Nano,
+                trace: BandwidthTrace::generate(i as u64, &TraceParams::default()),
+                slo_ratio: 0.95,
+            })
+            .collect();
+        let specs = static_specs(&cm, &clients, None);
+        assert_eq!(specs.len(), 4);
+        for s in &specs {
+            assert!(s.budget_ms > 0.0);
+        }
+        let plan = static_alloc(&cm, &clients, &AllocConstraints::default(), None);
+        assert!(plan.total_share() > 0);
+        let plus = static_plus(&cm, &clients, &AllocConstraints::default(), None);
+        assert!(plus.total_share() <= plan.total_share());
+    }
+}

@@ -1,0 +1,105 @@
+//! Fragment specifications — the scheduler's unit of work.
+//!
+//! A `FragmentSpec` describes one server-side DNN fragment demand: the
+//! model, the partition point `p` (the fragment is layers `p+1..=L`),
+//! the server-side time budget `t` and the aggregate request rate `q` —
+//! the property vector `⟨p, t, q⟩` of §4.2.  After merging (§4.1) one
+//! spec may aggregate several clients.
+
+use crate::hybrid::DeviceKind;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FragmentSpec {
+    /// Model index into `Config::models`.
+    pub model: usize,
+    /// Partition point: server executes layers `p+1 ..= layers`.
+    pub p: usize,
+    /// Server-side time budget (ms): SLO − mobile − transfer.
+    pub budget_ms: f64,
+    /// Aggregate request rate (RPS) across the merged clients.
+    pub rate_rps: f64,
+    /// Client ids merged into this spec (singleton before merging).
+    pub clients: Vec<ClientId>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClientId(pub u32);
+
+impl FragmentSpec {
+    pub fn single(
+        client: ClientId,
+        model: usize,
+        p: usize,
+        budget_ms: f64,
+        rate_rps: f64,
+    ) -> Self {
+        Self { model, p, budget_ms, rate_rps, clients: vec![client] }
+    }
+
+    /// Uniformity for merging (§4.1): same partition point and (within
+    /// `tol_ms`) the same time budget.
+    pub fn uniform_with(&self, other: &Self, tol_ms: f64) -> bool {
+        self.model == other.model
+            && self.p == other.p
+            && (self.budget_ms - other.budget_ms).abs() <= tol_ms
+    }
+
+    /// Merge `other` into `self`: rates add, the budget tightens to the
+    /// smaller one (all merged requests must meet the tightest budget).
+    pub fn merge(&mut self, other: &Self) {
+        assert_eq!(self.model, other.model);
+        assert_eq!(self.p, other.p);
+        self.rate_rps += other.rate_rps;
+        self.budget_ms = self.budget_ms.min(other.budget_ms);
+        self.clients.extend(other.clients.iter().copied());
+    }
+
+    /// Property vector `⟨p, t, q⟩` used for grouping similarity (§4.2).
+    pub fn property_vector(&self) -> [f64; 3] {
+        [self.p as f64, self.budget_ms, self.rate_rps]
+    }
+}
+
+/// A client's identity + current fragment demand, as tracked online.
+#[derive(Debug, Clone)]
+pub struct ClientDemand {
+    pub id: ClientId,
+    pub device: DeviceKind,
+    pub spec: FragmentSpec,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(p: usize, t: f64, q: f64) -> FragmentSpec {
+        FragmentSpec::single(ClientId(0), 0, p, t, q)
+    }
+
+    #[test]
+    fn uniformity_requires_same_point_and_close_budget() {
+        let a = spec(3, 50.0, 30.0);
+        assert!(a.uniform_with(&spec(3, 50.4, 10.0), 0.5));
+        assert!(!a.uniform_with(&spec(4, 50.0, 30.0), 0.5));
+        assert!(!a.uniform_with(&spec(3, 52.0, 30.0), 0.5));
+        let mut b = spec(3, 50.0, 30.0);
+        b.model = 1;
+        assert!(!a.uniform_with(&b, 0.5));
+    }
+
+    #[test]
+    fn merge_adds_rates_and_tightens_budget() {
+        let mut a = spec(3, 50.0, 30.0);
+        let mut b = spec(3, 45.0, 30.0);
+        b.clients = vec![ClientId(1)];
+        a.merge(&b);
+        assert_eq!(a.rate_rps, 60.0);
+        assert_eq!(a.budget_ms, 45.0);
+        assert_eq!(a.clients, vec![ClientId(0), ClientId(1)]);
+    }
+
+    #[test]
+    fn property_vector_order() {
+        assert_eq!(spec(3, 50.0, 30.0).property_vector(), [3.0, 50.0, 30.0]);
+    }
+}

@@ -1,0 +1,293 @@
+//! §4.2 — DNN fragment grouping as balanced graph partitioning.
+//!
+//! Fragments are nodes of a complete graph; edge weights are the weighted
+//! Euclidean distance between the property vectors `⟨p, t, q⟩`.  The
+//! grouping problem is a variant of balanced graph partitioning: divide
+//! the nodes into `K = ⌈n / group_size⌉` (nearly) equal, disjoint subsets
+//! minimising Eq. (1) — the within-group edge-weight variance plus the
+//! total cross-group edge weight.  We follow the Fennel-style greedy:
+//! seed `K` groups with random fragments, then assign each remaining
+//! fragment to the group with the least objective increase subject to
+//! the balance cap.
+
+use super::fragment::FragmentSpec;
+use crate::util::Rng;
+
+/// Factor weights for the distance on `⟨p, t, q⟩` (§5.6 explores these;
+/// equal weights are within ~4% of optimal).
+#[derive(Debug, Clone, Copy)]
+pub struct FactorWeights {
+    pub p: f64,
+    pub t: f64,
+    pub q: f64,
+}
+
+impl Default for FactorWeights {
+    fn default() -> Self {
+        Self { p: 1.0, t: 1.0, q: 1.0 }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct GroupOptions {
+    /// Target group size (paper default 5; the knee of Fig 16a).
+    pub group_size: usize,
+    pub weights: FactorWeights,
+    pub seed: u64,
+}
+
+impl Default for GroupOptions {
+    fn default() -> Self {
+        Self { group_size: 5, weights: FactorWeights::default(), seed: 0xF3A7 }
+    }
+}
+
+/// Edge weight = *similarity* of two fragments: the paper assigns edge
+/// weights "based on the similarity of the fragments ... using the
+/// weighted Euclidean distance between the property vectors" — i.e. a
+/// decreasing transform of the (normalised, weighted) distance, so that
+/// minimising external edge weight keeps similar fragments together.
+fn similarity(
+    a: &[f64; 3],
+    b: &[f64; 3],
+    w: &FactorWeights,
+    scale: &[f64; 3],
+) -> f64 {
+    let d = |i: usize, wi: f64| {
+        let s = if scale[i] > 0.0 { scale[i] } else { 1.0 };
+        wi * ((a[i] - b[i]) / s).powi(2)
+    };
+    let dist = (d(0, w.p) + d(1, w.t) + d(2, w.q)).sqrt();
+    1.0 / (1.0 + dist)
+}
+
+/// Per-dimension ranges used for normalisation.
+fn scales(props: &[[f64; 3]]) -> [f64; 3] {
+    let mut s = [0.0f64; 3];
+    for i in 0..3 {
+        let min = props.iter().map(|p| p[i]).fold(f64::INFINITY, f64::min);
+        let max = props.iter().map(|p| p[i]).fold(f64::NEG_INFINITY, f64::max);
+        s[i] = max - min;
+    }
+    s
+}
+
+/// The Eq.-(1) objective of a complete grouping (used by tests and the
+/// optimal-grouping baseline): Σ_k var(internal edges of k) + Σ external
+/// edge weights.
+pub fn objective(
+    specs: &[FragmentSpec],
+    groups: &[Vec<usize>],
+    w: &FactorWeights,
+) -> f64 {
+    let props: Vec<[f64; 3]> =
+        specs.iter().map(FragmentSpec::property_vector).collect();
+    let sc = scales(&props);
+    let mut in_group = vec![usize::MAX; specs.len()];
+    for (k, g) in groups.iter().enumerate() {
+        for &i in g {
+            in_group[i] = k;
+        }
+    }
+    let mut var_sum = 0.0;
+    for g in groups {
+        let mut edges = Vec::new();
+        for (ai, &i) in g.iter().enumerate() {
+            for &j in &g[ai + 1..] {
+                edges.push(similarity(&props[i], &props[j], w, &sc));
+            }
+        }
+        if !edges.is_empty() {
+            let mean = edges.iter().sum::<f64>() / edges.len() as f64;
+            var_sum += edges.iter().map(|e| (e - mean).powi(2)).sum::<f64>()
+                / edges.len() as f64;
+        }
+    }
+    let mut ext = 0.0;
+    for i in 0..specs.len() {
+        for j in i + 1..specs.len() {
+            if in_group[i] != in_group[j] {
+                ext += similarity(&props[i], &props[j], w, &sc);
+            }
+        }
+    }
+    var_sum + ext
+}
+
+/// Greedy balanced grouping (§4.2).  Returns index groups over `specs`.
+/// All specs must belong to the same model (the scheduler splits by
+/// model first — §6 "Heterogeneous models").
+pub fn group_fragments(
+    specs: &[FragmentSpec],
+    opts: &GroupOptions,
+) -> Vec<Vec<usize>> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    debug_assert!(
+        specs.windows(2).all(|w| w[0].model == w[1].model),
+        "grouping expects same-model fragments"
+    );
+    let gs = opts.group_size.max(1);
+    let k = n.div_ceil(gs);
+    if k <= 1 {
+        return vec![(0..n).collect()];
+    }
+    let cap = n.div_ceil(k);
+
+    let props: Vec<[f64; 3]> =
+        specs.iter().map(FragmentSpec::property_vector).collect();
+    let sc = scales(&props);
+
+    // (a) seed K groups with random fragments
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    rng.shuffle(&mut order);
+    let mut groups: Vec<Vec<usize>> =
+        order[..k].iter().map(|&i| vec![i]).collect();
+
+    // (b) assign the rest minimising the objective increase:
+    //   Δ = Δvar(internal edges of k) − Σ edges(f ↔ members of k)
+    // (the external-edge term decreases exactly by the edges absorbed).
+    for &i in &order[k..] {
+        let mut best: Option<(usize, f64)> = None;
+        for (gk, g) in groups.iter().enumerate() {
+            if g.len() >= cap {
+                continue;
+            }
+            let new_edges: Vec<f64> = g
+                .iter()
+                .map(|&j| similarity(&props[i], &props[j], &w3(opts), &sc))
+                .collect();
+            let delta = var_delta(g, &props, &w3(opts), &sc, &new_edges)
+                - new_edges.iter().sum::<f64>();
+            if best.map_or(true, |(_, b)| delta < b) {
+                best = Some((gk, delta));
+            }
+        }
+        let (gk, _) = best.expect("cap * k >= n so some group has room");
+        groups[gk].push(i);
+    }
+    groups
+}
+
+fn w3(opts: &GroupOptions) -> FactorWeights {
+    opts.weights
+}
+
+/// Variance increase of a group's internal edge set when adding edges.
+fn var_delta(
+    group: &[usize],
+    props: &[[f64; 3]],
+    w: &FactorWeights,
+    sc: &[f64; 3],
+    new_edges: &[f64],
+) -> f64 {
+    let mut edges = Vec::new();
+    for (ai, &i) in group.iter().enumerate() {
+        for &j in &group[ai + 1..] {
+            edges.push(similarity(&props[i], &props[j], w, sc));
+        }
+    }
+    let var = |e: &[f64]| {
+        if e.is_empty() {
+            return 0.0;
+        }
+        let m = e.iter().sum::<f64>() / e.len() as f64;
+        e.iter().map(|x| (x - m).powi(2)).sum::<f64>() / e.len() as f64
+    };
+    let before = var(&edges);
+    edges.extend_from_slice(new_edges);
+    var(&edges) - before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fragment::ClientId;
+
+    fn spec(i: u32, p: usize, t: f64, q: f64) -> FragmentSpec {
+        FragmentSpec::single(ClientId(i), 0, p, t, q)
+    }
+
+    fn cluster_specs() -> Vec<FragmentSpec> {
+        // two obvious clusters: (p=2, t≈60) and (p=8, t≈120)
+        let mut v = Vec::new();
+        for i in 0..5 {
+            v.push(spec(i, 2, 60.0 + i as f64, 30.0));
+        }
+        for i in 5..10 {
+            v.push(spec(i, 8, 120.0 + i as f64, 30.0));
+        }
+        v
+    }
+
+    #[test]
+    fn groups_are_balanced_disjoint_cover() {
+        let specs = cluster_specs();
+        let groups =
+            group_fragments(&specs, &GroupOptions { group_size: 5, ..Default::default() });
+        assert_eq!(groups.len(), 2);
+        let mut all: Vec<usize> = groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        for g in &groups {
+            assert!(g.len() <= 5);
+        }
+    }
+
+    #[test]
+    fn similar_fragments_group_together() {
+        let specs = cluster_specs();
+        let groups =
+            group_fragments(&specs, &GroupOptions { group_size: 5, ..Default::default() });
+        for g in &groups {
+            let ps: Vec<usize> = g.iter().map(|&i| specs[i].p).collect();
+            assert!(
+                ps.iter().all(|&p| p == ps[0]),
+                "mixed cluster in group: {ps:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_group_when_few_fragments() {
+        let specs = cluster_specs()[..4].to_vec();
+        let groups = group_fragments(&specs, &GroupOptions::default());
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].len(), 4);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(group_fragments(&[], &GroupOptions::default()).is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let specs = cluster_specs();
+        let a = group_fragments(&specs, &GroupOptions::default());
+        let b = group_fragments(&specs, &GroupOptions::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn objective_prefers_clustered_grouping() {
+        let specs = cluster_specs();
+        let w = FactorWeights::default();
+        let clustered = vec![vec![0, 1, 2, 3, 4], vec![5, 6, 7, 8, 9]];
+        let mixed = vec![vec![0, 1, 5, 6, 7], vec![2, 3, 4, 8, 9]];
+        assert!(objective(&specs, &clustered, &w) < objective(&specs, &mixed, &w));
+    }
+
+    #[test]
+    fn greedy_close_to_clustered_objective() {
+        let specs = cluster_specs();
+        let w = FactorWeights::default();
+        let groups = group_fragments(&specs, &GroupOptions::default());
+        let best = objective(&specs, &vec![vec![0, 1, 2, 3, 4], vec![5, 6, 7, 8, 9]], &w);
+        let got = objective(&specs, &groups, &w);
+        assert!(got <= best * 1.05, "greedy {got} vs clustered {best}");
+    }
+}

@@ -1,0 +1,203 @@
+//! §4.1 — DNN fragment merging.
+//!
+//! Uniform fragments (same partition point, same time budget) are merged
+//! incrementally until the *resource margin* `(q_a - q_d)/q_d` of the
+//! merged fragment drops to the merging threshold.  Merging exploits the
+//! discreteness of batch/share/instances (Fig 4): an instance provisioned
+//! for one client can usually absorb several more for free.  A threshold
+//! of 0 ("Uniform" merging) merges every uniform fragment; Graft's
+//! Uniform⁺ stops early to leave slack for grouping/re-partitioning
+//! (paper §5.5 shows why that wins for low-margin models like ResNet).
+
+use super::fragment::FragmentSpec;
+use crate::profiler::{AllocConstraints, CostModel, FragmentId};
+
+/// Strategy knobs for the merging step.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeOptions {
+    /// Stop merging into a fragment once its margin ≤ this threshold
+    /// (paper default 0.2). `f64::NEG_INFINITY` ≙ merge-all ("Uniform").
+    pub threshold: f64,
+    /// Budgets within this tolerance count as uniform (ms).
+    pub budget_tol_ms: f64,
+    pub constraints: AllocConstraints,
+}
+
+impl Default for MergeOptions {
+    fn default() -> Self {
+        Self {
+            threshold: 0.2,
+            budget_tol_ms: 1.0,
+            constraints: AllocConstraints::default(),
+        }
+    }
+}
+
+impl MergeOptions {
+    /// The paper's "Uniform" strategy: merge all uniform fragments.
+    pub fn merge_all() -> Self {
+        Self { threshold: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    /// "No-merging" strategy.
+    pub fn none() -> Self {
+        Self { threshold: f64::INFINITY, ..Default::default() }
+    }
+}
+
+/// Resource margin of a spec under its min-resource allocation (the §4.1
+/// metric): how much spare throughput the discrete allocation yields.
+pub fn resource_margin(
+    cm: &CostModel,
+    spec: &FragmentSpec,
+    cons: AllocConstraints,
+) -> Option<f64> {
+    let layers = cm.config().models[spec.model].layers;
+    let frag = FragmentId::new(spec.model, spec.p, layers);
+    // §4.3: worst-case queueing halves the usable budget.
+    cm.min_alloc(frag, spec.budget_ms / 2.0, spec.rate_rps, cons)
+        .map(|a| a.margin(spec.rate_rps))
+}
+
+/// Merge fragments per §4.1.  Fragments of different models are never
+/// merged.  Returns the merged specs (order: by model, point, budget).
+pub fn merge_fragments(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    opts: &MergeOptions,
+) -> Vec<FragmentSpec> {
+    if opts.threshold.is_infinite() && opts.threshold > 0.0 {
+        let mut out = specs.to_vec();
+        sort_specs(&mut out);
+        return out;
+    }
+    // "mergesort" the fragments into uniform classes (model, p, budget)
+    let mut sorted = specs.to_vec();
+    sort_specs(&mut sorted);
+
+    let mut out: Vec<FragmentSpec> = Vec::new();
+    let mut current: Option<FragmentSpec> = None;
+    for spec in sorted {
+        match current.take() {
+            None => current = Some(spec),
+            Some(mut acc) => {
+                if acc.uniform_with(&spec, opts.budget_tol_ms)
+                    && resource_margin(cm, &acc, opts.constraints)
+                        .is_some_and(|m| m > opts.threshold)
+                {
+                    // margin still above threshold: absorb this one
+                    acc.merge(&spec);
+                    current = Some(acc);
+                } else {
+                    out.push(acc);
+                    current = Some(spec);
+                }
+            }
+        }
+    }
+    out.extend(current);
+    out
+}
+
+fn sort_specs(specs: &mut [FragmentSpec]) {
+    specs.sort_by(|a, b| {
+        (a.model, a.p)
+            .cmp(&(b.model, b.p))
+            .then(a.budget_ms.total_cmp(&b.budget_ms))
+            .then(a.rate_rps.total_cmp(&b.rate_rps))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::fragment::ClientId;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn specs(n: usize, model: usize, p: usize, t: f64, q: f64) -> Vec<FragmentSpec> {
+        (0..n)
+            .map(|i| FragmentSpec::single(ClientId(i as u32), model, p, t, q))
+            .collect()
+    }
+
+    #[test]
+    fn no_merging_keeps_everything() {
+        let cm = cm();
+        let s = specs(10, 0, 4, 80.0, 30.0);
+        let out = merge_fragments(&cm, &s, &MergeOptions::none());
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn merge_all_collapses_uniform_class() {
+        let cm = cm();
+        let s = specs(10, 0, 4, 80.0, 30.0);
+        let out = merge_fragments(&cm, &s, &MergeOptions::merge_all());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rate_rps, 300.0);
+        assert_eq!(out[0].clients.len(), 10);
+    }
+
+    #[test]
+    fn threshold_merging_is_between() {
+        let cm = cm();
+        let s = specs(20, 0, 4, 80.0, 30.0);
+        let none = merge_fragments(&cm, &s, &MergeOptions::none()).len();
+        let all = merge_fragments(&cm, &s, &MergeOptions::merge_all()).len();
+        let thr = merge_fragments(
+            &cm,
+            &s,
+            &MergeOptions { threshold: 0.2, ..Default::default() },
+        )
+        .len();
+        assert!(all <= thr && thr <= none, "{all} <= {thr} <= {none}");
+    }
+
+    #[test]
+    fn different_points_never_merge() {
+        let cm = cm();
+        let mut s = specs(3, 0, 4, 80.0, 30.0);
+        s.extend(specs(3, 0, 5, 80.0, 30.0));
+        let out = merge_fragments(&cm, &s, &MergeOptions::merge_all());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn different_models_never_merge() {
+        let cm = cm();
+        let mut s = specs(3, 0, 4, 80.0, 30.0);
+        s.extend(specs(3, 1, 4, 80.0, 30.0));
+        let out = merge_fragments(&cm, &s, &MergeOptions::merge_all());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn merged_rate_and_clients_conserved() {
+        let cm = cm();
+        let s = specs(12, 0, 4, 80.0, 30.0);
+        let out = merge_fragments(
+            &cm,
+            &s,
+            &MergeOptions { threshold: 0.2, ..Default::default() },
+        );
+        let rate: f64 = out.iter().map(|f| f.rate_rps).sum();
+        let clients: usize = out.iter().map(|f| f.clients.len()).sum();
+        assert_eq!(rate, 360.0);
+        assert_eq!(clients, 12);
+    }
+
+    #[test]
+    fn margin_decreases_with_rate() {
+        let cm = cm();
+        let lo = FragmentSpec::single(ClientId(0), 0, 4, 80.0, 10.0);
+        let hi = FragmentSpec::single(ClientId(0), 0, 4, 80.0, 200.0);
+        let ml = resource_margin(&cm, &lo, AllocConstraints::default()).unwrap();
+        let mh = resource_margin(&cm, &hi, AllocConstraints::default()).unwrap();
+        assert!(ml > mh, "{ml} > {mh}");
+        assert!(ml >= 0.0 && mh >= 0.0);
+    }
+}

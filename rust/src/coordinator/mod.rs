@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's contribution: the Graft scheduler
+//! (merging §4.1, grouping §4.2, re-partitioning §4.3 / Algorithm 1),
+//! the execution-plan types, and the baselines it is evaluated against.
+
+pub mod baselines;
+pub mod fragment;
+pub mod grouping;
+pub mod merging;
+pub mod optimal;
+pub mod plan;
+pub mod repartition;
+pub mod reuse;
+pub mod scheduler;
+
+pub use fragment::{ClientId, FragmentSpec};
+pub use plan::{ExecutionPlan, MemberPlan, RealignedSet, StagePlan};
+pub use scheduler::{ScheduleStats, Scheduler, SchedulerOptions};

@@ -1,0 +1,156 @@
+//! Execution plans — the scheduler's output (paper §3).
+//!
+//! A plan materialises the re-alignment decisions: for every re-aligned
+//! set, the re-partition point, each member's alignment-stage instance
+//! allocation (layers `p_i+1..=p'`), and the shared-stage allocation
+//! (layers `p'+1..=L`) that batches all members' requests together.
+
+use super::fragment::FragmentSpec;
+use crate::profiler::{Alloc, FragmentId};
+
+/// One provisioned stage: a fragment with its resource allocation and the
+/// time budget it was sized for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    pub frag: FragmentId,
+    pub alloc: Alloc,
+    pub budget_ms: f64,
+    /// Demand this stage was sized for (RPS).
+    pub demand_rps: f64,
+}
+
+impl StagePlan {
+    pub fn total_share(&self) -> u32 {
+        self.alloc.total_share()
+    }
+}
+
+/// A member of a re-aligned set: its original spec plus the alignment
+/// stage (absent when the member's partition point equals the
+/// re-partition point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberPlan {
+    pub spec: FragmentSpec,
+    pub align: Option<StagePlan>,
+}
+
+/// A set of fragments re-aligned at one re-partition point sharing one
+/// batched suffix instance group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealignedSet {
+    pub model: usize,
+    /// The re-partition point `p'` (§4.3).
+    pub point: usize,
+    pub members: Vec<MemberPlan>,
+    pub shared: StagePlan,
+}
+
+impl RealignedSet {
+    pub fn total_share(&self) -> u32 {
+        self.shared.total_share()
+            + self
+                .members
+                .iter()
+                .filter_map(|m| m.align.as_ref())
+                .map(StagePlan::total_share)
+                .sum::<u32>()
+    }
+
+    pub fn total_rate(&self) -> f64 {
+        self.members.iter().map(|m| m.spec.rate_rps).sum()
+    }
+}
+
+/// The full execution plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExecutionPlan {
+    pub sets: Vec<RealignedSet>,
+    /// Fragments the scheduler could not provision within their SLO
+    /// (these requests would be dropped by the load balancer).
+    pub infeasible: Vec<FragmentSpec>,
+}
+
+impl ExecutionPlan {
+    /// Total GPU consumption (share percentage points; 100 == one GPU).
+    pub fn total_share(&self) -> u32 {
+        self.sets.iter().map(RealignedSet::total_share).sum()
+    }
+
+    /// Number of GPUs needed at the configured per-GPU share cap.
+    pub fn gpus(&self, max_share: u32) -> u32 {
+        self.total_share().div_ceil(max_share)
+    }
+
+    /// All stages in the plan (alignment + shared).
+    pub fn stages(&self) -> impl Iterator<Item = &StagePlan> {
+        self.sets.iter().flat_map(|s| {
+            s.members
+                .iter()
+                .filter_map(|m| m.align.as_ref())
+                .chain(std::iter::once(&s.shared))
+        })
+    }
+
+    pub fn merge_with(&mut self, mut other: ExecutionPlan) {
+        self.sets.append(&mut other.sets);
+        self.infeasible.append(&mut other.infeasible);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fragment::ClientId;
+    use crate::profiler::Alloc;
+
+    fn stage(share: u32, inst: u32) -> StagePlan {
+        StagePlan {
+            frag: FragmentId::new(0, 2, 17),
+            alloc: Alloc {
+                batch: 4,
+                share,
+                instances: inst,
+                latency_ms: 10.0,
+                throughput_rps: 100.0,
+            },
+            budget_ms: 10.0,
+            demand_rps: 60.0,
+        }
+    }
+
+    fn member(p: usize, align: Option<StagePlan>) -> MemberPlan {
+        MemberPlan {
+            spec: FragmentSpec::single(ClientId(0), 0, p, 50.0, 30.0),
+            align,
+        }
+    }
+
+    #[test]
+    fn share_accounting() {
+        let set = RealignedSet {
+            model: 0,
+            point: 2,
+            members: vec![member(1, Some(stage(10, 2))), member(2, None)],
+            shared: stage(25, 1),
+        };
+        assert_eq!(set.total_share(), 10 * 2 + 25);
+        assert_eq!(set.total_rate(), 60.0);
+        let plan = ExecutionPlan { sets: vec![set], infeasible: vec![] };
+        assert_eq!(plan.total_share(), 45);
+        assert_eq!(plan.gpus(100), 1);
+        assert_eq!(plan.stages().count(), 2);
+    }
+
+    #[test]
+    fn gpus_rounds_up() {
+        let set = RealignedSet {
+            model: 0,
+            point: 2,
+            members: vec![member(2, None)],
+            shared: stage(34, 4),
+        };
+        let plan = ExecutionPlan { sets: vec![set], infeasible: vec![] };
+        assert_eq!(plan.total_share(), 136);
+        assert_eq!(plan.gpus(100), 2);
+    }
+}

@@ -1,0 +1,424 @@
+//! §4.3 — fragment re-partitioning (Algorithm 1).
+//!
+//! For a group of same-model fragments `⟨p_i, t_i, q_i⟩`, scan every
+//! candidate re-partition point `p`: the fragments with `p_i ≤ p` form
+//! `F_A` and are re-aligned — each executes an *alignment stage*
+//! `[p_i..p]` on its own instances, then all share one batched *shared
+//! stage* `[p..L]`; the rest (`F_B`) is re-aligned recursively.  For each
+//! `p` the time-budget split between the two stages is searched on a
+//! grid of `d_shared` values (the paper solves the equivalent allocation
+//! LP with GUROBI; the split is one-dimensional because each member's
+//! alignment budget is maximal at `t_i/2 − d_shared` — see below), with
+//! the §4.3 worst-case-queueing rule `d_i + d_shared ≤ t_i / 2`.
+//!
+//! The recursion over `F_B` only ever visits suffixes of the fragments
+//! sorted by partition point, so we implement it as a suffix DP — same
+//! optimum, no recomputation.
+
+use super::fragment::FragmentSpec;
+use super::plan::{ExecutionPlan, MemberPlan, RealignedSet, StagePlan};
+use crate::profiler::{AllocConstraints, CostModel, FragmentId};
+
+#[derive(Debug, Clone)]
+pub struct RepartitionOptions {
+    /// Grid resolution for the d_shared time-budget split search.
+    pub d_grid: usize,
+    pub constraints: AllocConstraints,
+    /// Restrict candidate re-partition points (e.g. to the AOT-compiled
+    /// point set on the real data path).  `None` = every layer (paper).
+    pub point_set: Option<Vec<usize>>,
+}
+
+impl Default for RepartitionOptions {
+    fn default() -> Self {
+        Self {
+            d_grid: 24,
+            constraints: AllocConstraints::default(),
+            point_set: None,
+        }
+    }
+}
+
+/// Re-align one group (Algorithm 1).  Returns the realigned sets plus the
+/// specs that are infeasible even standalone (dropped by the balancer).
+pub fn realign_group(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    opts: &RepartitionOptions,
+) -> ExecutionPlan {
+    let mut plan = ExecutionPlan::default();
+    if specs.is_empty() {
+        return plan;
+    }
+    debug_assert!(
+        specs.iter().all(|s| s.model == specs[0].model),
+        "realign_group expects same-model fragments"
+    );
+
+    // Pre-filter: members infeasible even standalone can never be served.
+    let mut work: Vec<FragmentSpec> = Vec::new();
+    for s in specs {
+        if standalone_set(cm, s, &opts.constraints).is_some() {
+            work.push(s.clone());
+        } else {
+            plan.infeasible.push(s.clone());
+        }
+    }
+    if work.is_empty() {
+        return plan;
+    }
+    work.sort_by(|a, b| {
+        a.p.cmp(&b.p).then(a.budget_ms.total_cmp(&b.budget_ms))
+    });
+
+    let layers = cm.config().models[work[0].model].layers;
+    let points = candidate_points(opts, layers);
+
+    // Suffix DP: best[i] = min-cost realignment of work[i..].
+    let n = work.len();
+    let mut best: Vec<Option<(u32, Vec<RealignedSet>)>> = vec![None; n + 1];
+    best[n] = Some((0, Vec::new()));
+    for i in (0..n).rev() {
+        // Fallback: the head fragment standalone (always feasible here).
+        {
+            let set = standalone_set(cm, &work[i], &opts.constraints)
+                .expect("pre-filtered");
+            if let Some((tail_cost, tail_sets)) = &best[i + 1] {
+                let cost = set.total_share() + tail_cost;
+                let mut sets = vec![set];
+                sets.extend(tail_sets.iter().cloned());
+                if best[i].as_ref().map_or(true, |(c, _)| cost < *c) {
+                    best[i] = Some((cost, sets));
+                }
+            }
+        }
+        for &p in points.iter().filter(|&&p| p >= work[i].p && p < layers) {
+            // F_A = work[i..j] (all suffix members with p_k <= p)
+            let j = i + work[i..].partition_point(|s| s.p <= p);
+            if j == i {
+                continue;
+            }
+            let Some((tail_cost, tail_sets)) = best[j].clone() else {
+                continue;
+            };
+            let Some(set) = realign_set(cm, &work[i..j], p, opts) else {
+                continue;
+            };
+            let cost = set.total_share() + tail_cost;
+            if best[i].as_ref().map_or(true, |(c, _)| cost < *c) {
+                let mut sets = vec![set];
+                sets.extend(tail_sets);
+                best[i] = Some((cost, sets));
+            }
+        }
+    }
+    let (_, sets) = best[0].take().expect("standalone fallback always feasible");
+    plan.sets = sets;
+    plan
+}
+
+/// Provision one fragment standalone: point = its own p, budget t/2.
+pub fn standalone_set(
+    cm: &CostModel,
+    spec: &FragmentSpec,
+    cons: &AllocConstraints,
+) -> Option<RealignedSet> {
+    let layers = cm.config().models[spec.model].layers;
+    let frag = FragmentId::new(spec.model, spec.p, layers);
+    let budget = spec.budget_ms / 2.0;
+    let alloc = cm.min_alloc(frag, budget, spec.rate_rps, *cons)?;
+    Some(RealignedSet {
+        model: spec.model,
+        point: spec.p,
+        members: vec![MemberPlan { spec: spec.clone(), align: None }],
+        shared: StagePlan {
+            frag,
+            alloc,
+            budget_ms: budget,
+            demand_rps: spec.rate_rps,
+        },
+    })
+}
+
+/// Best provisioning of `members` re-aligned at point `p` over the
+/// d_shared grid.  Every member must have `p_i <= p`; `p < layers`.
+fn realign_set(
+    cm: &CostModel,
+    members: &[FragmentSpec],
+    p: usize,
+    opts: &RepartitionOptions,
+) -> Option<RealignedSet> {
+    let model = members[0].model;
+    let layers = cm.config().models[model].layers;
+    let shared_frag = FragmentId::new(model, p, layers);
+    let total_rate: f64 = members.iter().map(|m| m.rate_rps).sum();
+    let t_min = members
+        .iter()
+        .map(|m| m.budget_ms)
+        .fold(f64::INFINITY, f64::min);
+
+    let g = opts.d_grid.max(2);
+    let mut best: Option<RealignedSet> = None;
+    for k in 1..=g {
+        let d_shared = t_min / 2.0 * k as f64 / g as f64;
+        let Some(shared_alloc) =
+            cm.min_alloc(shared_frag, d_shared, total_rate, opts.constraints)
+        else {
+            continue; // too tight for the shared stage; larger k may fit
+        };
+        let mut member_plans = Vec::with_capacity(members.len());
+        let mut ok = true;
+        for m in members {
+            if m.p == p {
+                member_plans.push(MemberPlan { spec: m.clone(), align: None });
+                continue;
+            }
+            let d_i = m.budget_ms / 2.0 - d_shared;
+            let align_frag = FragmentId::new(model, m.p, p);
+            match cm.min_alloc(align_frag, d_i, m.rate_rps, opts.constraints) {
+                Some(alloc) => member_plans.push(MemberPlan {
+                    spec: m.clone(),
+                    align: Some(StagePlan {
+                        frag: align_frag,
+                        alloc,
+                        budget_ms: d_i,
+                        demand_rps: m.rate_rps,
+                    }),
+                }),
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let cand = RealignedSet {
+            model,
+            point: p,
+            members: member_plans,
+            shared: StagePlan {
+                frag: shared_frag,
+                alloc: shared_alloc,
+                budget_ms: d_shared,
+                demand_rps: total_rate,
+            },
+        };
+        if best
+            .as_ref()
+            .map_or(true, |b| cand.total_share() < b.total_share())
+        {
+            best = Some(cand);
+        }
+    }
+    best
+}
+
+fn candidate_points(opts: &RepartitionOptions, layers: usize) -> Vec<usize> {
+    match &opts.point_set {
+        Some(ps) => {
+            let mut v: Vec<usize> =
+                ps.iter().copied().filter(|&p| p <= layers).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        }
+        None => (0..=layers).collect(),
+    }
+}
+
+/// Resource consumption without re-partitioning: every spec standalone
+/// (the Fig 11 comparator).
+pub fn no_realign_plan(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    cons: &AllocConstraints,
+) -> ExecutionPlan {
+    let mut plan = ExecutionPlan::default();
+    for s in specs {
+        match standalone_set(cm, s, cons) {
+            Some(set) => plan.sets.push(set),
+            None => plan.infeasible.push(s.clone()),
+        }
+    }
+    plan
+}
+
+/// SLO-safety check used by tests/proptests: every member's end-to-end
+/// server time (alignment latency + shared latency, each doubled for
+/// worst-case queueing) fits its budget.
+pub fn plan_is_slo_safe(plan: &ExecutionPlan) -> bool {
+    plan.sets.iter().all(|set| {
+        set.members.iter().all(|m| {
+            let align_ms =
+                m.align.as_ref().map_or(0.0, |a| a.alloc.latency_ms);
+            let shared_ms = set.shared.alloc.latency_ms;
+            2.0 * (align_ms + shared_ms) <= m.spec.budget_ms + 1e-6
+        })
+    })
+}
+
+/// Throughput-safety: every stage's allocation covers its demand.
+pub fn plan_covers_demand(plan: &ExecutionPlan) -> bool {
+    plan.stages()
+        .all(|s| s.alloc.throughput_rps >= s.demand_rps - 1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::fragment::ClientId;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn spec(i: u32, model: usize, p: usize, t: f64, q: f64) -> FragmentSpec {
+        FragmentSpec::single(ClientId(i), model, p, t, q)
+    }
+
+    fn inc_group(cm: &CostModel) -> Vec<FragmentSpec> {
+        let m = cm.model_index("inc").unwrap();
+        vec![
+            spec(0, m, 2, 90.0, 30.0),
+            spec(1, m, 3, 95.0, 30.0),
+            spec(2, m, 4, 100.0, 30.0),
+            spec(3, m, 4, 85.0, 30.0),
+            spec(4, m, 6, 110.0, 30.0),
+        ]
+    }
+
+    #[test]
+    fn realign_beats_no_realign() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let opts = RepartitionOptions::default();
+        let with = realign_group(&cm, &specs, &opts);
+        let without =
+            no_realign_plan(&cm, &specs, &AllocConstraints::default());
+        assert!(with.infeasible.is_empty());
+        assert!(
+            with.total_share() <= without.total_share(),
+            "realign {} > standalone {}",
+            with.total_share(),
+            without.total_share()
+        );
+    }
+
+    #[test]
+    fn plans_are_slo_safe_and_cover_demand() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let plan = realign_group(&cm, &specs, &RepartitionOptions::default());
+        assert!(plan_is_slo_safe(&plan), "{plan:?}");
+        assert!(plan_covers_demand(&plan));
+        // all clients are served exactly once
+        let mut clients: Vec<u32> = plan
+            .sets
+            .iter()
+            .flat_map(|s| s.members.iter())
+            .flat_map(|m| m.spec.clients.iter().map(|c| c.0))
+            .collect();
+        clients.sort_unstable();
+        assert_eq!(clients, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn repartition_point_covers_members() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let plan = realign_group(&cm, &specs, &RepartitionOptions::default());
+        for set in &plan.sets {
+            for m in &set.members {
+                assert!(m.spec.p <= set.point);
+                match &m.align {
+                    Some(a) => {
+                        assert_eq!(a.frag.start, m.spec.p);
+                        assert_eq!(a.frag.end, set.point);
+                    }
+                    None => assert_eq!(m.spec.p, set.point),
+                }
+            }
+            assert_eq!(set.shared.frag.start, set.point);
+        }
+    }
+
+    #[test]
+    fn shared_stage_batches_aggregate_rate() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let plan = realign_group(&cm, &specs, &RepartitionOptions::default());
+        // at least one set should aggregate several members (that's the
+        // whole point of re-alignment for this homogeneous-ish group)
+        assert!(
+            plan.sets.iter().any(|s| s.members.len() > 1),
+            "no batching across members: {plan:?}"
+        );
+        for set in &plan.sets {
+            assert!(
+                (set.shared.demand_rps - set.total_rate()).abs() < 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_is_reported() {
+        let cm = cm();
+        let m = cm.model_index("vit").unwrap();
+        let bad = spec(0, m, 1, 0.01, 1.0); // sub-ms budget: hopeless
+        let plan = realign_group(&cm, &[bad.clone()], &RepartitionOptions::default());
+        assert!(plan.sets.is_empty());
+        assert_eq!(plan.infeasible, vec![bad]);
+    }
+
+    #[test]
+    fn point_set_restriction_respected() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let opts = RepartitionOptions {
+            point_set: Some(vec![4, 6, 8, 17]),
+            ..Default::default()
+        };
+        let plan = realign_group(&cm, &specs, &opts);
+        for set in &plan.sets {
+            // points are either from the set or a member's own p
+            // (standalone fallback)
+            assert!(
+                [4usize, 6, 8, 17].contains(&set.point)
+                    || set.members.len() == 1
+                        && set.members[0].spec.p == set.point,
+                "unexpected point {}",
+                set.point
+            );
+        }
+    }
+
+    #[test]
+    fn heterogeneous_budgets_respected() {
+        // one very tight member must not drag others into infeasibility
+        let cm = cm();
+        let m = cm.model_index("inc").unwrap();
+        let specs = vec![
+            spec(0, m, 2, 30.0, 30.0), // tight
+            spec(1, m, 2, 140.0, 30.0),
+        ];
+        let plan = realign_group(&cm, &specs, &RepartitionOptions::default());
+        assert!(plan.infeasible.is_empty());
+        assert!(plan_is_slo_safe(&plan));
+    }
+
+    #[test]
+    fn single_fragment_gets_standalone_plan() {
+        let cm = cm();
+        let m = cm.model_index("vgg").unwrap();
+        let plan = realign_group(
+            &cm,
+            &[spec(0, m, 2, 60.0, 30.0)],
+            &RepartitionOptions::default(),
+        );
+        assert_eq!(plan.sets.len(), 1);
+        assert_eq!(plan.sets[0].members.len(), 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! §6 "Realignment disruption" — realignment reuse via shadow instances.
+//!
+//! When fragments arrive or change faster than the scheduler re-plans,
+//! the paper proposes attaching the newcomer to an *existing* re-aligned
+//! set whose members are "similar" (same partition point, approximate
+//! time budget), exploiting the resource-margin discreteness: the set's
+//! provisioned instances usually absorb the extra rate for free.  If no
+//! compatible set has margin, the newcomer gets a standalone *shadow
+//! instance* until the next full re-plan.
+
+use super::fragment::FragmentSpec;
+use super::plan::{ExecutionPlan, MemberPlan};
+use super::repartition::standalone_set;
+use crate::profiler::{AllocConstraints, CostModel};
+
+/// Outcome of an incremental attach.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttachOutcome {
+    /// Absorbed by the re-aligned set at this index — no new resources.
+    Reused { set: usize },
+    /// Provisioned a standalone shadow set (appended to the plan).
+    Shadow { set: usize },
+    /// Cannot be served at all (budget infeasible even standalone).
+    Infeasible,
+}
+
+/// Budget tolerance for "similar" fragments (relative).
+const BUDGET_SIMILARITY: f64 = 0.15;
+
+/// Try to serve `spec` on an existing plan without re-planning.
+///
+/// Reuse conditions (paper §6): a set of the same model whose
+/// re-partition point is reachable (`spec.p <= point`, and equal when
+/// the set has no alignment stages for that point), whose members'
+/// *minimum* budget is approximately `spec`'s or looser-compatible, and
+/// whose shared stage still has enough throughput margin to absorb the
+/// extra rate within its latency envelope.
+pub fn attach_fragment(
+    cm: &CostModel,
+    plan: &mut ExecutionPlan,
+    spec: &FragmentSpec,
+    cons: &AllocConstraints,
+) -> AttachOutcome {
+    // 1. look for a reusable set
+    let mut best: Option<(usize, f64)> = None; // (set idx, spare rps)
+    for (i, set) in plan.sets.iter().enumerate() {
+        if set.model != spec.model {
+            continue;
+        }
+        // exact alignment only: the newcomer must enter at the set's
+        // re-partition point (no new alignment instances without a plan)
+        if spec.p != set.point {
+            continue;
+        }
+        // budget similarity: the set was sized for its members' tightest
+        // budget; the newcomer must not be tighter than that envelope
+        let t_min = set
+            .members
+            .iter()
+            .map(|m| m.spec.budget_ms)
+            .fold(f64::INFINITY, f64::min);
+        if spec.budget_ms < t_min * (1.0 - BUDGET_SIMILARITY) {
+            continue;
+        }
+        // margin: shared stage absorbs the extra rate for free
+        let spare = set.shared.alloc.throughput_rps - set.shared.demand_rps;
+        if spare >= spec.rate_rps && best.map_or(true, |(_, s)| spare > s) {
+            best = Some((i, spare));
+        }
+    }
+    if let Some((i, _)) = best {
+        let set = &mut plan.sets[i];
+        set.shared.demand_rps += spec.rate_rps;
+        set.members.push(MemberPlan { spec: spec.clone(), align: None });
+        return AttachOutcome::Reused { set: i };
+    }
+
+    // 2. shadow instance fallback
+    match standalone_set(cm, spec, cons) {
+        Some(set) => {
+            plan.sets.push(set);
+            AttachOutcome::Shadow { set: plan.sets.len() - 1 }
+        }
+        None => {
+            plan.infeasible.push(spec.clone());
+            AttachOutcome::Infeasible
+        }
+    }
+}
+
+/// Remove a departed client from the plan (the inverse trigger).  Sets
+/// left empty are dropped; returns whether the client was found.
+pub fn detach_client(
+    plan: &mut ExecutionPlan,
+    client: super::fragment::ClientId,
+) -> bool {
+    let mut found = false;
+    for set in &mut plan.sets {
+        set.members.retain_mut(|m| {
+            let had = m.spec.clients.contains(&client);
+            if had {
+                found = true;
+                set.shared.demand_rps =
+                    (set.shared.demand_rps - m.spec.rate_rps).max(0.0);
+            }
+            !had || m.spec.clients.len() > 1
+        });
+    }
+    plan.sets.retain(|s| !s.members.is_empty());
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::fragment::ClientId;
+    use crate::coordinator::repartition::{
+        plan_covers_demand, realign_group, RepartitionOptions,
+    };
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn base_plan(cm: &CostModel) -> (ExecutionPlan, usize) {
+        let mi = cm.model_index("vgg").unwrap();
+        let specs = vec![
+            FragmentSpec::single(ClientId(0), mi, 1, 90.0, 30.0),
+            FragmentSpec::single(ClientId(1), mi, 1, 95.0, 30.0),
+        ];
+        let plan = realign_group(cm, &specs, &RepartitionOptions::default());
+        assert!(plan.infeasible.is_empty());
+        (plan, mi)
+    }
+
+    #[test]
+    fn similar_fragment_is_reused_for_free() {
+        let cm = cm();
+        let (mut plan, mi) = base_plan(&cm);
+        let before = plan.total_share();
+        // pick the point of an existing set so reuse is possible
+        let point = plan.sets[0].point;
+        let margin = plan.sets[0].shared.alloc.throughput_rps
+            - plan.sets[0].shared.demand_rps;
+        let newcomer = FragmentSpec::single(
+            ClientId(9),
+            mi,
+            point,
+            92.0,
+            (margin * 0.8).max(1.0),
+        );
+        let out = attach_fragment(
+            &cm,
+            &mut plan,
+            &newcomer,
+            &AllocConstraints::default(),
+        );
+        assert!(matches!(out, AttachOutcome::Reused { .. }), "{out:?}");
+        assert_eq!(plan.total_share(), before, "reuse must be free");
+        assert!(plan_covers_demand(&plan));
+    }
+
+    #[test]
+    fn incompatible_fragment_gets_shadow_instance() {
+        let cm = cm();
+        let (mut plan, mi) = base_plan(&cm);
+        let before_sets = plan.sets.len();
+        let before_share = plan.total_share();
+        // different partition point -> cannot reuse
+        let newcomer =
+            FragmentSpec::single(ClientId(9), mi, 3, 70.0, 30.0);
+        let out = attach_fragment(
+            &cm,
+            &mut plan,
+            &newcomer,
+            &AllocConstraints::default(),
+        );
+        assert!(matches!(out, AttachOutcome::Shadow { .. }), "{out:?}");
+        assert_eq!(plan.sets.len(), before_sets + 1);
+        assert!(plan.total_share() > before_share);
+    }
+
+    #[test]
+    fn tighter_budget_is_not_reused() {
+        let cm = cm();
+        let (mut plan, mi) = base_plan(&cm);
+        let point = plan.sets[0].point;
+        // far tighter budget than the set was sized for
+        let newcomer = FragmentSpec::single(ClientId(9), mi, point, 20.0, 5.0);
+        let out = attach_fragment(
+            &cm,
+            &mut plan,
+            &newcomer,
+            &AllocConstraints::default(),
+        );
+        assert!(!matches!(out, AttachOutcome::Reused { .. }), "{out:?}");
+    }
+
+    #[test]
+    fn hopeless_fragment_is_infeasible() {
+        let cm = cm();
+        let (mut plan, mi) = base_plan(&cm);
+        let newcomer =
+            FragmentSpec::single(ClientId(9), mi, 1, 0.001, 30.0);
+        let out = attach_fragment(
+            &cm,
+            &mut plan,
+            &newcomer,
+            &AllocConstraints::default(),
+        );
+        assert_eq!(out, AttachOutcome::Infeasible);
+        assert_eq!(plan.infeasible.len(), 1);
+    }
+
+    #[test]
+    fn detach_removes_member_and_demand() {
+        let cm = cm();
+        let (mut plan, _) = base_plan(&cm);
+        let total_before: f64 =
+            plan.sets.iter().map(|s| s.shared.demand_rps).sum();
+        assert!(detach_client(&mut plan, ClientId(0)));
+        let total_after: f64 =
+            plan.sets.iter().map(|s| s.shared.demand_rps).sum();
+        assert!(total_after < total_before);
+        assert!(!detach_client(&mut plan, ClientId(77)));
+        // all-members-removed sets disappear
+        let mut plan2 = plan.clone();
+        detach_client(&mut plan2, ClientId(1));
+        assert!(plan2
+            .sets
+            .iter()
+            .all(|s| !s.members.is_empty()));
+    }
+}

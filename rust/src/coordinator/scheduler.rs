@@ -1,0 +1,222 @@
+//! The Graft scheduler (paper §3/§4): merge → group → re-partition.
+//!
+//! Takes the live set of fragment demands (one per mobile client), runs
+//! the three §4 steps and emits an [`ExecutionPlan`].  Groups are
+//! re-aligned in parallel on a configurable thread pool (the paper's
+//! "process pool", §5.9/Fig 19b).  The scheduler is cheap enough to be
+//! re-invoked on every partition-point change (trigger-based re-planning).
+
+use std::time::Instant;
+
+use super::fragment::FragmentSpec;
+use super::grouping::{group_fragments, GroupOptions};
+use super::merging::{merge_fragments, MergeOptions};
+use super::plan::ExecutionPlan;
+use super::repartition::{realign_group, RepartitionOptions};
+use crate::profiler::CostModel;
+use crate::util::parallel_map;
+
+#[derive(Debug, Clone)]
+pub struct SchedulerOptions {
+    pub merge: MergeOptions,
+    pub group: GroupOptions,
+    pub repartition: RepartitionOptions,
+    /// Thread-pool size for parallel per-group re-alignment (Fig 19b).
+    pub pool_size: usize,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        Self {
+            merge: MergeOptions::default(),
+            group: GroupOptions::default(),
+            repartition: RepartitionOptions::default(),
+            pool_size: 2, // paper default (§5.9)
+        }
+    }
+}
+
+/// Timing / size statistics of one scheduling run (Figs 14, 19).
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleStats {
+    pub n_input: usize,
+    pub n_after_merge: usize,
+    pub n_groups: usize,
+    pub merge_ms: f64,
+    pub group_ms: f64,
+    pub repartition_ms: f64,
+    pub total_ms: f64,
+}
+
+pub struct Scheduler {
+    cm: CostModel,
+    pub opts: SchedulerOptions,
+}
+
+impl Scheduler {
+    pub fn new(cm: CostModel, opts: SchedulerOptions) -> Self {
+        Self { cm, opts }
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cm
+    }
+
+    /// Produce the execution plan for the given demands.
+    pub fn plan(&self, demands: &[FragmentSpec]) -> (ExecutionPlan, ScheduleStats) {
+        let t0 = Instant::now();
+        let mut stats = ScheduleStats {
+            n_input: demands.len(),
+            ..Default::default()
+        };
+
+        // Step 1 — merging (§4.1), per model implicitly via uniformity.
+        let t = Instant::now();
+        let merged = merge_fragments(&self.cm, demands, &self.opts.merge);
+        stats.merge_ms = t.elapsed().as_secs_f64() * 1e3;
+        stats.n_after_merge = merged.len();
+
+        // Step 2 — grouping (§4.2), per model (§6: heterogeneous models
+        // are separated by type before grouping).
+        let t = Instant::now();
+        let mut groups: Vec<Vec<FragmentSpec>> = Vec::new();
+        let n_models = self.cm.config().models.len();
+        for model in 0..n_models {
+            let model_specs: Vec<FragmentSpec> = merged
+                .iter()
+                .filter(|s| s.model == model)
+                .cloned()
+                .collect();
+            if model_specs.is_empty() {
+                continue;
+            }
+            for idx_group in group_fragments(&model_specs, &self.opts.group) {
+                groups.push(
+                    idx_group.into_iter().map(|i| model_specs[i].clone()).collect(),
+                );
+            }
+        }
+        stats.group_ms = t.elapsed().as_secs_f64() * 1e3;
+        stats.n_groups = groups.len();
+
+        // Step 3 — re-partitioning (§4.3), groups in parallel.
+        let t = Instant::now();
+        let plans: Vec<ExecutionPlan> =
+            parallel_map(&groups, self.opts.pool_size, |g| {
+                realign_group(&self.cm, g, &self.opts.repartition)
+            });
+        stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let mut plan = ExecutionPlan::default();
+        for p in plans {
+            plan.merge_with(p);
+        }
+        stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        (plan, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::fragment::ClientId;
+    use crate::coordinator::repartition::{plan_covers_demand, plan_is_slo_safe};
+
+    fn scheduler() -> Scheduler {
+        Scheduler::new(
+            CostModel::new(Config::embedded()),
+            SchedulerOptions::default(),
+        )
+    }
+
+    fn demands(cm: &CostModel) -> Vec<FragmentSpec> {
+        let inc = cm.model_index("inc").unwrap();
+        let vgg = cm.model_index("vgg").unwrap();
+        let mut v = Vec::new();
+        for i in 0..8 {
+            v.push(FragmentSpec::single(
+                ClientId(i),
+                inc,
+                2 + (i as usize % 3),
+                90.0 + i as f64,
+                30.0,
+            ));
+        }
+        for i in 8..12 {
+            v.push(FragmentSpec::single(ClientId(i), vgg, 2, 60.0, 30.0));
+        }
+        v
+    }
+
+    #[test]
+    fn plan_is_valid_and_covers_all_clients() {
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (plan, stats) = s.plan(&d);
+        assert!(plan.infeasible.is_empty());
+        assert!(plan_is_slo_safe(&plan));
+        assert!(plan_covers_demand(&plan));
+        assert_eq!(stats.n_input, 12);
+        assert!(stats.n_after_merge <= 12);
+        let mut clients: Vec<u32> = plan
+            .sets
+            .iter()
+            .flat_map(|s| s.members.iter())
+            .flat_map(|m| m.spec.clients.iter().map(|c| c.0))
+            .collect();
+        clients.sort_unstable();
+        assert_eq!(clients, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn models_never_mix_in_a_set() {
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (plan, _) = s.plan(&d);
+        for set in &plan.sets {
+            for m in &set.members {
+                assert_eq!(m.spec.model, set.model);
+            }
+        }
+    }
+
+    #[test]
+    fn merging_reduces_fragment_count() {
+        // vgg fragments on TX2-like budgets have a large resource margin
+        // (cheap server model, generous SLO), so Uniform+ merging at the
+        // default 0.2 threshold must collapse uniform clients.
+        let s = scheduler();
+        let cm = s.cost_model();
+        let vgg = cm.model_index("vgg").unwrap();
+        let d: Vec<FragmentSpec> = (0..20)
+            .map(|i| FragmentSpec::single(ClientId(i), vgg, 1, 44.0, 30.0))
+            .collect();
+        let (_, stats) = s.plan(&d);
+        assert!(stats.n_after_merge < 20, "{}", stats.n_after_merge);
+    }
+
+    #[test]
+    fn pool_size_does_not_change_result() {
+        let cm = CostModel::new(Config::embedded());
+        let d = demands(&cm);
+        let mk = |pool| {
+            Scheduler::new(
+                cm.clone(),
+                SchedulerOptions { pool_size: pool, ..Default::default() },
+            )
+            .plan(&d)
+            .0
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_eq!(a.total_share(), b.total_share());
+    }
+
+    #[test]
+    fn empty_demands_empty_plan() {
+        let (plan, stats) = scheduler().plan(&[]);
+        assert!(plan.sets.is_empty());
+        assert_eq!(stats.n_groups, 0);
+    }
+}

@@ -1,0 +1,355 @@
+//! Component ablations: Fig 11 (re-partitioning on/off), Fig 12
+//! (re-partition point vs bandwidth / rate), Figs 13–15 (merging
+//! strategies & thresholds), Fig 16 (group size & factor weights).
+
+use std::time::Instant;
+
+use crate::coordinator::grouping::{FactorWeights, GroupOptions};
+use crate::coordinator::merging::{merge_fragments, MergeOptions};
+use crate::coordinator::repartition::{
+    no_realign_plan, realign_group, RepartitionOptions,
+};
+use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use crate::coordinator::{ClientId, FragmentSpec};
+use crate::hybrid::{choose_partition, DeviceKind};
+use crate::profiler::{AllocConstraints, CostModel};
+use crate::util::csv::{f, Table};
+
+use super::common::{mean_over_reps, model_idx, random_fragments, MODELS};
+
+/// Fig 11: resource consumption with re-partitioning normalised by the
+/// no-re-partitioning provisioning, 5 random fragments per model.
+pub fn fig11(cm: &CostModel) -> Table {
+    let cons = AllocConstraints::default();
+    let mut t = Table::new(vec!["model", "normalized_share", "reduction_pct"]);
+    for name in MODELS {
+        let mi = model_idx(cm, name);
+        let ratio = mean_over_reps(10, |rep| {
+            let frags = random_fragments(cm, mi, 5, 1000 + rep as u64);
+            let with = realign_group(
+                cm,
+                &frags,
+                &RepartitionOptions { constraints: cons, ..Default::default() },
+            );
+            let without = no_realign_plan(cm, &frags, &cons);
+            with.total_share() as f64 / without.total_share().max(1) as f64
+        });
+        t.row(vec![
+            name.to_string(),
+            f(ratio, 3),
+            f((1.0 - ratio) * 100.0, 1),
+        ]);
+    }
+    t
+}
+
+/// Fig 12: re-partition point and share of Inc with four fixed fragments
+/// while the fifth sweeps (a) bandwidth and (b) request rate.
+pub fn fig12(cm: &CostModel) -> Table {
+    let mi = model_idx(cm, "inc");
+    let m = &cm.config().models[mi];
+    let fixed = random_fragments(cm, mi, 4, 99);
+    let slo = DeviceKind::Nano.slo_ms(m, cm.config().slo_ratio_default);
+    let opts = RepartitionOptions::default();
+
+    let mut t = Table::new(vec![
+        "panel",
+        "x",
+        "fifth_p",
+        "repartition_points",
+        "total_share",
+    ]);
+    // (a) bandwidth sweep at the default rate
+    for bw in [30.0, 50.0, 70.0, 100.0, 130.0, 160.0, 200.0] {
+        if let Some(part) =
+            choose_partition(cm, mi, DeviceKind::Nano, bw, slo, None)
+                .partition()
+        {
+            let mut frags = fixed.clone();
+            frags.push(FragmentSpec::single(
+                ClientId(4),
+                mi,
+                part.p,
+                part.server_budget_ms,
+                m.rate_rps,
+            ));
+            let plan = realign_group(cm, &frags, &opts);
+            let pts: Vec<String> =
+                plan.sets.iter().map(|s| s.point.to_string()).collect();
+            t.row(vec![
+                "a:bandwidth".to_string(),
+                f(bw, 0),
+                part.p.to_string(),
+                pts.join("|"),
+                plan.total_share().to_string(),
+            ]);
+        }
+    }
+    // (b) rate sweep at 100 Mbps
+    if let Some(part) =
+        choose_partition(cm, mi, DeviceKind::Nano, 100.0, slo, None)
+            .partition()
+    {
+        for rate in [10.0, 20.0, 30.0, 45.0, 60.0, 90.0, 120.0] {
+            let mut frags = fixed.clone();
+            frags.push(FragmentSpec::single(
+                ClientId(4),
+                mi,
+                part.p,
+                part.server_budget_ms,
+                rate,
+            ));
+            let plan = realign_group(cm, &frags, &opts);
+            let pts: Vec<String> =
+                plan.sets.iter().map(|s| s.point.to_string()).collect();
+            t.row(vec![
+                "b:rate".to_string(),
+                f(rate, 0),
+                part.p.to_string(),
+                pts.join("|"),
+                plan.total_share().to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+fn plan_with_merge(
+    cm: &CostModel,
+    frags: &[FragmentSpec],
+    merge: MergeOptions,
+) -> (u32, usize, f64) {
+    let sched = Scheduler::new(
+        cm.clone(),
+        SchedulerOptions { merge, ..Default::default() },
+    );
+    let t0 = Instant::now();
+    let (plan, stats) = sched.plan(frags);
+    (
+        plan.total_share(),
+        stats.n_after_merge,
+        t0.elapsed().as_secs_f64() * 1e3,
+    )
+}
+
+/// Fig 13: resource consumption under No / Uniform / Uniform⁺ merging
+/// (50 fragments, threshold 0.2).
+pub fn fig13(cm: &CostModel) -> Table {
+    let mut t =
+        Table::new(vec!["model", "strategy", "total_share", "n_after_merge"]);
+    for name in MODELS {
+        let mi = model_idx(cm, name);
+        let frags = random_fragments(cm, mi, 50, 555);
+        for (label, merge) in [
+            ("no-merging", MergeOptions::none()),
+            ("uniform", MergeOptions::merge_all()),
+            (
+                "uniform+",
+                MergeOptions { threshold: 0.2, ..Default::default() },
+            ),
+        ] {
+            let (share, n, _) = plan_with_merge(cm, &frags, merge);
+            t.row(vec![
+                name.to_string(),
+                label.to_string(),
+                share.to_string(),
+                n.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 14: Res resource consumption (top) and scheduler time (bottom)
+/// normalised by no-merging, under growing fragment counts; plus the
+/// fragment-count reduction of Uniform⁺ for all models.
+pub fn fig14(cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "model",
+        "n_fragments",
+        "share_ratio_vs_nomerge",
+        "time_ratio_vs_nomerge",
+        "fragments_reduction_pct",
+    ]);
+    for name in MODELS {
+        let mi = model_idx(cm, name);
+        for n in [10usize, 20, 30, 40, 50] {
+            let frags = random_fragments(cm, mi, n, 777 + n as u64);
+            let (s_no, _, t_no) =
+                plan_with_merge(cm, &frags, MergeOptions::none());
+            let (s_up, n_up, t_up) = plan_with_merge(
+                cm,
+                &frags,
+                MergeOptions { threshold: 0.2, ..Default::default() },
+            );
+            t.row(vec![
+                name.to_string(),
+                n.to_string(),
+                f(s_up as f64 / s_no.max(1) as f64, 3),
+                f(t_up / t_no.max(1e-9), 3),
+                f((1.0 - n_up as f64 / n as f64) * 100.0, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 15: (a) resource consumption under varying merging thresholds,
+/// normalised by threshold 0.1; (b) merging time cost for 25 Res
+/// fragments vs threshold.
+pub fn fig15(cm: &CostModel) -> Table {
+    let thresholds = [0.05, 0.1, 0.2, 0.3, 0.4];
+    let mut t = Table::new(vec![
+        "panel",
+        "model",
+        "n_fragments",
+        "threshold",
+        "value",
+    ]);
+    for name in MODELS {
+        let mi = model_idx(cm, name);
+        for n in [25usize, 50] {
+            let frags = random_fragments(cm, mi, n, 888 + n as u64);
+            let (base, _, _) = plan_with_merge(
+                cm,
+                &frags,
+                MergeOptions { threshold: 0.1, ..Default::default() },
+            );
+            for thr in thresholds {
+                let (share, _, _) = plan_with_merge(
+                    cm,
+                    &frags,
+                    MergeOptions { threshold: thr, ..Default::default() },
+                );
+                t.row(vec![
+                    "a:share_norm".to_string(),
+                    name.to_string(),
+                    n.to_string(),
+                    f(thr, 2),
+                    f(share as f64 / base.max(1) as f64, 3),
+                ]);
+            }
+        }
+    }
+    // (b) merging-only time cost, Res, 25 fragments
+    let mi = model_idx(cm, "res");
+    let frags = random_fragments(cm, mi, 25, 999);
+    for thr in thresholds {
+        let t0 = Instant::now();
+        let merged = merge_fragments(
+            cm,
+            &frags,
+            &MergeOptions { threshold: thr, ..Default::default() },
+        );
+        t.row(vec![
+            "b:merge_time_ms".to_string(),
+            "res".to_string(),
+            merged.len().to_string(),
+            f(thr, 2),
+            f(t0.elapsed().as_secs_f64() * 1e3, 3),
+        ]);
+    }
+    t
+}
+
+/// Fig 16: (a) resource + time vs group size (Inc, 25 fragments);
+/// (b) equal vs tuned factor weights.
+pub fn fig16(cm: &CostModel) -> Table {
+    let mi = model_idx(cm, "inc");
+    let frags = random_fragments(cm, mi, 25, 1234);
+    let mut t = Table::new(vec!["panel", "x", "total_share", "time_ms"]);
+    for gs in [2usize, 3, 5, 8, 12] {
+        let sched = Scheduler::new(
+            cm.clone(),
+            SchedulerOptions {
+                group: GroupOptions { group_size: gs, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        let (plan, _) = sched.plan(&frags);
+        t.row(vec![
+            "a:group_size".to_string(),
+            gs.to_string(),
+            plan.total_share().to_string(),
+            f(t0.elapsed().as_secs_f64() * 1e3, 2),
+        ]);
+    }
+    // (b): equal weights vs a small weight sweep (best-of)
+    let weight_sets = [
+        ("equal", FactorWeights { p: 1.0, t: 1.0, q: 1.0 }),
+        ("t-heavy", FactorWeights { p: 1.0, t: 2.0, q: 1.0 }),
+        ("p-heavy", FactorWeights { p: 2.0, t: 1.0, q: 1.0 }),
+        ("q-heavy", FactorWeights { p: 1.0, t: 1.0, q: 2.0 }),
+    ];
+    for (label, w) in weight_sets {
+        let sched = Scheduler::new(
+            cm.clone(),
+            SchedulerOptions {
+                group: GroupOptions { weights: w, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let (plan, _) = sched.plan(&frags);
+        t.row(vec![
+            format!("b:weights:{label}"),
+            "25".to_string(),
+            plan.total_share().to_string(),
+            "".to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    #[test]
+    fn fig11_realign_never_hurts() {
+        let cm = cm();
+        let t = fig11(&cm);
+        assert_eq!(t.rows.len(), 5);
+        for r in &t.rows {
+            let ratio: f64 = r[1].parse().unwrap();
+            assert!(ratio <= 1.0 + 1e-9, "{}: {ratio}", r[0]);
+        }
+        // at least one model gains substantially (paper: up to 60% ViT)
+        assert!(t.rows.iter().any(|r| {
+            r[2].parse::<f64>().unwrap() > 5.0
+        }));
+    }
+
+    #[test]
+    fn fig13_uniform_plus_never_worst() {
+        let cm = cm();
+        let t = fig13(&cm);
+        for name in MODELS {
+            let get = |strategy: &str| -> u32 {
+                t.rows
+                    .iter()
+                    .find(|r| r[0] == name && r[1] == strategy)
+                    .unwrap()[2]
+                    .parse()
+                    .unwrap()
+            };
+            let up = get("uniform+");
+            let no = get("no-merging");
+            assert!(up <= no, "{name}: uniform+ {up} > no-merge {no}");
+        }
+    }
+
+    #[test]
+    fn fig16_group_size_grows_time() {
+        let cm = cm();
+        let t = fig16(&cm);
+        let a: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[0] == "a:group_size").collect();
+        assert_eq!(a.len(), 5);
+    }
+}

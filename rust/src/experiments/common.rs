@@ -1,0 +1,300 @@
+//! Shared experiment machinery: the paper's client fleets, spec
+//! snapshots, and the five systems under comparison.
+
+use crate::coordinator::baselines::{
+    gslice, gslice_plus, static_alloc, static_plus, StaticClient,
+};
+use crate::coordinator::optimal::{optimal_plan_multi, MAX_OPTIMAL_N};
+use crate::coordinator::plan::ExecutionPlan;
+use crate::coordinator::repartition::RepartitionOptions;
+use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use crate::coordinator::{ClientId, FragmentSpec};
+use crate::hybrid::{BandwidthTrace, ClientSim, DeviceKind, TraceParams};
+use crate::profiler::{AllocConstraints, CostModel};
+
+/// The paper's experiment scales (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// 4 Jetson Nanos.
+    SmallHomo,
+    /// 4 Nanos + 2 TX2s.
+    SmallHeter,
+    /// 20 emulated clients (Nano profile).
+    LargeHomo,
+    /// 15 Nanos + 5 TX2s.
+    LargeHeter,
+}
+
+impl Scale {
+    pub fn devices(&self) -> Vec<DeviceKind> {
+        let (nanos, tx2s) = match self {
+            Scale::SmallHomo => (4, 0),
+            Scale::SmallHeter => (4, 2),
+            Scale::LargeHomo => (20, 0),
+            Scale::LargeHeter => (15, 5),
+        };
+        let mut v = vec![DeviceKind::Nano; nanos];
+        v.extend(vec![DeviceKind::Tx2; tx2s]);
+        v
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            Scale::SmallHomo => "small-homo",
+            Scale::SmallHeter => "small-heter",
+            Scale::LargeHomo => "large-homo",
+            Scale::LargeHeter => "large-heter",
+        }
+    }
+}
+
+/// A fleet of simulated clients for one model at one scale.
+pub fn fleet(
+    _cm: &CostModel,
+    model: usize,
+    scale: Scale,
+    slo_ratio: f64,
+    seed: u64,
+) -> Vec<ClientSim> {
+    scale
+        .devices()
+        .into_iter()
+        .enumerate()
+        .map(|(i, device)| {
+            ClientSim::new(
+                ClientId(i as u32),
+                model,
+                device,
+                BandwidthTrace::generate(
+                    seed.wrapping_add(i as u64 * 7919),
+                    &TraceParams::default(),
+                ),
+                slo_ratio,
+            )
+        })
+        .collect()
+}
+
+/// Snapshot every client's fragment demand at time `t_s` (clients whose
+/// partitioning is infeasible at that instant contribute nothing).
+pub fn snapshot(
+    cm: &CostModel,
+    clients: &[ClientSim],
+    t_s: f64,
+) -> Vec<FragmentSpec> {
+    clients
+        .iter()
+        .filter_map(|c| c.state_at(cm, t_s).spec)
+        .collect()
+}
+
+/// Static-baseline inputs for a fleet.
+pub fn static_clients(
+    cm: &CostModel,
+    clients: &[ClientSim],
+) -> Vec<StaticClient> {
+    clients
+        .iter()
+        .map(|c| StaticClient {
+            spec_seed: FragmentSpec::single(
+                c.id,
+                c.model,
+                0,
+                0.0,
+                cm.config().models[c.model].rate_rps,
+            ),
+            device: c.device,
+            trace: c.trace.clone(),
+            slo_ratio: c.slo_ratio,
+        })
+        .collect()
+}
+
+/// Which systems to evaluate.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemSet {
+    pub optimal: bool,
+}
+
+/// Total GPU share of every system on a snapshot (the Fig 7 comparison).
+/// Returns (system name, total share) rows.
+pub fn compare_systems(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    statics: &[StaticClient],
+    cons: AllocConstraints,
+    systems: SystemSet,
+) -> Vec<(&'static str, u32)> {
+    let mut rows = Vec::new();
+
+    let sched = Scheduler::new(
+        cm.clone(),
+        SchedulerOptions {
+            repartition: RepartitionOptions {
+                constraints: cons,
+                ..Default::default()
+            },
+            merge: crate::coordinator::merging::MergeOptions {
+                constraints: cons,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let (graft, _) = sched.plan(specs);
+    rows.push(("graft", graft.total_share()));
+    rows.push(("gslice", gslice(cm, specs, &cons).total_share()));
+    rows.push(("gslice+", gslice_plus(cm, specs, &cons).total_share()));
+    rows.push(("static", static_alloc(cm, statics, &cons, None).total_share()));
+    rows.push(("static+", static_plus(cm, statics, &cons, None).total_share()));
+    if systems.optimal && specs.len() <= MAX_OPTIMAL_N {
+        let opt = optimal_plan_multi(
+            cm,
+            specs,
+            5,
+            &RepartitionOptions { constraints: cons, ..Default::default() },
+        );
+        rows.push(("optimal", opt.total_share()));
+    }
+    rows
+}
+
+/// Graft plan helper with constraints.
+pub fn graft_plan(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    cons: AllocConstraints,
+) -> ExecutionPlan {
+    let sched = Scheduler::new(
+        cm.clone(),
+        SchedulerOptions {
+            repartition: RepartitionOptions {
+                constraints: cons,
+                ..Default::default()
+            },
+            merge: crate::coordinator::merging::MergeOptions {
+                constraints: cons,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    sched.plan(specs).0
+}
+
+/// Mean over repetitions of a per-snapshot measurement.
+pub fn mean_over_reps<F>(reps: usize, mut f: F) -> f64
+where
+    F: FnMut(usize) -> f64,
+{
+    let vals: Vec<f64> =
+        (0..reps).map(|r| f(r)).filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    vals.iter().sum::<f64>() / vals.len() as f64
+}
+
+/// Synthetic random fragments for one model (Figs 11, 13–16, 18, 19):
+/// each replays a random bandwidth from the trace distribution, like the
+/// paper's random-fragment experiments.
+pub fn random_fragments(
+    cm: &CostModel,
+    model: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<FragmentSpec> {
+    use crate::hybrid::choose_partition;
+    use crate::util::Rng;
+    let mut rng = Rng::seed_from_u64(seed);
+    let m = &cm.config().models[model];
+    let mut out = Vec::with_capacity(n);
+    let mut id = 0u32;
+    while out.len() < n {
+        let device = if rng.f64() < 0.7 {
+            DeviceKind::Nano
+        } else {
+            DeviceKind::Tx2
+        };
+        let bw = rng.range(
+            TraceParams::default().min_mbps,
+            TraceParams::default().max_mbps,
+        );
+        let slo = device.slo_ms(m, cm.config().slo_ratio_default);
+        if let Some(p) =
+            choose_partition(cm, model, device, bw, slo, None).partition()
+        {
+            out.push(FragmentSpec::single(
+                ClientId(id),
+                model,
+                p.p,
+                p.server_budget_ms,
+                m.rate_rps,
+            ));
+            id += 1;
+        }
+    }
+    out
+}
+
+pub const MODELS: [&str; 5] = ["inc", "res", "vgg", "mob", "vit"];
+
+pub fn model_idx(cm: &CostModel, name: &str) -> usize {
+    cm.model_index(name).expect("known model")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    #[test]
+    fn scales_have_right_sizes() {
+        assert_eq!(Scale::SmallHomo.devices().len(), 4);
+        assert_eq!(Scale::SmallHeter.devices().len(), 6);
+        assert_eq!(Scale::LargeHomo.devices().len(), 20);
+        assert_eq!(Scale::LargeHeter.devices().len(), 20);
+    }
+
+    #[test]
+    fn snapshot_produces_specs() {
+        let cm = cm();
+        let f = fleet(&cm, model_idx(&cm, "inc"), Scale::SmallHomo, 0.95, 1);
+        let s = snapshot(&cm, &f, 5.0);
+        assert!(!s.is_empty());
+        assert!(s.iter().all(|x| x.budget_ms > 0.0));
+    }
+
+    #[test]
+    fn compare_systems_orders_sanely() {
+        let cm = cm();
+        let f = fleet(&cm, model_idx(&cm, "inc"), Scale::SmallHomo, 0.95, 2);
+        let specs = snapshot(&cm, &f, 3.0);
+        let st = static_clients(&cm, &f);
+        let rows = compare_systems(
+            &cm,
+            &specs,
+            &st,
+            AllocConstraints::default(),
+            SystemSet { optimal: true },
+        );
+        let get = |n: &str| {
+            rows.iter().find(|(s, _)| *s == n).map(|(_, v)| *v).unwrap()
+        };
+        assert!(get("graft") <= get("gslice+"));
+        assert!(get("gslice+") <= get("gslice"));
+        assert!(get("optimal") <= get("graft"));
+    }
+
+    #[test]
+    fn random_fragments_are_valid() {
+        let cm = cm();
+        let fr = random_fragments(&cm, model_idx(&cm, "vgg"), 20, 7);
+        assert_eq!(fr.len(), 20);
+        assert!(fr.iter().all(|f| f.budget_ms > 0.0 && f.rate_rps > 0.0));
+    }
+}

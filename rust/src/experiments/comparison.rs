@@ -1,0 +1,218 @@
+//! Headline comparisons: Fig 7 / Table 3 (resource consumption of Graft
+//! vs GSLICE(+)/Static(+)/Optimal across scales) and Figs 8–10
+//! (end-to-end latency distributions via the DES).
+
+use crate::hybrid::DeviceKind;
+use crate::profiler::{AllocConstraints, CostModel};
+use crate::sim::{simulate, SimClient, SimOptions};
+use crate::util::csv::{f, Table};
+
+use super::common::{
+    compare_systems, fleet, graft_plan, model_idx, snapshot,
+    static_clients, Scale, SystemSet, MODELS,
+};
+
+fn scale_constraints(scale: Scale) -> AllocConstraints {
+    match scale {
+        // §5.3: instances per fragment capped at 5 at large scale
+        Scale::LargeHomo | Scale::LargeHeter => AllocConstraints {
+            max_instances: 5,
+            ..Default::default()
+        },
+        _ => AllocConstraints::default(),
+    }
+}
+
+/// Fig 7 (a–c) + Table 3: mean total GPU share per system, model, scale.
+pub fn fig7(cm: &CostModel) -> Table {
+    let mut t = Table::new(vec!["scale", "model", "system", "total_share"]);
+    for scale in [
+        Scale::SmallHomo,
+        Scale::SmallHeter,
+        Scale::LargeHomo,
+        Scale::LargeHeter,
+    ] {
+        let reps = 10;
+        // Optimal is exponential: only feasible at small scale
+        let systems = SystemSet {
+            optimal: matches!(scale, Scale::SmallHomo | Scale::SmallHeter),
+        };
+        for name in MODELS {
+            let mi = model_idx(cm, name);
+            let mut sums: std::collections::HashMap<&'static str, (f64, u32)> =
+                std::collections::HashMap::new();
+            for rep in 0..reps {
+                let clients = fleet(cm, mi, scale, 0.95, 42 + rep as u64);
+                let specs = snapshot(cm, &clients, 3.0 + rep as f64 * 5.0);
+                if specs.is_empty() {
+                    continue;
+                }
+                let st = static_clients(cm, &clients);
+                for (sys, share) in compare_systems(
+                    cm,
+                    &specs,
+                    &st,
+                    scale_constraints(scale),
+                    systems,
+                ) {
+                    let e = sums.entry(sys).or_insert((0.0, 0));
+                    e.0 += share as f64;
+                    e.1 += 1;
+                }
+            }
+            for (sys, (total, n)) in sums {
+                t.row(vec![
+                    scale.id().to_string(),
+                    name.to_string(),
+                    sys.to_string(),
+                    f(total / n.max(1) as f64, 1),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Table 3: Graft's resource reduction (%) vs GSLICE (small) / GSLICE⁺
+/// (large), derived from the Fig 7 data.
+pub fn tab3(cm: &CostModel) -> Table {
+    let fig7 = fig7(cm);
+    let lookup = |scale: &str, model: &str, sys: &str| -> f64 {
+        fig7.rows
+            .iter()
+            .find(|r| r[0] == scale && r[1] == model && r[2] == sys)
+            .map(|r| r[3].parse().unwrap())
+            .unwrap_or(f64::NAN)
+    };
+    let mut t = Table::new(vec!["scale", "model", "baseline", "reduction_pct"]);
+    for (scale, base) in [
+        ("small-homo", "gslice"),
+        ("small-heter", "gslice"),
+        ("large-homo", "gslice+"),
+        ("large-heter", "gslice+"),
+    ] {
+        for model in MODELS {
+            let g = lookup(scale, model, "graft");
+            let b = lookup(scale, model, base);
+            t.row(vec![
+                scale.to_string(),
+                model.to_string(),
+                base.to_string(),
+                f((1.0 - g / b) * 100.0, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Latency-distribution experiment shared by Figs 8–10.
+fn latency_dist(cm: &CostModel, scale: Scale, label: &str) -> Table {
+    let mut t = Table::new(vec![
+        "scenario",
+        "model",
+        "device",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "slo_ms",
+        "slo_attainment",
+        "dropped_frac",
+    ]);
+    for name in MODELS {
+        let mi = model_idx(cm, name);
+        let m = &cm.config().models[mi];
+        let clients = fleet(cm, mi, scale, 0.95, 77);
+        let t_s = 5.0;
+        let specs = snapshot(cm, &clients, t_s);
+        if specs.is_empty() {
+            continue;
+        }
+        let plan = graft_plan(cm, &specs, scale_constraints(scale));
+        let sim_clients: Vec<SimClient> = clients
+            .iter()
+            .filter_map(|c| {
+                let st = c.state_at(cm, t_s);
+                st.spec.map(|s| SimClient {
+                    client_id: c.id.0,
+                    upstream_ms: st.mobile_ms + st.transfer_ms,
+                    slo_ms: st.slo_ms,
+                    budget_ms: s.budget_ms,
+                    rate_rps: m.rate_rps,
+                })
+            })
+            .collect();
+        let r = simulate(cm, &plan, &sim_clients, &SimOptions::default());
+        // aggregate per device kind
+        for dev in [DeviceKind::Nano, DeviceKind::Tx2] {
+            let mut stats = crate::metrics::LatencyStats::new();
+            let mut slo = f64::NAN;
+            for c in clients.iter().filter(|c| c.device == dev) {
+                if let Some((_, s)) =
+                    r.per_client.iter().find(|(id, _)| *id == c.id.0)
+                {
+                    stats.merge(s);
+                    slo = c.state_at(cm, t_s).slo_ms;
+                }
+            }
+            if stats.is_empty() {
+                continue;
+            }
+            let total = r.served + r.dropped;
+            t.row(vec![
+                label.to_string(),
+                name.to_string(),
+                dev.name().to_string(),
+                f(stats.percentile(50.0), 1),
+                f(stats.percentile(95.0), 1),
+                f(stats.percentile(99.0), 1),
+                f(slo, 1),
+                f(stats.slo_attainment(slo), 3),
+                f(r.dropped as f64 / total.max(1) as f64, 3),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 8: latency distribution, small-scale homogeneous (4 Nanos).
+pub fn fig8(cm: &CostModel) -> Table {
+    latency_dist(cm, Scale::SmallHomo, "small-homo")
+}
+
+/// Fig 9: latency distribution, small-scale heterogeneous (per device).
+pub fn fig9(cm: &CostModel) -> Table {
+    latency_dist(cm, Scale::SmallHeter, "small-heter")
+}
+
+/// Fig 10: latency distribution, large-scale (20 emulated clients).
+pub fn fig10(cm: &CostModel) -> Table {
+    latency_dist(cm, Scale::LargeHomo, "large-homo")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    #[test]
+    fn fig8_attains_slos() {
+        let cm = cm();
+        let t = fig8(&cm);
+        assert!(!t.rows.is_empty());
+        for r in &t.rows {
+            let att: f64 = r[7].parse().unwrap();
+            assert!(att > 0.85, "model {} attainment {att}", r[1]);
+        }
+    }
+
+    #[test]
+    fn fig9_has_tx2_rows() {
+        let cm = cm();
+        let t = fig9(&cm);
+        assert!(t.rows.iter().any(|r| r[2] == "tx2"));
+    }
+}

@@ -1,0 +1,59 @@
+//! Experiment harness: every table and figure of the paper's evaluation
+//! regenerated as a CSV + pretty table (see DESIGN.md §5 for the index).
+//!
+//! `graft experiment <id>` runs one (or `all`), printing to stdout and
+//! writing `results/<id>.csv`.
+
+pub mod ablations;
+pub mod common;
+pub mod comparison;
+pub mod motivation;
+pub mod scale;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::profiler::CostModel;
+use crate::util::csv::Table;
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig2", "fig4", "tab2", "fig6", "fig7", "tab3", "fig8", "fig9",
+    "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
+    "fig17", "fig18", "fig19", "fig20", "fig21",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, cm: &CostModel) -> Result<Table> {
+    Ok(match id {
+        "fig2" => motivation::fig2(cm),
+        "fig4" => motivation::fig4(cm),
+        "tab2" => motivation::tab2(cm),
+        "fig6" => motivation::fig6(cm),
+        "fig7" => comparison::fig7(cm),
+        "tab3" => comparison::tab3(cm),
+        "fig8" => comparison::fig8(cm),
+        "fig9" => comparison::fig9(cm),
+        "fig10" => comparison::fig10(cm),
+        "fig11" => ablations::fig11(cm),
+        "fig12" => ablations::fig12(cm),
+        "fig13" => ablations::fig13(cm),
+        "fig14" => ablations::fig14(cm),
+        "fig15" => ablations::fig15(cm),
+        "fig16" => ablations::fig16(cm),
+        "fig17" => scale::fig17(cm),
+        "fig18" => scale::fig18(cm),
+        "fig19" => scale::fig19(cm),
+        "fig20" => scale::fig20(cm),
+        "fig21" => scale::fig21(cm),
+        _ => bail!("unknown experiment {id:?}; known: {ALL:?}"),
+    })
+}
+
+/// Run and persist one experiment.
+pub fn run_and_save(id: &str, cm: &CostModel, out_dir: &Path) -> Result<Table> {
+    let t = run(id, cm)?;
+    t.save(&out_dir.join(format!("{id}.csv")))?;
+    Ok(t)
+}

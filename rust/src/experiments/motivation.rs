@@ -1,0 +1,256 @@
+//! Motivation & setup experiments: Fig 2 (hybrid DL under a 5G trace),
+//! Fig 4 (discreteness of resource consumption), Table 2 (model specs),
+//! Fig 6 (initial partition points & time budgets per scale).
+
+use crate::coordinator::repartition::no_realign_plan;
+use crate::coordinator::{ClientId, FragmentSpec};
+use crate::hybrid::{choose_partition, BandwidthTrace, DeviceKind};
+use crate::profiler::{AllocConstraints, CostModel, FragmentId, Profile};
+use crate::util::csv::{f, Table};
+
+use super::common::{fleet, model_idx, snapshot, Scale, MODELS};
+
+/// Fig 2: partition point + server resource consumption of Inception-v3
+/// under the embedded 50 s 5G snippet, vs the server-only baseline.
+pub fn fig2(cm: &CostModel) -> Table {
+    let mi = model_idx(cm, "inc");
+    let m = &cm.config().models[mi];
+    let trace = BandwidthTrace::embedded();
+    let slo = DeviceKind::Nano.slo_ms(m, cm.config().slo_ratio_default);
+    let cons = AllocConstraints::default();
+
+    let mut t = Table::new(vec![
+        "t_s",
+        "mbps",
+        "partition_point",
+        "hybrid_share",
+        "server_only_share",
+        "hybrid_feasible",
+    ]);
+    for s in 0..trace.len_s() {
+        let bw = trace.at(s as f64);
+        let dec = choose_partition(cm, mi, DeviceKind::Nano, bw, slo, None);
+        let (p, share, ok) = match dec.partition() {
+            Some(part) => {
+                let spec = FragmentSpec::single(
+                    ClientId(0),
+                    mi,
+                    part.p,
+                    part.server_budget_ms,
+                    m.rate_rps,
+                );
+                let plan = no_realign_plan(cm, &[spec], &cons);
+                (part.p as f64, plan.total_share() as f64, 1.0)
+            }
+            None => (f64::NAN, f64::NAN, 0.0),
+        };
+        // server-only: p = 0 regardless of Neurosurgeon (NaN when the
+        // transfer alone blows the SLO — the §2 motivation case)
+        let tx = crate::hybrid::transfer_ms(m.act_kb_at(0), bw);
+        let only_share = if slo > tx {
+            let only = FragmentSpec::single(
+                ClientId(0),
+                mi,
+                0,
+                slo - tx,
+                m.rate_rps,
+            );
+            let plan = no_realign_plan(cm, &[only], &cons);
+            if plan.infeasible.is_empty() {
+                plan.total_share() as f64
+            } else {
+                f64::NAN
+            }
+        } else {
+            f64::NAN
+        };
+        t.row(vec![
+            s.to_string(),
+            f(bw, 1),
+            f(p, 0),
+            f(share, 0),
+            f(only_share, 0),
+            f(ok, 0),
+        ]);
+    }
+    t
+}
+
+/// Fig 4: required GPU share (a) vs time budget at 200 RPS and (b) vs
+/// throughput at 25 ms, for Inception-v3 — the discreteness curves.
+pub fn fig4(cm: &CostModel) -> Table {
+    let mi = model_idx(cm, "inc");
+    let layers = cm.config().models[mi].layers;
+    let prof = Profile::new(FragmentId::new(mi, 0, layers));
+    let cons = AllocConstraints::default();
+
+    let mut t = Table::new(vec!["panel", "x", "total_share", "batch", "instances"]);
+    for pt in prof.share_vs_budget(cm, 200.0, (10..=60).map(|b| b as f64), cons)
+    {
+        let (b, i) = pt
+            .alloc
+            .map(|a| (a.batch as f64, a.instances as f64))
+            .unwrap_or((f64::NAN, f64::NAN));
+        t.row(vec![
+            "a:share_vs_budget".to_string(),
+            f(pt.x, 0),
+            pt.total_share.map_or("inf".into(), |s| s.to_string()),
+            f(b, 0),
+            f(i, 0),
+        ]);
+    }
+    for pt in prof.share_vs_throughput(
+        cm,
+        25.0,
+        (1..=30).map(|k| 10.0 * k as f64),
+        cons,
+    ) {
+        let (b, i) = pt
+            .alloc
+            .map(|a| (a.batch as f64, a.instances as f64))
+            .unwrap_or((f64::NAN, f64::NAN));
+        t.row(vec![
+            "b:share_vs_throughput".to_string(),
+            f(pt.x, 0),
+            pt.total_share.map_or("inf".into(), |s| s.to_string()),
+            f(b, 0),
+            f(i, 0),
+        ]);
+    }
+    t
+}
+
+/// Table 2: layer counts + mobile/server latencies of the five models.
+pub fn tab2(cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "model",
+        "layers",
+        "mobile_ms_nano",
+        "mobile_ms_tx2",
+        "server_ms@share30_b1",
+        "rate_rps",
+    ]);
+    for name in MODELS {
+        let mi = model_idx(cm, name);
+        let m = &cm.config().models[mi];
+        let frag = FragmentId::new(mi, 0, m.layers);
+        t.row(vec![
+            name.to_string(),
+            m.layers.to_string(),
+            f(m.mobile_ms_nano, 0),
+            f(m.mobile_ms_tx2, 0),
+            f(cm.latency_ms(frag, 1, cm.config().gpu.ref_share as u32), 1),
+            f(m.rate_rps, 0),
+        ]);
+    }
+    t
+}
+
+/// Fig 6: distribution of initial partition points and time budgets per
+/// model at small/large scale (10 trace snapshots each).
+pub fn fig6(cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "scale",
+        "model",
+        "client",
+        "device",
+        "t_s",
+        "partition_point",
+        "budget_ms",
+    ]);
+    for (scale, label) in
+        [(Scale::SmallHeter, "S"), (Scale::LargeHeter, "L")]
+    {
+        for name in MODELS {
+            let mi = model_idx(cm, name);
+            let clients = fleet(cm, mi, scale, 0.95, 42);
+            for rep in 0..10 {
+                let t_s = rep as f64 * 7.0;
+                for c in &clients {
+                    if let Some(spec) = c.state_at(cm, t_s).spec {
+                        t.row(vec![
+                            label.to_string(),
+                            name.to_string(),
+                            c.id.0.to_string(),
+                            c.device.name().to_string(),
+                            f(t_s, 0),
+                            spec.p.to_string(),
+                            f(spec.budget_ms, 1),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    let _ = snapshot; // helper reused elsewhere
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    #[test]
+    fn fig2_shows_hybrid_savings_and_dynamics() {
+        let cm = cm();
+        let t = fig2(&cm);
+        assert_eq!(t.rows.len(), 50);
+        // hybrid never consumes more than server-only; strictly less
+        // somewhere (paper: up to 3x less)
+        let mut strictly = 0;
+        let mut points = std::collections::HashSet::new();
+        for r in &t.rows {
+            let hybrid: f64 = r[3].parse().unwrap_or(f64::NAN);
+            let only: f64 = r[4].parse().unwrap_or(f64::NAN);
+            if hybrid.is_finite() {
+                points.insert(r[2].clone());
+                if !only.is_finite() || hybrid < only {
+                    // cheaper, or feasible where server-only is not
+                    strictly += 1;
+                }
+                if only.is_finite() {
+                    assert!(hybrid <= only + 1e-9, "{r:?}");
+                }
+            }
+        }
+        assert!(strictly > 5, "hybrid never cheaper");
+        assert!(points.len() >= 3, "partition point never moved: {points:?}");
+    }
+
+    #[test]
+    fn fig4_has_both_panels_with_steps() {
+        let cm = cm();
+        let t = fig4(&cm);
+        let a: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[0].starts_with("a:")).collect();
+        let b: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[0].starts_with("b:")).collect();
+        assert_eq!(a.len(), 51);
+        assert_eq!(b.len(), 30);
+    }
+
+    #[test]
+    fn tab2_matches_calibration() {
+        let cm = cm();
+        let t = tab2(&cm);
+        assert_eq!(t.rows.len(), 5);
+        let inc = &t.rows[0];
+        assert_eq!(inc[1], "17");
+        assert_eq!(inc[4], "29.0");
+    }
+
+    #[test]
+    fn fig6_covers_scales_and_models() {
+        let cm = cm();
+        let t = fig6(&cm);
+        assert!(t.rows.len() > 200);
+        assert!(t.rows.iter().any(|r| r[0] == "S"));
+        assert!(t.rows.iter().any(|r| r[0] == "L"));
+        assert!(t.rows.iter().any(|r| r[3] == "tx2"));
+    }
+}

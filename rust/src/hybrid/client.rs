@@ -1,0 +1,231 @@
+//! Client simulator: one mobile device running hybrid DL over a 5G trace.
+//!
+//! Each second, the client observes its current uplink bandwidth, re-runs
+//! Neurosurgeon, and (when the partition point or budget changes
+//! materially) emits an updated `FragmentSpec` — the trigger that makes
+//! Graft re-plan (paper §3 "trigger-based approach").
+
+use super::mobile::DeviceKind;
+use super::neurosurgeon::{choose_partition, PartitionDecision};
+use super::trace::BandwidthTrace;
+use crate::coordinator::fragment::{ClientId, FragmentSpec};
+use crate::profiler::CostModel;
+
+/// A simulated mobile client.
+#[derive(Debug, Clone)]
+pub struct ClientSim {
+    pub id: ClientId,
+    pub model: usize,
+    pub device: DeviceKind,
+    pub trace: BandwidthTrace,
+    pub slo_ratio: f64,
+    /// Restrict partition candidates (e.g. to the compiled point set for
+    /// the real data path); `None` = all layers.
+    pub candidates: Option<Vec<usize>>,
+}
+
+/// The client's state at a point in time.
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub t_s: f64,
+    pub mbps: f64,
+    /// `None` when Neurosurgeon found no feasible split.
+    pub spec: Option<FragmentSpec>,
+    pub mobile_ms: f64,
+    pub transfer_ms: f64,
+    pub slo_ms: f64,
+}
+
+impl ClientSim {
+    pub fn new(
+        id: ClientId,
+        model: usize,
+        device: DeviceKind,
+        trace: BandwidthTrace,
+        slo_ratio: f64,
+    ) -> Self {
+        Self { id, model, device, trace, slo_ratio, candidates: None }
+    }
+
+    pub fn with_candidates(mut self, candidates: Vec<usize>) -> Self {
+        self.candidates = Some(candidates);
+        self
+    }
+
+    /// Evaluate the client at time `t_s` (seconds into its trace).
+    pub fn state_at(&self, cm: &CostModel, t_s: f64) -> ClientState {
+        let m = &cm.config().models[self.model];
+        let mbps = self.trace.at(t_s);
+        let slo_ms = self.device.slo_ms(m, self.slo_ratio);
+        let decision = choose_partition(
+            cm,
+            self.model,
+            self.device,
+            mbps,
+            slo_ms,
+            self.candidates.as_deref(),
+        );
+        match decision {
+            PartitionDecision::Hybrid(part) => ClientState {
+                t_s,
+                mbps,
+                spec: Some(FragmentSpec::single(
+                    self.id,
+                    self.model,
+                    part.p,
+                    part.server_budget_ms,
+                    m.rate_rps,
+                )),
+                mobile_ms: part.mobile_ms,
+                transfer_ms: part.transfer_ms,
+                slo_ms,
+            },
+            PartitionDecision::Infeasible => ClientState {
+                t_s,
+                mbps,
+                spec: None,
+                mobile_ms: 0.0,
+                transfer_ms: 0.0,
+                slo_ms,
+            },
+        }
+    }
+
+    /// The sequence of (time, spec) *changes* over the whole trace — the
+    /// re-plan triggers. A change is a new partition point or a budget
+    /// shift larger than `budget_tol_ms`.
+    pub fn spec_changes(
+        &self,
+        cm: &CostModel,
+        budget_tol_ms: f64,
+    ) -> Vec<(f64, ClientState)> {
+        let mut out: Vec<(f64, ClientState)> = Vec::new();
+        for t in 0..self.trace.len_s() {
+            let st = self.state_at(cm, t as f64);
+            let changed = match (&out.last(), &st.spec) {
+                (None, _) => true,
+                (Some((_, prev)), cur) => match (&prev.spec, cur) {
+                    (Some(a), Some(b)) => {
+                        a.p != b.p
+                            || (a.budget_ms - b.budget_ms).abs()
+                                > budget_tol_ms
+                    }
+                    (None, None) => false,
+                    _ => true,
+                },
+            };
+            if changed {
+                out.push((t as f64, st));
+            }
+        }
+        out
+    }
+}
+
+/// Build the paper's standard client fleets.
+pub fn fleet(
+    _cm: &CostModel,
+    model: usize,
+    nanos: usize,
+    tx2s: usize,
+    slo_ratio: f64,
+    seed: u64,
+) -> Vec<ClientSim> {
+    use super::trace::TraceParams;
+    let mut clients = Vec::new();
+    for i in 0..nanos + tx2s {
+        let device = if i < nanos { DeviceKind::Nano } else { DeviceKind::Tx2 };
+        let trace = BandwidthTrace::generate(
+            seed.wrapping_add(i as u64 * 7919),
+            &TraceParams::default(),
+        );
+        clients.push(ClientSim::new(
+            ClientId(i as u32),
+            model,
+            device,
+            trace,
+            slo_ratio,
+        ));
+    }
+    clients
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    #[test]
+    fn state_tracks_trace() {
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let c = ClientSim::new(
+            ClientId(0),
+            i,
+            DeviceKind::Nano,
+            BandwidthTrace::embedded(),
+            0.95,
+        );
+        let st = c.state_at(&cm, 0.0);
+        assert_eq!(st.mbps, BandwidthTrace::embedded().mbps[0]);
+        let spec = st.spec.expect("feasible at 210 Mbps");
+        assert!(spec.budget_ms > 0.0);
+        assert_eq!(spec.rate_rps, 30.0);
+    }
+
+    #[test]
+    fn spec_changes_are_sparse_and_start_at_zero() {
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let c = ClientSim::new(
+            ClientId(0),
+            i,
+            DeviceKind::Nano,
+            BandwidthTrace::embedded(),
+            0.95,
+        );
+        let changes = c.spec_changes(&cm, 5.0);
+        assert!(!changes.is_empty());
+        assert_eq!(changes[0].0, 0.0);
+        assert!(changes.len() < 50, "every second changed: {}", changes.len());
+    }
+
+    #[test]
+    fn fleet_builds_mixed_devices() {
+        let cm = cm();
+        let i = cm.model_index("vgg").unwrap();
+        let f = fleet(&cm, i, 4, 2, 0.95, 42);
+        assert_eq!(f.len(), 6);
+        assert_eq!(
+            f.iter().filter(|c| c.device == DeviceKind::Nano).count(),
+            4
+        );
+        // distinct traces per client
+        assert_ne!(f[0].trace.mbps, f[1].trace.mbps);
+    }
+
+    #[test]
+    fn candidate_restriction_propagates() {
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let pts: Vec<usize> =
+            cm.config().models[i].common_starts.clone();
+        let c = ClientSim::new(
+            ClientId(0),
+            i,
+            DeviceKind::Nano,
+            BandwidthTrace::embedded(),
+            0.95,
+        )
+        .with_candidates(pts.clone());
+        for t in 0..10 {
+            if let Some(s) = c.state_at(&cm, t as f64).spec {
+                assert!(pts.contains(&s.p));
+            }
+        }
+    }
+}

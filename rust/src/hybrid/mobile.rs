@@ -1,0 +1,91 @@
+//! Mobile device models (paper Table 1/2): per-layer execution latency of
+//! each DNN on Jetson Nano (low-end) and TX2 (high-end), derived from the
+//! calibrated full-model totals and the per-layer relative cost profile.
+
+use crate::config::ModelSpec;
+
+/// The two mobile device classes of the paper's testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Jetson Nano (128-core Maxwell, 472 GFLOPS) — Table 1 row 1.
+    Nano,
+    /// Jetson TX2 (256-core Pascal, 1.33 TFLOPS) — Table 1 row 2.
+    Tx2,
+}
+
+impl DeviceKind {
+    /// Full-model mobile inference latency (ms) — Table 2.
+    pub fn full_model_ms(&self, m: &ModelSpec) -> f64 {
+        match self {
+            DeviceKind::Nano => m.mobile_ms_nano,
+            DeviceKind::Tx2 => m.mobile_ms_tx2,
+        }
+    }
+
+    /// Latency of executing layers `1..=p` on the device (ms).
+    pub fn mobile_ms(&self, m: &ModelSpec, p: usize) -> f64 {
+        m.mobile_ms(self.full_model_ms(m), p)
+    }
+
+    /// Latency SLO of a model on this device: `slo_ratio` × the
+    /// full-model mobile latency (paper §5.1 uses ratio 0.95).
+    pub fn slo_ms(&self, m: &ModelSpec, slo_ratio: f64) -> f64 {
+        self.full_model_ms(m) * slo_ratio
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Nano => "nano",
+            DeviceKind::Tx2 => "tx2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn table2_mobile_latencies() {
+        let cfg = Config::embedded();
+        for (name, nano, tx2) in [
+            ("inc", 165.0, 94.0),
+            ("res", 226.0, 114.0),
+            ("vgg", 147.0, 77.0),
+            ("mob", 84.0, 67.0),
+            ("vit", 816.0, 603.0),
+        ] {
+            let m = cfg.model(name).unwrap();
+            assert_eq!(DeviceKind::Nano.full_model_ms(m), nano);
+            assert_eq!(DeviceKind::Tx2.full_model_ms(m), tx2);
+            // partial execution is monotone and bounded by the total
+            let mid = DeviceKind::Nano.mobile_ms(m, m.layers / 2);
+            assert!(mid > 0.0 && mid < nano);
+            assert!(
+                (DeviceKind::Nano.mobile_ms(m, m.layers) - nano).abs() < 1e-9
+            );
+            assert_eq!(DeviceKind::Nano.mobile_ms(m, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn tx2_is_faster_than_nano() {
+        let cfg = Config::embedded();
+        for m in &cfg.models {
+            for p in 1..=m.layers {
+                assert!(
+                    DeviceKind::Tx2.mobile_ms(m, p)
+                        < DeviceKind::Nano.mobile_ms(m, p)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slo_is_ratio_of_mobile_latency() {
+        let cfg = Config::embedded();
+        let m = cfg.model("inc").unwrap();
+        assert!((DeviceKind::Nano.slo_ms(m, 0.95) - 156.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! Hybrid-DL substrate: everything that happens *before* requests reach
+//! the edge server — mobile device execution models (Jetson Nano / TX2),
+//! the 5G bandwidth trace driving network dynamics, the Neurosurgeon
+//! partitioner choosing the split point, and the client simulator that
+//! turns all of it into the stream of `FragmentSpec`s the Graft scheduler
+//! consumes (paper §2.2, Fig 2).
+
+mod client;
+mod mobile;
+mod neurosurgeon;
+mod trace;
+
+pub use client::{fleet, ClientSim, ClientState};
+pub use mobile::DeviceKind;
+pub use neurosurgeon::{choose_partition, transfer_ms, Partition, PartitionDecision};
+pub use trace::{BandwidthTrace, TraceParams, EMBEDDED_5G_SNIPPET};

@@ -1,0 +1,192 @@
+//! Neurosurgeon-style DNN partitioning (paper [23], §5.1).
+//!
+//! Given the current uplink bandwidth, the device's per-layer latency and
+//! a server-side latency estimate, pick the partition point `p` that
+//! minimises estimated end-to-end latency; hybrid DL then runs layers
+//! `1..=p` on the device and `p+1..=L` on the server.  The paper notes
+//! Neurosurgeon may fail to find a feasible point under tight SLOs
+//! (§5.10) — we surface that as `PartitionDecision::Infeasible`.
+
+use super::mobile::DeviceKind;
+use crate::config::ModelSpec;
+use crate::profiler::{CostModel, FragmentId};
+
+/// Transfer latency (ms) of `kb` kilobytes over `mbps` megabits/s.
+pub fn transfer_ms(kb: f64, mbps: f64) -> f64 {
+    if mbps <= 0.0 {
+        return f64::INFINITY;
+    }
+    kb * 8.0 / mbps // KB * 8 bit/B / (Mbit/s) == ms
+}
+
+/// A chosen split: layers `1..=p` on device, `p+1..=L` on server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Partition {
+    pub p: usize,
+    /// Estimated end-to-end latency at decision time (ms).
+    pub est_e2e_ms: f64,
+    /// Mobile-side execution latency (ms).
+    pub mobile_ms: f64,
+    /// Uplink transfer latency of the activation (ms).
+    pub transfer_ms: f64,
+    /// Remaining server-side time budget: `slo - mobile - transfer` (ms).
+    pub server_budget_ms: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionDecision {
+    Hybrid(Partition),
+    /// No candidate point meets the SLO at this bandwidth.
+    Infeasible,
+}
+
+impl PartitionDecision {
+    pub fn partition(&self) -> Option<Partition> {
+        match self {
+            PartitionDecision::Hybrid(p) => Some(*p),
+            PartitionDecision::Infeasible => None,
+        }
+    }
+}
+
+/// Choose the partition point among `candidates` (`None` = all layers
+/// 0..L-1; p = L, i.e. fully-local, is never a serving outcome and is
+/// only reported as `Infeasible`-avoidance by callers that allow it).
+///
+/// The server-side estimate uses the reference profile (batch 1 at the
+/// calibration share), exactly the coarse estimate Neurosurgeon has.
+pub fn choose_partition(
+    cm: &CostModel,
+    model_idx: usize,
+    device: DeviceKind,
+    mbps: f64,
+    slo_ms: f64,
+    candidates: Option<&[usize]>,
+) -> PartitionDecision {
+    let m: &ModelSpec = &cm.config().models[model_idx];
+    let all: Vec<usize> = (0..m.layers).collect();
+    let candidates = candidates.unwrap_or(&all);
+
+    let mut best: Option<Partition> = None;
+    for &p in candidates {
+        assert!(p < m.layers, "partition point must leave server work");
+        let mobile = device.mobile_ms(m, p);
+        let tx = transfer_ms(m.act_kb_at(p), mbps);
+        let server = cm.latency_ms(
+            FragmentId::new(model_idx, p, m.layers),
+            1,
+            cm.config().gpu.ref_share as u32,
+        );
+        let e2e = mobile + tx + server;
+        let budget = slo_ms - mobile - tx;
+        let cand = Partition {
+            p,
+            est_e2e_ms: e2e,
+            mobile_ms: mobile,
+            transfer_ms: tx,
+            server_budget_ms: budget,
+        };
+        if e2e <= slo_ms
+            && best.map_or(true, |b| e2e < b.est_e2e_ms)
+        {
+            best = Some(cand);
+        }
+    }
+    match best {
+        Some(p) => PartitionDecision::Hybrid(p),
+        None => PartitionDecision::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    #[test]
+    fn transfer_math() {
+        assert!((transfer_ms(588.0, 100.0) - 47.04).abs() < 1e-9);
+        assert!(transfer_ms(10.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn high_bandwidth_prefers_early_partition() {
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let m = &cm.config().models[i];
+        let slo = DeviceKind::Nano.slo_ms(m, 0.95);
+        let hi = choose_partition(&cm, i, DeviceKind::Nano, 500.0, slo, None)
+            .partition()
+            .unwrap();
+        let lo = choose_partition(&cm, i, DeviceKind::Nano, 60.0, slo, None)
+            .partition()
+            .unwrap();
+        assert!(hi.p <= lo.p, "hi bw p={} lo bw p={}", hi.p, lo.p);
+    }
+
+    #[test]
+    fn partition_budget_is_consistent() {
+        let cm = cm();
+        let i = cm.model_index("vgg").unwrap();
+        let m = &cm.config().models[i];
+        let slo = DeviceKind::Tx2.slo_ms(m, 0.95);
+        let p = choose_partition(&cm, i, DeviceKind::Tx2, 200.0, slo, None)
+            .partition()
+            .unwrap();
+        assert!(
+            (p.server_budget_ms - (slo - p.mobile_ms - p.transfer_ms)).abs()
+                < 1e-9
+        );
+        assert!(p.server_budget_ms > 0.0);
+    }
+
+    #[test]
+    fn infeasible_under_tight_slo() {
+        // paper §5.10: Neurosurgeon can fail below ratio ~0.7 for Inc
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let m = &cm.config().models[i];
+        let slo = DeviceKind::Nano.slo_ms(m, 0.1);
+        assert_eq!(
+            choose_partition(&cm, i, DeviceKind::Nano, 1.0, slo, None),
+            PartitionDecision::Infeasible
+        );
+    }
+
+    #[test]
+    fn candidate_restriction_respected() {
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let m = &cm.config().models[i];
+        let slo = DeviceKind::Nano.slo_ms(m, 0.95);
+        let cands = [2usize, 4];
+        for bw in [60.0, 150.0, 400.0] {
+            if let Some(p) =
+                choose_partition(&cm, i, DeviceKind::Nano, bw, slo, Some(&cands))
+                    .partition()
+            {
+                assert!(cands.contains(&p.p));
+            }
+        }
+    }
+
+    #[test]
+    fn mob_polarises_at_layer_one() {
+        // Mob's layer-1 activation is ~71% smaller than the input, so the
+        // partitioner should consistently land on p=1 (paper §5.1).
+        let cm = cm();
+        let i = cm.model_index("mob").unwrap();
+        let m = &cm.config().models[i];
+        let slo = DeviceKind::Nano.slo_ms(m, 0.95);
+        for bw in [80.0, 150.0, 300.0, 500.0] {
+            let p = choose_partition(&cm, i, DeviceKind::Nano, bw, slo, None)
+                .partition()
+                .unwrap();
+            assert_eq!(p.p, 1, "bw={bw}");
+        }
+    }
+}

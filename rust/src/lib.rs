@@ -1,0 +1,36 @@
+//! # Graft — inference serving for hybrid deep learning via DNN re-alignment
+//!
+//! A reproduction of *"Graft: Efficient Inference Serving for Hybrid Deep
+//! Learning with SLO Guarantees via DNN Re-alignment"* (Wu et al., 2023)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Graft coordinator: profiler, scheduler
+//!   (merge → group → re-partition), executor/serving data path, the
+//!   baselines (GSLICE/GSLICE⁺/Static/Static⁺/Optimal), the hybrid-DL
+//!   substrate (Neurosurgeon, mobile devices, 5G traces), simulators and
+//!   the experiment harness regenerating every paper table and figure.
+//! * **L2/L1 (build-time Python)** — stand-in DNNs in JAX whose per-layer
+//!   hot-spot is a tiled Pallas `linear_block` kernel, AOT-lowered to HLO
+//!   text (`make artifacts`).
+//! * **Runtime** — [`runtime`] loads the HLO artifacts through the PJRT C
+//!   API (`xla` crate) and executes them on the request path; Python is
+//!   never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod experiments;
+pub mod hybrid;
+pub mod metrics;
+pub mod profiler;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod workload;
+
+pub use config::Config;
+pub use coordinator::fragment::{ClientId, FragmentSpec};
+pub use profiler::{Alloc, AllocConstraints, CostModel, FragmentId};

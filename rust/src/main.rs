@@ -1,0 +1,293 @@
+//! Graft CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   experiment <id|all> [--out DIR]   regenerate paper tables/figures
+//!   plan --model M --scale S [--t T]  print an execution plan
+//!   serve [--model M] [--clients N] [--duration S] [--addr A]
+//!                                     run the real serving data path
+//!   trace [--seed N] [--len S]        print a synthetic 5G trace
+//!   models                            list model specs (Table 2)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use graft::config::Config;
+use graft::coordinator::repartition::RepartitionOptions;
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::experiments;
+use graft::hybrid::{BandwidthTrace, TraceParams};
+use graft::profiler::{AllocConstraints, CostModel};
+use graft::runtime::{default_artifacts_dir, Engine};
+use graft::serving::{Server, ServerOptions, TcpFront};
+
+fn main() {
+    // die quietly on closed pipes (`graft ... | head`), like other CLIs
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: positionals + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it
+                .peek()
+                .filter(|v| !v.starts_with("--"))
+                .map(|v| v.to_string());
+            if let Some(v) = val {
+                it.next();
+                flags.insert(key.to_string(), v);
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+            }
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Args { positional, flags }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cm = CostModel::new(Config::embedded());
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..]);
+    match cmd {
+        "experiment" => cmd_experiment(&cm, &args),
+        "plan" => cmd_plan(&cm, &args),
+        "serve" => cmd_serve(&cm, &args),
+        "trace" => cmd_trace(&args),
+        "models" => {
+            let t = experiments::motivation::tab2(&cm);
+            print!("{}", t.pretty());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `graft help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "graft — inference serving for hybrid DL via DNN re-alignment\n\n\
+         usage:\n\
+         \x20 graft experiment <id|all> [--out results]\n\
+         \x20 graft plan --model inc --scale small-homo [--t 5]\n\
+         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0]\n\
+         \x20 graft trace [--seed 7] [--len 60]\n\
+         \x20 graft models\n\n\
+         experiments: {}",
+        experiments::ALL.join(" ")
+    );
+}
+
+fn cmd_experiment(cm: &CostModel, args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("usage: graft experiment <id|all>")?;
+    let out = PathBuf::from(
+        args.flags.get("out").cloned().unwrap_or_else(|| "results".into()),
+    );
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let table = experiments::run_and_save(id, cm, &out)?;
+        println!(
+            "== {id} ({} rows, {:.1}s) -> {} ==",
+            table.rows.len(),
+            t0.elapsed().as_secs_f64(),
+            out.join(format!("{id}.csv")).display()
+        );
+        print!("{}", table.pretty());
+        println!();
+    }
+    Ok(())
+}
+
+fn scale_from(name: &str) -> Result<experiments::common::Scale> {
+    use experiments::common::Scale::*;
+    Ok(match name {
+        "small-homo" => SmallHomo,
+        "small-heter" => SmallHeter,
+        "large-homo" => LargeHomo,
+        "large-heter" => LargeHeter,
+        _ => bail!("unknown scale {name:?}"),
+    })
+}
+
+fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
+    let model = args.flags.get("model").map(String::as_str).unwrap_or("inc");
+    let scale = scale_from(
+        args.flags.get("scale").map(String::as_str).unwrap_or("small-homo"),
+    )?;
+    let t_s: f64 = args
+        .flags
+        .get("t")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(5.0);
+    let mi = cm
+        .model_index(model)
+        .with_context(|| format!("unknown model {model}"))?;
+    let clients = experiments::common::fleet(
+        cm,
+        mi,
+        scale,
+        cm.config().slo_ratio_default,
+        42,
+    );
+    let specs = experiments::common::snapshot(cm, &clients, t_s);
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let (plan, stats) = sched.plan(&specs);
+    println!(
+        "{} clients -> {} specs -> {} merged -> {} sets, total share {}%, \
+         plan computed in {:.2} ms",
+        clients.len(),
+        stats.n_input,
+        stats.n_after_merge,
+        plan.sets.len(),
+        plan.total_share(),
+        stats.total_ms,
+    );
+    for (i, set) in plan.sets.iter().enumerate() {
+        println!(
+            "  set {i}: model {} repartition@{} shared {:?} ({} members)",
+            cm.config().models[set.model].name,
+            set.point,
+            set.shared.alloc,
+            set.members.len()
+        );
+        for m in &set.members {
+            match &m.align {
+                Some(a) => {
+                    println!("    member p={} align {:?}", m.spec.p, a.alloc)
+                }
+                None => println!("    member p={} (no align stage)", m.spec.p),
+            }
+        }
+    }
+    if !plan.infeasible.is_empty() {
+        println!("  infeasible: {} specs", plan.infeasible.len());
+    }
+    Ok(())
+}
+
+fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
+    let model = args.flags.get("model").map(String::as_str).unwrap_or("vgg");
+    let n_clients: usize = args
+        .flags
+        .get("clients")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let duration: f64 = args
+        .flags
+        .get("duration")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(10.0);
+    let addr =
+        args.flags.get("addr").cloned().unwrap_or("127.0.0.1:0".to_string());
+
+    let mi = cm.model_index(model).context("unknown model")?;
+    let engine = Arc::new(
+        Engine::new(&default_artifacts_dir())
+            .context("loading artifacts (run `make artifacts`)")?,
+    );
+    // plan from a snapshot restricted to compiled partition points
+    let points = cm.config().models[mi].points();
+    let clients: Vec<_> = experiments::common::fleet(
+        cm,
+        mi,
+        experiments::common::Scale::SmallHomo,
+        cm.config().slo_ratio_default,
+        7,
+    )
+    .into_iter()
+    .take(n_clients)
+    .map(|c| c.with_candidates(points[..points.len() - 1].to_vec()))
+    .collect();
+    let specs = experiments::common::snapshot(cm, &clients, 0.0);
+    let sched = Scheduler::new(
+        cm.clone(),
+        SchedulerOptions {
+            repartition: RepartitionOptions {
+                point_set: Some(points),
+                constraints: AllocConstraints::default(),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let (plan, _) = sched.plan(&specs);
+    println!(
+        "serving {} clients of {model}: {} sets, {}% total share",
+        specs.len(),
+        plan.sets.len(),
+        plan.total_share()
+    );
+    let server =
+        Arc::new(Server::start(engine, cm, &plan, ServerOptions::default()));
+    let front = TcpFront::start(&addr, server.clone())?;
+    println!("listening on {} for {duration}s", front.addr);
+    std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+    front.stop();
+    println!(
+        "served={} dropped={} batches={}",
+        server.counters.served.load(std::sync::atomic::Ordering::Relaxed),
+        server.counters.dropped.load(std::sync::atomic::Ordering::Relaxed),
+        server.counters.batches.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let seed: u64 = args
+        .flags
+        .get("seed")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(7);
+    let len: usize = args
+        .flags
+        .get("len")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(60);
+    let trace = BandwidthTrace::generate(
+        seed,
+        &TraceParams { len_s: len, ..Default::default() },
+    );
+    println!("t_s,mbps");
+    for (i, b) in trace.mbps.iter().enumerate() {
+        println!("{i},{b:.1}");
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Latency metrics: streaming histograms, percentiles, SLO accounting.
+
+/// A simple exact-sample latency recorder (serving runs are small enough
+/// to keep every sample; the DES uses it too).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(f64::total_cmp);
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    /// Fraction of samples ≤ `slo_ms`.
+    pub fn slo_attainment(&self, slo_ms: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().filter(|&&s| s <= slo_ms).count() as f64
+            / self.samples_ms.len() as f64
+    }
+
+    /// CDF points (x sorted latency, y cumulative fraction) for figures.
+    pub fn cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        if self.samples_ms.is_empty() {
+            return Vec::new();
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(f64::total_cmp);
+        (0..points)
+            .map(|i| {
+                let f = i as f64 / (points - 1).max(1) as f64;
+                let idx =
+                    ((v.len() - 1) as f64 * f).round() as usize;
+                (v[idx], (idx + 1) as f64 / v.len() as f64)
+            })
+            .collect()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples_ms
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(v: &[f64]) -> LatencyStats {
+        let mut s = LatencyStats::new();
+        for &x in v {
+            s.record(x);
+        }
+        s
+    }
+
+    #[test]
+    fn mean_and_percentiles() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn slo_attainment_counts_fraction() {
+        let s = stats(&[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(s.slo_attainment(25.0), 0.5);
+        assert_eq!(s.slo_attainment(5.0), 0.0);
+        assert_eq!(s.slo_attainment(100.0), 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_nan() {
+        let s = LatencyStats::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.cdf(5).is_empty());
+    }
+
+    #[test]
+    fn cdf_is_monotone() {
+        let s = stats(&[5.0, 1.0, 3.0, 2.0, 4.0, 9.0]);
+        let cdf = s.cdf(10);
+        assert!(cdf.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+        assert_eq!(cdf.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = stats(&[1.0, 2.0]);
+        a.merge(&stats(&[3.0]));
+        assert_eq!(a.len(), 3);
+    }
+}

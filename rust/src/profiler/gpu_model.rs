@@ -1,0 +1,455 @@
+//! Analytical MPS GPU model + min-resource allocation search.
+//!
+//! Latency of fragment `(model, start, end)` at batch `b`, share `s`:
+//!
+//! ```text
+//! lat(b, s) = T_ref(frag) * (alpha + (1 - alpha) * b) * (ref_share / s)^gamma
+//! ```
+//!
+//! where `T_ref(frag) = server_ms_ref * Σ rel_cost[start..end]` is the
+//! calibrated batch-1 latency at the reference share (Table 2 column at
+//! share 30).  `gamma < 1` gives the sub-linear MPS speedup; `alpha` is
+//! the un-amortised fixed fraction that makes batching pay off.  Shares
+//! are discrete 1% units, batches are integers — the discreteness that
+//! Fig 4 shows and that Graft's merging step exploits.
+
+use std::sync::Arc;
+
+use crate::config::{Config, ModelSpec};
+
+/// A fragment of one model: layers `start+1 ..= end`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FragmentId {
+    pub model: usize, // index into Config::models
+    pub start: usize,
+    pub end: usize,
+}
+
+impl FragmentId {
+    pub fn new(model: usize, start: usize, end: usize) -> Self {
+        assert!(start < end, "empty fragment {start}..{end}");
+        Self { model, start, end }
+    }
+}
+
+/// A resource allocation for one fragment: `instances` instances, each
+/// with `share`% of a GPU forming batches of (up to) `batch`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Alloc {
+    pub batch: u32,
+    pub share: u32,
+    pub instances: u32,
+    /// Execution latency of a full batch at this share (ms).
+    pub latency_ms: f64,
+    /// Aggregate achievable throughput across instances (RPS).
+    pub throughput_rps: f64,
+}
+
+impl Alloc {
+    /// Total GPU consumption in share percentage points.
+    pub fn total_share(&self) -> u32 {
+        self.share * self.instances
+    }
+
+    /// Resource margin `(q_a - q_d) / q_d` (paper §4.1).
+    pub fn margin(&self, demand_rps: f64) -> f64 {
+        (self.throughput_rps - demand_rps) / demand_rps
+    }
+}
+
+/// Constraints on the allocation search.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocConstraints {
+    /// Cap on instances per fragment (paper §5.3 uses 5 at large scale).
+    pub max_instances: u32,
+    /// Cap on batch size (defaults to the GPU model's max_batch).
+    pub max_batch: u32,
+    /// GPU memory budget (MiB) for *this fragment's* instances, if any.
+    pub mem_budget_mb: Option<f64>,
+}
+
+impl Default for AllocConstraints {
+    fn default() -> Self {
+        Self { max_instances: u32::MAX, max_batch: u32::MAX, mem_budget_mb: None }
+    }
+}
+
+/// The analytical cost model over a configuration.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    cfg: Arc<Config>,
+}
+
+impl CostModel {
+    pub fn new(cfg: Arc<Config>) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &Arc<Config> {
+        &self.cfg
+    }
+
+    pub fn model_spec(&self, frag: FragmentId) -> &ModelSpec {
+        &self.cfg.models[frag.model]
+    }
+
+    pub fn model_index(&self, name: &str) -> Option<usize> {
+        self.cfg.models.iter().position(|m| m.name == name)
+    }
+
+    /// Calibrated batch-1 latency at the reference share (ms).
+    pub fn t_ref_ms(&self, frag: FragmentId) -> f64 {
+        let m = self.model_spec(frag);
+        m.server_ms_ref * m.rel_cost_range(frag.start, frag.end)
+    }
+
+    /// Fragment execution latency (ms) at batch `b`, share `s`%.
+    pub fn latency_ms(&self, frag: FragmentId, batch: u32, share: u32) -> f64 {
+        assert!(batch >= 1 && share >= 1);
+        let g = &self.cfg.gpu;
+        let batchf = g.batch_alpha + (1.0 - g.batch_alpha) * batch as f64;
+        let sharef = (g.ref_share / share as f64).powf(g.share_gamma);
+        self.t_ref_ms(frag) * batchf * sharef
+    }
+
+    /// Aggregate throughput (RPS) of one instance at batch `b`, share `s`%.
+    pub fn throughput_rps(&self, frag: FragmentId, batch: u32, share: u32) -> f64 {
+        batch as f64 / self.latency_ms(frag, batch, share) * 1000.0
+    }
+
+    /// Minimum integer share (%) for which `latency <= budget_ms`, if any.
+    pub fn min_share_for(
+        &self,
+        frag: FragmentId,
+        batch: u32,
+        budget_ms: f64,
+    ) -> Option<u32> {
+        if budget_ms <= 0.0 {
+            return None;
+        }
+        let g = &self.cfg.gpu;
+        let batchf = g.batch_alpha + (1.0 - g.batch_alpha) * batch as f64;
+        let base = self.t_ref_ms(frag) * batchf;
+        // share >= ref_share * (base / budget)^(1/gamma)
+        let s = g.ref_share * (base / budget_ms).powf(1.0 / g.share_gamma);
+        let unit = g.share_unit.max(1);
+        let units = (s / unit as f64).ceil().max(1.0);
+        // guard before casting: tiny budgets demand astronomic shares
+        if !units.is_finite() || units * unit as f64 > g.max_share as f64 {
+            return None;
+        }
+        Some(units as u32 * unit)
+    }
+
+    /// GPU memory (MiB) of one instance of `frag` at batch `b`.
+    pub fn instance_mem_mb(&self, frag: FragmentId, batch: u32) -> f64 {
+        let m = self.model_spec(frag);
+        let g = &self.cfg.gpu;
+        let act_kb: f64 = m.act_kb[frag.start..frag.end].iter().sum();
+        m.frag_params_mb(frag.start, frag.end)
+            + act_kb * g.act_mem_scale_mb_per_kb * batch as f64
+    }
+
+    /// Min-total-share allocation serving `demand_rps` with per-request
+    /// execution latency `<= budget_ms` (the caller applies the /2
+    /// worst-case-queueing rule of §4.3 before calling).
+    ///
+    /// Searches batch sizes 1..=max_batch; for each, the minimal feasible
+    /// share, then also tries trading share up to save a whole instance
+    /// (the only regime where more share lowers total consumption, since
+    /// total ~ s^(1-gamma) grows in s otherwise).
+    pub fn min_alloc(
+        &self,
+        frag: FragmentId,
+        budget_ms: f64,
+        demand_rps: f64,
+        cons: AllocConstraints,
+    ) -> Option<Alloc> {
+        if budget_ms <= 0.0 || demand_rps <= 0.0 {
+            return None;
+        }
+        let g = &self.cfg.gpu;
+        let max_batch = cons.max_batch.min(g.max_batch).max(1);
+        let mut best: Option<Alloc> = None;
+
+        for &batch in g.batch_buckets.iter().filter(|&&b| b <= max_batch) {
+            let Some(s_min) = self.min_share_for(frag, batch, budget_ms)
+            else {
+                continue; // larger batches only get slower — but share
+                          // saturation depends on batch, keep scanning
+            };
+            if let Some(mem) = cons.mem_budget_mb {
+                if self.instance_mem_mb(frag, batch) > mem {
+                    continue;
+                }
+            }
+            // candidate A: minimal share, as many instances as needed
+            let (shares, n_shares) =
+                self.candidate_shares(frag, batch, s_min, demand_rps);
+            for &share in &shares[..n_shares] {
+                let lat = self.latency_ms(frag, batch, share);
+                if lat > budget_ms + 1e-9 {
+                    continue;
+                }
+                let per_inst = batch as f64 / lat * 1000.0;
+                let inst = (demand_rps / per_inst).ceil().max(1.0) as u32;
+                if inst > cons.max_instances {
+                    continue;
+                }
+                if let Some(mem) = cons.mem_budget_mb {
+                    if self.instance_mem_mb(frag, batch) * inst as f64 > mem {
+                        continue;
+                    }
+                }
+                let cand = Alloc {
+                    batch,
+                    share,
+                    instances: inst,
+                    latency_ms: lat,
+                    throughput_rps: per_inst * inst as f64,
+                };
+                if better(&cand, &best) {
+                    best = Some(cand);
+                }
+            }
+        }
+        best
+    }
+
+    /// Shares worth trying for a batch: the minimal feasible one plus the
+    /// minimal share achieving each smaller instance count.  Returns a
+    /// fixed-capacity buffer (no heap allocation — this sits on the
+    /// scheduler's innermost loop); instance-count targets beyond the
+    /// capacity cannot win anyway (total share grows with s^(1-gamma)).
+    fn candidate_shares(
+        &self,
+        frag: FragmentId,
+        batch: u32,
+        s_min: u32,
+        demand_rps: f64,
+    ) -> ([u32; 8], usize) {
+        let g = &self.cfg.gpu;
+        let mut out = [0u32; 8];
+        let mut n = 0;
+        out[n] = s_min;
+        n += 1;
+        let lat_min = self.latency_ms(frag, batch, s_min);
+        let inst_at_min =
+            (demand_rps * lat_min / (batch as f64 * 1000.0)).ceil() as u32;
+        // target inst' < inst_at_min: need per-instance throughput
+        // demand/inst' => latency <= batch*1000*inst'/demand
+        for target in 1..inst_at_min.max(1).min(out.len() as u32) {
+            let lat_needed = batch as f64 * 1000.0 * target as f64 / demand_rps;
+            if let Some(s) = self.min_share_for_latency(frag, batch, lat_needed)
+            {
+                if s > s_min && s <= g.max_share {
+                    out[n] = s;
+                    n += 1;
+                }
+            }
+        }
+        (out, n)
+    }
+
+    fn min_share_for_latency(
+        &self,
+        frag: FragmentId,
+        batch: u32,
+        lat_ms: f64,
+    ) -> Option<u32> {
+        self.min_share_for(frag, batch, lat_ms)
+    }
+
+    /// Energy (J) consumed by an allocation busy for `busy_s` seconds.
+    pub fn energy_j(&self, alloc: &Alloc, busy_s: f64, util: f64) -> f64 {
+        let g = &self.cfg.gpu;
+        let w = alloc.instances as f64
+            * (g.p_share_w_per_pct * alloc.share as f64 * util + g.p_base_w);
+        w * busy_s
+    }
+}
+
+fn better(cand: &Alloc, best: &Option<Alloc>) -> bool {
+    match best {
+        None => true,
+        Some(b) => {
+            let (c, bt) = (cand.total_share(), b.total_share());
+            c < bt
+                // tie-break: prefer higher throughput (more margin), then
+                // fewer instances (less memory)
+                || (c == bt
+                    && (cand.throughput_rps > b.throughput_rps + 1e-9
+                        || (cand.throughput_rps >= b.throughput_rps - 1e-9
+                            && cand.instances < b.instances)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn frag(cm: &CostModel, name: &str) -> FragmentId {
+        let i = cm.model_index(name).unwrap();
+        FragmentId::new(i, 0, cm.config().models[i].layers)
+    }
+
+    #[test]
+    fn table2_calibration() {
+        // batch 1, share 30 must reproduce Table 2's server latency column
+        let cm = cm();
+        for (name, ms) in
+            [("inc", 29.0), ("res", 30.0), ("vgg", 6.0), ("mob", 19.0), ("vit", 58.0)]
+        {
+            let f = frag(&cm, name);
+            let got = cm.latency_ms(f, 1, 30);
+            assert!((got - ms).abs() < 1e-9, "{name}: {got} vs {ms}");
+        }
+    }
+
+    #[test]
+    fn latency_monotonic_in_share_and_batch() {
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        assert!(cm.latency_ms(f, 1, 60) < cm.latency_ms(f, 1, 30));
+        assert!(cm.latency_ms(f, 8, 30) > cm.latency_ms(f, 1, 30));
+        // but throughput grows with batch
+        assert!(cm.throughput_rps(f, 8, 30) > cm.throughput_rps(f, 1, 30));
+    }
+
+    #[test]
+    fn min_share_matches_latency() {
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        let s = cm.min_share_for(f, 4, 40.0).unwrap();
+        let unit = cm.config().gpu.share_unit;
+        assert!(cm.latency_ms(f, 4, s) <= 40.0);
+        assert_eq!(s % unit, 0, "share {s} not on the {unit}% grid");
+        if s > unit {
+            // one grid step below no longer meets the budget
+            assert!(cm.latency_ms(f, 4, s - unit) > 40.0);
+        }
+    }
+
+    #[test]
+    fn min_share_infeasible_when_budget_tiny() {
+        let cm = cm();
+        let f = frag(&cm, "vit");
+        assert!(cm.min_share_for(f, 32, 0.01).is_none());
+        assert!(cm.min_share_for(f, 1, -5.0).is_none());
+    }
+
+    #[test]
+    fn min_alloc_meets_demand_and_budget() {
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        let a = cm
+            .min_alloc(f, 25.0, 200.0, AllocConstraints::default())
+            .expect("feasible");
+        assert!(a.latency_ms <= 25.0 + 1e-9);
+        assert!(a.throughput_rps >= 200.0 - 1e-9);
+        assert!(a.total_share() > 0);
+    }
+
+    #[test]
+    fn min_alloc_batching_pays_off() {
+        // Serving 200 RPS with a relaxed budget should use batch > 1 and
+        // consume (weakly) less than forcing batch = 1.
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        let free = cm
+            .min_alloc(f, 60.0, 200.0, AllocConstraints::default())
+            .unwrap();
+        let b1 = cm
+            .min_alloc(
+                f,
+                60.0,
+                200.0,
+                AllocConstraints { max_batch: 1, ..Default::default() },
+            )
+            .unwrap();
+        assert!(free.batch > 1, "expected batching, got {free:?}");
+        assert!(free.total_share() <= b1.total_share());
+    }
+
+    #[test]
+    fn min_alloc_discreteness_fig4() {
+        // Fig 4: higher demanded throughput does NOT always cost more —
+        // the discrete (batch, share, instance) lattice yields flat
+        // regions (free extra throughput) separated by jumps.
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        let shares: Vec<u32> = (1..=40)
+            .map(|k| {
+                cm.min_alloc(
+                    f,
+                    25.0,
+                    10.0 * k as f64,
+                    AllocConstraints::default(),
+                )
+                .map(|a| a.total_share())
+                .unwrap()
+            })
+            .collect();
+        // non-decreasing overall ...
+        assert!(shares.windows(2).all(|w| w[1] >= w[0]), "{shares:?}");
+        // ... with at least one flat step (the Fig-4 discreteness)
+        assert!(
+            shares.windows(2).any(|w| w[1] == w[0]),
+            "no flat step in {shares:?}"
+        );
+        // ... and at least one jump of several share units
+        assert!(
+            shares.windows(2).any(|w| w[1] >= w[0] + 2),
+            "no jump in {shares:?}"
+        );
+    }
+
+    #[test]
+    fn min_alloc_respects_instance_cap() {
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        let capped = cm
+            .min_alloc(
+                f,
+                40.0,
+                300.0,
+                AllocConstraints { max_instances: 5, ..Default::default() },
+            )
+            .unwrap();
+        assert!(capped.instances <= 5);
+        // an infeasible cap yields None rather than a violating alloc
+        let impossible = cm.min_alloc(
+            f,
+            8.0,
+            5000.0,
+            AllocConstraints { max_instances: 1, ..Default::default() },
+        );
+        assert!(impossible.is_none());
+    }
+
+    #[test]
+    fn instance_mem_grows_with_batch_and_span() {
+        let cm = cm();
+        let i = cm.model_index("res").unwrap();
+        let whole = FragmentId::new(i, 0, 16);
+        let tail = FragmentId::new(i, 8, 16);
+        assert!(cm.instance_mem_mb(whole, 1) > cm.instance_mem_mb(tail, 1));
+        assert!(cm.instance_mem_mb(whole, 8) > cm.instance_mem_mb(whole, 1));
+    }
+
+    #[test]
+    fn energy_scales_with_share_and_time() {
+        let cm = cm();
+        let a = Alloc { batch: 1, share: 30, instances: 2, latency_ms: 10.0, throughput_rps: 100.0 };
+        let e1 = cm.energy_j(&a, 1.0, 1.0);
+        let e2 = cm.energy_j(&a, 2.0, 1.0);
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+        let half = cm.energy_j(&a, 1.0, 0.5);
+        assert!(half < e1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Offline profiler (paper §3): performance profiles of DNN fragments in
+//! batch size and GPU share, plus the min-resource allocation search that
+//! the scheduler (§4) consumes.
+//!
+//! The paper profiles PyTorch models under CUDA MPS; we substitute an
+//! analytical MPS GPU model calibrated to Table 2 (see DESIGN.md §2) —
+//! Graft's algorithms only ever see the profile surface
+//! `latency(fragment, batch, share)`, so the substitution preserves the
+//! decision problem (discreteness of batch/share/instances, sub-linear
+//! share scaling, batch amortisation — the phenomena behind Fig 4).
+
+mod gpu_model;
+mod profile;
+
+pub use gpu_model::{Alloc, AllocConstraints, CostModel, FragmentId};
+pub use profile::{knees, CurvePoint, Profile};

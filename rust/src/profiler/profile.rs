@@ -1,0 +1,176 @@
+//! Performance-profile curves + efficient-point pruning (Fig 4).
+//!
+//! The profiler exposes the two curves of Fig 4 for any fragment:
+//!
+//! * [`Profile::share_vs_budget`] — required total GPU share to meet a
+//!   range of time budgets at a fixed demanded throughput (Fig 4a);
+//! * [`Profile::share_vs_throughput`] — required total GPU share to meet
+//!   a range of demanded throughputs at a fixed latency budget (Fig 4b).
+//!
+//! Both are *step* functions because batch, share unit and instance
+//! count are discrete.  The step knees — the paper's "blue dots", i.e.
+//! the only points where relaxing the requirement actually saves
+//! resources — are extracted by [`knees`] and used by the scheduler's
+//! search-space pruning (§4.3 optimisation 3).
+
+use super::gpu_model::{Alloc, AllocConstraints, CostModel, FragmentId};
+
+/// One point of a share-requirement curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    /// The swept requirement (budget in ms, or demanded RPS).
+    pub x: f64,
+    /// Minimal total share meeting it (None = infeasible).
+    pub total_share: Option<u32>,
+    pub alloc: Option<Alloc>,
+}
+
+/// Profile curves of one fragment.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub frag: FragmentId,
+}
+
+impl Profile {
+    pub fn new(frag: FragmentId) -> Self {
+        Self { frag }
+    }
+
+    /// Fig 4a: required share vs time budget at fixed throughput.
+    pub fn share_vs_budget(
+        &self,
+        cm: &CostModel,
+        demand_rps: f64,
+        budgets_ms: impl IntoIterator<Item = f64>,
+        cons: AllocConstraints,
+    ) -> Vec<CurvePoint> {
+        budgets_ms
+            .into_iter()
+            .map(|b| {
+                let alloc = cm.min_alloc(self.frag, b, demand_rps, cons);
+                CurvePoint {
+                    x: b,
+                    total_share: alloc.map(|a| a.total_share()),
+                    alloc,
+                }
+            })
+            .collect()
+    }
+
+    /// Fig 4b: required share vs demanded throughput at fixed budget.
+    pub fn share_vs_throughput(
+        &self,
+        cm: &CostModel,
+        budget_ms: f64,
+        demands_rps: impl IntoIterator<Item = f64>,
+        cons: AllocConstraints,
+    ) -> Vec<CurvePoint> {
+        demands_rps
+            .into_iter()
+            .map(|q| {
+                let alloc = cm.min_alloc(self.frag, budget_ms, q, cons);
+                CurvePoint {
+                    x: q,
+                    total_share: alloc.map(|a| a.total_share()),
+                    alloc,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Extract the efficient points (the "blue dots" of Fig 4a): the last
+/// point of each flat step of a non-increasing or non-decreasing step
+/// curve — relaxing/tightening beyond them is what changes cost.
+pub fn knees(curve: &[CurvePoint]) -> Vec<CurvePoint> {
+    let mut out = Vec::new();
+    for (i, p) in curve.iter().enumerate() {
+        let next_differs = curve
+            .get(i + 1)
+            .map_or(true, |n| n.total_share != p.total_share);
+        if p.total_share.is_some() && next_differs {
+            out.push(*p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn setup() -> (CostModel, Profile) {
+        let cm = CostModel::new(Config::embedded());
+        let i = cm.model_index("inc").unwrap();
+        (cm, Profile::new(FragmentId::new(i, 0, 17)))
+    }
+
+    #[test]
+    fn fig4a_share_decreases_with_budget() {
+        let (cm, p) = setup();
+        let curve = p.share_vs_budget(
+            &cm,
+            200.0,
+            (10..=60).map(|b| b as f64),
+            AllocConstraints::default(),
+        );
+        let shares: Vec<u32> =
+            curve.iter().filter_map(|c| c.total_share).collect();
+        assert!(!shares.is_empty());
+        assert!(
+            shares.windows(2).all(|w| w[1] <= w[0]),
+            "not non-increasing: {shares:?}"
+        );
+        // step structure: some flat segments
+        assert!(shares.windows(2).any(|w| w[1] == w[0]));
+    }
+
+    #[test]
+    fn fig4b_share_increases_with_throughput() {
+        let (cm, p) = setup();
+        let curve = p.share_vs_throughput(
+            &cm,
+            25.0,
+            (1..=30).map(|k| 10.0 * k as f64),
+            AllocConstraints::default(),
+        );
+        let shares: Vec<u32> =
+            curve.iter().filter_map(|c| c.total_share).collect();
+        assert!(shares.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn infeasible_budgets_are_none() {
+        let (cm, p) = setup();
+        let curve = p.share_vs_budget(
+            &cm,
+            200.0,
+            [0.01, 50.0],
+            AllocConstraints::default(),
+        );
+        assert!(curve[0].total_share.is_none());
+        assert!(curve[1].total_share.is_some());
+    }
+
+    #[test]
+    fn knees_are_sparse_and_cover_all_levels() {
+        let (cm, p) = setup();
+        let curve = p.share_vs_budget(
+            &cm,
+            200.0,
+            (10..=80).map(|b| b as f64),
+            AllocConstraints::default(),
+        );
+        let k = knees(&curve);
+        assert!(!k.is_empty());
+        assert!(k.len() < curve.len() / 2, "{} of {}", k.len(), curve.len());
+        // every distinct share level appears exactly once among knees
+        let mut levels: Vec<u32> =
+            curve.iter().filter_map(|c| c.total_share).collect();
+        levels.dedup();
+        let knee_levels: Vec<u32> =
+            k.iter().filter_map(|c| c.total_share).collect();
+        assert_eq!(levels, knee_levels);
+    }
+}

@@ -1,0 +1,258 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client, caches the executables, and runs fragment
+//! inference on the request path.
+//!
+//! Weights are uploaded once per model as device buffers; per-request
+//! work is: host activation → device buffer → `execute_b` → host output.
+//! Python is never involved (see /opt/xla-example/README.md for the
+//! HLO-text interchange rationale).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::weights::ModelWeights;
+
+/// Key of a compiled executable.
+pub type FragKey = (String, usize, usize, u32);
+
+/// The runtime engine.  Thread-safe: executables and weights are built
+/// once under a lock and then shared; PJRT execution itself is
+/// re-entrant.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    state: Mutex<EngineState>,
+}
+
+#[derive(Default)]
+struct EngineState {
+    executables: HashMap<FragKey, std::sync::Arc<xla::PjRtLoadedExecutable>>,
+    /// Per (model, start, end): weight arguments pre-uploaded as device
+    /// buffers in call order (uploading ~MBs of weights per request was
+    /// the runtime's top bottleneck — see EXPERIMENTS.md §Perf).
+    weight_args: HashMap<(String, usize, usize), std::sync::Arc<Vec<xla::PjRtBuffer>>>,
+    /// Parsed weight blobs per model.
+    weights: HashMap<String, std::sync::Arc<ModelWeights>>,
+}
+
+/// Result of one fragment execution.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    /// `[batch, dim_out]` row-major.
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub dim_out: usize,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client, manifest, state: Mutex::new(EngineState::default()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute fragment `(model, start, end)` on `rows` activations of
+    /// width `dim_in`.  Rows are padded up to the smallest compiled batch
+    /// bucket; only the first `rows.len()` outputs are returned.
+    pub fn run(
+        &self,
+        model: &str,
+        start: usize,
+        end: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<ExecOutput> {
+        if rows.is_empty() {
+            bail!("empty batch");
+        }
+        let entry = self
+            .manifest
+            .bucket_for(model, start, end, rows.len() as u32)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for {model} s{start} e{end} batch>={}",
+                    rows.len()
+                )
+            })?
+            .clone();
+        let dim_in = entry.input_shape[1];
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != dim_in {
+                bail!(
+                    "row {i} has width {} but fragment expects {dim_in}",
+                    r.len()
+                );
+            }
+        }
+        let exe = self.executable(&entry)?;
+        let weight_args = self.weight_args(&entry)?;
+
+        // Pad the batch to the bucket with zero rows.
+        let bucket = entry.batch as usize;
+        let mut flat = Vec::with_capacity(bucket * dim_in);
+        for r in rows {
+            flat.extend_from_slice(r);
+        }
+        flat.resize(bucket * dim_in, 0.0);
+        let x = self
+            .client
+            .buffer_from_host_buffer::<f32>(&flat, &[bucket, dim_in], None)
+            .map_err(|e| anyhow!("upload input: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(1 + weight_args.len());
+        args.push(&x);
+        args.extend(weight_args.iter());
+
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let data_full = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let dim_out = entry.output_shape[1];
+        if data_full.len() != bucket * dim_out {
+            bail!(
+                "output has {} elements, expected {}",
+                data_full.len(),
+                bucket * dim_out
+            );
+        }
+        Ok(ExecOutput {
+            data: data_full[..rows.len() * dim_out].to_vec(),
+            batch: rows.len(),
+            dim_out,
+        })
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact.
+    fn executable(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key: FragKey =
+            (entry.model.clone(), entry.start, entry.end, entry.batch);
+        {
+            let st = self.state.lock().unwrap();
+            if let Some(exe) = st.executables.get(&key) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = entry
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path}: {e:?}"))?,
+        );
+        let mut st = self.state.lock().unwrap();
+        Ok(st.executables.entry(key).or_insert(exe).clone())
+    }
+
+    /// Weight arguments for a fragment as device-resident buffers, in
+    /// `fragment_fn` order (uploaded once, reused by every request).
+    fn weight_args(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<std::sync::Arc<Vec<xla::PjRtBuffer>>> {
+        let key = (entry.model.clone(), entry.start, entry.end);
+        {
+            let st = self.state.lock().unwrap();
+            if let Some(w) = st.weight_args.get(&key) {
+                return Ok(w.clone());
+            }
+        }
+        let weights = self.model_weights(entry)?;
+        let dims = &weights.dims;
+        let mut args = Vec::with_capacity(2 * entry.param_layers.len());
+        for &layer in &entry.param_layers {
+            let (w, b) = weights.layer(layer)?;
+            args.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(
+                        w,
+                        &[dims[layer - 1], dims[layer]],
+                        None,
+                    )
+                    .map_err(|e| anyhow!("upload w{layer}: {e:?}"))?,
+            );
+            args.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(b, &[dims[layer]], None)
+                    .map_err(|e| anyhow!("upload b{layer}: {e:?}"))?,
+            );
+        }
+        let args = std::sync::Arc::new(args);
+        let mut st = self.state.lock().unwrap();
+        Ok(st.weight_args.entry(key).or_insert(args).clone())
+    }
+
+    fn model_weights(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<std::sync::Arc<ModelWeights>> {
+        {
+            let st = self.state.lock().unwrap();
+            if let Some(w) = st.weights.get(&entry.model) {
+                return Ok(w.clone());
+            }
+        }
+        let dims = &self
+            .manifest
+            .models
+            .get(&entry.model)
+            .ok_or_else(|| anyhow!("model {} not in manifest", entry.model))?
+            .dims;
+        let w = std::sync::Arc::new(
+            ModelWeights::load(&entry.weights, dims)
+                .with_context(|| format!("weights for {}", entry.model))?,
+        );
+        let mut st = self.state.lock().unwrap();
+        Ok(st
+            .weights
+            .entry(entry.model.clone())
+            .or_insert(w)
+            .clone())
+    }
+
+    /// Eagerly compile every artifact of the given fragments (warmup).
+    pub fn warmup(&self, frags: &[(String, usize, usize)]) -> Result<usize> {
+        let mut n = 0;
+        for (model, start, end) in frags {
+            for &batch in &self.manifest.batches.clone() {
+                if let Some(e) = self.manifest.get(model, *start, *end, batch)
+                {
+                    let e = e.clone();
+                    self.executable(&e)?;
+                    self.weight_args(&e)?;
+                    n += 1;
+                }
+            }
+        }
+        Ok(n)
+    }
+}
+
+// Engine is used from multiple instance threads.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}

@@ -1,0 +1,221 @@
+//! AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Written once by `python/compile/aot.py`; indexes every compiled
+//! fragment executable by `(model, start, end, batch)` plus the weight
+//! blob per model.  The Rust runtime never parses HLO itself — it hands
+//! the text to PJRT — so this manifest is the only metadata contract
+//! between the Python compile path and the Rust request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One compiled fragment executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub model: String,
+    pub start: usize,
+    pub end: usize,
+    pub batch: u32,
+    pub path: PathBuf,
+    pub weights: PathBuf,
+    pub input_shape: [usize; 2],
+    pub output_shape: [usize; 2],
+    /// 1-indexed layers whose (w, b) follow the activation input, in order.
+    pub param_layers: Vec<usize>,
+}
+
+/// Per-model metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub dims: Vec<usize>,
+    pub points: Vec<usize>,
+}
+
+/// The full artifact index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_digest: String,
+    pub batches: Vec<u32>,
+    pub models: HashMap<String, ManifestModel>,
+    entries: HashMap<(String, usize, usize, u32), ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut models = HashMap::new();
+        if let Json::Obj(m) = j.get("models")? {
+            for (name, v) in m {
+                models.insert(
+                    name.clone(),
+                    ManifestModel {
+                        dims: v.get("dims")?.as_usize_vec()?,
+                        points: v.get("points")?.as_usize_vec()?,
+                    },
+                );
+            }
+        } else {
+            bail!("manifest models is not an object");
+        }
+        let mut entries = HashMap::new();
+        for e in j.get("entries")?.as_arr()? {
+            let model = e.get("model")?.as_str()?.to_string();
+            let start = e.get("start")?.as_usize()?;
+            let end = e.get("end")?.as_usize()?;
+            let batch = e.get("batch")?.as_usize()? as u32;
+            let ishape = e.get("input_shape")?.as_usize_vec()?;
+            let oshape = e.get("output_shape")?.as_usize_vec()?;
+            if ishape.len() != 2 || oshape.len() != 2 {
+                bail!("bad shapes for {model} s{start} e{end} b{batch}");
+            }
+            entries.insert(
+                (model.clone(), start, end, batch),
+                ArtifactEntry {
+                    model,
+                    start,
+                    end,
+                    batch,
+                    path: dir.join(e.get("path")?.as_str()?),
+                    weights: dir.join(e.get("weights")?.as_str()?),
+                    input_shape: [ishape[0], ishape[1]],
+                    output_shape: [oshape[0], oshape[1]],
+                    param_layers: e.get("param_layers")?.as_usize_vec()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config_digest: j.get("config_digest")?.as_str()?.to_string(),
+            batches: j
+                .get("batches")?
+                .as_usize_vec()?
+                .into_iter()
+                .map(|b| b as u32)
+                .collect(),
+            models,
+            entries,
+        })
+    }
+
+    /// Exact lookup.
+    pub fn get(
+        &self,
+        model: &str,
+        start: usize,
+        end: usize,
+        batch: u32,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.get(&(model.to_string(), start, end, batch))
+    }
+
+    /// Smallest compiled batch `>= batch` for the fragment (bucketed
+    /// batching: partial batches are padded up to the bucket).
+    pub fn bucket_for(
+        &self,
+        model: &str,
+        start: usize,
+        end: usize,
+        batch: u32,
+    ) -> Option<&ArtifactEntry> {
+        let mut best: Option<&ArtifactEntry> = None;
+        for (_, e) in self.entries.iter() {
+            if e.model == model
+                && e.start == start
+                && e.end == end
+                && e.batch >= batch
+                && best.map_or(true, |b| e.batch < b.batch)
+            {
+                best = Some(e);
+            }
+        }
+        best
+    }
+
+    /// All fragments available for a model (start, end pairs).
+    pub fn fragments(&self, model: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .entries
+            .values()
+            .filter(|e| e.model == model)
+            .map(|e| (e.start, e.end))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Default artifacts directory: `$GRAFT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("GRAFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config_digest": "abc123",
+      "models": {"vgg": {"dims": [256,512,512,448,384,320,64],
+                          "points": [0,1,2,3,6]}},
+      "batches": [1,2],
+      "entries": [
+        {"model": "vgg", "start": 1, "end": 6, "batch": 2,
+         "path": "vgg_s1_e6_b2.hlo.txt", "weights": "weights_vgg.bin",
+         "input_shape": [2, 512], "output_shape": [2, 64],
+         "param_layers": [2,3,4,5,6]},
+        {"model": "vgg", "start": 1, "end": 6, "batch": 1,
+         "path": "vgg_s1_e6_b1.hlo.txt", "weights": "weights_vgg.bin",
+         "input_shape": [1, 512], "output_shape": [1, 64],
+         "param_layers": [2,3,4,5,6]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("vgg", 1, 6, 2).unwrap();
+        assert_eq!(e.input_shape, [2, 512]);
+        assert_eq!(e.param_layers, vec![2, 3, 4, 5, 6]);
+        assert!(e.path.ends_with("vgg_s1_e6_b2.hlo.txt"));
+        assert!(m.get("vgg", 0, 6, 2).is_none());
+    }
+
+    #[test]
+    fn bucket_rounds_up() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.bucket_for("vgg", 1, 6, 1).unwrap().batch, 1);
+        assert_eq!(m.bucket_for("vgg", 1, 6, 2).unwrap().batch, 2);
+        assert!(m.bucket_for("vgg", 1, 6, 3).is_none());
+    }
+
+    #[test]
+    fn fragments_listing() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.fragments("vgg"), vec![(1, 6)]);
+        assert!(m.fragments("inc").is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime: PJRT loading + execution of the AOT artifacts.
+//!
+//! `make artifacts` (Python, build-time) writes `artifacts/*.hlo.txt`,
+//! `weights_*.bin` and `manifest.json`; this module is everything the
+//! Rust request path needs to run them: the manifest index, the weight
+//! blobs, and the caching PJRT [`Engine`].
+
+mod engine;
+mod manifest;
+mod weights;
+
+pub use engine::{Engine, ExecOutput};
+pub use manifest::{default_artifacts_dir, ArtifactEntry, Manifest, ManifestModel};
+pub use weights::ModelWeights;

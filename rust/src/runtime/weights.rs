@@ -1,0 +1,104 @@
+//! Model weight blobs (`artifacts/weights_<model>.bin`).
+//!
+//! Layout (written by `StandInModel.weights_blob` on the Python side):
+//! for each layer i = 1..L, `w_i` row-major `[dims[i-1], dims[i]]` then
+//! `b_i` `[dims[i]]`, all little-endian f32.  Offsets derive from `dims`
+//! alone, so the file carries no header.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// All layers of one model, parsed into (w, b) f32 vectors.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub dims: Vec<usize>,
+    /// layers[i] = (w flattened row-major, b), for layer i+1.
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl ModelWeights {
+    pub fn load(path: &Path, dims: &[usize]) -> Result<ModelWeights> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&bytes, dims)
+    }
+
+    pub fn parse(bytes: &[u8], dims: &[usize]) -> Result<ModelWeights> {
+        if bytes.len() % 4 != 0 {
+            bail!("weight blob not a multiple of 4 bytes");
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expected: usize = (0..dims.len() - 1)
+            .map(|i| dims[i] * dims[i + 1] + dims[i + 1])
+            .sum();
+        if floats.len() != expected {
+            bail!(
+                "weight blob has {} floats, dims imply {}",
+                floats.len(),
+                expected
+            );
+        }
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        let mut off = 0;
+        for i in 0..dims.len() - 1 {
+            let wlen = dims[i] * dims[i + 1];
+            let w = floats[off..off + wlen].to_vec();
+            off += wlen;
+            let b = floats[off..off + dims[i + 1]].to_vec();
+            off += dims[i + 1];
+            layers.push((w, b));
+        }
+        Ok(ModelWeights { dims: dims.to_vec(), layers })
+    }
+
+    /// The (w, b) of 1-indexed layer `i`.
+    pub fn layer(&self, i: usize) -> Result<&(Vec<f32>, Vec<f32>)> {
+        if i == 0 || i > self.layers.len() {
+            bail!("layer {i} out of range 1..={}", self.layers.len());
+        }
+        Ok(&self.layers[i - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(dims: &[usize]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut x = 0.0f32;
+        for i in 0..dims.len() - 1 {
+            for _ in 0..dims[i] * dims[i + 1] + dims[i + 1] {
+                out.extend_from_slice(&x.to_le_bytes());
+                x += 1.0;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_layout() {
+        let dims = [2usize, 3, 1];
+        let w = ModelWeights::parse(&blob(&dims), &dims).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.layer(1).unwrap().0, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.layer(1).unwrap().1, vec![6.0, 7.0, 8.0]);
+        assert_eq!(w.layer(2).unwrap().0, vec![9.0, 10.0, 11.0]);
+        assert_eq!(w.layer(2).unwrap().1, vec![12.0]);
+        assert!(w.layer(0).is_err());
+        assert!(w.layer(3).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_sizes() {
+        let dims = [2usize, 3, 1];
+        let mut b = blob(&dims);
+        b.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(ModelWeights::parse(&b, &dims).is_err());
+        assert!(ModelWeights::parse(&[1, 2, 3], &dims).is_err());
+    }
+}

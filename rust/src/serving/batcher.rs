@@ -1,0 +1,234 @@
+//! Shared batch queues (paper §5.1: "a request ... is buffered as a
+//! tensor in a queue for the corresponding fragment.  This queue is
+//! shared by all the instances for each DNN fragment, which process
+//! requests in batch from the queue").
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// An item travelling through the serving pipeline.
+#[derive(Debug)]
+pub struct WorkItem<T> {
+    pub payload: Vec<f32>,
+    /// When the request entered the server.
+    pub server_arrival: Instant,
+    /// Server-side budget (ms) for SLO-drop decisions.
+    pub budget_ms: f64,
+    /// Modeled server time already accumulated in earlier stages (ms).
+    pub accumulated_ms: f64,
+    /// Caller context (client id, seq, response channel, ...).
+    pub ctx: T,
+}
+
+struct Inner<T> {
+    items: VecDeque<WorkItem<T>>,
+    closed: bool,
+}
+
+/// MPMC batch queue: producers push single items; consumer instances pop
+/// greedy batches up to their batch size.
+pub struct BatchQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for BatchQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, item: WorkItem<T>) {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return; // shutting down: drop silently
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Pop up to `max_batch` items: blocks for the first item, then
+    /// drains whatever else is immediately available (greedy batching).
+    /// Returns `None` once closed and drained.
+    pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<WorkItem<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let n = g.items.len().min(max_batch.max(1));
+                return Some(g.items.drain(..n).collect());
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Pop up to `max_batch`, blocking for the first item and then
+    /// waiting up to `window` for the batch to fill (the §4.3 envelope
+    /// reserves one execution time for queueing, so waiting that long to
+    /// reach the *planned* batch size keeps the SLO math intact while
+    /// hitting the planned throughput).
+    pub fn pop_batch_window(
+        &self,
+        max_batch: usize,
+        window: Duration,
+    ) -> Option<Vec<WorkItem<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        // phase 1: block for the first item
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        // phase 2: give the batch `window` to fill
+        let deadline = Instant::now() + window;
+        while g.items.len() < max_batch.max(1) && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+        let n = g.items.len().min(max_batch.max(1));
+        Some(g.items.drain(..n).collect())
+    }
+
+    /// Like `pop_batch` but gives up after `timeout` (for pollers).
+    pub fn pop_batch_timeout(
+        &self,
+        max_batch: usize,
+        timeout: Duration,
+    ) -> Option<Vec<WorkItem<T>>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let n = g.items.len().min(max_batch.max(1));
+                return Some(g.items.drain(..n).collect());
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(Vec::new());
+            }
+            let (ng, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if res.timed_out() && g.items.is_empty() {
+                return Some(Vec::new());
+            }
+        }
+    }
+
+    /// Close the queue: consumers drain remaining items then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn item(v: f32) -> WorkItem<u32> {
+        WorkItem {
+            payload: vec![v],
+            server_arrival: Instant::now(),
+            budget_ms: 100.0,
+            accumulated_ms: 0.0,
+            ctx: v as u32,
+        }
+    }
+
+    #[test]
+    fn greedy_batching() {
+        let q = BatchQueue::new();
+        for i in 0..5 {
+            q.push(item(i as f32));
+        }
+        let b = q.pop_batch(4).unwrap();
+        assert_eq!(b.len(), 4);
+        let b = q.pop_batch(4).unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BatchQueue::new();
+        q.push(item(1.0));
+        q.close();
+        assert_eq!(q.pop_batch(8).unwrap().len(), 1);
+        assert!(q.pop_batch(8).is_none());
+        // pushes after close are dropped
+        q.push(item(2.0));
+        assert!(q.pop_batch(8).is_none());
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q = Arc::new(BatchQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch(2).unwrap().len());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(item(1.0));
+        assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn timeout_pop_returns_empty() {
+        let q: BatchQueue<u32> = BatchQueue::new();
+        let b = q
+            .pop_batch_timeout(4, Duration::from_millis(10))
+            .unwrap();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn multiple_consumers_share_work() {
+        let q = Arc::new(BatchQueue::new());
+        for i in 0..64 {
+            q.push(item(i as f32));
+        }
+        q.close();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut n = 0;
+                while let Some(b) = q.pop_batch(4) {
+                    n += b.len();
+                }
+                n
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 64);
+    }
+}

@@ -1,0 +1,246 @@
+//! Request/response types + wire protocol of the serving data path.
+//!
+//! The paper's clients send intermediate tensors over network sockets;
+//! we use a length-prefixed little-endian binary framing over TCP (and
+//! the same structs in-process via channels).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// A single inference request carrying the activation tensor produced by
+/// the client's mobile fragment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub client_id: u32,
+    /// Model index (into `Config::models`).
+    pub model: u16,
+    /// Partition point: the payload is the activation after layer `p`.
+    pub p: u16,
+    /// Request sequence number (per client).
+    pub seq: u32,
+    /// Virtual timestamp (ms) when the frame was captured on-device.
+    pub t_capture_ms: f64,
+    /// Simulated mobile + uplink latency already spent (ms).
+    pub upstream_ms: f64,
+    /// Server-side time budget for this request (ms).
+    pub budget_ms: f64,
+    /// Activation row `[dims[p]]`.
+    pub payload: Vec<f32>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub client_id: u32,
+    pub seq: u32,
+    /// Server-side latency (queueing + execution, ms, modeled GPU time).
+    pub server_ms: f64,
+    /// End-to-end latency (upstream + server, ms).
+    pub e2e_ms: f64,
+    /// Whether the request was dropped by the load balancer (SLO miss).
+    pub dropped: bool,
+    /// Output logits `[dim_out]` (empty when dropped).
+    pub output: Vec<f32>,
+}
+
+const REQ_MAGIC: u32 = 0x47524654; // "GRFT"
+const RESP_MAGIC: u32 = 0x47525350; // "GRSP"
+
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_f64(v: &mut Vec<u8>, x: f64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated frame");
+        }
+        let x = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into()?);
+        self.i += 4;
+        Ok(x)
+    }
+    fn f64(&mut self) -> Result<f64> {
+        if self.i + 8 > self.b.len() {
+            bail!("truncated frame");
+        }
+        let x = f64::from_le_bytes(self.b[self.i..self.i + 8].try_into()?);
+        self.i += 8;
+        Ok(x)
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        if self.i + 4 * n > self.b.len() {
+            bail!("truncated payload");
+        }
+        let out = self.b[self.i..self.i + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.i += 4 * n;
+        Ok(out)
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(44 + 4 * self.payload.len());
+        put_u32(&mut v, REQ_MAGIC);
+        put_u32(&mut v, self.client_id);
+        put_u32(&mut v, self.model as u32);
+        put_u32(&mut v, self.p as u32);
+        put_u32(&mut v, self.seq);
+        put_f64(&mut v, self.t_capture_ms);
+        put_f64(&mut v, self.upstream_ms);
+        put_f64(&mut v, self.budget_ms);
+        put_u32(&mut v, self.payload.len() as u32);
+        for x in &self.payload {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Request> {
+        let mut c = Cursor { b, i: 0 };
+        if c.u32()? != REQ_MAGIC {
+            bail!("bad request magic");
+        }
+        let client_id = c.u32()?;
+        let model = c.u32()? as u16;
+        let p = c.u32()? as u16;
+        let seq = c.u32()?;
+        let t_capture_ms = c.f64()?;
+        let upstream_ms = c.f64()?;
+        let budget_ms = c.f64()?;
+        let n = c.u32()? as usize;
+        let payload = c.f32s(n)?;
+        Ok(Request {
+            client_id,
+            model,
+            p,
+            seq,
+            t_capture_ms,
+            upstream_ms,
+            budget_ms,
+            payload,
+        })
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(32 + 4 * self.output.len());
+        put_u32(&mut v, RESP_MAGIC);
+        put_u32(&mut v, self.client_id);
+        put_u32(&mut v, self.seq);
+        put_f64(&mut v, self.server_ms);
+        put_f64(&mut v, self.e2e_ms);
+        put_u32(&mut v, self.dropped as u32);
+        put_u32(&mut v, self.output.len() as u32);
+        for x in &self.output {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Response> {
+        let mut c = Cursor { b, i: 0 };
+        if c.u32()? != RESP_MAGIC {
+            bail!("bad response magic");
+        }
+        let client_id = c.u32()?;
+        let seq = c.u32()?;
+        let server_ms = c.f64()?;
+        let e2e_ms = c.f64()?;
+        let dropped = c.u32()? != 0;
+        let n = c.u32()? as usize;
+        let output = c.f32s(n)?;
+        Ok(Response { client_id, seq, server_ms, e2e_ms, dropped, output })
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(frame)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (cap 64 MiB).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("reading frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > 64 << 20 {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("reading frame body")?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request {
+            client_id: 7,
+            model: 2,
+            p: 3,
+            seq: 41,
+            t_capture_ms: 123.5,
+            upstream_ms: 17.25,
+            budget_ms: 88.0,
+            payload: vec![1.5, -2.0, 3.25],
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let r = req();
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response {
+            client_id: 7,
+            seq: 41,
+            server_ms: 12.0,
+            e2e_ms: 99.0,
+            dropped: false,
+            output: vec![0.25; 64],
+        };
+        assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Request::decode(&[1, 2, 3]).is_err());
+        let mut enc = req().encode();
+        enc[0] ^= 0xFF;
+        assert!(Request::decode(&enc).is_err());
+        enc = req().encode();
+        enc.truncate(enc.len() - 2);
+        assert!(Request::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"world!").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"world!");
+        assert!(read_frame(&mut r).is_err());
+    }
+}

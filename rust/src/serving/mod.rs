@@ -1,0 +1,16 @@
+//! Serving data path: request/response wire protocol, shared batch
+//! queues, the instance executor materialising execution plans, and the
+//! TCP front-end.  Python never appears here — instances run AOT
+//! artifacts through [`crate::runtime::Engine`].
+
+pub mod batcher;
+pub mod messages;
+pub mod server;
+pub mod tcp;
+
+pub use batcher::{BatchQueue, WorkItem};
+pub use messages::{read_frame, write_frame, Request, Response};
+pub use server::{
+    FragmentExecutor, MockExecutor, Server, ServerCounters, ServerOptions,
+};
+pub use tcp::{TcpClient, TcpFront};

@@ -1,0 +1,466 @@
+//! The serving executor + load balancer (paper §3 "executor").
+//!
+//! Materialises an [`ExecutionPlan`]: one [`BatchQueue`] per provisioned
+//! stage, `alloc.instances` worker threads per stage (the paper's DNN
+//! instances, one process each), alignment stages chained into the
+//! shared stage (the paper pipes tensors between fragments over unix
+//! sockets; we use in-process queues).  The load balancer routes each
+//! client to its stage and drops requests that can no longer meet their
+//! SLO (§3).
+//!
+//! Instances execute the *real* AOT-compiled fragment on PJRT, then pace
+//! to the modeled MPS latency of their (batch, share) configuration —
+//! CPU wall-clock says nothing about GPU shares, so pacing is what makes
+//! queueing/batching dynamics faithful (`time_scale` scales modeled GPU
+//! milliseconds to wall milliseconds; 0 disables pacing for tests).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchQueue, WorkItem};
+use super::messages::{Request, Response};
+use crate::coordinator::plan::ExecutionPlan;
+use crate::profiler::{Alloc, CostModel, FragmentId};
+use crate::runtime::{Engine, ExecOutput};
+
+/// Abstraction over fragment execution so the serving layer is testable
+/// without artifacts (and so alternative backends can plug in).
+pub trait FragmentExecutor: Send + Sync {
+    fn execute(
+        &self,
+        model: &str,
+        start: usize,
+        end: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<ExecOutput>;
+}
+
+impl FragmentExecutor for Engine {
+    fn execute(
+        &self,
+        model: &str,
+        start: usize,
+        end: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<ExecOutput> {
+        self.run(model, start, end, rows)
+    }
+}
+
+/// Deterministic stand-in executor for tests: output row = dim_out copies
+/// of (sum of inputs) / dim_in.
+pub struct MockExecutor {
+    pub dims: HashMap<String, Vec<usize>>,
+}
+
+impl FragmentExecutor for MockExecutor {
+    fn execute(
+        &self,
+        model: &str,
+        _start: usize,
+        end: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<ExecOutput> {
+        let dims = self
+            .dims
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))?;
+        let dim_out = dims[end];
+        let mut data = Vec::with_capacity(rows.len() * dim_out);
+        for r in rows {
+            let v = r.iter().sum::<f32>() / r.len() as f32;
+            data.extend(std::iter::repeat(v).take(dim_out));
+        }
+        Ok(ExecOutput { data, batch: rows.len(), dim_out })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Wall-clock milliseconds per modeled GPU millisecond (1.0 = real
+    /// time; 0.0 = no pacing).
+    pub time_scale: f64,
+    /// Drop requests that can no longer meet their SLO (paper §3).
+    pub drop_on_slo: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self { time_scale: 1.0, drop_on_slo: true }
+    }
+}
+
+/// Per-request context travelling with a work item.
+struct Ctx {
+    client_id: u32,
+    seq: u32,
+    upstream_ms: f64,
+    reply: mpsc::Sender<Response>,
+}
+
+struct Stage {
+    queue: BatchQueue<Ctx>,
+    frag: FragmentId,
+    model_name: String,
+    alloc: Alloc,
+    /// Index of the downstream (shared) stage, if this is an alignment
+    /// stage.
+    next: Option<usize>,
+}
+
+/// Serving statistics counters.
+#[derive(Debug, Default)]
+pub struct ServerCounters {
+    pub served: AtomicU64,
+    pub dropped: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// Served requests whose server time exceeded their budget (should
+    /// stay near zero: the balancer drops hopeless requests instead).
+    pub budget_violations: AtomicU64,
+}
+
+/// The running server.
+pub struct Server {
+    stages: Arc<Vec<Stage>>,
+    routes: HashMap<u32, usize>,
+    handles: Vec<JoinHandle<()>>,
+    pub counters: Arc<ServerCounters>,
+}
+
+impl Server {
+    /// Spawn the instances for `plan` and return the running server.
+    pub fn start(
+        executor: Arc<dyn FragmentExecutor>,
+        cm: &CostModel,
+        plan: &ExecutionPlan,
+        opts: ServerOptions,
+    ) -> Server {
+        let mut stages: Vec<Stage> = Vec::new();
+        let mut routes = HashMap::new();
+
+        for set in &plan.sets {
+            let model_name = cm.config().models[set.model].name.clone();
+            let shared_idx = stages.len();
+            stages.push(Stage {
+                queue: BatchQueue::new(),
+                frag: set.shared.frag,
+                model_name: model_name.clone(),
+                alloc: set.shared.alloc,
+                next: None,
+            });
+            for m in &set.members {
+                let entry = match &m.align {
+                    Some(a) => {
+                        let idx = stages.len();
+                        stages.push(Stage {
+                            queue: BatchQueue::new(),
+                            frag: a.frag,
+                            model_name: model_name.clone(),
+                            alloc: a.alloc,
+                            next: Some(shared_idx),
+                        });
+                        idx
+                    }
+                    None => shared_idx,
+                };
+                for c in &m.spec.clients {
+                    routes.insert(c.0, entry);
+                }
+            }
+        }
+
+        let stages = Arc::new(stages);
+        let counters = Arc::new(ServerCounters::default());
+        let mut handles = Vec::new();
+        for (idx, stage) in stages.iter().enumerate() {
+            for _ in 0..stage.alloc.instances {
+                let stages = stages.clone();
+                let executor = executor.clone();
+                let cm = cm.clone();
+                let counters = counters.clone();
+                handles.push(std::thread::spawn(move || {
+                    instance_loop(idx, &stages, &*executor, &cm, opts, &counters)
+                }));
+            }
+        }
+        Server { stages, routes, handles, counters }
+    }
+
+    /// Submit a request; the response arrives on `reply`.
+    pub fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
+        match self.routes.get(&req.client_id) {
+            Some(&idx) => {
+                self.stages[idx].queue.push(WorkItem {
+                    payload: req.payload,
+                    server_arrival: Instant::now(),
+                    budget_ms: req.budget_ms,
+                    accumulated_ms: 0.0,
+                    ctx: Ctx {
+                        client_id: req.client_id,
+                        seq: req.seq,
+                        upstream_ms: req.upstream_ms,
+                        reply,
+                    },
+                });
+            }
+            None => {
+                // unknown client: the balancer rejects outright
+                let _ = reply.send(Response {
+                    client_id: req.client_id,
+                    seq: req.seq,
+                    server_ms: 0.0,
+                    e2e_ms: req.upstream_ms,
+                    dropped: true,
+                    output: Vec::new(),
+                });
+            }
+        }
+    }
+
+    /// Whether a client currently has a route.
+    pub fn has_route(&self, client_id: u32) -> bool {
+        self.routes.contains_key(&client_id)
+    }
+
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.stages.iter().map(|s| s.queue.len()).collect()
+    }
+
+    /// Close all queues and join the instance threads.
+    pub fn shutdown(mut self) {
+        for s in self.stages.iter() {
+            s.queue.close();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Round a formed batch up to the nearest compiled bucket.
+fn bucket_for(cm: &CostModel, n: usize) -> u32 {
+    let buckets = &cm.config().gpu.batch_buckets;
+    buckets
+        .iter()
+        .copied()
+        .find(|&b| b as usize >= n)
+        .unwrap_or(*buckets.last().unwrap())
+}
+
+fn instance_loop(
+    stage_idx: usize,
+    stages: &[Stage],
+    executor: &dyn FragmentExecutor,
+    cm: &CostModel,
+    opts: ServerOptions,
+    counters: &ServerCounters,
+) {
+    let stage = &stages[stage_idx];
+    // Batch-formation window: the plan's throughput assumes batches of
+    // alloc.batch; greedy pop-1 under-delivers by the amortisation factor.
+    // Waiting up to one planned execution time stays within the §4.3
+    // worst-case-queueing envelope.
+    let window = if opts.time_scale > 0.0 && stage.alloc.batch > 1 {
+        std::time::Duration::from_secs_f64(
+            stage.alloc.latency_ms * opts.time_scale / 1e3,
+        )
+    } else {
+        std::time::Duration::ZERO
+    };
+    loop {
+        let batch = if window.is_zero() {
+            stage.queue.pop_batch(stage.alloc.batch as usize)
+        } else {
+            stage
+                .queue
+                .pop_batch_window(stage.alloc.batch as usize, window)
+        };
+        let Some(batch) = batch else { break };
+        if batch.is_empty() {
+            continue;
+        }
+        // SLO-drop: discard items that cannot finish in time even if
+        // executed right now (paper: the balancer drops SLO misses).
+        let exec_ms_probe = cm.latency_ms(
+            stage.frag,
+            bucket_for(cm, batch.len()),
+            stage.alloc.share,
+        );
+        let mut live: Vec<WorkItem<Ctx>> = Vec::with_capacity(batch.len());
+        for item in batch {
+            let elapsed =
+                item.server_arrival.elapsed().as_secs_f64() * 1e3;
+            // pacing-sleep overshoot + scheduling noise margin: serve a
+            // request that would finish marginally late and it becomes an
+            // SLO violation instead of a clean drop
+            const NOISE_MARGIN_MS: f64 = 3.0;
+            // With pacing, wall-clock elapsed already contains earlier
+            // stages' (paced) execution — adding accumulated_ms would
+            // double-count it; without pacing, modeled time is all there is.
+            let so_far = if opts.time_scale > 0.0 {
+                scaled_elapsed(elapsed, opts)
+            } else {
+                item.accumulated_ms
+            };
+            let projected = so_far
+                + exec_ms_probe
+                + remaining_ms(stage, stages, exec_ms_probe)
+                + NOISE_MARGIN_MS;
+            if opts.drop_on_slo && projected > item.budget_ms {
+                counters.dropped.fetch_add(1, Ordering::Relaxed);
+                let _ = item.ctx.reply.send(Response {
+                    client_id: item.ctx.client_id,
+                    seq: item.ctx.seq,
+                    server_ms: so_far,
+                    e2e_ms: item.ctx.upstream_ms + so_far,
+                    dropped: true,
+                    output: Vec::new(),
+                });
+                continue;
+            }
+            live.push(item);
+        }
+        if live.is_empty() {
+            continue;
+        }
+
+        let rows: Vec<Vec<f32>> =
+            live.iter().map(|i| i.payload.clone()).collect();
+        let exec_ms = cm.latency_ms(
+            stage.frag,
+            bucket_for(cm, rows.len()),
+            stage.alloc.share,
+        );
+        let t0 = Instant::now();
+        let out = executor.execute(
+            &stage.model_name,
+            stage.frag.start,
+            stage.frag.end,
+            &rows,
+        );
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters
+            .batched_requests
+            .fetch_add(rows.len() as u64, Ordering::Relaxed);
+        // pace to the modeled MPS latency
+        if opts.time_scale > 0.0 {
+            let target = exec_ms * opts.time_scale / 1e3;
+            let spent = t0.elapsed().as_secs_f64();
+            if std::env::var_os("GRAFT_DEBUG_EXEC").is_some()
+                && spent * 1e3 > exec_ms
+            {
+                eprintln!(
+                    "[exec overrun] wall {:.1} ms vs modeled {:.1} ms (batch {})",
+                    spent * 1e3,
+                    exec_ms,
+                    rows.len()
+                );
+            }
+            if target > spent {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    target - spent,
+                ));
+            }
+        }
+        let out = match out {
+            Ok(o) => o,
+            Err(_) => {
+                for item in live {
+                    counters.dropped.fetch_add(1, Ordering::Relaxed);
+                    let _ = item.ctx.reply.send(Response {
+                        client_id: item.ctx.client_id,
+                        seq: item.ctx.seq,
+                        server_ms: 0.0,
+                        e2e_ms: item.ctx.upstream_ms,
+                        dropped: true,
+                        output: Vec::new(),
+                    });
+                }
+                continue;
+            }
+        };
+
+        for (i, item) in live.into_iter().enumerate() {
+            let row = out.data[i * out.dim_out..(i + 1) * out.dim_out].to_vec();
+            let acc = item.accumulated_ms + exec_ms;
+            match stage.next {
+                Some(next) => {
+                    stages[next].queue.push(WorkItem {
+                        payload: row,
+                        server_arrival: item.server_arrival,
+                        budget_ms: item.budget_ms,
+                        accumulated_ms: acc,
+                        ctx: item.ctx,
+                    });
+                }
+                None => {
+                    let elapsed = item
+                        .server_arrival
+                        .elapsed()
+                        .as_secs_f64()
+                        * 1e3;
+                    // with pacing, wall time already covers exec; without,
+                    // report modeled time
+                    let server_ms = if opts.time_scale > 0.0 {
+                        scaled_elapsed(elapsed, opts)
+                    } else {
+                        acc
+                    };
+                    counters.served.fetch_add(1, Ordering::Relaxed);
+                    if server_ms > item.budget_ms {
+                        counters
+                            .budget_violations
+                            .fetch_add(1, Ordering::Relaxed);
+                        if std::env::var_os("GRAFT_DEBUG_EXEC").is_some() {
+                            eprintln!(
+                                "[violation] client {} server {:.1} > budget {:.1} (exec {:.1}, batch {})",
+                                item.ctx.client_id,
+                                server_ms,
+                                item.budget_ms,
+                                exec_ms,
+                                out.batch
+                            );
+                        }
+                    }
+                    let _ = item.ctx.reply.send(Response {
+                        client_id: item.ctx.client_id,
+                        seq: item.ctx.seq,
+                        server_ms,
+                        e2e_ms: item.ctx.upstream_ms + server_ms,
+                        dropped: false,
+                        output: row,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Wall-clock elapsed converted back to modeled GPU milliseconds.
+fn scaled_elapsed(elapsed_wall_ms: f64, opts: ServerOptions) -> f64 {
+    if opts.time_scale > 0.0 {
+        elapsed_wall_ms / opts.time_scale
+    } else {
+        0.0
+    }
+}
+
+/// Lower-bound on the time a request still needs after this stage.
+fn remaining_ms(stage: &Stage, stages: &[Stage], _probe: f64) -> f64 {
+    match stage.next {
+        Some(next) => {
+            let s = &stages[next];
+            // best case: batch of 1 at the shared stage's share
+            s.alloc.latency_ms.min(
+                s.alloc.latency_ms / s.alloc.batch.max(1) as f64,
+            )
+        }
+        None => 0.0,
+    }
+}

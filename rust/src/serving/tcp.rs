@@ -1,0 +1,123 @@
+//! TCP front-end: clients send framed [`Request`]s over a socket (the
+//! paper's data path uses network sockets from the mobile devices) and
+//! receive framed [`Response`]s on the same connection.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::messages::{read_frame, write_frame, Request, Response};
+use super::server::Server;
+
+/// A running TCP acceptor in front of a [`Server`].
+pub struct TcpFront {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl TcpFront {
+    /// Bind `addr` (use port 0 for ephemeral) and serve until stopped.
+    pub fn start(addr: &str, server: Arc<Server>) -> Result<TcpFront> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_handle = std::thread::spawn(move || {
+            let mut conn_handles = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let server = server.clone();
+                        conn_handles.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, server);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in conn_handles {
+                let _ = h.join();
+            }
+        });
+        Ok(TcpFront { addr: local, stop, accept_handle: Some(accept_handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connection: a reader loop submitting requests + a writer loop
+/// pumping responses back (responses may arrive out of order thanks to
+/// batching across stages).
+fn handle_conn(stream: TcpStream, server: Arc<Server>) -> Result<()> {
+    let mut reader = stream.try_clone()?;
+    let writer = stream;
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    let wh = std::thread::spawn(move || -> Result<()> {
+        let mut w = std::io::BufWriter::new(writer);
+        for resp in rx {
+            write_frame(&mut w, &resp.encode())?;
+            w.flush()?;
+        }
+        Ok(())
+    });
+
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break, // client closed
+        };
+        let req = Request::decode(&frame)?;
+        server.submit(req, tx.clone());
+    }
+    drop(tx);
+    let _ = wh.join();
+    Ok(())
+}
+
+/// Blocking client helper: send requests, collect responses.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<TcpClient> {
+        Ok(TcpClient { stream: TcpStream::connect(addr)? })
+    }
+
+    /// A second handle on the same connection (e.g. a dedicated reader
+    /// thread while the original sends).
+    pub fn try_clone(&self) -> Result<TcpClient> {
+        Ok(TcpClient { stream: self.stream.try_clone()? })
+    }
+
+    /// Hard-close both directions (unblocks any reader clone).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        let mut w = std::io::BufWriter::new(self.stream.try_clone()?);
+        write_frame(&mut w, &req.encode())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn recv(&mut self) -> Result<Response> {
+        Response::decode(&read_frame(&mut self.stream)?)
+    }
+}

@@ -1,0 +1,123 @@
+//! GPU cluster packing: place plan instances onto GPUs respecting the
+//! per-GPU share cap (≤100%, §5.1) and memory capacity.  Used by the
+//! capped-resource experiments (Fig 17) and the large-scale memory
+//! bottleneck notes of §5.3.
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::profiler::CostModel;
+
+/// One placed instance.
+#[derive(Debug, Clone)]
+pub struct PlacedInstance {
+    pub gpu: usize,
+    pub share: u32,
+    pub mem_mb: f64,
+}
+
+/// Result of packing a plan onto GPUs.
+#[derive(Debug, Clone, Default)]
+pub struct Packing {
+    pub gpus: usize,
+    pub placements: Vec<PlacedInstance>,
+    /// Per-GPU (share used, memory used).
+    pub usage: Vec<(u32, f64)>,
+}
+
+/// First-fit-decreasing packing of every instance in the plan.
+/// Returns `None` if some instance cannot fit on any GPU at all (share
+/// or memory above a single GPU's capacity).
+pub fn pack(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    max_gpus: Option<usize>,
+) -> Option<Packing> {
+    let g = &cm.config().gpu;
+    // expand stages into instances
+    let mut items: Vec<(u32, f64)> = Vec::new();
+    for s in plan.stages() {
+        let mem = cm.instance_mem_mb(s.frag, s.alloc.batch);
+        if s.alloc.share > g.max_share || mem > g.gpu_mem_mb {
+            return None;
+        }
+        for _ in 0..s.alloc.instances {
+            items.push((s.alloc.share, mem));
+        }
+    }
+    items.sort_by(|a, b| b.0.cmp(&a.0).then(b.1.total_cmp(&a.1)));
+
+    let mut usage: Vec<(u32, f64)> = Vec::new();
+    let mut placements = Vec::new();
+    for (share, mem) in items {
+        let slot = usage.iter().position(|(s, m)| {
+            s + share <= g.max_share && m + mem <= g.gpu_mem_mb
+        });
+        let gpu = match slot {
+            Some(i) => i,
+            None => {
+                if let Some(cap) = max_gpus {
+                    if usage.len() >= cap {
+                        return None; // does not fit the cluster
+                    }
+                }
+                usage.push((0, 0.0));
+                usage.len() - 1
+            }
+        };
+        usage[gpu].0 += share;
+        usage[gpu].1 += mem;
+        placements.push(PlacedInstance { gpu, share, mem_mb: mem });
+    }
+    Some(Packing { gpus: usage.len(), placements, usage })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::baselines::gslice;
+    use crate::coordinator::{ClientId, FragmentSpec};
+    use crate::profiler::AllocConstraints;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn plan(cm: &CostModel, n: u32) -> ExecutionPlan {
+        let inc = cm.model_index("inc").unwrap();
+        let specs: Vec<FragmentSpec> = (0..n)
+            .map(|i| FragmentSpec::single(ClientId(i), inc, 3, 100.0, 30.0))
+            .collect();
+        gslice(cm, &specs, &AllocConstraints::default())
+    }
+
+    #[test]
+    fn packing_respects_caps() {
+        let cm = cm();
+        let p = pack(&cm, &plan(&cm, 12), None).unwrap();
+        let g = &cm.config().gpu;
+        assert!(p.gpus >= 1);
+        for (share, mem) in &p.usage {
+            assert!(*share <= g.max_share);
+            assert!(*mem <= g.gpu_mem_mb);
+        }
+        let placed: u32 = p.placements.iter().map(|i| i.share).sum();
+        let wanted: u32 = plan(&cm, 12).total_share();
+        assert_eq!(placed, wanted);
+    }
+
+    #[test]
+    fn gpu_cap_rejects_oversized_plans() {
+        let cm = cm();
+        let big = plan(&cm, 40);
+        assert!(pack(&cm, &big, Some(1)).is_none());
+        assert!(pack(&cm, &big, None).is_some());
+    }
+
+    #[test]
+    fn more_demand_needs_more_gpus() {
+        let cm = cm();
+        let small = pack(&cm, &plan(&cm, 4), None).unwrap();
+        let large = pack(&cm, &plan(&cm, 40), None).unwrap();
+        assert!(large.gpus >= small.gpus);
+    }
+}

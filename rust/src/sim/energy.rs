@@ -1,0 +1,105 @@
+//! GPU energy model (Fig 21).
+//!
+//! Per instance: static power `p_base_w` for the whole provisioning
+//! window plus dynamic power proportional to its GPU share scaled by its
+//! utilisation (fraction of time actually executing = demand/achievable
+//! throughput).  Bigger batches raise achievable throughput per share
+//! point, which is why heavy merging (GSLICE⁺) can beat Graft on energy
+//! even while losing on allocated share (paper §5.11).
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::profiler::CostModel;
+
+/// Energy (J) consumed by a plan over `duration_s` seconds.
+pub fn plan_energy_j(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    duration_s: f64,
+) -> f64 {
+    let g = &cm.config().gpu;
+    plan.stages()
+        .map(|s| {
+            let util =
+                (s.demand_rps / s.alloc.throughput_rps).clamp(0.0, 1.0);
+            let inst = s.alloc.instances as f64;
+            let dynamic =
+                g.p_share_w_per_pct * s.alloc.share as f64 * util * inst;
+            let statik = g.p_base_w * inst;
+            (dynamic + statik) * duration_s
+        })
+        .sum()
+}
+
+/// Energy per served request (J/req) — the figure's comparable unit.
+pub fn energy_per_request_j(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    duration_s: f64,
+) -> f64 {
+    let total_rate: f64 = plan
+        .sets
+        .iter()
+        .map(|s| s.shared.demand_rps)
+        .sum();
+    if total_rate <= 0.0 {
+        return f64::NAN;
+    }
+    plan_energy_j(cm, plan, duration_s) / (total_rate * duration_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::baselines::{gslice, gslice_plus};
+    use crate::coordinator::{ClientId, FragmentSpec};
+    use crate::profiler::AllocConstraints;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn uniform(cm: &CostModel, n: u32) -> Vec<FragmentSpec> {
+        let vgg = cm.model_index("vgg").unwrap();
+        (0..n)
+            .map(|i| FragmentSpec::single(ClientId(i), vgg, 1, 44.0, 30.0))
+            .collect()
+    }
+
+    #[test]
+    fn energy_scales_with_duration() {
+        let cm = cm();
+        let plan = gslice(&cm, &uniform(&cm, 4), &AllocConstraints::default());
+        let e1 = plan_energy_j(&cm, &plan, 10.0);
+        let e2 = plan_energy_j(&cm, &plan, 20.0);
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn merging_reduces_energy() {
+        // GSLICE+ merges uniform fragments -> bigger batches -> fewer
+        // instances and higher utilisation -> less energy (paper §5.11).
+        let cm = cm();
+        let specs = uniform(&cm, 8);
+        let cons = AllocConstraints::default();
+        let e_gslice =
+            plan_energy_j(&cm, &gslice(&cm, &specs, &cons), 10.0);
+        let e_plus =
+            plan_energy_j(&cm, &gslice_plus(&cm, &specs, &cons), 10.0);
+        assert!(
+            e_plus < e_gslice,
+            "gslice+ {e_plus} >= gslice {e_gslice}"
+        );
+    }
+
+    #[test]
+    fn per_request_energy_is_finite() {
+        let cm = cm();
+        let plan = gslice(&cm, &uniform(&cm, 4), &AllocConstraints::default());
+        let e = energy_per_request_j(&cm, &plan, 10.0);
+        assert!(e.is_finite() && e > 0.0);
+        let empty = ExecutionPlan::default();
+        assert!(energy_per_request_j(&cm, &empty, 10.0).is_nan());
+    }
+}

@@ -1,0 +1,468 @@
+//! Discrete-event latency simulator.
+//!
+//! Replays request arrivals through the stages of an [`ExecutionPlan`]
+//! with the same batching semantics as the real executor (greedy
+//! batches: an idle instance serves immediately; batches form while all
+//! instances are busy), producing the end-to-end latency distributions
+//! of Figs 8–10 at scales the real data path cannot host (the paper hit
+//! the same wall — §5.3 "we were not able to obtain the end-to-end
+//! latency distribution due to the lack of GPU memory").
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::metrics::LatencyStats;
+use crate::profiler::{CostModel, FragmentId};
+use crate::workload::{arrivals, ArrivalProcess};
+
+/// One client's arrival context.
+#[derive(Debug, Clone)]
+pub struct SimClient {
+    pub client_id: u32,
+    /// Mobile + uplink latency added before the server (ms).
+    pub upstream_ms: f64,
+    /// End-to-end SLO (ms).
+    pub slo_ms: f64,
+    /// Server-side budget (ms) used for drop decisions.
+    pub budget_ms: f64,
+    pub rate_rps: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    pub horizon_s: f64,
+    pub seed: u64,
+    pub drop_on_slo: bool,
+    pub process: ArrivalProcess,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            horizon_s: 20.0,
+            seed: 0xD15C,
+            drop_on_slo: true,
+            process: ArrivalProcess::Periodic { jitter: 0.05 },
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Default)]
+pub struct SimResult {
+    /// End-to-end latency samples of *served* requests (ms).
+    pub e2e: LatencyStats,
+    /// Per-client latency stats.
+    pub per_client: Vec<(u32, LatencyStats)>,
+    pub served: usize,
+    pub dropped: usize,
+    /// Fraction of served requests within their SLO.
+    pub slo_attainment: f64,
+}
+
+// -- internal event machinery ------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Arrival { stage: usize, job: usize },
+    Depart { stage: usize, instance: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t_ms: f64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_ms == other.t_ms && self.kind == other.kind
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap over time
+        other.t_ms.total_cmp(&self.t_ms)
+    }
+}
+
+struct Job {
+    client: usize,
+    /// Time the request reached the server (ms).
+    server_arrival_ms: f64,
+    /// Modeled server time accumulated in completed stages (ms).
+    accumulated_ms: f64,
+}
+
+struct StageState {
+    frag: FragmentId,
+    share: u32,
+    max_batch: u32,
+    idle: u32,
+    queue: VecDeque<usize>,
+    /// Jobs in service per instance slot (batch), with finish event.
+    next: Option<usize>,
+    in_service: Vec<Vec<usize>>,
+}
+
+/// Run the DES for a plan.  `clients[i].client_id` must match the plan's
+/// member client ids.
+pub fn simulate(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    clients: &[SimClient],
+    opts: &SimOptions,
+) -> SimResult {
+    // stage layout mirroring serving::Server::start
+    let mut stages: Vec<StageState> = Vec::new();
+    let mut entry_of_client: Vec<Option<usize>> = vec![None; clients.len()];
+    let idx_of_client: std::collections::HashMap<u32, usize> = clients
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.client_id, i))
+        .collect();
+
+    for set in &plan.sets {
+        let shared_idx = stages.len();
+        stages.push(StageState {
+            frag: set.shared.frag,
+            share: set.shared.alloc.share,
+            max_batch: set.shared.alloc.batch,
+            idle: set.shared.alloc.instances,
+            queue: VecDeque::new(),
+            next: None,
+            in_service: vec![Vec::new(); set.shared.alloc.instances as usize],
+        });
+        for m in &set.members {
+            let entry = match &m.align {
+                Some(a) => {
+                    let idx = stages.len();
+                    stages.push(StageState {
+                        frag: a.frag,
+                        share: a.alloc.share,
+                        max_batch: a.alloc.batch,
+                        idle: a.alloc.instances,
+                        queue: VecDeque::new(),
+                        next: Some(shared_idx),
+                        in_service: vec![
+                            Vec::new();
+                            a.alloc.instances as usize
+                        ],
+                    });
+                    idx
+                }
+                None => shared_idx,
+            };
+            for c in &m.spec.clients {
+                if let Some(&ci) = idx_of_client.get(&c.0) {
+                    entry_of_client[ci] = Some(entry);
+                }
+            }
+        }
+    }
+
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut events: BinaryHeap<Event> = BinaryHeap::new();
+    for (ci, c) in clients.iter().enumerate() {
+        if entry_of_client[ci].is_none() {
+            continue;
+        }
+        for t_s in arrivals(
+            c.rate_rps,
+            opts.horizon_s,
+            opts.process,
+            opts.seed ^ (c.client_id as u64).wrapping_mul(0x9E3779B9),
+        ) {
+            let t_ms = t_s * 1e3 + c.upstream_ms;
+            let job = jobs.len();
+            jobs.push(Job {
+                client: ci,
+                server_arrival_ms: t_ms,
+                accumulated_ms: 0.0,
+            });
+            events.push(Event {
+                t_ms,
+                kind: EventKind::Arrival {
+                    stage: entry_of_client[ci].unwrap(),
+                    job,
+                },
+            });
+        }
+    }
+
+    let mut result = SimResult::default();
+    let mut per_client: Vec<LatencyStats> =
+        clients.iter().map(|_| LatencyStats::new()).collect();
+    let bucket = |n: usize| -> u32 {
+        let b = &cm.config().gpu.batch_buckets;
+        b.iter().copied().find(|&x| x as usize >= n).unwrap_or(*b.last().unwrap())
+    };
+
+    while let Some(Event { t_ms, kind }) = events.pop() {
+        match kind {
+            EventKind::Arrival { stage, job } => {
+                let st = &mut stages[stage];
+                st.queue.push_back(job);
+                if st.idle > 0 {
+                    start_service(
+                        cm, &mut stages, stage, t_ms, &mut events, &jobs,
+                        &clients_budget(clients, &jobs), opts, &mut result,
+                        bucket,
+                    );
+                }
+            }
+            EventKind::Depart { stage, instance } => {
+                let exec_ms = {
+                    let st = &stages[stage];
+                    let n = st.in_service[instance].len();
+                    cm.latency_ms(st.frag, bucket(n), st.share)
+                };
+                let batch = std::mem::take(
+                    &mut stages[stage].in_service[instance],
+                );
+                let next = stages[stage].next;
+                stages[stage].idle += 1;
+                for job_id in batch {
+                    jobs[job_id].accumulated_ms += exec_ms;
+                    match next {
+                        Some(ns) => {
+                            stages[ns].queue.push_back(job_id);
+                            if stages[ns].idle > 0 {
+                                start_service(
+                                    cm,
+                                    &mut stages,
+                                    ns,
+                                    t_ms,
+                                    &mut events,
+                                    &jobs,
+                                    &clients_budget(clients, &jobs),
+                                    opts,
+                                    &mut result,
+                                    bucket,
+                                );
+                            }
+                        }
+                        None => {
+                            let job = &jobs[job_id];
+                            let c = &clients[job.client];
+                            let server_ms =
+                                t_ms - job.server_arrival_ms;
+                            let e2e = c.upstream_ms + server_ms;
+                            result.served += 1;
+                            result.e2e.record(e2e);
+                            per_client[job.client].record(e2e);
+                        }
+                    }
+                }
+                // the freed instance may immediately take queued work
+                if !stages[stage].queue.is_empty() {
+                    start_service(
+                        cm, &mut stages, stage, t_ms, &mut events, &jobs,
+                        &clients_budget(clients, &jobs), opts, &mut result,
+                        bucket,
+                    );
+                }
+            }
+        }
+    }
+
+    result.per_client = clients
+        .iter()
+        .zip(per_client)
+        .map(|(c, s)| (c.client_id, s))
+        .collect();
+    result.slo_attainment = {
+        let mut ok = 0usize;
+        let mut total = 0usize;
+        for (c, s) in clients.iter().zip(result.per_client.iter()) {
+            for &x in s.1.samples() {
+                total += 1;
+                if x <= c.slo_ms {
+                    ok += 1;
+                }
+            }
+        }
+        if total == 0 {
+            f64::NAN
+        } else {
+            ok as f64 / total as f64
+        }
+    };
+    result
+}
+
+fn clients_budget<'a>(
+    clients: &'a [SimClient],
+    _jobs: &[Job],
+) -> &'a [SimClient] {
+    clients
+}
+
+#[allow(clippy::too_many_arguments)]
+fn start_service(
+    cm: &CostModel,
+    stages: &mut [StageState],
+    stage: usize,
+    t_ms: f64,
+    events: &mut BinaryHeap<Event>,
+    jobs: &[Job],
+    clients: &[SimClient],
+    opts: &SimOptions,
+    result: &mut SimResult,
+    bucket: impl Fn(usize) -> u32,
+) {
+    let st = &mut stages[stage];
+    if st.idle == 0 || st.queue.is_empty() {
+        return;
+    }
+    // greedy batch; drop jobs that cannot meet their budget anymore
+    let mut batch = Vec::new();
+    while batch.len() < st.max_batch as usize {
+        let Some(job_id) = st.queue.pop_front() else {
+            break;
+        };
+        let job = &jobs[job_id];
+        let elapsed = t_ms - job.server_arrival_ms;
+        let probe =
+            cm.latency_ms(st.frag, bucket(batch.len() + 1), st.share);
+        let budget = clients[job.client].budget_ms;
+        if opts.drop_on_slo && elapsed + job.accumulated_ms + probe > budget
+        {
+            result.dropped += 1;
+            continue;
+        }
+        batch.push(job_id);
+    }
+    if batch.is_empty() {
+        return;
+    }
+    let n = batch.len();
+    let instance = st
+        .in_service
+        .iter()
+        .position(Vec::is_empty)
+        .expect("idle count says a slot is free");
+    st.in_service[instance] = batch;
+    st.idle -= 1;
+    let exec_ms = cm.latency_ms(st.frag, bucket(n), st.share);
+    events.push(Event {
+        t_ms: t_ms + exec_ms,
+        kind: EventKind::Depart { stage, instance },
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::repartition::{realign_group, RepartitionOptions};
+    use crate::coordinator::{ClientId, FragmentSpec};
+
+    fn setup() -> (CostModel, ExecutionPlan, Vec<SimClient>) {
+        let cm = CostModel::new(Config::embedded());
+        let mi = cm.model_index("inc").unwrap();
+        let specs: Vec<FragmentSpec> = (0..4)
+            .map(|i| {
+                FragmentSpec::single(
+                    ClientId(i),
+                    mi,
+                    2 + (i as usize % 2),
+                    100.0,
+                    30.0,
+                )
+            })
+            .collect();
+        let plan =
+            realign_group(&cm, &specs, &RepartitionOptions::default());
+        assert!(plan.infeasible.is_empty());
+        let clients: Vec<SimClient> = (0..4)
+            .map(|i| SimClient {
+                client_id: i,
+                upstream_ms: 40.0,
+                slo_ms: 156.75,
+                budget_ms: 100.0,
+                rate_rps: 30.0,
+            })
+            .collect();
+        (cm, plan, clients)
+    }
+
+    #[test]
+    fn simulation_serves_most_requests_within_slo() {
+        let (cm, plan, clients) = setup();
+        let r = simulate(&cm, &plan, &clients, &SimOptions::default());
+        let expected = (4.0 * 30.0 * 20.0) as usize;
+        assert!(r.served + r.dropped > expected * 9 / 10);
+        assert!(
+            r.slo_attainment > 0.9,
+            "attainment {} served {} dropped {}",
+            r.slo_attainment,
+            r.served,
+            r.dropped
+        );
+        assert!(r.e2e.percentile(50.0) >= 40.0, "below upstream latency?");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cm, plan, clients) = setup();
+        let a = simulate(&cm, &plan, &clients, &SimOptions::default());
+        let b = simulate(&cm, &plan, &clients, &SimOptions::default());
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.e2e.percentile(99.0), b.e2e.percentile(99.0));
+    }
+
+    #[test]
+    fn underprovisioned_plan_queues_or_drops() {
+        let (cm, mut plan, clients) = setup();
+        // sabotage: strip the plan down to one instance with tiny share
+        for set in &mut plan.sets {
+            set.shared.alloc.instances = 1;
+            set.shared.alloc.share = 5;
+            set.shared.alloc.latency_ms =
+                cm.latency_ms(set.shared.frag, set.shared.alloc.batch, 5);
+            for m in &mut set.members {
+                if let Some(a) = m.align.as_mut() {
+                    a.alloc.instances = 1;
+                    a.alloc.share = 5;
+                }
+            }
+        }
+        let r = simulate(&cm, &plan, &clients, &SimOptions::default());
+        let healthy = simulate(
+            &cm,
+            &setup().1,
+            &clients,
+            &SimOptions::default(),
+        );
+        assert!(
+            r.dropped > healthy.dropped,
+            "sabotaged {} vs healthy {}",
+            r.dropped,
+            healthy.dropped
+        );
+    }
+
+    #[test]
+    fn unknown_clients_are_ignored() {
+        let (cm, plan, mut clients) = setup();
+        clients.push(SimClient {
+            client_id: 999,
+            upstream_ms: 1.0,
+            slo_ms: 100.0,
+            budget_ms: 50.0,
+            rate_rps: 30.0,
+        });
+        let r = simulate(&cm, &plan, &clients, &SimOptions::default());
+        assert!(r.per_client.iter().any(|(id, s)| *id == 999 && s.is_empty()));
+    }
+}

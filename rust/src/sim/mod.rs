@@ -1,0 +1,11 @@
+//! Simulators: discrete-event latency simulation (Figs 8–10, 18), the
+//! GPU energy model (Fig 21), and cluster packing with share/memory
+//! caps (Fig 17, §5.3 memory bottlenecks).
+
+pub mod cluster;
+pub mod energy;
+pub mod latency;
+
+pub use cluster::{pack, Packing, PlacedInstance};
+pub use energy::{energy_per_request_j, plan_energy_j};
+pub use latency::{simulate, SimClient, SimOptions, SimResult};

@@ -1,0 +1,112 @@
+//! Micro-benchmark harness (the offline crate set has no criterion).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 reporting; used by the
+//! `rust/benches/*.rs` targets (declared `harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        )
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup` iterations, then measure
+/// until `target_time` elapses (at least `min_iters`).
+pub fn bench<F, R>(name: &str, mut f: F) -> BenchResult
+where
+    F: FnMut() -> R,
+{
+    bench_with(name, 3, 30, Duration::from_millis(700), &mut f)
+}
+
+pub fn bench_with<F, R>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    target_time: Duration,
+    f: &mut F,
+) -> BenchResult
+where
+    F: FnMut() -> R,
+{
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < target_time {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed());
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean,
+        p50: p(0.50),
+        p95: p(0.95),
+    }
+}
+
+/// Run and print a group of benches (helper for bench binaries).
+pub fn run_group(title: &str, benches: Vec<BenchResult>) {
+    println!("== {title} ==");
+    for b in &benches {
+        println!("{}", b.report());
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_with(
+            "noop",
+            1,
+            10,
+            Duration::from_millis(5),
+            &mut || 1 + 1,
+        );
+        assert!(r.iters >= 10);
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn bench_orders_percentiles() {
+        let mut n = 0u64;
+        let r = bench_with(
+            "spin",
+            0,
+            20,
+            Duration::from_millis(5),
+            &mut || {
+                n = n.wrapping_add(1);
+                std::hint::black_box(n)
+            },
+        );
+        assert!(r.mean.as_nanos() > 0);
+    }
+}

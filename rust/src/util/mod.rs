@@ -1,0 +1,13 @@
+//! In-tree substrates replacing unavailable third-party crates (the
+//! offline registry carries only the `xla` closure): JSON, PRNG, thread
+//! pool, micro-bench harness and CSV helpers.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod rng;
+
+pub use json::Json;
+pub use pool::parallel_map;
+pub use rng::Rng;

@@ -1,0 +1,79 @@
+//! Workload generation: request arrival processes per client.
+//!
+//! The paper's clients issue frames at a fixed rate (30 RPS; ViT 1 RPS).
+//! Cameras are near-periodic; we support periodic-with-jitter (default)
+//! and Poisson arrivals for stress tests.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Fixed inter-arrival 1/rate with ±`jitter` relative uniform noise.
+    Periodic { jitter: f64 },
+    /// Exponential inter-arrivals (memoryless).
+    Poisson,
+}
+
+/// Generate arrival timestamps (seconds) over `[0, horizon_s)`.
+pub fn arrivals(
+    rate_rps: f64,
+    horizon_s: f64,
+    process: ArrivalProcess,
+    seed: u64,
+) -> Vec<f64> {
+    assert!(rate_rps > 0.0 && horizon_s > 0.0);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mean_gap = 1.0 / rate_rps;
+    let mut t = match process {
+        // desynchronise clients: random phase
+        ArrivalProcess::Periodic { .. } => rng.f64() * mean_gap,
+        ArrivalProcess::Poisson => 0.0,
+    };
+    let mut out = Vec::with_capacity((rate_rps * horizon_s) as usize + 4);
+    while t < horizon_s {
+        if t >= 0.0 {
+            out.push(t);
+        }
+        let gap = match process {
+            ArrivalProcess::Periodic { jitter } => {
+                mean_gap * (1.0 + jitter * (rng.f64() * 2.0 - 1.0))
+            }
+            ArrivalProcess::Poisson => rng.exponential(mean_gap),
+        };
+        t += gap.max(1e-9);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_rate_is_respected() {
+        let a = arrivals(30.0, 10.0, ArrivalProcess::Periodic { jitter: 0.05 }, 1);
+        let rate = a.len() as f64 / 10.0;
+        assert!((rate - 30.0).abs() < 2.0, "rate {rate}");
+        assert!(a.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn poisson_rate_approximates() {
+        let a = arrivals(100.0, 50.0, ArrivalProcess::Poisson, 2);
+        let rate = a.len() as f64 / 50.0;
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let p = ArrivalProcess::Poisson;
+        assert_eq!(arrivals(10.0, 5.0, p, 7), arrivals(10.0, 5.0, p, 7));
+        assert_ne!(arrivals(10.0, 5.0, p, 7), arrivals(10.0, 5.0, p, 8));
+    }
+
+    #[test]
+    fn all_within_horizon() {
+        let a = arrivals(30.0, 3.0, ArrivalProcess::Periodic { jitter: 0.1 }, 3);
+        assert!(a.iter().all(|&t| (0.0..3.0).contains(&t)));
+    }
+}

@@ -1,0 +1,266 @@
+//! Property-based tests (in-tree generator: `graft::util::Rng` — the
+//! offline crate set has no proptest).  Each property runs over many
+//! random cases; failures print the seed for reproduction.
+
+use graft::config::Config;
+use graft::coordinator::grouping::{group_fragments, GroupOptions};
+use graft::coordinator::merging::{merge_fragments, MergeOptions};
+use graft::coordinator::repartition::{
+    plan_covers_demand, plan_is_slo_safe, realign_group, RepartitionOptions,
+};
+use graft::coordinator::{ClientId, FragmentSpec};
+use graft::profiler::{AllocConstraints, CostModel};
+use graft::serving::{Request, Response};
+use graft::util::{Json, Rng};
+
+fn cm() -> CostModel {
+    CostModel::new(Config::embedded())
+}
+
+/// Random same-model fragment set with plausible budgets.
+fn random_specs(rng: &mut Rng, cm: &CostModel, model: usize, n: usize) -> Vec<FragmentSpec> {
+    let m = &cm.config().models[model];
+    (0..n)
+        .map(|i| {
+            let p = rng.below(m.layers);
+            // budget comfortably above the tail's ref latency so most
+            // cases are feasible
+            let tail_ms = m.server_ms_ref * m.rel_cost_range(p, m.layers);
+            let budget = tail_ms * rng.range(2.5, 8.0);
+            let rate = *[1.0, 10.0, 30.0, 60.0][..].get(rng.below(4)).unwrap();
+            FragmentSpec::single(ClientId(i as u32), model, p, budget, rate)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_merging_conserves_rate_and_clients() {
+    let cm = cm();
+    for case in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(case);
+        let model = rng.below(cm.config().models.len());
+        let n = 1 + rng.below(40);
+        let specs = random_specs(&mut rng, &cm, model, n);
+        for opts in [
+            MergeOptions::none(),
+            MergeOptions::merge_all(),
+            MergeOptions::default(),
+        ] {
+            let merged = merge_fragments(&cm, &specs, &opts);
+            let rate_in: f64 = specs.iter().map(|s| s.rate_rps).sum();
+            let rate_out: f64 = merged.iter().map(|s| s.rate_rps).sum();
+            assert!(
+                (rate_in - rate_out).abs() < 1e-6,
+                "case {case}: rate {rate_in} vs {rate_out}"
+            );
+            let mut cin: Vec<u32> = specs
+                .iter()
+                .flat_map(|s| s.clients.iter().map(|c| c.0))
+                .collect();
+            let mut cout: Vec<u32> = merged
+                .iter()
+                .flat_map(|s| s.clients.iter().map(|c| c.0))
+                .collect();
+            cin.sort_unstable();
+            cout.sort_unstable();
+            assert_eq!(cin, cout, "case {case}");
+            // merged members stay uniform: one (model, p) per spec and
+            // budget == min of members is conserved implicitly; at least
+            // check the point never changes
+            for ms in &merged {
+                assert!(ms.p < cm.config().models[model].layers);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_merging_never_increases_fragment_count_with_lower_threshold() {
+    let cm = cm();
+    for case in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(1000 + case);
+        let model = rng.below(cm.config().models.len());
+        let n = 5 + rng.below(30);
+        let specs = random_specs(&mut rng, &cm, model, n);
+        let mut prev = usize::MAX;
+        for thr in [f64::INFINITY, 0.4, 0.2, 0.05, f64::NEG_INFINITY] {
+            let n = merge_fragments(
+                &cm,
+                &specs,
+                &MergeOptions { threshold: thr, ..Default::default() },
+            )
+            .len();
+            assert!(
+                n <= prev,
+                "case {case}: thr {thr} gives {n} > {prev}"
+            );
+            prev = n;
+        }
+    }
+}
+
+#[test]
+fn prop_grouping_is_balanced_disjoint_cover() {
+    let cm = cm();
+    for case in 0..60u64 {
+        let mut rng = Rng::seed_from_u64(2000 + case);
+        let model = rng.below(cm.config().models.len());
+        let n = 1 + rng.below(50);
+        let specs = random_specs(&mut rng, &cm, model, n);
+        let gs = 2 + rng.below(6);
+        let groups = group_fragments(
+            &specs,
+            &GroupOptions { group_size: gs, seed: case, ..Default::default() },
+        );
+        let mut all: Vec<usize> = groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "case {case}");
+        let k = n.div_ceil(gs);
+        let cap = n.div_ceil(k);
+        for g in &groups {
+            assert!(!g.is_empty() && g.len() <= cap, "case {case}: {groups:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_realign_plans_are_safe_and_cover_all_clients() {
+    let cm = cm();
+    for case in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(3000 + case);
+        let model = rng.below(cm.config().models.len());
+        let n = 1 + rng.below(6);
+        let specs = random_specs(&mut rng, &cm, model, n);
+        let plan =
+            realign_group(&cm, &specs, &RepartitionOptions::default());
+        assert!(plan_is_slo_safe(&plan), "case {case}");
+        assert!(plan_covers_demand(&plan), "case {case}");
+        let mut planned: Vec<u32> = plan
+            .sets
+            .iter()
+            .flat_map(|s| s.members.iter())
+            .flat_map(|m| m.spec.clients.iter().map(|c| c.0))
+            .chain(
+                plan.infeasible
+                    .iter()
+                    .flat_map(|s| s.clients.iter().map(|c| c.0)),
+            )
+            .collect();
+        planned.sort_unstable();
+        let mut want: Vec<u32> = specs
+            .iter()
+            .flat_map(|s| s.clients.iter().map(|c| c.0))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(planned, want, "case {case}");
+        // structural invariants
+        for set in &plan.sets {
+            assert!(set.point <= cm.config().models[model].layers);
+            for m in &set.members {
+                assert!(m.spec.p <= set.point, "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_min_alloc_meets_constraints() {
+    let cm = cm();
+    for case in 0..300u64 {
+        let mut rng = Rng::seed_from_u64(4000 + case);
+        let model = rng.below(cm.config().models.len());
+        let m = &cm.config().models[model];
+        let start = rng.below(m.layers);
+        let end = start + 1 + rng.below(m.layers - start);
+        let frag = graft::profiler::FragmentId::new(model, start, end);
+        let budget = rng.range(0.5, 300.0);
+        let demand = rng.range(0.5, 400.0);
+        if let Some(a) =
+            cm.min_alloc(frag, budget, demand, AllocConstraints::default())
+        {
+            assert!(a.latency_ms <= budget + 1e-9, "case {case}: {a:?}");
+            assert!(
+                a.throughput_rps >= demand - 1e-9,
+                "case {case}: {a:?} for demand {demand}"
+            );
+            assert!(a.share <= cm.config().gpu.max_share);
+            assert_eq!(a.share % cm.config().gpu.share_unit, 0);
+            assert!(cm
+                .config()
+                .gpu
+                .batch_buckets
+                .contains(&a.batch));
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.range(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            char::from_u32(32 + rng.below(90) as u32).unwrap()
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(5))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..200u64 {
+        let mut rng = Rng::seed_from_u64(5000 + case);
+        let v = random_json(&mut rng, 3);
+        let re = Json::parse(&v.to_string())
+            .unwrap_or_else(|e| panic!("case {case}: {e} on {v}"));
+        assert_eq!(v, re, "case {case}");
+    }
+}
+
+#[test]
+fn prop_wire_protocol_roundtrip() {
+    for case in 0..200u64 {
+        let mut rng = Rng::seed_from_u64(6000 + case);
+        let req = Request {
+            client_id: rng.next_u64() as u32,
+            model: rng.below(5) as u16,
+            p: rng.below(18) as u16,
+            seq: rng.next_u64() as u32,
+            t_capture_ms: rng.range(0.0, 1e6),
+            upstream_ms: rng.range(0.0, 1e3),
+            budget_ms: rng.range(0.0, 1e3),
+            payload: (0..rng.below(300))
+                .map(|_| rng.normal() as f32)
+                .collect(),
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req, "case {case}");
+        let resp = Response {
+            client_id: req.client_id,
+            seq: req.seq,
+            server_ms: rng.range(0.0, 1e3),
+            e2e_ms: rng.range(0.0, 1e3),
+            dropped: rng.f64() < 0.2,
+            output: (0..rng.below(64)).map(|_| rng.normal() as f32).collect(),
+        };
+        assert_eq!(
+            Response::decode(&resp.encode()).unwrap(),
+            resp,
+            "case {case}"
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration: the PJRT engine against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skips, loudly, otherwise —
+//! `make test` always builds artifacts first).
+
+use std::path::PathBuf;
+
+use graft::runtime::{Engine, Manifest};
+use graft::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn rand_rows(rng: &mut Rng, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn manifest_covers_all_models_and_buckets() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["inc", "res", "vgg", "mob", "vit"] {
+        assert!(!m.fragments(name).is_empty(), "{name} missing");
+        // whole-model fragment exists at batch 1
+        let model = &m.models[name];
+        let last = *model.points.last().unwrap();
+        assert!(m.get(name, 0, last, 1).is_some());
+    }
+    assert_eq!(m.batches, vec![1, 2, 4, 8]);
+}
+
+#[test]
+fn engine_runs_whole_model() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let mf = engine.manifest();
+    let dims = mf.models["vgg"].dims.clone();
+    let mut rng = Rng::seed_from_u64(1);
+    let rows = rand_rows(&mut rng, 2, dims[0]);
+    let out = engine.run("vgg", 0, 6, &rows).unwrap();
+    assert_eq!(out.batch, 2);
+    assert_eq!(out.dim_out, *dims.last().unwrap());
+    assert_eq!(out.data.len(), 2 * out.dim_out);
+    assert!(out.data.iter().all(|x| x.is_finite()));
+    // deterministic
+    let out2 = engine.run("vgg", 0, 6, &rows).unwrap();
+    assert_eq!(out.data, out2.data);
+}
+
+#[test]
+fn fragment_composition_matches_whole_model() {
+    // frag(0,L) == frag(p,L) ∘ frag(0,p) through two *different*
+    // executables — this is the end-to-end numerical check that the
+    // AOT pipeline, weight blobs and engine argument order all agree.
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    for (model, p) in [("vgg", 2usize), ("inc", 4), ("res", 8), ("mob", 2), ("vit", 2)]
+    {
+        let mf = engine.manifest();
+        let dims = mf.models[model].dims.clone();
+        let last = *mf.models[model].points.last().unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        let rows = rand_rows(&mut rng, 3, dims[0]);
+
+        let whole = engine.run(model, 0, last, &rows).unwrap();
+        let mid = engine.run(model, 0, p, &rows).unwrap();
+        let mid_rows: Vec<Vec<f32>> = mid
+            .data
+            .chunks_exact(mid.dim_out)
+            .map(|c| c.to_vec())
+            .collect();
+        let tail = engine.run(model, p, last, &mid_rows).unwrap();
+
+        assert_eq!(whole.data.len(), tail.data.len(), "{model}");
+        for (i, (a, b)) in whole.data.iter().zip(tail.data.iter()).enumerate()
+        {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs())),
+                "{model} p={p} idx {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn partial_batches_are_padded() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let dims = engine.manifest().models["vgg"].dims.clone();
+    let mut rng = Rng::seed_from_u64(3);
+    let rows = rand_rows(&mut rng, 3, dims[0]); // 3 -> bucket 4
+    let out = engine.run("vgg", 0, 6, &rows).unwrap();
+    assert_eq!(out.batch, 3);
+    // row results must be independent of batch padding
+    let single = engine.run("vgg", 0, 6, &rows[..1]).unwrap();
+    for (a, b) in single.data.iter().zip(out.data.iter()) {
+        assert!((a - b).abs() <= 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    assert!(engine.run("vgg", 0, 6, &[]).is_err());
+    assert!(engine.run("vgg", 0, 6, &[vec![0.0; 7]]).is_err());
+    assert!(engine.run("nope", 0, 6, &[vec![0.0; 256]]).is_err());
+    // batch above the largest bucket
+    let rows: Vec<Vec<f32>> = (0..9).map(|_| vec![0.0; 256]).collect();
+    assert!(engine.run("vgg", 0, 6, &rows).is_err());
+}
+
+#[test]
+fn warmup_compiles_requested_fragments() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let n = engine
+        .warmup(&[("vgg".to_string(), 0, 6), ("vgg".to_string(), 2, 6)])
+        .unwrap();
+    assert_eq!(n, 8); // 2 fragments x 4 batch buckets
+}

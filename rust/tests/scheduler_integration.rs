@@ -1,0 +1,142 @@
+//! Integration: the full hybrid-DL → scheduling pipeline over simulated
+//! fleets, and cross-system dominance relations on real snapshots.
+
+use graft::config::Config;
+use graft::coordinator::baselines::{gslice, gslice_plus};
+use graft::coordinator::repartition::{plan_covers_demand, plan_is_slo_safe};
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::experiments::common::{
+    fleet, random_fragments, snapshot, Scale,
+};
+use graft::profiler::{AllocConstraints, CostModel};
+use graft::sim::{plan_energy_j, simulate, SimClient, SimOptions};
+
+fn cm() -> CostModel {
+    CostModel::new(Config::embedded())
+}
+
+#[test]
+fn full_pipeline_over_all_models_and_scales() {
+    let cm = cm();
+    for scale in [Scale::SmallHomo, Scale::SmallHeter, Scale::LargeHomo] {
+        for (mi, m) in cm.config().models.iter().enumerate() {
+            let clients = fleet(&cm, mi, scale, 0.95, 11);
+            let specs = snapshot(&cm, &clients, 4.0);
+            assert!(
+                !specs.is_empty(),
+                "{} at {:?}: no feasible client",
+                m.name,
+                scale
+            );
+            let sched =
+                Scheduler::new(cm.clone(), SchedulerOptions::default());
+            let (plan, stats) = sched.plan(&specs);
+            assert!(plan.infeasible.is_empty(), "{}: {:?}", m.name, plan);
+            assert!(plan_is_slo_safe(&plan), "{}", m.name);
+            assert!(plan_covers_demand(&plan), "{}", m.name);
+            assert!(stats.total_ms < 5_000.0, "{} too slow", m.name);
+        }
+    }
+}
+
+#[test]
+fn graft_dominates_baselines_on_snapshots() {
+    let cm = cm();
+    let cons = AllocConstraints::default();
+    for seed in [1u64, 2, 3] {
+        for name in ["inc", "res", "vgg", "mob", "vit"] {
+            let mi = cm.model_index(name).unwrap();
+            let frags = random_fragments(&cm, mi, 12, seed);
+            let sched =
+                Scheduler::new(cm.clone(), SchedulerOptions::default());
+            let (graft, _) = sched.plan(&frags);
+            let g = gslice(&cm, &frags, &cons);
+            let gp = gslice_plus(&cm, &frags, &cons);
+            assert!(
+                graft.total_share() <= gp.total_share(),
+                "{name}/{seed}: graft {} > gslice+ {}",
+                graft.total_share(),
+                gp.total_share()
+            );
+            assert!(gp.total_share() <= g.total_share(), "{name}/{seed}");
+        }
+    }
+}
+
+#[test]
+fn plans_survive_the_latency_simulator() {
+    // end-to-end sanity: Graft's plan on a heterogeneous fleet keeps SLO
+    // attainment high under the DES
+    let cm = cm();
+    let mi = cm.model_index("mob").unwrap();
+    let clients = fleet(&cm, mi, Scale::SmallHeter, 0.95, 23);
+    let t_s = 6.0;
+    let specs = snapshot(&cm, &clients, t_s);
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let (plan, _) = sched.plan(&specs);
+    let sim_clients: Vec<SimClient> = clients
+        .iter()
+        .filter_map(|c| {
+            let st = c.state_at(&cm, t_s);
+            st.spec.map(|s| SimClient {
+                client_id: c.id.0,
+                upstream_ms: st.mobile_ms + st.transfer_ms,
+                slo_ms: st.slo_ms,
+                budget_ms: s.budget_ms,
+                rate_rps: cm.config().models[mi].rate_rps,
+            })
+        })
+        .collect();
+    let r = simulate(&cm, &plan, &sim_clients, &SimOptions::default());
+    assert!(r.served > 0);
+    assert!(
+        r.slo_attainment > 0.95,
+        "attainment {} (served {}, dropped {})",
+        r.slo_attainment,
+        r.served,
+        r.dropped
+    );
+}
+
+#[test]
+fn replanning_tracks_bandwidth_changes() {
+    // the trigger-based loop: plans at different trace instants differ
+    // when the partition points move, and every plan stays valid
+    let cm = cm();
+    let mi = cm.model_index("inc").unwrap();
+    let clients = fleet(&cm, mi, Scale::SmallHomo, 0.95, 31);
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let mut shares = Vec::new();
+    for t in [0.0, 60.0, 120.0, 180.0, 240.0] {
+        let specs = snapshot(&cm, &clients, t);
+        if specs.is_empty() {
+            continue;
+        }
+        let (plan, _) = sched.plan(&specs);
+        assert!(plan_is_slo_safe(&plan));
+        shares.push(plan.total_share());
+    }
+    assert!(shares.len() >= 3);
+    assert!(
+        shares.iter().any(|&s| s != shares[0]),
+        "resource demand never changed across the trace: {shares:?}"
+    );
+}
+
+#[test]
+fn energy_accounting_is_consistent_across_systems() {
+    let cm = cm();
+    let mi = cm.model_index("vgg").unwrap();
+    let frags = random_fragments(&cm, mi, 10, 99);
+    let cons = AllocConstraints::default();
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let (graft, _) = sched.plan(&frags);
+    let g = gslice(&cm, &frags, &cons);
+    let e_graft = plan_energy_j(&cm, &graft, 30.0);
+    let e_gslice = plan_energy_j(&cm, &g, 30.0);
+    assert!(e_graft > 0.0 && e_gslice > 0.0);
+    assert!(
+        e_graft <= e_gslice * 1.1,
+        "graft {e_graft} energy way above gslice {e_gslice}"
+    );
+}

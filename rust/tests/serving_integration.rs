@@ -1,0 +1,278 @@
+//! Integration: plan → server → batched execution → responses, over both
+//! the in-process path (mock executor, no artifacts needed) and the TCP
+//! front with the real PJRT engine (skipped without artifacts).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use graft::config::Config;
+use graft::coordinator::repartition::{realign_group, RepartitionOptions};
+use graft::coordinator::{ClientId, FragmentSpec};
+use graft::profiler::CostModel;
+use graft::serving::{
+    MockExecutor, Request, Server, ServerOptions, TcpClient, TcpFront,
+};
+use graft::util::Rng;
+
+fn cm() -> CostModel {
+    CostModel::new(Config::embedded())
+}
+
+fn plan_for(
+    cm: &CostModel,
+    model: &str,
+    specs: &[(u32, usize, f64, f64)],
+) -> graft::coordinator::ExecutionPlan {
+    let mi = cm.model_index(model).unwrap();
+    let specs: Vec<FragmentSpec> = specs
+        .iter()
+        .map(|&(c, p, t, q)| FragmentSpec::single(ClientId(c), mi, p, t, q))
+        .collect();
+    let points = cm.config().models[mi].points();
+    let plan = realign_group(
+        cm,
+        &specs,
+        &RepartitionOptions { point_set: Some(points), ..Default::default() },
+    );
+    assert!(plan.infeasible.is_empty());
+    plan
+}
+
+fn mock_executor(cm: &CostModel) -> Arc<MockExecutor> {
+    let dims: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    Arc::new(MockExecutor { dims })
+}
+
+#[test]
+fn mock_serving_roundtrip() {
+    let cm = cm();
+    let plan = plan_for(
+        &cm,
+        "inc",
+        &[(0, 2, 110.0, 30.0), (1, 3, 95.0, 30.0), (2, 3, 100.0, 30.0)],
+    );
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions { time_scale: 0.0, drop_on_slo: false },
+    );
+
+    let mi = cm.model_index("inc").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let mut rng = Rng::seed_from_u64(5);
+    for c in 0..3u32 {
+        for seq in 0..10u32 {
+            let p = if c == 0 { 2 } else { 3 };
+            server.submit(
+                Request {
+                    client_id: c,
+                    model: mi as u16,
+                    p: p as u16,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 12.0,
+                    budget_ms: 100.0,
+                    payload: (0..dims[p]).map(|_| rng.normal() as f32).collect(),
+                },
+                tx.clone(),
+            );
+        }
+    }
+    drop(tx);
+    let mut got = 0;
+    let dim_out = *dims.last().unwrap();
+    for resp in rx.iter() {
+        assert!(!resp.dropped, "{resp:?}");
+        assert_eq!(resp.output.len(), dim_out);
+        assert!(resp.e2e_ms >= resp.server_ms);
+        got += 1;
+        if got == 30 {
+            break;
+        }
+    }
+    assert_eq!(got, 30);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_client_is_rejected() {
+    let cm = cm();
+    let plan = plan_for(&cm, "vgg", &[(0, 1, 80.0, 30.0)]);
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions { time_scale: 0.0, drop_on_slo: false },
+    );
+    let (tx, rx) = mpsc::channel();
+    server.submit(
+        Request {
+            client_id: 99,
+            model: 0,
+            p: 1,
+            seq: 0,
+            t_capture_ms: 0.0,
+            upstream_ms: 0.0,
+            budget_ms: 50.0,
+            payload: vec![0.0; 8],
+        },
+        tx,
+    );
+    let resp = rx.recv().unwrap();
+    assert!(resp.dropped);
+    server.shutdown();
+}
+
+#[test]
+fn slo_hopeless_requests_are_dropped() {
+    let cm = cm();
+    let plan = plan_for(&cm, "inc", &[(0, 3, 120.0, 30.0)]);
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions { time_scale: 0.0, drop_on_slo: true },
+    );
+    let mi = cm.model_index("inc").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    server.submit(
+        Request {
+            client_id: 0,
+            model: mi as u16,
+            p: 3,
+            seq: 0,
+            t_capture_ms: 0.0,
+            upstream_ms: 0.0,
+            budget_ms: 0.001, // cannot possibly execute in time
+            payload: vec![0.1; dims[3]],
+        },
+        tx,
+    );
+    let resp = rx.recv().unwrap();
+    assert!(resp.dropped);
+    assert_eq!(
+        server.counters.dropped.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    server.shutdown();
+}
+
+#[test]
+fn batching_actually_forms_batches() {
+    // Submit a burst far above one instance's pop rate and check the
+    // counters show multi-request batches.
+    let cm = cm();
+    let plan = plan_for(&cm, "vgg", &[(0, 2, 120.0, 30.0)]);
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        // small pacing so the queue has time to fill while a batch runs
+        ServerOptions { time_scale: 0.05, drop_on_slo: false },
+    );
+    let mi = cm.model_index("vgg").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let n = 40u32;
+    for seq in 0..n {
+        server.submit(
+            Request {
+                client_id: 0,
+                model: mi as u16,
+                p: 2,
+                seq,
+                t_capture_ms: 0.0,
+                upstream_ms: 0.0,
+                budget_ms: 1e9,
+                payload: vec![0.5; dims[2]],
+            },
+            tx.clone(),
+        );
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().collect();
+    assert_eq!(responses.len(), n as usize);
+    let batches = server
+        .counters
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches < n as u64, "no batching: {batches} batches for {n}");
+    server.shutdown();
+}
+
+#[test]
+fn tcp_front_with_real_engine() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let cm = cm();
+    let engine = Arc::new(graft::runtime::Engine::new(&dir).unwrap());
+    // two vgg clients at p=1 and p=2 realigned; compiled points only
+    let plan =
+        plan_for(&cm, "vgg", &[(0, 1, 90.0, 30.0), (1, 2, 80.0, 30.0)]);
+    let server = Arc::new(Server::start(
+        engine.clone(),
+        &cm,
+        &plan,
+        ServerOptions { time_scale: 0.0, drop_on_slo: false },
+    ));
+    let front = TcpFront::start("127.0.0.1:0", server.clone()).unwrap();
+
+    let mi = cm.model_index("vgg").unwrap();
+    let dims = cm.config().models[mi].dims.clone();
+    let mut rng = Rng::seed_from_u64(11);
+    let mut c0 = TcpClient::connect(front.addr).unwrap();
+    let mut c1 = TcpClient::connect(front.addr).unwrap();
+    for seq in 0..5u32 {
+        c0.send(&Request {
+            client_id: 0,
+            model: mi as u16,
+            p: 1,
+            seq,
+            t_capture_ms: 0.0,
+            upstream_ms: 10.0,
+            budget_ms: 90.0,
+            payload: (0..dims[1]).map(|_| rng.normal() as f32).collect(),
+        })
+        .unwrap();
+        c1.send(&Request {
+            client_id: 1,
+            model: mi as u16,
+            p: 2,
+            seq,
+            t_capture_ms: 0.0,
+            upstream_ms: 10.0,
+            budget_ms: 80.0,
+            payload: (0..dims[2]).map(|_| rng.normal() as f32).collect(),
+        })
+        .unwrap();
+    }
+    for _ in 0..5 {
+        let r = c0.recv().unwrap();
+        assert!(!r.dropped);
+        assert_eq!(r.output.len(), *dims.last().unwrap());
+        assert!(r.output.iter().all(|x| x.is_finite()));
+        let r = c1.recv().unwrap();
+        assert!(!r.dropped);
+    }
+    // close the client sockets before stopping the front: connection
+    // threads block on read until their peer hangs up
+    drop(c0);
+    drop(c1);
+    front.stop();
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("server still shared"),
+    }
+}
