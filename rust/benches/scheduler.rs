@@ -3,14 +3,16 @@
 //!
 //!   cargo bench --bench scheduler
 
+use std::time::Duration;
+
 use graft::config::Config;
 use graft::coordinator::grouping::{group_fragments, GroupOptions};
 use graft::coordinator::merging::{merge_fragments, MergeOptions};
 use graft::coordinator::repartition::{realign_group, RepartitionOptions};
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
-use graft::experiments::common::random_fragments;
+use graft::experiments::common::{random_fragments, random_mixed_fragments};
 use graft::profiler::{AllocConstraints, CostModel, FragmentId};
-use graft::util::bench::{bench, run_group};
+use graft::util::bench::{bench, bench_with, run_group};
 
 fn main() {
     let cm = CostModel::new(Config::embedded());
@@ -53,4 +55,38 @@ fn main() {
             .push(bench(&format!("full plan n={n}"), || sched.plan(&frags)));
         run_group(&format!("scheduler n={n}"), benches);
     }
+
+    // Large-scale mixed-model configurations (the 10k-client target of
+    // the planner-scaling work; `graft bench-scheduler` times the same
+    // demand sets and persists them as BENCH_scheduler.json).
+    for &n in &[1_000usize, 5_000, 10_000] {
+        let frags = random_mixed_fragments(&cm, n, 0xB15C);
+        let cfg = cm.config().clone();
+        let cold = big(&format!("full plan n={n} (cold caches)"), || {
+            // fresh cost model: empty alloc cache, empty plan cache
+            let sched = Scheduler::new(
+                CostModel::new(cfg.clone()),
+                SchedulerOptions::default(),
+            );
+            sched.plan(&frags).0.sets.len()
+        });
+        let warm_sched =
+            Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let _ = warm_sched.plan(&frags); // fill the caches
+        let warm = big(&format!("full plan n={n} (warm/incremental)"), || {
+            warm_sched.plan(&frags).0.sets.len()
+        });
+        run_group(
+            &format!("scheduler at scale n={n} (mixed models)"),
+            vec![cold, warm],
+        );
+    }
+}
+
+/// Few timed iterations for the seconds-scale large configurations.
+fn big<F: FnMut() -> usize>(
+    name: &str,
+    mut f: F,
+) -> graft::util::bench::BenchResult {
+    bench_with(name, 1, 3, Duration::from_millis(500), &mut f)
 }

@@ -114,6 +114,73 @@ pub fn objective(
     var_sum + ext
 }
 
+/// Pairwise similarity lookup: a dense symmetric matrix when it fits in
+/// a modest footprint (one similarity evaluation per pair for the whole
+/// greedy run), falling back to on-the-fly evaluation at larger n (the
+/// matrix would be O(n²) memory).  The seed re-evaluated every internal
+/// edge of every candidate group per assignment — O(n · K · g²)
+/// similarity calls; with this table plus the running-moment group stats
+/// below, each candidate assignment costs O(group) lookups.
+const DENSE_SIM_LIMIT: usize = 2048; // 2048² f64 = 32 MiB
+
+enum SimTable<'a> {
+    Dense { n: usize, m: Vec<f64> },
+    Lazy { props: &'a [[f64; 3]], w: FactorWeights, sc: [f64; 3] },
+}
+
+impl<'a> SimTable<'a> {
+    fn new(
+        props: &'a [[f64; 3]],
+        w: FactorWeights,
+        sc: [f64; 3],
+    ) -> SimTable<'a> {
+        let n = props.len();
+        if n > DENSE_SIM_LIMIT {
+            return SimTable::Lazy { props, w, sc };
+        }
+        let mut m = vec![0.0; n * n];
+        for i in 0..n {
+            for j in i + 1..n {
+                let s = similarity(&props[i], &props[j], &w, &sc);
+                m[i * n + j] = s;
+                m[j * n + i] = s;
+            }
+        }
+        SimTable::Dense { n, m }
+    }
+
+    #[inline]
+    fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            SimTable::Dense { n, m } => m[i * n + j],
+            SimTable::Lazy { props, w, sc } => {
+                similarity(&props[i], &props[j], w, sc)
+            }
+        }
+    }
+}
+
+/// Running moments of a group's internal edge weights; variance in O(1)
+/// from (Σe, Σe², count) instead of rebuilding the edge list.
+#[derive(Clone, Copy, Default)]
+struct GroupStats {
+    sum: f64,
+    sumsq: f64,
+    count: usize,
+}
+
+impl GroupStats {
+    #[inline]
+    fn var(sum: f64, sumsq: f64, count: usize) -> f64 {
+        if count == 0 {
+            return 0.0;
+        }
+        let mean = sum / count as f64;
+        // E[x²] − E[x]²; clamp the tiny negative values FP can produce
+        (sumsq / count as f64 - mean * mean).max(0.0)
+    }
+}
+
 /// Greedy balanced grouping (§4.2).  Returns index groups over `specs`.
 /// All specs must belong to the same model (the scheduler splits by
 /// model first — §6 "Heterogeneous models").
@@ -139,6 +206,7 @@ pub fn group_fragments(
     let props: Vec<[f64; 3]> =
         specs.iter().map(FragmentSpec::property_vector).collect();
     let sc = scales(&props);
+    let sim = SimTable::new(&props, opts.weights, sc);
 
     // (a) seed K groups with random fragments
     let mut order: Vec<usize> = (0..n).collect();
@@ -146,60 +214,47 @@ pub fn group_fragments(
     rng.shuffle(&mut order);
     let mut groups: Vec<Vec<usize>> =
         order[..k].iter().map(|&i| vec![i]).collect();
+    let mut stats = vec![GroupStats::default(); k];
 
     // (b) assign the rest minimising the objective increase:
     //   Δ = Δvar(internal edges of k) − Σ edges(f ↔ members of k)
     // (the external-edge term decreases exactly by the edges absorbed).
+    // Δvar comes from the running moments: O(group) edge lookups per
+    // candidate, no edge-list rebuild.
     for &i in &order[k..] {
-        let mut best: Option<(usize, f64)> = None;
+        // (group idx, delta, Σ new edges, Σ new edges²)
+        let mut best: Option<(usize, f64, f64, f64)> = None;
         for (gk, g) in groups.iter().enumerate() {
             if g.len() >= cap {
                 continue;
             }
-            let new_edges: Vec<f64> = g
-                .iter()
-                .map(|&j| similarity(&props[i], &props[j], &w3(opts), &sc))
-                .collect();
-            let delta = var_delta(g, &props, &w3(opts), &sc, &new_edges)
-                - new_edges.iter().sum::<f64>();
-            if best.map_or(true, |(_, b)| delta < b) {
-                best = Some((gk, delta));
+            let mut esum = 0.0;
+            let mut esumsq = 0.0;
+            for &j in g {
+                let e = sim.get(i, j);
+                esum += e;
+                esumsq += e * e;
+            }
+            let st = stats[gk];
+            let var_before = GroupStats::var(st.sum, st.sumsq, st.count);
+            let var_after = GroupStats::var(
+                st.sum + esum,
+                st.sumsq + esumsq,
+                st.count + g.len(),
+            );
+            let delta = var_after - var_before - esum;
+            if best.map_or(true, |(_, b, _, _)| delta < b) {
+                best = Some((gk, delta, esum, esumsq));
             }
         }
-        let (gk, _) = best.expect("cap * k >= n so some group has room");
+        let (gk, _, esum, esumsq) =
+            best.expect("cap * k >= n so some group has room");
+        stats[gk].sum += esum;
+        stats[gk].sumsq += esumsq;
+        stats[gk].count += groups[gk].len();
         groups[gk].push(i);
     }
     groups
-}
-
-fn w3(opts: &GroupOptions) -> FactorWeights {
-    opts.weights
-}
-
-/// Variance increase of a group's internal edge set when adding edges.
-fn var_delta(
-    group: &[usize],
-    props: &[[f64; 3]],
-    w: &FactorWeights,
-    sc: &[f64; 3],
-    new_edges: &[f64],
-) -> f64 {
-    let mut edges = Vec::new();
-    for (ai, &i) in group.iter().enumerate() {
-        for &j in &group[ai + 1..] {
-            edges.push(similarity(&props[i], &props[j], w, sc));
-        }
-    }
-    let var = |e: &[f64]| {
-        if e.is_empty() {
-            return 0.0;
-        }
-        let m = e.iter().sum::<f64>() / e.len() as f64;
-        e.iter().map(|x| (x - m).powi(2)).sum::<f64>() / e.len() as f64
-    };
-    let before = var(&edges);
-    edges.extend_from_slice(new_edges);
-    var(&edges) - before
 }
 
 #[cfg(test)]
@@ -289,5 +344,113 @@ mod tests {
         let best = objective(&specs, &vec![vec![0, 1, 2, 3, 4], vec![5, 6, 7, 8, 9]], &w);
         let got = objective(&specs, &groups, &w);
         assert!(got <= best * 1.05, "greedy {got} vs clustered {best}");
+    }
+
+    /// The seed's greedy, verbatim: per-candidate edge-list rebuild with
+    /// the two-pass variance.  Reference for the rewrite's equivalence.
+    fn group_fragments_reference(
+        specs: &[FragmentSpec],
+        opts: &GroupOptions,
+    ) -> Vec<Vec<usize>> {
+        let n = specs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let gs = opts.group_size.max(1);
+        let k = n.div_ceil(gs);
+        if k <= 1 {
+            return vec![(0..n).collect()];
+        }
+        let cap = n.div_ceil(k);
+        let props: Vec<[f64; 3]> =
+            specs.iter().map(FragmentSpec::property_vector).collect();
+        let sc = scales(&props);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::seed_from_u64(opts.seed);
+        rng.shuffle(&mut order);
+        let mut groups: Vec<Vec<usize>> =
+            order[..k].iter().map(|&i| vec![i]).collect();
+        let var = |e: &[f64]| {
+            if e.is_empty() {
+                return 0.0;
+            }
+            let m = e.iter().sum::<f64>() / e.len() as f64;
+            e.iter().map(|x| (x - m).powi(2)).sum::<f64>() / e.len() as f64
+        };
+        for &i in &order[k..] {
+            let mut best: Option<(usize, f64)> = None;
+            for (gk, g) in groups.iter().enumerate() {
+                if g.len() >= cap {
+                    continue;
+                }
+                let new_edges: Vec<f64> = g
+                    .iter()
+                    .map(|&j| {
+                        similarity(&props[i], &props[j], &opts.weights, &sc)
+                    })
+                    .collect();
+                let mut edges = Vec::new();
+                for (ai, &a) in g.iter().enumerate() {
+                    for &b in &g[ai + 1..] {
+                        edges.push(similarity(
+                            &props[a], &props[b], &opts.weights, &sc,
+                        ));
+                    }
+                }
+                let before = var(&edges);
+                edges.extend_from_slice(&new_edges);
+                let delta = var(&edges) - before
+                    - new_edges.iter().sum::<f64>();
+                if best.map_or(true, |(_, b)| delta < b) {
+                    best = Some((gk, delta));
+                }
+            }
+            let (gk, _) = best.expect("some group has room");
+            groups[gk].push(i);
+        }
+        groups
+    }
+
+    #[test]
+    fn rewrite_matches_seed_greedy_on_fixtures() {
+        // identical groups on the well-separated fixture set
+        let specs = cluster_specs();
+        let opts = GroupOptions { group_size: 5, ..Default::default() };
+        assert_eq!(
+            group_fragments(&specs, &opts),
+            group_fragments_reference(&specs, &opts)
+        );
+        // and the same objective (within FP noise of the running-moment
+        // variance) on randomized sets at several sizes and seeds
+        let w = FactorWeights::default();
+        for seed in 0..10u64 {
+            let mut rng = Rng::seed_from_u64(777 + seed);
+            let n = 6 + rng.below(40);
+            let specs: Vec<FragmentSpec> = (0..n)
+                .map(|i| {
+                    spec(
+                        i as u32,
+                        rng.below(16),
+                        rng.range(30.0, 200.0),
+                        rng.range(1.0, 90.0),
+                    )
+                })
+                .collect();
+            let opts = GroupOptions {
+                group_size: 2 + rng.below(5),
+                seed,
+                ..Default::default()
+            };
+            let new = objective(&specs, &group_fragments(&specs, &opts), &w);
+            let old = objective(
+                &specs,
+                &group_fragments_reference(&specs, &opts),
+                &w,
+            );
+            assert!(
+                (new - old).abs() <= 1e-6 * (1.0 + old.abs()),
+                "seed {seed}: rewrite {new} vs reference {old}"
+            );
+        }
     }
 }

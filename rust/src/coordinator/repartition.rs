@@ -56,40 +56,54 @@ pub fn realign_group(
     );
 
     // Pre-filter: members infeasible even standalone can never be served.
-    let mut work: Vec<FragmentSpec> = Vec::new();
+    // Keep each feasible member's standalone set — it is the DP's
+    // fallback candidate, so computing it once here avoids re-running the
+    // allocation search per DP index.
+    let mut pre: Vec<(FragmentSpec, RealignedSet)> = Vec::new();
     for s in specs {
-        if standalone_set(cm, s, &opts.constraints).is_some() {
-            work.push(s.clone());
-        } else {
-            plan.infeasible.push(s.clone());
+        match standalone_set(cm, s, &opts.constraints) {
+            Some(set) => pre.push((s.clone(), set)),
+            None => plan.infeasible.push(s.clone()),
         }
     }
-    if work.is_empty() {
+    if pre.is_empty() {
         return plan;
     }
-    work.sort_by(|a, b| {
-        a.p.cmp(&b.p).then(a.budget_ms.total_cmp(&b.budget_ms))
+    pre.sort_by(|a, b| {
+        a.0.p.cmp(&b.0.p).then(a.0.budget_ms.total_cmp(&b.0.budget_ms))
     });
+    let (work, standalone): (Vec<FragmentSpec>, Vec<RealignedSet>) =
+        pre.into_iter().unzip();
 
     let layers = cm.config().models[work[0].model].layers;
     let points = candidate_points(opts, layers);
 
-    // Suffix DP: best[i] = min-cost realignment of work[i..].
+    // Suffix DP: best[i] = min-cost realignment of work[i..].  Each state
+    // stores only its cost, the set serving the head block and the index
+    // where the tail resumes; the winning plan is reconstructed once by
+    // backtracking.  (The seed kept a full Vec<RealignedSet> per state,
+    // cloning O(n²) sets per group.)
+    struct Choice {
+        cost: u32,
+        next: usize,
+        set: RealignedSet,
+    }
     let n = work.len();
-    let mut best: Vec<Option<(u32, Vec<RealignedSet>)>> = vec![None; n + 1];
-    best[n] = Some((0, Vec::new()));
+    let mut best: Vec<Option<Choice>> = (0..n).map(|_| None).collect();
+    let tail_cost = |best: &[Option<Choice>], j: usize| -> Option<u32> {
+        if j == n {
+            Some(0)
+        } else {
+            best[j].as_ref().map(|c| c.cost)
+        }
+    };
     for i in (0..n).rev() {
         // Fallback: the head fragment standalone (always feasible here).
-        {
-            let set = standalone_set(cm, &work[i], &opts.constraints)
-                .expect("pre-filtered");
-            if let Some((tail_cost, tail_sets)) = &best[i + 1] {
-                let cost = set.total_share() + tail_cost;
-                let mut sets = vec![set];
-                sets.extend(tail_sets.iter().cloned());
-                if best[i].as_ref().map_or(true, |(c, _)| cost < *c) {
-                    best[i] = Some((cost, sets));
-                }
+        if let Some(tc) = tail_cost(&best, i + 1) {
+            let set = standalone[i].clone();
+            let cost = set.total_share() + tc;
+            if best[i].as_ref().map_or(true, |c| cost < c.cost) {
+                best[i] = Some(Choice { cost, next: i + 1, set });
             }
         }
         for &p in points.iter().filter(|&&p| p >= work[i].p && p < layers) {
@@ -98,22 +112,30 @@ pub fn realign_group(
             if j == i {
                 continue;
             }
-            let Some((tail_cost, tail_sets)) = best[j].clone() else {
+            let Some(tc) = tail_cost(&best, j) else {
                 continue;
             };
+            // a candidate costing >= the incumbent from its tail alone
+            // cannot win (set share is positive) — skip the grid sweep
+            if best[i].as_ref().is_some_and(|c| tc >= c.cost) {
+                continue;
+            }
             let Some(set) = realign_set(cm, &work[i..j], p, opts) else {
                 continue;
             };
-            let cost = set.total_share() + tail_cost;
-            if best[i].as_ref().map_or(true, |(c, _)| cost < *c) {
-                let mut sets = vec![set];
-                sets.extend(tail_sets);
-                best[i] = Some((cost, sets));
+            let cost = set.total_share() + tc;
+            if best[i].as_ref().map_or(true, |c| cost < c.cost) {
+                best[i] = Some(Choice { cost, next: j, set });
             }
         }
     }
-    let (_, sets) = best[0].take().expect("standalone fallback always feasible");
-    plan.sets = sets;
+    // Backtrack the winning chain of sets (head-first, as the seed did).
+    let mut i = 0;
+    while i < n {
+        let c = best[i].take().expect("standalone fallback always feasible");
+        i = c.next;
+        plan.sets.push(c.set);
+    }
     plan
 }
 
@@ -142,6 +164,11 @@ pub fn standalone_set(
 
 /// Best provisioning of `members` re-aligned at point `p` over the
 /// d_shared grid.  Every member must have `p_i <= p`; `p < layers`.
+///
+/// Two passes: a costing sweep over the grid that touches only cached
+/// `min_alloc` results (no spec clones, no plan construction), then one
+/// materialisation of the winning split.  The seed built a full
+/// `RealignedSet` — cloning every member spec — per grid point.
 fn realign_set(
     cm: &CostModel,
     members: &[FragmentSpec],
@@ -158,61 +185,73 @@ fn realign_set(
         .fold(f64::INFINITY, f64::min);
 
     let g = opts.d_grid.max(2);
-    let mut best: Option<RealignedSet> = None;
-    for k in 1..=g {
-        let d_shared = t_min / 2.0 * k as f64 / g as f64;
+    let d_shared_at = |k: usize| t_min / 2.0 * k as f64 / g as f64;
+
+    // Pass 1: find the cheapest feasible grid point (first wins ties,
+    // matching the seed's strict-improvement replacement order).
+    let mut best_k: Option<(usize, u32)> = None;
+    'grid: for k in 1..=g {
+        let d_shared = d_shared_at(k);
         let Some(shared_alloc) =
             cm.min_alloc(shared_frag, d_shared, total_rate, opts.constraints)
         else {
             continue; // too tight for the shared stage; larger k may fit
         };
-        let mut member_plans = Vec::with_capacity(members.len());
-        let mut ok = true;
+        let mut cost = shared_alloc.total_share();
         for m in members {
             if m.p == p {
-                member_plans.push(MemberPlan { spec: m.clone(), align: None });
                 continue;
             }
             let d_i = m.budget_ms / 2.0 - d_shared;
             let align_frag = FragmentId::new(model, m.p, p);
-            match cm.min_alloc(align_frag, d_i, m.rate_rps, opts.constraints) {
-                Some(alloc) => member_plans.push(MemberPlan {
-                    spec: m.clone(),
-                    align: Some(StagePlan {
-                        frag: align_frag,
-                        alloc,
-                        budget_ms: d_i,
-                        demand_rps: m.rate_rps,
-                    }),
-                }),
-                None => {
-                    ok = false;
-                    break;
-                }
+            match cm.min_alloc(align_frag, d_i, m.rate_rps, opts.constraints)
+            {
+                Some(alloc) => cost += alloc.total_share(),
+                None => continue 'grid,
             }
         }
-        if !ok {
-            continue;
-        }
-        let cand = RealignedSet {
-            model,
-            point: p,
-            members: member_plans,
-            shared: StagePlan {
-                frag: shared_frag,
-                alloc: shared_alloc,
-                budget_ms: d_shared,
-                demand_rps: total_rate,
-            },
-        };
-        if best
-            .as_ref()
-            .map_or(true, |b| cand.total_share() < b.total_share())
-        {
-            best = Some(cand);
+        if best_k.map_or(true, |(_, c)| cost < c) {
+            best_k = Some((k, cost));
         }
     }
-    best
+    let (k, _) = best_k?;
+
+    // Pass 2: materialise the winning split (allocation queries repeat
+    // the pass-1 keys, so they are cache hits).
+    let d_shared = d_shared_at(k);
+    let shared_alloc =
+        cm.min_alloc(shared_frag, d_shared, total_rate, opts.constraints)?;
+    let mut member_plans = Vec::with_capacity(members.len());
+    for m in members {
+        if m.p == p {
+            member_plans.push(MemberPlan { spec: m.clone(), align: None });
+            continue;
+        }
+        let d_i = m.budget_ms / 2.0 - d_shared;
+        let align_frag = FragmentId::new(model, m.p, p);
+        let alloc =
+            cm.min_alloc(align_frag, d_i, m.rate_rps, opts.constraints)?;
+        member_plans.push(MemberPlan {
+            spec: m.clone(),
+            align: Some(StagePlan {
+                frag: align_frag,
+                alloc,
+                budget_ms: d_i,
+                demand_rps: m.rate_rps,
+            }),
+        });
+    }
+    Some(RealignedSet {
+        model,
+        point: p,
+        members: member_plans,
+        shared: StagePlan {
+            frag: shared_frag,
+            alloc: shared_alloc,
+            budget_ms: d_shared,
+            demand_rps: total_rate,
+        },
+    })
 }
 
 fn candidate_points(opts: &RepartitionOptions, layers: usize) -> Vec<usize> {

@@ -4,8 +4,16 @@
 //! the three §4 steps and emits an [`ExecutionPlan`].  Groups are
 //! re-aligned in parallel on a configurable thread pool (the paper's
 //! "process pool", §5.9/Fig 19b).  The scheduler is cheap enough to be
-//! re-invoked on every partition-point change (trigger-based re-planning).
+//! re-invoked on every partition-point change (trigger-based
+//! re-planning), and incremental: each group's fragment signature is
+//! hashed, and groups unchanged since the previous trigger reuse their
+//! re-aligned sets verbatim — a re-plan pays only for the groups that
+//! actually moved.
 
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use super::fragment::FragmentSpec;
@@ -23,6 +31,11 @@ pub struct SchedulerOptions {
     pub repartition: RepartitionOptions,
     /// Thread-pool size for parallel per-group re-alignment (Fig 19b).
     pub pool_size: usize,
+    /// Reuse per-group plans across triggers when a group's fragment
+    /// signature is unchanged.  Exact: cache hits are verified by full
+    /// spec equality, so incremental plans are identical to from-scratch
+    /// plans (the proptests assert this).
+    pub incremental: bool,
 }
 
 impl Default for SchedulerOptions {
@@ -32,6 +45,7 @@ impl Default for SchedulerOptions {
             group: GroupOptions::default(),
             repartition: RepartitionOptions::default(),
             pool_size: 2, // paper default (§5.9)
+            incremental: true,
         }
     }
 }
@@ -42,24 +56,66 @@ pub struct ScheduleStats {
     pub n_input: usize,
     pub n_after_merge: usize,
     pub n_groups: usize,
+    /// Groups served from the incremental cache this trigger.
+    pub n_groups_reused: usize,
     pub merge_ms: f64,
     pub group_ms: f64,
     pub repartition_ms: f64,
     pub total_ms: f64,
 }
 
+/// One cached group plan: the exact specs (so signature-hash collisions
+/// can never surface a wrong plan), the plan, and the last trigger
+/// generation that touched it.
+struct CachedGroupPlan {
+    specs: Vec<FragmentSpec>,
+    plan: ExecutionPlan,
+    generation: u64,
+}
+
+/// Generational group-plan cache.  Each `plan()` call bumps the
+/// generation and refreshes the entries it hits; when the entry count
+/// exceeds the capacity, eviction drops only entries *not* touched
+/// within the last trigger — the live working set always survives, so
+/// steady-state replay never falls off a clear-everything cliff.
+struct GroupCache {
+    map: HashMap<u64, Vec<CachedGroupPlan>>,
+    entries: usize,
+    generation: u64,
+}
+
+const GROUP_CACHE_CAPACITY: usize = 1 << 16;
+
 pub struct Scheduler {
     cm: CostModel,
     pub opts: SchedulerOptions,
+    group_cache: Mutex<GroupCache>,
 }
 
 impl Scheduler {
     pub fn new(cm: CostModel, opts: SchedulerOptions) -> Self {
-        Self { cm, opts }
+        Self {
+            cm,
+            opts,
+            group_cache: Mutex::new(GroupCache {
+                map: HashMap::new(),
+                entries: 0,
+                generation: 0,
+            }),
+        }
     }
 
     pub fn cost_model(&self) -> &CostModel {
         &self.cm
+    }
+
+    /// Drop all incrementally cached group plans (e.g. after mutating
+    /// `opts` — signatures also cover the re-partition options, so this
+    /// is belt-and-braces, not correctness).
+    pub fn clear_plan_cache(&self) {
+        let mut cache = self.group_cache.lock().unwrap();
+        cache.map.clear();
+        cache.entries = 0;
     }
 
     /// Produce the execution plan for the given demands.
@@ -77,43 +133,157 @@ impl Scheduler {
         stats.n_after_merge = merged.len();
 
         // Step 2 — grouping (§4.2), per model (§6: heterogeneous models
-        // are separated by type before grouping).
+        // are separated by type before grouping).  `merged` is sorted by
+        // model, so each model is a contiguous slice — grouped in place,
+        // then the specs are *moved* into their groups.  (The seed built
+        // a cloned per-model Vec via filter().cloned() for every model,
+        // then cloned again per group member.)
         let t = Instant::now();
-        let mut groups: Vec<Vec<FragmentSpec>> = Vec::new();
-        let n_models = self.cm.config().models.len();
-        for model in 0..n_models {
-            let model_specs: Vec<FragmentSpec> = merged
-                .iter()
-                .filter(|s| s.model == model)
-                .cloned()
-                .collect();
-            if model_specs.is_empty() {
-                continue;
-            }
-            for idx_group in group_fragments(&model_specs, &self.opts.group) {
-                groups.push(
-                    idx_group.into_iter().map(|i| model_specs[i].clone()).collect(),
-                );
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0;
+        for i in 1..=merged.len() {
+            if i == merged.len() || merged[i].model != merged[start].model {
+                ranges.push((start, i));
+                start = i;
             }
         }
+        let mut idx_groups: Vec<Vec<usize>> = Vec::new();
+        for &(a, b) in &ranges {
+            for idx_group in
+                group_fragments(&merged[a..b], &self.opts.group)
+            {
+                idx_groups.push(idx_group.into_iter().map(|i| a + i).collect());
+            }
+        }
+        let mut slots: Vec<Option<FragmentSpec>> =
+            merged.into_iter().map(Some).collect();
+        let groups: Vec<Vec<FragmentSpec>> = idx_groups
+            .into_iter()
+            .map(|ig| {
+                ig.into_iter()
+                    .map(|i| {
+                        slots[i].take().expect("fragment in exactly one group")
+                    })
+                    .collect()
+            })
+            .collect();
         stats.group_ms = t.elapsed().as_secs_f64() * 1e3;
         stats.n_groups = groups.len();
 
-        // Step 3 — re-partitioning (§4.3), groups in parallel.
+        // Step 3 — re-partitioning (§4.3): unchanged groups replay their
+        // cached sets, the rest re-align in parallel.
         let t = Instant::now();
-        let plans: Vec<ExecutionPlan> =
-            parallel_map(&groups, self.opts.pool_size, |g| {
-                realign_group(&self.cm, g, &self.opts.repartition)
+        let opts_sig = repartition_signature(&self.opts.repartition);
+        let mut reused: Vec<Option<ExecutionPlan>> = vec![None; groups.len()];
+        if self.opts.incremental {
+            let mut cache = self.group_cache.lock().unwrap();
+            cache.generation += 1;
+            let gen = cache.generation;
+            if cache.entries > GROUP_CACHE_CAPACITY {
+                // evict everything not touched by the previous trigger;
+                // the live working set always survives
+                for bucket in cache.map.values_mut() {
+                    bucket.retain(|e| e.generation + 1 >= gen);
+                }
+                cache.map.retain(|_, b| !b.is_empty());
+                let remaining: usize =
+                    cache.map.values().map(Vec::len).sum();
+                cache.entries = remaining;
+            }
+            for (gi, g) in groups.iter().enumerate() {
+                if let Some(bucket) =
+                    cache.map.get_mut(&group_signature(g, opts_sig))
+                {
+                    if let Some(e) =
+                        bucket.iter_mut().find(|e| &e.specs == g)
+                    {
+                        e.generation = gen;
+                        reused[gi] = Some(e.plan.clone());
+                    }
+                }
+            }
+        }
+        let todo: Vec<&Vec<FragmentSpec>> = groups
+            .iter()
+            .enumerate()
+            .filter(|(gi, _)| reused[*gi].is_none())
+            .map(|(_, g)| g)
+            .collect();
+        let computed: Vec<ExecutionPlan> =
+            parallel_map(&todo, self.opts.pool_size, |g| {
+                realign_group(&self.cm, g.as_slice(), &self.opts.repartition)
             });
-        stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
-
+        let mut computed = computed.into_iter();
         let mut plan = ExecutionPlan::default();
-        for p in plans {
+        for (gi, cached) in reused.into_iter().enumerate() {
+            let p = match cached {
+                Some(p) => {
+                    stats.n_groups_reused += 1;
+                    p
+                }
+                None => {
+                    let p = computed
+                        .next()
+                        .expect("one computed plan per uncached group");
+                    if self.opts.incremental {
+                        let mut cache = self.group_cache.lock().unwrap();
+                        let generation = cache.generation;
+                        cache
+                            .map
+                            .entry(group_signature(&groups[gi], opts_sig))
+                            .or_default()
+                            .push(CachedGroupPlan {
+                                specs: groups[gi].clone(),
+                                plan: p.clone(),
+                                generation,
+                            });
+                        cache.entries += 1;
+                    }
+                    p
+                }
+            };
             plan.merge_with(p);
         }
+        stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
+
         stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
         (plan, stats)
     }
+}
+
+/// Deterministic signature of one group's exact fragment demands (plus
+/// the re-partition options that shape its plan).
+fn group_signature(specs: &[FragmentSpec], opts_sig: u64) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts_sig.hash(&mut h);
+    specs.len().hash(&mut h);
+    for s in specs {
+        s.model.hash(&mut h);
+        s.p.hash(&mut h);
+        s.budget_ms.to_bits().hash(&mut h);
+        s.rate_rps.to_bits().hash(&mut h);
+        s.clients.len().hash(&mut h);
+        for c in &s.clients {
+            c.0.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+fn repartition_signature(opts: &RepartitionOptions) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts.d_grid.hash(&mut h);
+    opts.constraints.max_instances.hash(&mut h);
+    opts.constraints.max_batch.hash(&mut h);
+    opts.constraints.mem_budget_mb.map(f64::to_bits).hash(&mut h);
+    match &opts.point_set {
+        None => 0u8.hash(&mut h),
+        Some(ps) => {
+            1u8.hash(&mut h);
+            ps.hash(&mut h);
+        }
+    }
+    h.finish()
 }
 
 #[cfg(test)]
@@ -218,5 +388,58 @@ mod tests {
         let (plan, stats) = scheduler().plan(&[]);
         assert!(plan.sets.is_empty());
         assert_eq!(stats.n_groups, 0);
+    }
+
+    #[test]
+    fn replanning_reuses_unchanged_groups() {
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (first, st1) = s.plan(&d);
+        assert_eq!(st1.n_groups_reused, 0);
+        // identical demands: every group replays from the cache …
+        let (second, st2) = s.plan(&d);
+        assert_eq!(st2.n_groups_reused, st2.n_groups);
+        // … with a byte-identical plan
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn incremental_matches_from_scratch_after_change() {
+        let s = scheduler();
+        let mut d = demands(s.cost_model());
+        let _ = s.plan(&d);
+        // a partition-point change (the re-planning trigger)
+        d[0].p = 5;
+        d[3].budget_ms += 11.0;
+        let (incremental, st) = s.plan(&d);
+        // changed groups must not silently replay
+        assert!(st.n_groups_reused < st.n_groups || st.n_groups == 0);
+        let fresh = scheduler().plan(&d).0;
+        assert_eq!(incremental, fresh);
+    }
+
+    #[test]
+    fn non_incremental_mode_never_reuses() {
+        let cm = CostModel::new(Config::embedded());
+        let d = demands(&cm);
+        let s = Scheduler::new(
+            cm,
+            SchedulerOptions { incremental: false, ..Default::default() },
+        );
+        let (a, _) = s.plan(&d);
+        let (b, st) = s.plan(&d);
+        assert_eq!(st.n_groups_reused, 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn clear_plan_cache_forces_recompute() {
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (a, _) = s.plan(&d);
+        s.clear_plan_cache();
+        let (b, st) = s.plan(&d);
+        assert_eq!(st.n_groups_reused, 0);
+        assert_eq!(a, b);
     }
 }

@@ -237,6 +237,32 @@ pub fn random_fragments(
     out
 }
 
+/// A mixed-model demand set: `n` clients spread evenly over all models,
+/// with globally unique client ids (used by the scheduler benchmarks).
+pub fn random_mixed_fragments(
+    cm: &CostModel,
+    n: usize,
+    seed: u64,
+) -> Vec<FragmentSpec> {
+    let n_models = cm.config().models.len();
+    let mut out = Vec::with_capacity(n);
+    for mi in 0..n_models {
+        let share = n / n_models + usize::from(mi < n % n_models);
+        if share == 0 {
+            continue;
+        }
+        let mut frags = random_fragments(cm, mi, share, seed + mi as u64);
+        // client ids unique across models
+        for f in &mut frags {
+            for c in &mut f.clients {
+                c.0 += (mi * n) as u32;
+            }
+        }
+        out.append(&mut frags);
+    }
+    out
+}
+
 pub const MODELS: [&str; 5] = ["inc", "res", "vgg", "mob", "vit"];
 
 pub fn model_idx(cm: &CostModel, name: &str) -> usize {

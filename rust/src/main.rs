@@ -7,6 +7,9 @@
 //!                                     run the real serving data path
 //!   trace [--seed N] [--len S]        print a synthetic 5G trace
 //!   models                            list model specs (Table 2)
+//!   bench-scheduler [--sizes N,N,..] [--reps R] [--out FILE]
+//!                                     time Scheduler::plan at scale and
+//!                                     emit BENCH_scheduler.json
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -74,6 +77,7 @@ fn run() -> Result<()> {
     match cmd {
         "experiment" => cmd_experiment(&cm, &args),
         "plan" => cmd_plan(&cm, &args),
+        "bench-scheduler" => cmd_bench_scheduler(&args),
         "serve" => cmd_serve(&cm, &args),
         "trace" => cmd_trace(&args),
         "models" => {
@@ -97,7 +101,8 @@ fn print_usage() {
          \x20 graft plan --model inc --scale small-homo [--t 5]\n\
          \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0]\n\
          \x20 graft trace [--seed 7] [--len 60]\n\
-         \x20 graft models\n\n\
+         \x20 graft models\n\
+         \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\n\
          experiments: {}",
         experiments::ALL.join(" ")
     );
@@ -196,6 +201,175 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
     if !plan.infeasible.is_empty() {
         println!("  infeasible: {} specs", plan.infeasible.len());
     }
+    Ok(())
+}
+
+/// `graft bench-scheduler`: time `Scheduler::plan` on mixed-model demand
+/// sets and emit a machine-readable trajectory (`BENCH_scheduler.json`)
+/// so successive PRs can track planner performance.
+///
+/// Per size three planner configurations are timed:
+///   cold      — fresh caches (first trigger after startup),
+///   warm      — re-plan of identical demands (incremental replay),
+///   perturbed — re-plan after ~1% of clients changed partition point /
+///               budget (the trigger-based re-planning steady state),
+/// plus `uncached` — allocation cache and incremental reuse disabled —
+/// as the reference the speedup is measured against.
+fn cmd_bench_scheduler(args: &Args) -> Result<()> {
+    use graft::coordinator::FragmentSpec;
+    use graft::experiments::common::random_mixed_fragments;
+    use graft::util::Json;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let sizes: Vec<usize> = args
+        .flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,5000,10000")
+        .split(',')
+        .map(|s| s.trim().parse().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let reps: usize = args
+        .flags
+        .get("reps")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(3);
+    let out = PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_scheduler.json".into()),
+    );
+
+    // ~1% of clients move their partition point / budget (a trigger)
+    let perturb = |cm: &CostModel, specs: &mut [FragmentSpec]| {
+        for i in (0..specs.len()).step_by(100) {
+            let s = &mut specs[i];
+            let layers = cm.config().models[s.model].layers;
+            s.p = (s.p + 1) % (layers - 1);
+            s.budget_ms += 1.0;
+        }
+    };
+    let time_plan = |sched: &Scheduler, specs: &[FragmentSpec]| {
+        let t = Instant::now();
+        let (plan, stats) = sched.plan(specs);
+        (t.elapsed().as_secs_f64() * 1e3, plan, stats)
+    };
+    let num = Json::Num;
+    let ms3 = |v: f64| Json::Num((v * 1e3).round() / 1e3);
+
+    let mut runs = Vec::new();
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>12} {:>8} {:>8}",
+        "n", "cold_ms", "warm_ms", "perturb_ms", "uncached_ms", "reused",
+        "share"
+    );
+    for &n in &sizes {
+        let mut best: Option<BTreeMap<String, Json>> = None;
+        for _rep in 0..reps.max(1) {
+            let cm = CostModel::new(Config::embedded());
+            let sched =
+                Scheduler::new(cm.clone(), SchedulerOptions::default());
+            let mut specs = random_mixed_fragments(&cm, n, 0xB15C);
+
+            let (cold_ms, cold_plan, cold_stats) = time_plan(&sched, &specs);
+            // snapshot before the warm/perturbed passes inflate it
+            let (hits, misses) = cm.cache_stats();
+            let (warm_ms, warm_plan, _) = time_plan(&sched, &specs);
+            if warm_plan != cold_plan {
+                bail!("incremental re-plan diverged from cold plan at n={n}");
+            }
+            perturb(&cm, &mut specs);
+            let (pert_ms, pert_plan, pert_stats) = time_plan(&sched, &specs);
+
+            // reference: no allocation cache, no incremental reuse
+            let un_cm = CostModel::new_uncached(Config::embedded());
+            let un_sched = Scheduler::new(
+                un_cm,
+                SchedulerOptions { incremental: false, ..Default::default() },
+            );
+            let (uncached_ms, un_plan, _) = time_plan(&un_sched, &specs);
+            if un_plan != pert_plan {
+                bail!("uncached plan diverged from cached plan at n={n}");
+            }
+
+            let mut row = BTreeMap::new();
+            row.insert("n_clients".into(), num(n as f64));
+            row.insert("cold_ms".into(), ms3(cold_ms));
+            row.insert("warm_ms".into(), ms3(warm_ms));
+            row.insert("perturbed_ms".into(), ms3(pert_ms));
+            row.insert("uncached_ms".into(), ms3(uncached_ms));
+            row.insert("merge_ms".into(), ms3(cold_stats.merge_ms));
+            row.insert("group_ms".into(), ms3(cold_stats.group_ms));
+            row.insert(
+                "repartition_ms".into(),
+                ms3(cold_stats.repartition_ms),
+            );
+            row.insert(
+                "n_after_merge".into(),
+                num(cold_stats.n_after_merge as f64),
+            );
+            row.insert("n_groups".into(), num(cold_stats.n_groups as f64));
+            row.insert(
+                "n_groups_reused_perturbed".into(),
+                num(pert_stats.n_groups_reused as f64),
+            );
+            row.insert(
+                "alloc_cache_hit_rate".into(),
+                num((hits as f64 / (hits + misses).max(1) as f64 * 1e4)
+                    .round()
+                    / 1e4),
+            );
+            row.insert(
+                "total_share".into(),
+                num(cold_plan.total_share() as f64),
+            );
+            let better = best.as_ref().map_or(true, |b| {
+                row["cold_ms"].as_f64().unwrap_or(f64::MAX)
+                    < b["cold_ms"].as_f64().unwrap_or(f64::MAX)
+            });
+            if better {
+                best = Some(row);
+            }
+        }
+        let row = best.expect("reps >= 1");
+        println!(
+            "{:>8} {:>10} {:>10} {:>12} {:>12} {:>8} {:>8}",
+            n,
+            format!("{:.1}", row["cold_ms"].as_f64()?),
+            format!("{:.1}", row["warm_ms"].as_f64()?),
+            format!("{:.1}", row["perturbed_ms"].as_f64()?),
+            format!("{:.1}", row["uncached_ms"].as_f64()?),
+            format!("{:.0}", row["n_groups_reused_perturbed"].as_f64()?),
+            format!("{:.0}", row["total_share"].as_f64()?),
+        );
+        runs.push(Json::Obj(row));
+    }
+
+    // record the options the benchmark actually ran with, not literals
+    let defaults = SchedulerOptions::default();
+    let mut config = BTreeMap::new();
+    config.insert("pool_size".into(), num(defaults.pool_size as f64));
+    config.insert("d_grid".into(), num(defaults.repartition.d_grid as f64));
+    config.insert("group_size".into(), num(defaults.group.group_size as f64));
+    config.insert("merge_threshold".into(), Json::Num(defaults.merge.threshold));
+    config.insert("reps".into(), num(reps as f64));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("scheduler".into()));
+    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("config".into(), Json::Obj(config));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let json = Json::Obj(doc);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("\nwrote {}", out.display());
     Ok(())
 }
 

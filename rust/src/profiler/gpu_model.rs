@@ -13,7 +13,10 @@
 //! are discrete 1% units, batches are integers — the discreteness that
 //! Fig 4 shows and that Graft's merging step exploits.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::config::{Config, ModelSpec};
 
@@ -74,15 +77,117 @@ impl Default for AllocConstraints {
     }
 }
 
+/// Exact memo-cache key for one `min_alloc` query.  Budgets/rates are
+/// keyed on their f64 bit patterns (a lossless "quantisation" onto the
+/// f64 grid), so a cache hit returns *bit-identical* results to an
+/// uncached search — the property the planner-equality proptests assert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct AllocKey {
+    frag: FragmentId,
+    budget_bits: u64,
+    rate_bits: u64,
+    max_instances: u32,
+    max_batch: u32,
+    mem_bits: Option<u64>,
+}
+
+impl AllocKey {
+    fn new(
+        frag: FragmentId,
+        budget_ms: f64,
+        demand_rps: f64,
+        cons: &AllocConstraints,
+    ) -> Self {
+        Self {
+            frag,
+            budget_bits: budget_ms.to_bits(),
+            rate_bits: demand_rps.to_bits(),
+            max_instances: cons.max_instances,
+            max_batch: cons.max_batch,
+            mem_bits: cons.mem_budget_mb.map(f64::to_bits),
+        }
+    }
+
+    fn shard(&self) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        h.finish() as usize % CACHE_SHARDS
+    }
+}
+
+const CACHE_SHARDS: usize = 16;
+/// Per-shard entry cap; a full shard is cleared rather than evicted
+/// (bounds long-running services without an LRU on the hot path).
+const SHARD_CAPACITY: usize = 1 << 16;
+
+/// Sharded `min_alloc` memo cache.  The allocation search is the
+/// innermost loop of merging, the d_shared grid sweep, the suffix DP and
+/// every parallel per-group worker; identical `(fragment, budget, rate,
+/// constraints)` queries recur thousands of times per scheduling trigger
+/// at scale, and across triggers under trigger-based re-planning.
+#[derive(Debug, Default)]
+struct AllocCache {
+    shards: [RwLock<HashMap<AllocKey, Option<Alloc>>>; CACHE_SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl AllocCache {
+    fn get(&self, key: &AllocKey) -> Option<Option<Alloc>> {
+        let got =
+            self.shards[key.shard()].read().unwrap().get(key).copied();
+        match got {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn insert(&self, key: AllocKey, value: Option<Alloc>) {
+        let mut shard = self.shards[key.shard()].write().unwrap();
+        if shard.len() >= SHARD_CAPACITY {
+            shard.clear();
+        }
+        shard.insert(key, value);
+    }
+}
+
 /// The analytical cost model over a configuration.
+///
+/// Cloning shares both the configuration and the allocation cache, so a
+/// scheduler, its parallel re-alignment workers and the baselines all
+/// pool their `min_alloc` results.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     cfg: Arc<Config>,
+    cache: Option<Arc<AllocCache>>,
 }
 
 impl CostModel {
     pub fn new(cfg: Arc<Config>) -> Self {
-        Self { cfg }
+        Self { cfg, cache: Some(Arc::new(AllocCache::default())) }
+    }
+
+    /// A cost model with the allocation memo cache disabled (reference
+    /// path for the cached-vs-uncached equality tests and benches).
+    pub fn new_uncached(cfg: Arc<Config>) -> Self {
+        Self { cfg, cache: None }
+    }
+
+    /// `(hits, misses)` of the allocation cache since construction.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        match &self.cache {
+            Some(c) => (
+                c.hits.load(Ordering::Relaxed),
+                c.misses.load(Ordering::Relaxed),
+            ),
+            None => (0, 0),
+        }
     }
 
     pub fn config(&self) -> &Arc<Config> {
@@ -154,11 +259,35 @@ impl CostModel {
     /// execution latency `<= budget_ms` (the caller applies the /2
     /// worst-case-queueing rule of §4.3 before calling).
     ///
-    /// Searches batch sizes 1..=max_batch; for each, the minimal feasible
-    /// share, then also tries trading share up to save a whole instance
-    /// (the only regime where more share lowers total consumption, since
-    /// total ~ s^(1-gamma) grows in s otherwise).
+    /// Memoised: results are shared across the d_shared grid sweep, the
+    /// suffix DP and the parallel per-group workers through the sharded
+    /// [`AllocCache`]; keys are exact, so cached and uncached searches
+    /// are interchangeable.
     pub fn min_alloc(
+        &self,
+        frag: FragmentId,
+        budget_ms: f64,
+        demand_rps: f64,
+        cons: AllocConstraints,
+    ) -> Option<Alloc> {
+        let Some(cache) = &self.cache else {
+            return self.min_alloc_uncached(frag, budget_ms, demand_rps, cons);
+        };
+        let key = AllocKey::new(frag, budget_ms, demand_rps, &cons);
+        if let Some(v) = cache.get(&key) {
+            return v;
+        }
+        let v = self.min_alloc_uncached(frag, budget_ms, demand_rps, cons);
+        cache.insert(key, v);
+        v
+    }
+
+    /// The underlying allocation search: batch sizes from the compiled
+    /// buckets; for each, the minimal feasible share, then also trading
+    /// share up to save a whole instance (the only regime where more
+    /// share lowers total consumption, since total ~ s^(1-gamma) grows
+    /// in s otherwise).
+    fn min_alloc_uncached(
         &self,
         frag: FragmentId,
         budget_ms: f64,
@@ -217,7 +346,9 @@ impl CostModel {
     }
 
     /// Shares worth trying for a batch: the minimal feasible one plus the
-    /// minimal share achieving each smaller instance count.  Returns a
+    /// minimal share achieving each smaller instance count, deduplicated
+    /// (consecutive instance targets often land on the same share-grid
+    /// point, which previously wasted inner-loop iterations).  Returns a
     /// fixed-capacity buffer (no heap allocation — this sits on the
     /// scheduler's innermost loop); instance-count targets beyond the
     /// capacity cannot win anyway (total share grows with s^(1-gamma)).
@@ -240,24 +371,17 @@ impl CostModel {
         // demand/inst' => latency <= batch*1000*inst'/demand
         for target in 1..inst_at_min.max(1).min(out.len() as u32) {
             let lat_needed = batch as f64 * 1000.0 * target as f64 / demand_rps;
-            if let Some(s) = self.min_share_for_latency(frag, batch, lat_needed)
-            {
-                if s > s_min && s <= g.max_share {
+            if let Some(s) = self.min_share_for(frag, batch, lat_needed) {
+                if s > s_min
+                    && s <= g.max_share
+                    && !out[..n].contains(&s)
+                {
                     out[n] = s;
                     n += 1;
                 }
             }
         }
         (out, n)
-    }
-
-    fn min_share_for_latency(
-        &self,
-        frag: FragmentId,
-        batch: u32,
-        lat_ms: f64,
-    ) -> Option<u32> {
-        self.min_share_for(frag, batch, lat_ms)
     }
 
     /// Energy (J) consumed by an allocation busy for `busy_s` seconds.
@@ -440,6 +564,77 @@ mod tests {
         let tail = FragmentId::new(i, 8, 16);
         assert!(cm.instance_mem_mb(whole, 1) > cm.instance_mem_mb(tail, 1));
         assert!(cm.instance_mem_mb(whole, 8) > cm.instance_mem_mb(whole, 1));
+    }
+
+    #[test]
+    fn cached_min_alloc_identical_to_uncached() {
+        // exact-bit cache keys: the memoised search must return the same
+        // Option<Alloc> as the reference search, including on repeats
+        // (cache hits) and for infeasible queries (negative caching)
+        let cfg = Config::embedded();
+        let cached = CostModel::new(cfg.clone());
+        let plain = CostModel::new_uncached(cfg);
+        let mut rng = crate::util::Rng::seed_from_u64(0xA110C);
+        let mut queries = Vec::new();
+        for _ in 0..200 {
+            let model = rng.below(cached.cfg.models.len());
+            let layers = cached.cfg.models[model].layers;
+            let start = rng.below(layers);
+            let end = start + 1 + rng.below(layers - start);
+            let frag = FragmentId::new(model, start, end);
+            let budget = rng.range(0.1, 200.0);
+            let rate = rng.range(0.5, 500.0);
+            let cons = AllocConstraints {
+                max_instances: 1 + rng.below(8) as u32,
+                ..Default::default()
+            };
+            queries.push((frag, budget, rate, cons));
+        }
+        for _pass in 0..2 {
+            for &(frag, budget, rate, cons) in &queries {
+                assert_eq!(
+                    cached.min_alloc(frag, budget, rate, cons),
+                    plain.min_alloc(frag, budget, rate, cons),
+                    "{frag:?} b={budget} q={rate}"
+                );
+            }
+        }
+        let (hits, misses) = cached.cache_stats();
+        assert!(hits >= queries.len() as u64, "no cache hits: {hits}");
+        assert!(misses <= queries.len() as u64);
+        // clones share the cache
+        let clone = cached.clone();
+        let before = clone.cache_stats().0;
+        let (frag, budget, rate, cons) = queries[0];
+        let _ = clone.min_alloc(frag, budget, rate, cons);
+        assert!(clone.cache_stats().0 > before);
+    }
+
+    #[test]
+    fn candidate_shares_deduplicated() {
+        let cm = cm();
+        for name in ["inc", "res", "vgg", "mob", "vit"] {
+            let f = frag(&cm, name);
+            for &batch in &[1u32, 4, 16] {
+                for demand in [5.0, 60.0, 300.0, 900.0] {
+                    let Some(s_min) = cm.min_share_for(f, batch, 30.0)
+                    else {
+                        continue;
+                    };
+                    let (shares, n) =
+                        cm.candidate_shares(f, batch, s_min, demand);
+                    for i in 0..n {
+                        for j in i + 1..n {
+                            assert_ne!(
+                                shares[i], shares[j],
+                                "{name} b={batch} q={demand}: {:?}",
+                                &shares[..n]
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ use graft::coordinator::merging::{merge_fragments, MergeOptions};
 use graft::coordinator::repartition::{
     plan_covers_demand, plan_is_slo_safe, realign_group, RepartitionOptions,
 };
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::coordinator::{ClientId, FragmentSpec};
 use graft::profiler::{AllocConstraints, CostModel};
 use graft::serving::{Request, Response};
@@ -160,6 +161,119 @@ fn prop_realign_plans_are_safe_and_cover_all_clients() {
                 assert!(m.spec.p <= set.point, "case {case}");
             }
         }
+    }
+}
+
+/// Random mixed-model demand set with globally unique client ids.
+fn random_mixed_specs(
+    rng: &mut Rng,
+    cm: &CostModel,
+    n: usize,
+) -> Vec<FragmentSpec> {
+    let n_models = cm.config().models.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let model = rng.below(n_models);
+        let m = &cm.config().models[model];
+        let p = rng.below(m.layers);
+        let tail_ms = m.server_ms_ref * m.rel_cost_range(p, m.layers);
+        let budget = tail_ms * rng.range(2.5, 8.0);
+        let rate = *[1.0, 10.0, 30.0, 60.0][..].get(rng.below(4)).unwrap();
+        out.push(FragmentSpec::single(
+            ClientId(i as u32),
+            model,
+            p,
+            budget,
+            rate,
+        ));
+    }
+    out
+}
+
+#[test]
+fn prop_cached_planner_identical_to_uncached() {
+    // The allocation memo cache keys on exact bit patterns, so the cached
+    // planner must produce a byte-identical ExecutionPlan (total_share
+    // and full structure) to the cache-free reference planner.
+    for case in 0..12u64 {
+        let mut rng = Rng::seed_from_u64(7000 + case);
+        let cfg = Config::embedded();
+        let n = 5 + rng.below(60);
+        let cached_cm = CostModel::new(cfg.clone());
+        let specs = random_mixed_specs(&mut rng, &cached_cm, n);
+        let cached = Scheduler::new(cached_cm, SchedulerOptions::default());
+        let reference = Scheduler::new(
+            CostModel::new_uncached(cfg),
+            SchedulerOptions { incremental: false, ..Default::default() },
+        );
+        let (a, _) = cached.plan(&specs);
+        let (b, _) = reference.plan(&specs);
+        assert_eq!(
+            a.total_share(),
+            b.total_share(),
+            "case {case}: cached {} vs uncached {}",
+            a.total_share(),
+            b.total_share()
+        );
+        assert_eq!(a, b, "case {case}: plans structurally differ");
+        // planning twice through the cache is also stable
+        let (a2, _) = cached.plan(&specs);
+        assert_eq!(a, a2, "case {case}: cached re-plan differs");
+    }
+}
+
+#[test]
+fn prop_incremental_replanning_identical_to_from_scratch() {
+    // Trigger-based re-planning: a long-lived scheduler re-planning an
+    // evolving demand set must match a fresh scheduler at every step.
+    for case in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(8000 + case);
+        let cfg = Config::embedded();
+        let cm = CostModel::new(cfg.clone());
+        let n = 10 + rng.below(50);
+        let mut specs = random_mixed_specs(&mut rng, &cm, n);
+        let live = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        for step in 0..4 {
+            if step > 0 {
+                // perturb a random subset (partition points and budgets
+                // move; some specs stay identical → cache replay)
+                for s in specs.iter_mut() {
+                    if rng.f64() < 0.3 {
+                        let m = &cm.config().models[s.model];
+                        s.p = rng.below(m.layers);
+                        let tail = m.server_ms_ref
+                            * m.rel_cost_range(s.p, m.layers);
+                        s.budget_ms = tail * rng.range(2.5, 8.0);
+                    }
+                }
+            }
+            let (incremental, stats) = live.plan(&specs);
+            let fresh = Scheduler::new(
+                CostModel::new_uncached(cfg.clone()),
+                SchedulerOptions { incremental: false, ..Default::default() },
+            );
+            let (scratch, _) = fresh.plan(&specs);
+            assert_eq!(
+                incremental.total_share(),
+                scratch.total_share(),
+                "case {case} step {step}"
+            );
+            assert_eq!(incremental, scratch, "case {case} step {step}");
+            if step > 0 {
+                assert!(
+                    stats.n_groups_reused <= stats.n_groups,
+                    "case {case} step {step}"
+                );
+            }
+        }
+        // unchanged final step: everything replays
+        let (replay, stats) = live.plan(&specs);
+        assert_eq!(stats.n_groups_reused, stats.n_groups);
+        let fresh = Scheduler::new(
+            CostModel::new_uncached(cfg),
+            SchedulerOptions { incremental: false, ..Default::default() },
+        );
+        assert_eq!(replay, fresh.plan(&specs).0, "case {case} final replay");
     }
 }
 

@@ -1,0 +1,250 @@
+//! Offline in-tree substitute for the `anyhow` crate.
+//!
+//! The container build has no network and no registry, so graft vendors
+//! the small subset of anyhow it actually uses: the [`Error`] type with
+//! context chaining, the [`Result`] alias with a defaulted error type,
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension
+//! trait on `Result` and `Option`.  The structure (notably the private
+//! `ext::StdError` dispatch trait) mirrors the real crate so the two are
+//! drop-in interchangeable.
+
+use std::fmt::{self, Display};
+
+/// An error with an optional chain of context messages.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message plus nested causes, colon-joined
+    /// (what `{:#}` prints).
+    fn chain_string(&self) -> String {
+        let mut out = self.msg.clone();
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push_str(": ");
+            out.push_str(&e.msg);
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain_string())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes the blanket `From` below (and
+// the dual `ext::StdError` impls) coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg, source: None }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+mod ext {
+    use super::{Display, Error};
+
+    /// Private dispatch: turn either a std error or an [`Error`] into an
+    /// [`Error`] with added context (same trick as the real anyhow).
+    pub trait StdError {
+        fn ext_context<C: Display + Send + Sync + 'static>(
+            self,
+            context: C,
+        ) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display + Send + Sync + 'static>(
+            self,
+            context: C,
+        ) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display + Send + Sync + 'static>(
+            self,
+            context: C,
+        ) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/here")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 3 bad");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+        fn f() -> Result<()> {
+            bail!("boom {}", 7)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn option_context_and_question_mark() {
+        fn g() -> Result<u32> {
+            let v: Option<u32> = None;
+            let v = v.context("missing value")?;
+            Ok(v)
+        }
+        assert_eq!(g().unwrap_err().to_string(), "missing value");
+
+        fn h() -> Result<u32> {
+            let n: u32 = "zzz".parse()?; // ParseIntError via blanket From
+            Ok(n)
+        }
+        assert!(h().is_err());
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("inner failure")
+        }
+        let e = inner().with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: inner failure");
+    }
+}

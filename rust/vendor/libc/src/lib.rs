@@ -1,0 +1,28 @@
+//! Offline in-tree substitute for the `libc` crate: only the signal
+//! bindings graft's CLI uses (ignoring `SIGPIPE` so `graft ... | head`
+//! dies quietly).  Values match Linux; on non-Linux targets the constant
+//! differs but the call remains harmless.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type sighandler_t = usize;
+
+pub const SIGPIPE: c_int = 13;
+pub const SIG_DFL: sighandler_t = 0;
+
+extern "C" {
+    /// POSIX `signal(2)`.
+    pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn set_default_pipe_handler() {
+        // installing the default handler is a no-op semantically
+        unsafe {
+            super::signal(super::SIGPIPE, super::SIG_DFL);
+        }
+    }
+}

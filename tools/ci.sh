@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# CI pipeline: build, test, style gates, and a fast planner-bench smoke
+# run (n=200) that also re-validates cached==uncached plan identity.
+#
+#   tools/ci.sh           full pipeline
+#   tools/ci.sh --fast    build + test only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "$FAST" == "1" ]]; then
+    echo "ci: fast mode, skipping style gates and bench smoke"
+    exit 0
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "ci: rustfmt unavailable, skipping fmt check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "ci: clippy unavailable, skipping lint"
+fi
+
+echo "== bench smoke (n=200) =="
+cargo run --release -p graft -- bench-scheduler \
+    --sizes 200 --reps 1 --out target/BENCH_scheduler_smoke.json
+test -s target/BENCH_scheduler_smoke.json
+
+echo "ci: OK"
