@@ -11,8 +11,10 @@ use graft::config::Config;
 use graft::coordinator::repartition::{realign_group, RepartitionOptions};
 use graft::coordinator::{ClientId, FragmentSpec};
 use graft::profiler::CostModel;
+use graft::experiments::scale::serve_synthetic;
 use graft::serving::{
-    BatchQueue, MockExecutor, Request, Server, ServerOptions, WorkItem,
+    BatchQueue, ExecutorMode, MockExecutor, Request, Server, ServerOptions,
+    ShardedBatchQueue, WorkItem,
 };
 use graft::util::bench::{bench, run_group};
 use graft::util::Rng;
@@ -43,22 +45,43 @@ fn main() {
         ],
     );
 
-    // batch queue
+    // batch queue (single-lock reference vs per-instance shards)
+    let item = |i: u32| WorkItem {
+        payload: vec![0.0; 8],
+        server_arrival: std::time::Instant::now(),
+        budget_ms: 100.0,
+        accumulated_ms: 0.0,
+        ctx: i,
+    };
     run_group(
         "batch queue",
-        vec![bench("push+pop batch of 8", || {
-            let q: BatchQueue<u32> = BatchQueue::new();
-            for i in 0..8 {
-                q.push(WorkItem {
-                    payload: vec![0.0; 8],
-                    server_arrival: std::time::Instant::now(),
-                    budget_ms: 100.0,
-                    accumulated_ms: 0.0,
-                    ctx: i,
-                });
-            }
-            q.pop_batch(8).unwrap().len()
-        })],
+        vec![
+            bench("single: push+pop batch of 8", || {
+                let q: BatchQueue<u32> = BatchQueue::new();
+                for i in 0..8 {
+                    q.push(item(i));
+                }
+                q.pop_batch(8).unwrap().len()
+            }),
+            bench("sharded(8): push+pop batch of 8", || {
+                let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(8);
+                for i in 0..8 {
+                    q.push(item(i));
+                }
+                q.try_pop_batch(0, 8).len()
+            }),
+            bench("sharded(8): 64 push + steal-pop x8", || {
+                let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(8);
+                for i in 0..64 {
+                    q.push(item(i));
+                }
+                let mut n = 0;
+                for home in 0..8 {
+                    n += q.try_pop_batch(home, 8).len();
+                }
+                n
+            }),
+        ],
     );
 
     // in-process serving loop with the mock executor (no pacing)
@@ -77,7 +100,11 @@ fn main() {
         Arc::new(MockExecutor { dims: dims_map }),
         &cm,
         &plan,
-        ServerOptions { time_scale: 0.0, drop_on_slo: false },
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+        },
     );
     let payload: Vec<f32> = vec![0.5; dims[1]];
     run_group(
@@ -102,6 +129,16 @@ fn main() {
     );
     server.shutdown();
 
+    // executor cores head-to-head on the same small plan (2k requests,
+    // mock executor, no pacing)
+    run_group(
+        "executor (2k reqs end-to-end)",
+        vec![
+            bench_serving_mode(&cm, &plan, ExecutorMode::Threads),
+            bench_serving_mode(&cm, &plan, ExecutorMode::Pool),
+        ],
+    );
+
     // real PJRT execution (skipped without artifacts)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
@@ -119,4 +156,20 @@ fn main() {
     } else {
         println!("(artifacts missing; PJRT benches skipped)");
     }
+}
+
+/// Time `serve_synthetic` (2k synthetic requests, mock executor, no
+/// pacing) under one executor mode.
+fn bench_serving_mode(
+    cm: &CostModel,
+    plan: &graft::coordinator::ExecutionPlan,
+    mode: ExecutorMode,
+) -> graft::util::bench::BenchResult {
+    graft::util::bench::bench_with(
+        &format!("{mode:?} executor"),
+        0,
+        2,
+        std::time::Duration::from_millis(1),
+        &mut || serve_synthetic(cm, plan, mode, 2000).requests,
+    )
 }

@@ -28,7 +28,9 @@ use graft::hybrid::ClientSim;
 use graft::metrics::LatencyStats;
 use graft::profiler::CostModel;
 use graft::runtime::{default_artifacts_dir, Engine};
-use graft::serving::{Request, Server, ServerOptions, TcpClient, TcpFront};
+use graft::serving::{
+    ExecutorMode, Request, Server, ServerOptions, TcpClient, TcpFront,
+};
 use graft::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -135,7 +137,11 @@ fn main() -> anyhow::Result<()> {
             engine.clone(),
             &cm,
             &plan,
-            ServerOptions { time_scale, drop_on_slo: true },
+            ServerOptions {
+                time_scale,
+                drop_on_slo: true,
+                mode: ExecutorMode::Pool,
+            },
         ));
         let front = TcpFront::start("127.0.0.1:0", server.clone())?;
         let addr = front.addr;

@@ -1,24 +1,32 @@
 //! Scale & robustness experiments: Fig 17 (achievable throughput under
 //! capped resources), Fig 18 (massive-scale simulation), Fig 19 (system
 //! overhead + realignment pool size), Fig 20 (SLO-ratio sensitivity),
-//! Fig 21 (energy consumption).
+//! Fig 21 (energy consumption), plus the serving-path throughput
+//! harness ("serving": thread-per-instance vs pooled executor).
 
-use std::time::Instant;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::baselines::{gslice, gslice_plus};
 use crate::coordinator::merging::MergeOptions;
 use crate::coordinator::optimal::optimal_plan;
 use crate::coordinator::repartition::RepartitionOptions;
 use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
-use crate::coordinator::FragmentSpec;
+use crate::coordinator::{ExecutionPlan, FragmentSpec};
 use crate::hybrid::{choose_partition, DeviceKind};
+use crate::metrics::LatencyStats;
 use crate::profiler::{AllocConstraints, CostModel};
+use crate::serving::{
+    ExecutorMode, MockExecutor, Request, Response, Server, ServerOptions,
+};
 use crate::sim::plan_energy_j;
 use crate::util::csv::{f, Table};
 
 use super::common::{
-    fleet, graft_plan, model_idx, random_fragments, snapshot,
-    static_clients, Scale, MODELS,
+    fleet, graft_plan, model_idx, random_fragments, random_mixed_fragments,
+    snapshot, static_clients, Scale, MODELS,
 };
 
 fn graft_sched(cm: &CostModel, merge_thr: f64, pool: usize) -> Scheduler {
@@ -293,6 +301,218 @@ pub fn fig21(cm: &CostModel) -> Table {
     t
 }
 
+/// One measured serving run (mock executor, pacing disabled so the
+/// numbers isolate queue/dispatch overhead).
+#[derive(Debug, Clone)]
+pub struct ServingBenchPoint {
+    pub mode: ExecutorMode,
+    /// Responses actually collected (== submitted unless something
+    /// wedged; the collector times out rather than hang).
+    pub requests: usize,
+    pub wall_ms: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Executor threads (instances or pool workers).
+    pub threads: usize,
+    /// Planned instances across all stages.
+    pub instances: usize,
+    pub batches: u64,
+    pub served: u64,
+    pub dropped: u64,
+}
+
+pub fn mode_name(mode: ExecutorMode) -> &'static str {
+    match mode {
+        ExecutorMode::Threads => "threads",
+        ExecutorMode::Pool => "pool",
+    }
+}
+
+/// Drive `total_reqs` synthetic requests through a real [`Server`] for
+/// `plan` (mock executor, no pacing, no SLO drops) and measure
+/// end-to-end throughput and latency.  Producers submit round-robin
+/// over every routed client from 4 threads; a collector thread stamps
+/// response arrivals.
+pub fn serve_synthetic(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    mode: ExecutorMode,
+    total_reqs: usize,
+) -> ServingBenchPoint {
+    // every routed client with its partition point / payload width
+    let mut targets: Vec<(u32, u16, u16, usize)> = Vec::new();
+    let mut instances = 0usize;
+    for set in &plan.sets {
+        instances += set.shared.alloc.instances as usize;
+        for m in &set.members {
+            if let Some(a) = &m.align {
+                instances += a.alloc.instances as usize;
+            }
+            let dim = cm.config().models[set.model].dims[m.spec.p];
+            for c in &m.spec.clients {
+                targets.push((c.0, set.model as u16, m.spec.p as u16, dim));
+            }
+        }
+    }
+    let mut point = ServingBenchPoint {
+        mode,
+        requests: 0,
+        wall_ms: 0.0,
+        throughput_rps: 0.0,
+        p50_ms: f64::NAN,
+        p99_ms: f64::NAN,
+        threads: 0,
+        instances,
+        batches: 0,
+        served: 0,
+        dropped: 0,
+    };
+    if targets.is_empty() || total_reqs == 0 {
+        return point;
+    }
+    let dims: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    let server = Server::start(
+        Arc::new(MockExecutor { dims }),
+        cm,
+        plan,
+        ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+    );
+    point.threads = server.thread_count();
+
+    let producers = 4usize.min(total_reqs).max(1);
+    let (tx, rx) = mpsc::channel::<Response>();
+    let t_start = Instant::now();
+    let (subs, recvd, t_end) = std::thread::scope(|scope| {
+        let collector = scope.spawn(move || {
+            let mut recvd: Vec<(u32, Instant)> =
+                Vec::with_capacity(total_reqs);
+            while recvd.len() < total_reqs {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(r) => recvd.push((r.seq, Instant::now())),
+                    Err(_) => break, // lost responses: report what we got
+                }
+            }
+            (recvd, Instant::now())
+        });
+        let mut prod_handles = Vec::new();
+        for pidx in 0..producers {
+            let tx = tx.clone();
+            let server = &server;
+            let targets = &targets;
+            prod_handles.push(scope.spawn(move || {
+                let mut local: Vec<(u32, Instant)> = Vec::new();
+                let mut i = pidx;
+                while i < total_reqs {
+                    let (cid, model, p, dim) = targets[i % targets.len()];
+                    let req = Request {
+                        client_id: cid,
+                        model,
+                        p,
+                        seq: i as u32,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dim],
+                    };
+                    let t = Instant::now();
+                    server.submit(req, tx.clone());
+                    local.push((i as u32, t));
+                    i += producers;
+                }
+                local
+            }));
+        }
+        drop(tx);
+        let mut subs: Vec<(u32, Instant)> = Vec::with_capacity(total_reqs);
+        for h in prod_handles {
+            subs.extend(h.join().expect("producer"));
+        }
+        let (recvd, t_end) = collector.join().expect("collector");
+        (subs, recvd, t_end)
+    });
+
+    let mut submit_at: Vec<Option<Instant>> = vec![None; total_reqs];
+    for (seq, t) in subs {
+        submit_at[seq as usize] = Some(t);
+    }
+    let mut lat = LatencyStats::new();
+    for (seq, at) in &recvd {
+        if let Some(t0) = submit_at[*seq as usize] {
+            lat.record(at.duration_since(t0).as_secs_f64() * 1e3);
+        }
+    }
+    let wall_s = (t_end - t_start).as_secs_f64().max(1e-9);
+    point.requests = recvd.len();
+    point.wall_ms = wall_s * 1e3;
+    point.throughput_rps = recvd.len() as f64 / wall_s;
+    point.p50_ms = lat.percentile(50.0);
+    point.p99_ms = lat.percentile(99.0);
+    point.batches = server.counters.batches.load(Ordering::Relaxed);
+    point.served = server.counters.served.load(Ordering::Relaxed);
+    point.dropped = server.counters.dropped.load(Ordering::Relaxed);
+    server.shutdown();
+    point
+}
+
+/// Plan a mixed-model fleet of `n_clients` and measure the serving path
+/// under `mode` (shared harness of the `serving` experiment and the
+/// `bench-serving` CLI).
+pub fn serving_throughput(
+    cm: &CostModel,
+    n_clients: usize,
+    total_reqs: usize,
+    mode: ExecutorMode,
+    seed: u64,
+) -> ServingBenchPoint {
+    let specs = random_mixed_fragments(cm, n_clients, seed);
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let (plan, _) = sched.plan(&specs);
+    serve_synthetic(cm, &plan, mode, total_reqs)
+}
+
+/// Experiment "serving": thread-per-instance vs pooled executor on the
+/// same plans (small fleets so `experiment all` stays fast; the 1k–10k
+/// sweep lives in `graft bench-serving`).
+pub fn serving_scale(cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "n_clients",
+        "mode",
+        "requests",
+        "throughput_rps",
+        "p50_ms",
+        "p99_ms",
+        "threads",
+        "instances",
+        "batches",
+    ]);
+    for &n in &[64usize, 256] {
+        let specs = random_mixed_fragments(cm, n, 0xACE5 + n as u64);
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let (plan, _) = sched.plan(&specs);
+        for mode in [ExecutorMode::Threads, ExecutorMode::Pool] {
+            let r = serve_synthetic(cm, &plan, mode, 2000);
+            t.row(vec![
+                n.to_string(),
+                mode_name(mode).to_string(),
+                r.requests.to_string(),
+                f(r.throughput_rps, 0),
+                f(r.p50_ms, 2),
+                f(r.p99_ms, 2),
+                r.threads.to_string(),
+                r.instances.to_string(),
+                r.batches.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -321,6 +541,35 @@ mod tests {
                 get("graft"),
                 get("gslice")
             );
+        }
+    }
+
+    #[test]
+    fn serving_harness_completes_under_both_modes() {
+        let cm = cm();
+        let specs = random_mixed_fragments(&cm, 16, 7);
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let (plan, _) = sched.plan(&specs);
+        if plan.sets.is_empty() {
+            return; // degenerate random draw: nothing to serve
+        }
+        let cpus = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        for mode in [ExecutorMode::Threads, ExecutorMode::Pool] {
+            let r = serve_synthetic(&cm, &plan, mode, 400);
+            assert_eq!(r.requests, 400, "{mode:?} lost responses");
+            assert_eq!(r.served, 400, "{mode:?} served counter");
+            assert_eq!(r.dropped, 0, "{mode:?} dropped counter");
+            assert!(r.throughput_rps > 0.0);
+            if mode == ExecutorMode::Pool {
+                assert!(
+                    r.threads <= cpus.max(1),
+                    "pool spawned {} workers for {} cpus",
+                    r.threads,
+                    cpus
+                );
+            }
         }
     }
 

@@ -10,6 +10,10 @@
 //!   bench-scheduler [--sizes N,N,..] [--reps R] [--out FILE]
 //!                                     time Scheduler::plan at scale and
 //!                                     emit BENCH_scheduler.json
+//!   bench-serving [--sizes N,N,..] [--requests R] [--out FILE]
+//!                                     drive the serving data path under
+//!                                     both executor modes and emit
+//!                                     BENCH_serving.json
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -78,6 +82,7 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(&cm, &args),
         "plan" => cmd_plan(&cm, &args),
         "bench-scheduler" => cmd_bench_scheduler(&args),
+        "bench-serving" => cmd_bench_serving(&cm, &args),
         "serve" => cmd_serve(&cm, &args),
         "trace" => cmd_trace(&args),
         "models" => {
@@ -102,7 +107,8 @@ fn print_usage() {
          \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0]\n\
          \x20 graft trace [--seed 7] [--len 60]\n\
          \x20 graft models\n\
-         \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\n\
+         \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\
+         \x20 graft bench-serving [--sizes 1000,5000,10000] [--requests 40000] [--out BENCH_serving.json]\n\n\
          experiments: {}",
         experiments::ALL.join(" ")
     );
@@ -358,6 +364,142 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
     config.insert("reps".into(), num(reps as f64));
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("scheduler".into()));
+    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("config".into(), Json::Obj(config));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let json = Json::Obj(doc);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}
+
+/// `graft bench-serving`: drive the real serving data path (mock
+/// executor, pacing off) with synthetic fleets under both executor
+/// modes and emit `BENCH_serving.json` — the serving-path companion to
+/// `BENCH_scheduler.json`.  Each size plans one mixed-model fleet and
+/// serves the *same plan* thread-per-instance and pooled, so the two
+/// rows differ only in the executor core.
+fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
+    use graft::experiments::common::random_mixed_fragments;
+    use graft::experiments::scale::{serve_synthetic, ServingBenchPoint};
+    use graft::serving::ExecutorMode;
+    use graft::util::Json;
+    use std::collections::BTreeMap;
+
+    let sizes: Vec<usize> = args
+        .flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,5000,10000")
+        .split(',')
+        .map(|s| s.trim().parse().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let requests_flag: Option<usize> = args
+        .flags
+        .get("requests")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --requests")?;
+    let out = PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_serving.json".into()),
+    );
+
+    let num = Json::Num;
+    let ms3 = |v: f64| {
+        Json::Num(if v.is_finite() { (v * 1e3).round() / 1e3 } else { -1.0 })
+    };
+    let point_json = |r: &ServingBenchPoint| {
+        let mut o = BTreeMap::new();
+        o.insert("requests".into(), num(r.requests as f64));
+        o.insert("wall_ms".into(), ms3(r.wall_ms));
+        o.insert("throughput_rps".into(), ms3(r.throughput_rps));
+        o.insert("p50_ms".into(), ms3(r.p50_ms));
+        o.insert("p99_ms".into(), ms3(r.p99_ms));
+        o.insert("threads".into(), num(r.threads as f64));
+        o.insert("batches".into(), num(r.batches as f64));
+        o.insert("served".into(), num(r.served as f64));
+        o.insert("dropped".into(), num(r.dropped as f64));
+        Json::Obj(o)
+    };
+
+    let mut runs = Vec::new();
+    println!(
+        "{:>8} {:>8} {:>10} | {:>14} {:>9} {:>8} | {:>14} {:>9} {:>8} {:>8}",
+        "n",
+        "reqs",
+        "instances",
+        "thr_rps(thrd)",
+        "p99(ms)",
+        "threads",
+        "thr_rps(pool)",
+        "p99(ms)",
+        "threads",
+        "speedup"
+    );
+    for &n in &sizes {
+        let total_reqs = requests_flag.unwrap_or_else(|| (4 * n).max(8000));
+        let specs = random_mixed_fragments(cm, n, 0x5E4D);
+        let sched =
+            Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let (plan, _) = sched.plan(&specs);
+        let rt = serve_synthetic(cm, &plan, ExecutorMode::Threads, total_reqs);
+        let rp = serve_synthetic(cm, &plan, ExecutorMode::Pool, total_reqs);
+        if rt.requests < total_reqs || rp.requests < total_reqs {
+            bail!(
+                "lost responses at n={n}: threads {}/{total_reqs}, pool {}/{total_reqs}",
+                rt.requests,
+                rp.requests
+            );
+        }
+        let speedup = rp.throughput_rps / rt.throughput_rps.max(1e-9);
+        println!(
+            "{:>8} {:>8} {:>10} | {:>14} {:>9} {:>8} | {:>14} {:>9} {:>8} {:>8}",
+            n,
+            total_reqs,
+            rt.instances,
+            format!("{:.0}", rt.throughput_rps),
+            format!("{:.2}", rt.p99_ms),
+            rt.threads,
+            format!("{:.0}", rp.throughput_rps),
+            format!("{:.2}", rp.p99_ms),
+            rp.threads,
+            format!("{speedup:.2}x"),
+        );
+        let mut row = BTreeMap::new();
+        row.insert("n_clients".into(), num(n as f64));
+        row.insert("requests".into(), num(total_reqs as f64));
+        row.insert("instances".into(), num(rt.instances as f64));
+        row.insert("stages".into(), num(plan.stages().count() as f64));
+        row.insert("threads".into(), point_json(&rt));
+        row.insert("pool".into(), point_json(&rp));
+        row.insert(
+            "pool_speedup".into(),
+            num((speedup * 1e3).round() / 1e3),
+        );
+        runs.push(Json::Obj(row));
+    }
+
+    let mut config = BTreeMap::new();
+    config.insert("time_scale".into(), num(0.0));
+    config.insert("drop_on_slo".into(), Json::Bool(false));
+    config.insert("producers".into(), num(4.0));
+    config.insert(
+        "num_cpus".into(),
+        num(std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(4) as f64),
+    );
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("serving".into()));
     doc.insert("schema_version".into(), num(1.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("runs".into(), Json::Arr(runs));

@@ -2,8 +2,25 @@
 //! tensor in a queue for the corresponding fragment.  This queue is
 //! shared by all the instances for each DNN fragment, which process
 //! requests in batch from the queue").
+//!
+//! Two implementations coexist:
+//!
+//! * [`BatchQueue`] — the reference implementation: one mutex + condvar
+//!   around a `VecDeque`.  Correct and simple, but every producer and
+//!   every consumer instance serialises on the same lock, which is the
+//!   serving-path bottleneck at 10k-client scale.
+//! * [`ShardedBatchQueue`] — one shard per planned instance.  Producers
+//!   route with power-of-two-choices (pick two shards, push to the
+//!   shorter), consumers pop from their home shard and steal from the
+//!   others to fill a batch.  Contention drops from O(producers) on one
+//!   lock to ~2 threads per shard lock in expectation.
+//!
+//! Both count traffic in [`QueueMetrics`]; in particular a `push` after
+//! `close()` is *rejected* (returns `false`) and counted, never silently
+//! dropped.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -21,6 +38,29 @@ pub struct WorkItem<T> {
     pub ctx: T,
 }
 
+/// Queue traffic counters (monotonic; read with `Ordering::Relaxed`).
+#[derive(Debug, Default)]
+pub struct QueueMetrics {
+    /// Items accepted by `push`.
+    pub pushed: AtomicU64,
+    /// Items handed to consumers.
+    pub popped: AtomicU64,
+    /// Pushes refused because the queue was closed.
+    pub rejected: AtomicU64,
+}
+
+impl QueueMetrics {
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+    pub fn popped(&self) -> u64 {
+        self.popped.load(Ordering::Relaxed)
+    }
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
 struct Inner<T> {
     items: VecDeque<WorkItem<T>>,
     closed: bool,
@@ -31,6 +71,7 @@ struct Inner<T> {
 pub struct BatchQueue<T> {
     inner: Mutex<Inner<T>>,
     cv: Condvar,
+    metrics: QueueMetrics,
 }
 
 impl<T> Default for BatchQueue<T> {
@@ -44,17 +85,30 @@ impl<T> BatchQueue<T> {
         Self {
             inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
+            metrics: QueueMetrics::default(),
         }
     }
 
-    pub fn push(&self, item: WorkItem<T>) {
+    /// Push one item.  Returns `false` (and counts the rejection) if the
+    /// queue has been closed; the item is dropped in that case.
+    pub fn push(&self, item: WorkItem<T>) -> bool {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return; // shutting down: drop silently
+            drop(g);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
         }
         g.items.push_back(item);
         drop(g);
+        self.metrics.pushed.fetch_add(1, Ordering::Relaxed);
         self.cv.notify_one();
+        true
+    }
+
+    fn count_popped(&self, n: usize) {
+        if n > 0 {
+            self.metrics.popped.fetch_add(n as u64, Ordering::Relaxed);
+        }
     }
 
     /// Pop up to `max_batch` items: blocks for the first item, then
@@ -65,7 +119,10 @@ impl<T> BatchQueue<T> {
         loop {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max_batch.max(1));
-                return Some(g.items.drain(..n).collect());
+                let out: Vec<_> = g.items.drain(..n).collect();
+                drop(g);
+                self.count_popped(out.len());
+                return Some(out);
             }
             if g.closed {
                 return None;
@@ -106,7 +163,10 @@ impl<T> BatchQueue<T> {
             g = ng;
         }
         let n = g.items.len().min(max_batch.max(1));
-        Some(g.items.drain(..n).collect())
+        let out: Vec<_> = g.items.drain(..n).collect();
+        drop(g);
+        self.count_popped(out.len());
+        Some(out)
     }
 
     /// Like `pop_batch` but gives up after `timeout` (for pollers).
@@ -120,7 +180,10 @@ impl<T> BatchQueue<T> {
         loop {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max_batch.max(1));
-                return Some(g.items.drain(..n).collect());
+                let out: Vec<_> = g.items.drain(..n).collect();
+                drop(g);
+                self.count_popped(out.len());
+                return Some(out);
             }
             if g.closed {
                 return None;
@@ -150,6 +213,240 @@ impl<T> BatchQueue<T> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    pub fn metrics(&self) -> &QueueMetrics {
+        &self.metrics
+    }
+}
+
+/// SplitMix64 — cheap stateless mixer for push routing.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+struct Shard<T> {
+    items: Mutex<VecDeque<WorkItem<T>>>,
+    /// Cached length so routing never takes a lock it will not use.
+    len: AtomicUsize,
+}
+
+/// MPMC batch queue sharded per consumer instance.
+///
+/// * `push` routes with power-of-two-choices over the per-shard length
+///   counters, so producers spread across shard locks instead of
+///   serialising on one mutex.
+/// * `try_pop_batch(home, n)` drains the consumer's home shard first and
+///   then *steals* from the other shards (in ring order) until the batch
+///   is full — an instance never idles while any shard has work.
+/// * `pop_batch` adds blocking on top for consumers without their own
+///   scheduler (tests, simple drivers); the pooled executor only uses
+///   the non-blocking form and parks on its own notifier.
+pub struct ShardedBatchQueue<T> {
+    shards: Vec<Shard<T>>,
+    total: AtomicUsize,
+    closed: AtomicBool,
+    ticket: AtomicU64,
+    /// Blocking-pop support: waiters register in `sleepers` and wait for
+    /// `epoch` to move on (pushes only take the gate when someone sleeps).
+    sleepers: AtomicUsize,
+    epoch: AtomicU64,
+    gate: Mutex<()>,
+    cv: Condvar,
+    metrics: QueueMetrics,
+}
+
+impl<T> ShardedBatchQueue<T> {
+    pub fn new(num_shards: usize) -> Self {
+        let n = num_shards.max(1);
+        Self {
+            shards: (0..n)
+                .map(|_| Shard {
+                    items: Mutex::new(VecDeque::new()),
+                    len: AtomicUsize::new(0),
+                })
+                .collect(),
+            total: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            ticket: AtomicU64::new(0),
+            sleepers: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            metrics: QueueMetrics::default(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total queued items (sum over shards).
+    pub fn len(&self) -> usize {
+        self.total.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn shard_len(&self, shard: usize) -> usize {
+        self.shards[shard].len.load(Ordering::SeqCst)
+    }
+
+    pub fn metrics(&self) -> &QueueMetrics {
+        &self.metrics
+    }
+
+    fn wake_sleepers(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let g = self.gate.lock().unwrap();
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Push one item (power-of-two-choices shard routing).  Returns
+    /// `false` (and counts the rejection) once the queue is closed; the
+    /// closed check is re-done under the shard lock, so after `close()`
+    /// returns no push can slip an item in.
+    pub fn push(&self, item: WorkItem<T>) -> bool {
+        if self.closed.load(Ordering::SeqCst) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let n = self.shards.len();
+        let idx = if n == 1 {
+            0
+        } else {
+            let h = splitmix64(self.ticket.fetch_add(1, Ordering::Relaxed));
+            let a = (h as u32 as usize) % n;
+            let b = ((h >> 32) as usize) % n;
+            let la = self.shards[a].len.load(Ordering::Relaxed);
+            let lb = self.shards[b].len.load(Ordering::Relaxed);
+            if la <= lb {
+                a
+            } else {
+                b
+            }
+        };
+        {
+            let mut g = self.shards[idx].items.lock().unwrap();
+            if self.closed.load(Ordering::SeqCst) {
+                drop(g);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            g.push_back(item);
+            // count while holding the shard lock: a pop (which also
+            // holds it) must never see an item whose increment is still
+            // pending, or len/total could transiently wrap below zero
+            // and close()+drain could miss an accepted item
+            self.shards[idx].len.fetch_add(1, Ordering::SeqCst);
+            self.total.fetch_add(1, Ordering::SeqCst);
+        }
+        self.metrics.pushed.fetch_add(1, Ordering::Relaxed);
+        self.wake_sleepers();
+        true
+    }
+
+    /// Non-blocking batched pop with work stealing: drain `home` first,
+    /// then the other shards in ring order, until `max_batch` items are
+    /// collected or every shard is empty.  Returns an empty vec when
+    /// there is nothing to pop.
+    pub fn try_pop_batch(
+        &self,
+        home: usize,
+        max_batch: usize,
+    ) -> Vec<WorkItem<T>> {
+        let n = self.shards.len();
+        let cap = max_batch.max(1);
+        let mut out = Vec::new();
+        for k in 0..n {
+            let idx = (home + k) % n;
+            let shard = &self.shards[idx];
+            if shard.len.load(Ordering::SeqCst) == 0 {
+                continue;
+            }
+            let mut g = shard.items.lock().unwrap();
+            while out.len() < cap {
+                match g.pop_front() {
+                    Some(it) => {
+                        shard.len.fetch_sub(1, Ordering::SeqCst);
+                        self.total.fetch_sub(1, Ordering::SeqCst);
+                        out.push(it);
+                    }
+                    None => break,
+                }
+            }
+            drop(g);
+            if out.len() >= cap {
+                break;
+            }
+        }
+        if !out.is_empty() {
+            self.metrics.popped.fetch_add(out.len() as u64, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Blocking batched pop (steals like `try_pop_batch`).  Returns
+    /// `None` once the queue is closed and fully drained.
+    pub fn pop_batch(
+        &self,
+        home: usize,
+        max_batch: usize,
+    ) -> Option<Vec<WorkItem<T>>> {
+        loop {
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            let seen = self.epoch.load(Ordering::SeqCst);
+            let out = self.try_pop_batch(home, max_batch);
+            if !out.is_empty() {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return Some(out);
+            }
+            if self.closed.load(Ordering::SeqCst)
+                && self.total.load(Ordering::SeqCst) == 0
+            {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return None;
+            }
+            {
+                let mut g = self.gate.lock().unwrap();
+                while self.epoch.load(Ordering::SeqCst) == seen {
+                    let (ng, res) = self
+                        .cv
+                        .wait_timeout(g, Duration::from_millis(50))
+                        .unwrap();
+                    g = ng;
+                    if res.timed_out() {
+                        // safety tick: re-scan even without a wakeup so a
+                        // raced drain/close can never strand this waiter
+                        break;
+                    }
+                }
+            }
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Close the queue: later pushes are rejected, consumers drain the
+    /// remaining items and then get `None`.  Serialises with in-flight
+    /// pushes (every shard lock is taken once), so after `close()`
+    /// returns the item set is final.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for s in &self.shards {
+            drop(s.items.lock().unwrap());
+        }
+        let g = self.gate.lock().unwrap();
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        drop(g);
+        self.cv.notify_all();
+    }
 }
 
 #[cfg(test)]
@@ -171,7 +468,7 @@ mod tests {
     fn greedy_batching() {
         let q = BatchQueue::new();
         for i in 0..5 {
-            q.push(item(i as f32));
+            assert!(q.push(item(i as f32)));
         }
         let b = q.pop_batch(4).unwrap();
         assert_eq!(b.len(), 4);
@@ -180,15 +477,18 @@ mod tests {
     }
 
     #[test]
-    fn close_drains_then_none() {
+    fn close_drains_then_none_and_counts_rejections() {
         let q = BatchQueue::new();
-        q.push(item(1.0));
+        assert!(q.push(item(1.0)));
         q.close();
         assert_eq!(q.pop_batch(8).unwrap().len(), 1);
         assert!(q.pop_batch(8).is_none());
-        // pushes after close are dropped
-        q.push(item(2.0));
+        // pushes after close are rejected, not silently dropped
+        assert!(!q.push(item(2.0)));
         assert!(q.pop_batch(8).is_none());
+        assert_eq!(q.metrics().pushed(), 1);
+        assert_eq!(q.metrics().popped(), 1);
+        assert_eq!(q.metrics().rejected(), 1);
     }
 
     #[test]
@@ -230,5 +530,80 @@ mod tests {
         }
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn sharded_pops_each_item_exactly_once() {
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(8);
+        for i in 0..100 {
+            assert!(q.push(item(i as f32)));
+        }
+        assert_eq!(q.len(), 100);
+        let mut got = Vec::new();
+        loop {
+            let b = q.try_pop_batch(3, 7);
+            if b.is_empty() {
+                break;
+            }
+            assert!(b.len() <= 7);
+            got.extend(b.into_iter().map(|w| w.ctx));
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<u32>>());
+        assert!(q.is_empty());
+        assert_eq!(q.metrics().pushed(), 100);
+        assert_eq!(q.metrics().popped(), 100);
+    }
+
+    #[test]
+    fn sharded_steals_to_fill_a_batch() {
+        // p2c routing spreads 32 items over 8 shards; a single pop from
+        // home shard 0 must steal across all of them
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(8);
+        for i in 0..32 {
+            q.push(item(i as f32));
+        }
+        let b = q.try_pop_batch(0, 32);
+        assert_eq!(b.len(), 32);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sharded_close_rejects_and_counts() {
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(4);
+        assert!(q.push(item(1.0)));
+        q.close();
+        assert!(!q.push(item(2.0)));
+        assert_eq!(q.metrics().rejected(), 1);
+        // drains remaining, then None
+        assert_eq!(q.pop_batch(0, 8).unwrap().len(), 1);
+        assert!(q.pop_batch(0, 8).is_none());
+        assert_eq!(q.metrics().pushed(), 1);
+        assert_eq!(q.metrics().popped(), 1);
+    }
+
+    #[test]
+    fn sharded_blocking_pop_wakes_on_push() {
+        let q = Arc::new(ShardedBatchQueue::new(4));
+        let q2 = q.clone();
+        let h =
+            std::thread::spawn(move || q2.pop_batch(1, 2).unwrap().len());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(item(1.0));
+        assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn sharded_routing_balances_shards() {
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(4);
+        for i in 0..400 {
+            q.push(item(i as f32));
+        }
+        // power-of-two-choices keeps the max/min spread tight
+        let lens: Vec<usize> = (0..4).map(|s| q.shard_len(s)).collect();
+        let (min, max) =
+            (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        assert!(max - min <= 20, "unbalanced shards: {lens:?}");
+        assert_eq!(lens.iter().sum::<usize>(), 400);
     }
 }

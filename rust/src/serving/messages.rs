@@ -44,6 +44,27 @@ pub struct Response {
     pub output: Vec<f32>,
 }
 
+impl Response {
+    /// A drop/rejection notice: `dropped` set, no output payload.  Used
+    /// by the balancer (unknown client, SLO-hopeless request) and the
+    /// executor error path.
+    pub fn drop_notice(
+        client_id: u32,
+        seq: u32,
+        server_ms: f64,
+        e2e_ms: f64,
+    ) -> Response {
+        Response {
+            client_id,
+            seq,
+            server_ms,
+            e2e_ms,
+            dropped: true,
+            output: Vec::new(),
+        }
+    }
+}
+
 const REQ_MAGIC: u32 = 0x47524654; // "GRFT"
 const RESP_MAGIC: u32 = 0x47525350; // "GRSP"
 
@@ -231,6 +252,13 @@ mod tests {
         enc = req().encode();
         enc.truncate(enc.len() - 2);
         assert!(Request::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn drop_notice_roundtrips() {
+        let d = Response::drop_notice(3, 9, 1.5, 20.5);
+        assert!(d.dropped && d.output.is_empty());
+        assert_eq!(Response::decode(&d.encode()).unwrap(), d);
     }
 
     #[test]

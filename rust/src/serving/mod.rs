@@ -1,16 +1,18 @@
 //! Serving data path: request/response wire protocol, shared batch
-//! queues, the instance executor materialising execution plans, and the
-//! TCP front-end.  Python never appears here — instances run AOT
-//! artifacts through [`crate::runtime::Engine`].
+//! queues (single-lock reference + per-instance sharded), the executor
+//! materialising execution plans (thread-per-instance or pooled event
+//! loop), and the TCP front-end.  Python never appears here — instances
+//! run AOT artifacts through [`crate::runtime::Engine`].
 
 pub mod batcher;
 pub mod messages;
 pub mod server;
 pub mod tcp;
 
-pub use batcher::{BatchQueue, WorkItem};
+pub use batcher::{BatchQueue, QueueMetrics, ShardedBatchQueue, WorkItem};
 pub use messages::{read_frame, write_frame, Request, Response};
 pub use server::{
-    FragmentExecutor, MockExecutor, Server, ServerCounters, ServerOptions,
+    ExecutorMode, FragmentExecutor, MockExecutor, Server, ServerCounters,
+    ServerOptions,
 };
 pub use tcp::{TcpClient, TcpFront};

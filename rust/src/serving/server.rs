@@ -1,28 +1,42 @@
 //! The serving executor + load balancer (paper §3 "executor").
 //!
-//! Materialises an [`ExecutionPlan`]: one [`BatchQueue`] per provisioned
-//! stage, `alloc.instances` worker threads per stage (the paper's DNN
-//! instances, one process each), alignment stages chained into the
-//! shared stage (the paper pipes tensors between fragments over unix
-//! sockets; we use in-process queues).  The load balancer routes each
-//! client to its stage and drops requests that can no longer meet their
-//! SLO (§3).
+//! Materialises an [`ExecutionPlan`]: one batch queue per provisioned
+//! stage, the paper's DNN instances consuming from it, alignment stages
+//! chained into the shared stage (the paper pipes tensors between
+//! fragments over unix sockets; we use in-process queues).  The load
+//! balancer routes each client to its stage and drops requests that can
+//! no longer meet their SLO (§3).
+//!
+//! Two executors materialise the same plan ([`ExecutorMode`]):
+//!
+//! * **`Threads`** — the reference path: one OS thread per planned
+//!   instance blocking on a shared [`BatchQueue`] per stage.  Simple,
+//!   but a 10k-client plan implies thousands of threads contending on a
+//!   handful of stage mutexes.
+//! * **`Pool`** (default) — an event-loop worker pool: `min(num_cpus,
+//!   total_instances)` workers drive every *instance slot* of every
+//!   stage.  Each stage owns a [`ShardedBatchQueue`] (one shard per
+//!   instance, power-of-two-choices push routing, work-stealing pop),
+//!   and pacing no longer sleeps a thread: a paced batch is parked in a
+//!   deadline wheel and the worker immediately steals other ready work.
 //!
 //! Instances execute the *real* AOT-compiled fragment on PJRT, then pace
 //! to the modeled MPS latency of their (batch, share) configuration —
 //! CPU wall-clock says nothing about GPU shares, so pacing is what makes
 //! queueing/batching dynamics faithful (`time_scale` scales modeled GPU
 //! milliseconds to wall milliseconds; 0 disables pacing for tests).
+//! Both modes produce the same response multiset for the same workload;
+//! the concurrency test suite asserts it.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::{BatchQueue, WorkItem};
+use super::batcher::{BatchQueue, ShardedBatchQueue, WorkItem};
 use super::messages::{Request, Response};
 use crate::coordinator::plan::ExecutionPlan;
 use crate::profiler::{Alloc, CostModel, FragmentId};
@@ -80,6 +94,16 @@ impl FragmentExecutor for MockExecutor {
     }
 }
 
+/// Which serving core materialises the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorMode {
+    /// One OS thread per planned instance (the reference path).
+    Threads,
+    /// Event-loop worker pool over sharded queues + deadline wheel.
+    #[default]
+    Pool,
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct ServerOptions {
     /// Wall-clock milliseconds per modeled GPU millisecond (1.0 = real
@@ -87,11 +111,17 @@ pub struct ServerOptions {
     pub time_scale: f64,
     /// Drop requests that can no longer meet their SLO (paper §3).
     pub drop_on_slo: bool,
+    /// Executor implementation (pooled by default).
+    pub mode: ExecutorMode,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        Self { time_scale: 1.0, drop_on_slo: true }
+        Self {
+            time_scale: 1.0,
+            drop_on_slo: true,
+            mode: ExecutorMode::default(),
+        }
     }
 }
 
@@ -103,14 +133,75 @@ struct Ctx {
     reply: mpsc::Sender<Response>,
 }
 
+/// A stage's queue: single-lock reference queue (Threads mode) or
+/// per-instance shards (Pool mode).
+enum StageQueue {
+    Single(BatchQueue<Ctx>),
+    Sharded(ShardedBatchQueue<Ctx>),
+}
+
+impl StageQueue {
+    fn push(&self, item: WorkItem<Ctx>) -> bool {
+        match self {
+            StageQueue::Single(q) => q.push(item),
+            StageQueue::Sharded(q) => q.push(item),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            StageQueue::Single(q) => q.len(),
+            StageQueue::Sharded(q) => q.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn close(&self) {
+        match self {
+            StageQueue::Single(q) => q.close(),
+            StageQueue::Sharded(q) => q.close(),
+        }
+    }
+
+    fn rejected(&self) -> u64 {
+        match self {
+            StageQueue::Single(q) => q.metrics().rejected(),
+            StageQueue::Sharded(q) => q.metrics().rejected(),
+        }
+    }
+}
+
 struct Stage {
-    queue: BatchQueue<Ctx>,
+    queue: StageQueue,
     frag: FragmentId,
     model_name: String,
     alloc: Alloc,
     /// Index of the downstream (shared) stage, if this is an alignment
     /// stage.
     next: Option<usize>,
+    /// Pool mode: whether one of this stage's slots is currently in the
+    /// batch-formation window.  Gates Free→Forming so a sub-batch
+    /// backlog parks one FormCheck per stage, not one per instance.
+    forming: AtomicBool,
+}
+
+impl Stage {
+    /// Batch-formation window: the plan's throughput assumes batches of
+    /// `alloc.batch`; greedy pop-1 under-delivers by the amortisation
+    /// factor.  Waiting up to one planned execution time stays within
+    /// the §4.3 worst-case-queueing envelope.
+    fn window(&self, opts: ServerOptions) -> Duration {
+        if opts.time_scale > 0.0 && self.alloc.batch > 1 {
+            Duration::from_secs_f64(
+                self.alloc.latency_ms * opts.time_scale / 1e3,
+            )
+        } else {
+            Duration::ZERO
+        }
+    }
 }
 
 /// Serving statistics counters.
@@ -123,6 +214,9 @@ pub struct ServerCounters {
     /// Served requests whose server time exceeded their budget (should
     /// stay near zero: the balancer drops hopeless requests instead).
     pub budget_violations: AtomicU64,
+    /// Work items refused by a closed queue (shutdown races); mirrors
+    /// the per-queue `QueueMetrics::rejected` counters.
+    pub rejected: AtomicU64,
 }
 
 /// The running server.
@@ -130,73 +224,129 @@ pub struct Server {
     stages: Arc<Vec<Stage>>,
     routes: HashMap<u32, usize>,
     handles: Vec<JoinHandle<()>>,
+    pool: Option<Arc<PoolShared>>,
     pub counters: Arc<ServerCounters>,
 }
 
 impl Server {
-    /// Spawn the instances for `plan` and return the running server.
+    /// Spawn the executor for `plan` and return the running server.
     pub fn start(
         executor: Arc<dyn FragmentExecutor>,
         cm: &CostModel,
         plan: &ExecutionPlan,
         opts: ServerOptions,
     ) -> Server {
-        let mut stages: Vec<Stage> = Vec::new();
-        let mut routes = HashMap::new();
-
-        for set in &plan.sets {
-            let model_name = cm.config().models[set.model].name.clone();
-            let shared_idx = stages.len();
-            stages.push(Stage {
-                queue: BatchQueue::new(),
-                frag: set.shared.frag,
-                model_name: model_name.clone(),
-                alloc: set.shared.alloc,
-                next: None,
-            });
-            for m in &set.members {
-                let entry = match &m.align {
-                    Some(a) => {
-                        let idx = stages.len();
-                        stages.push(Stage {
-                            queue: BatchQueue::new(),
-                            frag: a.frag,
-                            model_name: model_name.clone(),
-                            alloc: a.alloc,
-                            next: Some(shared_idx),
-                        });
-                        idx
-                    }
-                    None => shared_idx,
-                };
-                for c in &m.spec.clients {
-                    routes.insert(c.0, entry);
-                }
-            }
-        }
-
+        let sharded = opts.mode == ExecutorMode::Pool;
+        let (stages, routes) = build_stages(cm, plan, sharded);
         let stages = Arc::new(stages);
         let counters = Arc::new(ServerCounters::default());
+        match opts.mode {
+            ExecutorMode::Threads => Self::start_threads(
+                executor, cm, opts, stages, routes, counters,
+            ),
+            ExecutorMode::Pool => {
+                Self::start_pool(executor, cm, opts, stages, routes, counters)
+            }
+        }
+    }
+
+    fn start_threads(
+        executor: Arc<dyn FragmentExecutor>,
+        cm: &CostModel,
+        opts: ServerOptions,
+        stages: Arc<Vec<Stage>>,
+        routes: HashMap<u32, usize>,
+        counters: Arc<ServerCounters>,
+    ) -> Server {
         let mut handles = Vec::new();
         for (idx, stage) in stages.iter().enumerate() {
-            for _ in 0..stage.alloc.instances {
+            for inst in 0..stage.alloc.instances {
                 let stages = stages.clone();
                 let executor = executor.clone();
                 let cm = cm.clone();
                 let counters = counters.clone();
-                handles.push(std::thread::spawn(move || {
-                    instance_loop(idx, &stages, &*executor, &cm, opts, &counters)
-                }));
+                let h = std::thread::Builder::new()
+                    .name(format!("graft-inst-{idx}.{inst}"))
+                    // modest stacks keep thread-per-instance viable as a
+                    // reference/bench baseline at large plans
+                    .stack_size(1 << 20)
+                    .spawn(move || {
+                        let env = ExecEnv {
+                            stages: stages.as_slice(),
+                            executor: &*executor,
+                            cm: &cm,
+                            opts,
+                            counters: &counters,
+                            notify: None,
+                        };
+                        instance_loop(idx, &env);
+                    })
+                    .expect("spawn instance thread");
+                handles.push(h);
             }
         }
-        Server { stages, routes, handles, counters }
+        Server { stages, routes, handles, pool: None, counters }
+    }
+
+    fn start_pool(
+        executor: Arc<dyn FragmentExecutor>,
+        cm: &CostModel,
+        opts: ServerOptions,
+        stages: Arc<Vec<Stage>>,
+        routes: HashMap<u32, usize>,
+        counters: Arc<ServerCounters>,
+    ) -> Server {
+        let mut slots = Vec::new();
+        for (idx, stage) in stages.iter().enumerate() {
+            for shard in 0..stage.alloc.instances.max(1) as usize {
+                slots.push(Slot {
+                    stage: idx,
+                    shard,
+                    state: Mutex::new(SlotState::Free),
+                });
+            }
+        }
+        let n_slots = slots.len();
+        let workers = num_cpus().min(n_slots).max(1);
+        let pool = Arc::new(PoolShared {
+            stages: stages.clone(),
+            slots,
+            wheel: DeadlineWheel::default(),
+            notifier: Notifier::default(),
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let pool = pool.clone();
+            let executor = executor.clone();
+            let cm = cm.clone();
+            let counters = counters.clone();
+            let cursor = if n_slots == 0 { 0 } else { w * n_slots / workers };
+            let h = std::thread::Builder::new()
+                .name(format!("graft-pool-{w}"))
+                .spawn(move || {
+                    let env = ExecEnv {
+                        stages: pool.stages.as_slice(),
+                        executor: &*executor,
+                        cm: &cm,
+                        opts,
+                        counters: &counters,
+                        notify: Some(&pool.notifier),
+                    };
+                    pool_worker(&pool, &env, cursor);
+                })
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        Server { stages, routes, handles, pool: Some(pool), counters }
     }
 
     /// Submit a request; the response arrives on `reply`.
     pub fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
         match self.routes.get(&req.client_id) {
             Some(&idx) => {
-                self.stages[idx].queue.push(WorkItem {
+                let accepted = self.stages[idx].queue.push(WorkItem {
                     payload: req.payload,
                     server_arrival: Instant::now(),
                     budget_ms: req.budget_ms,
@@ -208,17 +358,22 @@ impl Server {
                         reply,
                     },
                 });
+                if accepted {
+                    if let Some(p) = &self.pool {
+                        p.notifier.notify();
+                    }
+                } else {
+                    self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                }
             }
             None => {
                 // unknown client: the balancer rejects outright
-                let _ = reply.send(Response {
-                    client_id: req.client_id,
-                    seq: req.seq,
-                    server_ms: 0.0,
-                    e2e_ms: req.upstream_ms,
-                    dropped: true,
-                    output: Vec::new(),
-                });
+                let _ = reply.send(Response::drop_notice(
+                    req.client_id,
+                    req.seq,
+                    0.0,
+                    req.upstream_ms,
+                ));
             }
         }
     }
@@ -232,15 +387,99 @@ impl Server {
         self.stages.iter().map(|s| s.queue.len()).collect()
     }
 
-    /// Close all queues and join the instance threads.
+    /// Work items rejected by closed stage queues (summed per queue).
+    pub fn queue_rejections(&self) -> u64 {
+        self.stages.iter().map(|s| s.queue.rejected()).sum()
+    }
+
+    /// Executor threads backing this server (instances or pool workers).
+    pub fn thread_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Close all queues and join the executor threads.
     pub fn shutdown(mut self) {
         for s in self.stages.iter() {
             s.queue.close();
+        }
+        if let Some(p) = &self.pool {
+            p.shutdown.store(true, Ordering::SeqCst);
+            p.notifier.force_notify();
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
+}
+
+fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Build the stage vector + client routing table for `plan`.
+fn build_stages(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    sharded: bool,
+) -> (Vec<Stage>, HashMap<u32, usize>) {
+    let new_queue = |alloc: &Alloc| {
+        if sharded {
+            StageQueue::Sharded(ShardedBatchQueue::new(
+                alloc.instances.max(1) as usize,
+            ))
+        } else {
+            StageQueue::Single(BatchQueue::new())
+        }
+    };
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut routes = HashMap::new();
+    for set in &plan.sets {
+        let model_name = cm.config().models[set.model].name.clone();
+        let shared_idx = stages.len();
+        stages.push(Stage {
+            queue: new_queue(&set.shared.alloc),
+            frag: set.shared.frag,
+            model_name: model_name.clone(),
+            alloc: set.shared.alloc,
+            next: None,
+            forming: AtomicBool::new(false),
+        });
+        for m in &set.members {
+            let entry = match &m.align {
+                Some(a) => {
+                    let idx = stages.len();
+                    stages.push(Stage {
+                        queue: new_queue(&a.alloc),
+                        frag: a.frag,
+                        model_name: model_name.clone(),
+                        alloc: a.alloc,
+                        next: Some(shared_idx),
+                        forming: AtomicBool::new(false),
+                    });
+                    idx
+                }
+                None => shared_idx,
+            };
+            for c in &m.spec.clients {
+                routes.insert(c.0, entry);
+            }
+        }
+    }
+    (stages, routes)
+}
+
+/// Everything a batch needs besides the batch itself; shared by the
+/// thread-per-instance loop and the pool workers so both paths run the
+/// exact same SLO-drop / execute / deliver logic.
+struct ExecEnv<'a> {
+    stages: &'a [Stage],
+    executor: &'a dyn FragmentExecutor,
+    cm: &'a CostModel,
+    opts: ServerOptions,
+    counters: &'a ServerCounters,
+    /// Pool notifier for inter-stage forwards (None in Threads mode:
+    /// the BatchQueue condvar wakes the consumer directly).
+    notify: Option<&'a Notifier>,
 }
 
 /// Round a formed batch up to the nearest compiled bucket.
@@ -253,104 +492,197 @@ fn bucket_for(cm: &CostModel, n: usize) -> u32 {
         .unwrap_or(*buckets.last().unwrap())
 }
 
-fn instance_loop(
-    stage_idx: usize,
-    stages: &[Stage],
-    executor: &dyn FragmentExecutor,
-    cm: &CostModel,
-    opts: ServerOptions,
-    counters: &ServerCounters,
+/// SLO-drop: discard items that cannot finish in time even if executed
+/// right now (paper: the balancer drops SLO misses).  Sends the drop
+/// notices and returns the surviving items.
+fn slo_filter(
+    env: &ExecEnv<'_>,
+    stage: &Stage,
+    batch: Vec<WorkItem<Ctx>>,
+) -> Vec<WorkItem<Ctx>> {
+    let exec_ms_probe = env.cm.latency_ms(
+        stage.frag,
+        bucket_for(env.cm, batch.len()),
+        stage.alloc.share,
+    );
+    let mut live: Vec<WorkItem<Ctx>> = Vec::with_capacity(batch.len());
+    for item in batch {
+        let elapsed = item.server_arrival.elapsed().as_secs_f64() * 1e3;
+        // pacing-sleep overshoot + scheduling noise margin: serve a
+        // request that would finish marginally late and it becomes an
+        // SLO violation instead of a clean drop
+        const NOISE_MARGIN_MS: f64 = 3.0;
+        // With pacing, wall-clock elapsed already contains earlier
+        // stages' (paced) execution — adding accumulated_ms would
+        // double-count it; without pacing, modeled time is all there is.
+        let so_far = if env.opts.time_scale > 0.0 {
+            scaled_elapsed(elapsed, env.opts)
+        } else {
+            item.accumulated_ms
+        };
+        let projected = so_far
+            + exec_ms_probe
+            + remaining_ms(stage, env.stages, exec_ms_probe)
+            + NOISE_MARGIN_MS;
+        if env.opts.drop_on_slo && projected > item.budget_ms {
+            env.counters.dropped.fetch_add(1, Ordering::Relaxed);
+            let upstream = item.ctx.upstream_ms;
+            let _ = item.ctx.reply.send(Response::drop_notice(
+                item.ctx.client_id,
+                item.ctx.seq,
+                so_far,
+                upstream + so_far,
+            ));
+            continue;
+        }
+        live.push(item);
+    }
+    live
+}
+
+/// Run the fragment on the executor backend; returns the raw result and
+/// the modeled MPS latency of this (batch, share) configuration.
+fn execute_batch(
+    env: &ExecEnv<'_>,
+    stage: &Stage,
+    live: &[WorkItem<Ctx>],
+) -> (Result<ExecOutput>, f64) {
+    let rows: Vec<Vec<f32>> = live.iter().map(|i| i.payload.clone()).collect();
+    let exec_ms = env.cm.latency_ms(
+        stage.frag,
+        bucket_for(env.cm, rows.len()),
+        stage.alloc.share,
+    );
+    let out = env.executor.execute(
+        &stage.model_name,
+        stage.frag.start,
+        stage.frag.end,
+        &rows,
+    );
+    env.counters.batches.fetch_add(1, Ordering::Relaxed);
+    env.counters
+        .batched_requests
+        .fetch_add(rows.len() as u64, Ordering::Relaxed);
+    (out, exec_ms)
+}
+
+/// Deliver an executed batch: forward alignment output downstream or
+/// send the final responses.  Shared by both executor modes.
+fn deliver(
+    env: &ExecEnv<'_>,
+    stage: &Stage,
+    live: Vec<WorkItem<Ctx>>,
+    out: Result<ExecOutput>,
+    exec_ms: f64,
 ) {
-    let stage = &stages[stage_idx];
-    // Batch-formation window: the plan's throughput assumes batches of
-    // alloc.batch; greedy pop-1 under-delivers by the amortisation factor.
-    // Waiting up to one planned execution time stays within the §4.3
-    // worst-case-queueing envelope.
-    let window = if opts.time_scale > 0.0 && stage.alloc.batch > 1 {
-        std::time::Duration::from_secs_f64(
-            stage.alloc.latency_ms * opts.time_scale / 1e3,
-        )
-    } else {
-        std::time::Duration::ZERO
+    let out = match out {
+        Ok(o) => o,
+        Err(_) => {
+            for item in live {
+                env.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                let upstream = item.ctx.upstream_ms;
+                let _ = item.ctx.reply.send(Response::drop_notice(
+                    item.ctx.client_id,
+                    item.ctx.seq,
+                    0.0,
+                    upstream,
+                ));
+            }
+            return;
+        }
+    };
+    let mut forwarded = false;
+    for (i, item) in live.into_iter().enumerate() {
+        let row = out.data[i * out.dim_out..(i + 1) * out.dim_out].to_vec();
+        let acc = item.accumulated_ms + exec_ms;
+        match stage.next {
+            Some(next) => {
+                let accepted = env.stages[next].queue.push(WorkItem {
+                    payload: row,
+                    server_arrival: item.server_arrival,
+                    budget_ms: item.budget_ms,
+                    accumulated_ms: acc,
+                    ctx: item.ctx,
+                });
+                if accepted {
+                    forwarded = true;
+                } else {
+                    env.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            None => {
+                let elapsed =
+                    item.server_arrival.elapsed().as_secs_f64() * 1e3;
+                // with pacing, wall time already covers exec; without,
+                // report modeled time
+                let server_ms = if env.opts.time_scale > 0.0 {
+                    scaled_elapsed(elapsed, env.opts)
+                } else {
+                    acc
+                };
+                env.counters.served.fetch_add(1, Ordering::Relaxed);
+                if server_ms > item.budget_ms {
+                    env.counters
+                        .budget_violations
+                        .fetch_add(1, Ordering::Relaxed);
+                    if std::env::var_os("GRAFT_DEBUG_EXEC").is_some() {
+                        eprintln!(
+                            "[violation] client {} server {:.1} > budget {:.1} (exec {:.1}, batch {})",
+                            item.ctx.client_id,
+                            server_ms,
+                            item.budget_ms,
+                            exec_ms,
+                            out.batch
+                        );
+                    }
+                }
+                let _ = item.ctx.reply.send(Response {
+                    client_id: item.ctx.client_id,
+                    seq: item.ctx.seq,
+                    server_ms,
+                    e2e_ms: item.ctx.upstream_ms + server_ms,
+                    dropped: false,
+                    output: row,
+                });
+            }
+        }
+    }
+    if forwarded {
+        if let Some(n) = env.notify {
+            n.notify();
+        }
+    }
+}
+
+/// Thread-per-instance executor loop (ExecutorMode::Threads).
+fn instance_loop(stage_idx: usize, env: &ExecEnv<'_>) {
+    let stage = &env.stages[stage_idx];
+    let window = stage.window(env.opts);
+    let queue = match &stage.queue {
+        StageQueue::Single(q) => q,
+        StageQueue::Sharded(_) => {
+            unreachable!("Threads mode uses the single reference queue")
+        }
     };
     loop {
         let batch = if window.is_zero() {
-            stage.queue.pop_batch(stage.alloc.batch as usize)
+            queue.pop_batch(stage.alloc.batch as usize)
         } else {
-            stage
-                .queue
-                .pop_batch_window(stage.alloc.batch as usize, window)
+            queue.pop_batch_window(stage.alloc.batch as usize, window)
         };
         let Some(batch) = batch else { break };
         if batch.is_empty() {
             continue;
         }
-        // SLO-drop: discard items that cannot finish in time even if
-        // executed right now (paper: the balancer drops SLO misses).
-        let exec_ms_probe = cm.latency_ms(
-            stage.frag,
-            bucket_for(cm, batch.len()),
-            stage.alloc.share,
-        );
-        let mut live: Vec<WorkItem<Ctx>> = Vec::with_capacity(batch.len());
-        for item in batch {
-            let elapsed =
-                item.server_arrival.elapsed().as_secs_f64() * 1e3;
-            // pacing-sleep overshoot + scheduling noise margin: serve a
-            // request that would finish marginally late and it becomes an
-            // SLO violation instead of a clean drop
-            const NOISE_MARGIN_MS: f64 = 3.0;
-            // With pacing, wall-clock elapsed already contains earlier
-            // stages' (paced) execution — adding accumulated_ms would
-            // double-count it; without pacing, modeled time is all there is.
-            let so_far = if opts.time_scale > 0.0 {
-                scaled_elapsed(elapsed, opts)
-            } else {
-                item.accumulated_ms
-            };
-            let projected = so_far
-                + exec_ms_probe
-                + remaining_ms(stage, stages, exec_ms_probe)
-                + NOISE_MARGIN_MS;
-            if opts.drop_on_slo && projected > item.budget_ms {
-                counters.dropped.fetch_add(1, Ordering::Relaxed);
-                let _ = item.ctx.reply.send(Response {
-                    client_id: item.ctx.client_id,
-                    seq: item.ctx.seq,
-                    server_ms: so_far,
-                    e2e_ms: item.ctx.upstream_ms + so_far,
-                    dropped: true,
-                    output: Vec::new(),
-                });
-                continue;
-            }
-            live.push(item);
-        }
+        let live = slo_filter(env, stage, batch);
         if live.is_empty() {
             continue;
         }
-
-        let rows: Vec<Vec<f32>> =
-            live.iter().map(|i| i.payload.clone()).collect();
-        let exec_ms = cm.latency_ms(
-            stage.frag,
-            bucket_for(cm, rows.len()),
-            stage.alloc.share,
-        );
         let t0 = Instant::now();
-        let out = executor.execute(
-            &stage.model_name,
-            stage.frag.start,
-            stage.frag.end,
-            &rows,
-        );
-        counters.batches.fetch_add(1, Ordering::Relaxed);
-        counters
-            .batched_requests
-            .fetch_add(rows.len() as u64, Ordering::Relaxed);
+        let (out, exec_ms) = execute_batch(env, stage, &live);
         // pace to the modeled MPS latency
-        if opts.time_scale > 0.0 {
-            let target = exec_ms * opts.time_scale / 1e3;
+        if env.opts.time_scale > 0.0 {
+            let target = exec_ms * env.opts.time_scale / 1e3;
             let spent = t0.elapsed().as_secs_f64();
             if std::env::var_os("GRAFT_DEBUG_EXEC").is_some()
                 && spent * 1e3 > exec_ms
@@ -359,86 +691,14 @@ fn instance_loop(
                     "[exec overrun] wall {:.1} ms vs modeled {:.1} ms (batch {})",
                     spent * 1e3,
                     exec_ms,
-                    rows.len()
+                    live.len()
                 );
             }
             if target > spent {
-                std::thread::sleep(std::time::Duration::from_secs_f64(
-                    target - spent,
-                ));
+                std::thread::sleep(Duration::from_secs_f64(target - spent));
             }
         }
-        let out = match out {
-            Ok(o) => o,
-            Err(_) => {
-                for item in live {
-                    counters.dropped.fetch_add(1, Ordering::Relaxed);
-                    let _ = item.ctx.reply.send(Response {
-                        client_id: item.ctx.client_id,
-                        seq: item.ctx.seq,
-                        server_ms: 0.0,
-                        e2e_ms: item.ctx.upstream_ms,
-                        dropped: true,
-                        output: Vec::new(),
-                    });
-                }
-                continue;
-            }
-        };
-
-        for (i, item) in live.into_iter().enumerate() {
-            let row = out.data[i * out.dim_out..(i + 1) * out.dim_out].to_vec();
-            let acc = item.accumulated_ms + exec_ms;
-            match stage.next {
-                Some(next) => {
-                    stages[next].queue.push(WorkItem {
-                        payload: row,
-                        server_arrival: item.server_arrival,
-                        budget_ms: item.budget_ms,
-                        accumulated_ms: acc,
-                        ctx: item.ctx,
-                    });
-                }
-                None => {
-                    let elapsed = item
-                        .server_arrival
-                        .elapsed()
-                        .as_secs_f64()
-                        * 1e3;
-                    // with pacing, wall time already covers exec; without,
-                    // report modeled time
-                    let server_ms = if opts.time_scale > 0.0 {
-                        scaled_elapsed(elapsed, opts)
-                    } else {
-                        acc
-                    };
-                    counters.served.fetch_add(1, Ordering::Relaxed);
-                    if server_ms > item.budget_ms {
-                        counters
-                            .budget_violations
-                            .fetch_add(1, Ordering::Relaxed);
-                        if std::env::var_os("GRAFT_DEBUG_EXEC").is_some() {
-                            eprintln!(
-                                "[violation] client {} server {:.1} > budget {:.1} (exec {:.1}, batch {})",
-                                item.ctx.client_id,
-                                server_ms,
-                                item.budget_ms,
-                                exec_ms,
-                                out.batch
-                            );
-                        }
-                    }
-                    let _ = item.ctx.reply.send(Response {
-                        client_id: item.ctx.client_id,
-                        seq: item.ctx.seq,
-                        server_ms,
-                        e2e_ms: item.ctx.upstream_ms + server_ms,
-                        dropped: false,
-                        output: row,
-                    });
-                }
-            }
-        }
+        deliver(env, stage, live, out, exec_ms);
     }
 }
 
@@ -463,4 +723,395 @@ fn remaining_ms(stage: &Stage, stages: &[Stage], _probe: f64) -> f64 {
         }
         None => 0.0,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Pooled executor (ExecutorMode::Pool)
+// ---------------------------------------------------------------------------
+
+/// Idle-worker wakeup: waiters register in `idle`, wakers bump `seq`
+/// under `gate` — pushes on the hot path skip the lock entirely while
+/// every worker is busy.
+#[derive(Default)]
+struct Notifier {
+    idle: AtomicUsize,
+    seq: AtomicU64,
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Notifier {
+    fn epoch(&self) -> u64 {
+        self.seq.load(Ordering::SeqCst)
+    }
+
+    /// Wake idle workers, if any (cheap no-op while all are busy).
+    fn notify(&self) {
+        if self.idle.load(Ordering::SeqCst) > 0 {
+            self.force_notify();
+        }
+    }
+
+    fn force_notify(&self) {
+        let g = self.gate.lock().unwrap();
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    fn begin_idle(&self) {
+        self.idle.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn end_idle(&self) {
+        self.idle.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Sleep until the epoch moves past `seen` or `timeout` elapses.
+    fn wait(&self, seen: u64, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.gate.lock().unwrap();
+        while self.seq.load(Ordering::SeqCst) == seen {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+}
+
+/// An executed-but-paced batch parked until its modeled completion time.
+struct DoneBatch {
+    live: Vec<WorkItem<Ctx>>,
+    out: Result<ExecOutput>,
+    exec_ms: f64,
+}
+
+enum WheelKind {
+    /// Pacing: the batch's modeled MPS latency elapses at the deadline;
+    /// deliver then and free the instance slot.
+    BatchDone { slot: usize, done: Box<DoneBatch> },
+    /// Batch formation: re-check the slot once its fill window expires.
+    FormCheck { slot: usize },
+}
+
+struct WheelEntry {
+    deadline: Instant,
+    seq: u64,
+    kind: WheelKind,
+}
+
+impl PartialEq for WheelEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for WheelEntry {}
+impl PartialOrd for WheelEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for WheelEntry {
+    /// Reversed on deadline: BinaryHeap is a max-heap, we want the
+    /// earliest deadline on top.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The pool's deadline wheel: pacing completions and batch-formation
+/// timeouts, ordered by deadline.
+#[derive(Default)]
+struct DeadlineWheel {
+    heap: Mutex<BinaryHeap<WheelEntry>>,
+    seq: AtomicU64,
+}
+
+impl DeadlineWheel {
+    fn insert(&self, deadline: Instant, kind: WheelKind) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.heap.lock().unwrap().push(WheelEntry { deadline, seq, kind });
+    }
+
+    fn pop_expired(&self, now: Instant) -> Option<WheelKind> {
+        let mut h = self.heap.lock().unwrap();
+        if h.peek().is_some_and(|e| e.deadline <= now) {
+            h.pop().map(|e| e.kind)
+        } else {
+            None
+        }
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        self.heap.lock().unwrap().peek().map(|e| e.deadline)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.heap.lock().unwrap().is_empty()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum SlotState {
+    /// Ready for a batch.
+    Free,
+    /// First item queued; waiting (until `deadline`) for the batch to
+    /// reach the planned size before firing.
+    Forming { deadline: Instant },
+    /// Executing / pacing a batch (completion parked in the wheel).
+    Busy,
+}
+
+/// One planned DNN instance, schedulable by any pool worker.
+struct Slot {
+    stage: usize,
+    /// Home shard in the stage's sharded queue.
+    shard: usize,
+    state: Mutex<SlotState>,
+}
+
+struct PoolShared {
+    stages: Arc<Vec<Stage>>,
+    slots: Vec<Slot>,
+    wheel: DeadlineWheel,
+    notifier: Notifier,
+    shutdown: AtomicBool,
+    /// Batches popped but not yet delivered (executing or pacing).
+    inflight: AtomicUsize,
+}
+
+impl PoolShared {
+    /// Nothing queued, parked, or in flight — safe to exit on shutdown.
+    fn quiescent(&self) -> bool {
+        self.inflight.load(Ordering::SeqCst) == 0
+            && self.wheel.is_empty()
+            && self.stages.iter().all(|s| s.queue.is_empty())
+    }
+}
+
+/// How long an idle worker sleeps when no wheel deadline is nearer (also
+/// the safety tick bounding any missed-wakeup window).
+const IDLE_TICK: Duration = Duration::from_millis(50);
+
+fn pool_worker(pool: &PoolShared, env: &ExecEnv<'_>, start: usize) {
+    let n_slots = pool.slots.len();
+    let mut cursor = start;
+    loop {
+        let mut progressed = false;
+        // 1. serve expired wheel entries (paced completions first — they
+        // free instance slots for new batches)
+        while let Some(kind) = pool.wheel.pop_expired(Instant::now()) {
+            match kind {
+                WheelKind::BatchDone { slot, done } => {
+                    finish_batch(pool, env, slot, *done);
+                    progressed = true;
+                }
+                WheelKind::FormCheck { slot } => {
+                    progressed |= dispatch_slot(pool, env, slot);
+                }
+            }
+        }
+        // 2. dispatch one batch, scanning slots from a rotating cursor
+        for i in 0..n_slots {
+            let s = (cursor + i) % n_slots;
+            if dispatch_slot(pool, env, s) {
+                cursor = (s + 1) % n_slots;
+                progressed = true;
+                break;
+            }
+        }
+        if progressed {
+            continue;
+        }
+        // 3. idle: register as sleeping, re-check authoritatively (a
+        // waker that saw idle == 0 before our registration is matched by
+        // this re-scan), then park until notified or the next deadline
+        pool.notifier.begin_idle();
+        let seen = pool.notifier.epoch();
+        let now = Instant::now();
+        let rework = pool.wheel.next_deadline().is_some_and(|d| d <= now)
+            || (0..n_slots).any(|s| slot_has_work(pool, s));
+        if !rework {
+            if pool.shutdown.load(Ordering::SeqCst) && pool.quiescent() {
+                pool.notifier.end_idle();
+                pool.notifier.force_notify();
+                break;
+            }
+            let timeout = pool
+                .wheel
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(IDLE_TICK)
+                .min(IDLE_TICK)
+                .max(Duration::from_micros(200));
+            pool.notifier.wait(seen, timeout);
+        }
+        pool.notifier.end_idle();
+    }
+}
+
+/// Cheap dispatchability probe used by the idle-path re-check.
+fn slot_has_work(pool: &PoolShared, slot_idx: usize) -> bool {
+    let slot = &pool.slots[slot_idx];
+    let stage = &pool.stages[slot.stage];
+    let Ok(st) = slot.state.try_lock() else {
+        // contended: its holder is making progress and will notify
+        return false;
+    };
+    match *st {
+        SlotState::Busy => false,
+        // a Free slot has no work while another slot of its stage is
+        // forming a sub-batch (the former's FormCheck covers it) — else
+        // idle workers would busy-spin on the swap-guarded transition
+        SlotState::Free => {
+            !stage.queue.is_empty()
+                && (!stage.forming.load(Ordering::SeqCst)
+                    || stage.queue.len()
+                        >= stage.alloc.batch.max(1) as usize
+                    || pool.shutdown.load(Ordering::SeqCst))
+        }
+        SlotState::Forming { deadline } => {
+            !stage.queue.is_empty()
+                && (stage.queue.len() >= stage.alloc.batch.max(1) as usize
+                    || Instant::now() >= deadline
+                    || pool.shutdown.load(Ordering::SeqCst))
+        }
+    }
+}
+
+/// Try to start (or advance the formation of) a batch on one instance
+/// slot.  Returns true when it made progress.
+fn dispatch_slot(
+    pool: &PoolShared,
+    env: &ExecEnv<'_>,
+    slot_idx: usize,
+) -> bool {
+    let slot = &pool.slots[slot_idx];
+    let stage = &pool.stages[slot.stage];
+    let max_batch = stage.alloc.batch.max(1) as usize;
+    let Ok(mut st) = slot.state.try_lock() else {
+        return false;
+    };
+    let now = Instant::now();
+    let qlen = stage.queue.len();
+    let closing = pool.shutdown.load(Ordering::SeqCst);
+    let was_forming = matches!(*st, SlotState::Forming { .. });
+    let fire = match *st {
+        SlotState::Busy => return false,
+        SlotState::Free => {
+            if qlen == 0 {
+                return false;
+            }
+            let window = stage.window(env.opts);
+            if window.is_zero() || qlen >= max_batch || closing {
+                true
+            } else {
+                // park the batch to fill; a FormCheck wakes us at the
+                // window edge (this replaces pop_batch_window's blocking
+                // wait in the thread executor).  One former per stage:
+                // without the gate every free instance would park its
+                // own FormCheck for the same sub-batch backlog.
+                if stage.forming.swap(true, Ordering::SeqCst) {
+                    return false;
+                }
+                let deadline = now + window;
+                *st = SlotState::Forming { deadline };
+                drop(st);
+                pool.wheel.insert(
+                    deadline,
+                    WheelKind::FormCheck { slot: slot_idx },
+                );
+                pool.notifier.notify();
+                return true;
+            }
+        }
+        SlotState::Forming { deadline } => {
+            if qlen == 0 {
+                // another slot stole the backlog
+                *st = SlotState::Free;
+                stage.forming.store(false, Ordering::SeqCst);
+                return false;
+            }
+            qlen >= max_batch || now >= deadline || closing
+        }
+    };
+    if !fire {
+        return false;
+    }
+    if was_forming {
+        // leaving the formation window (to Busy or back to Free below)
+        stage.forming.store(false, Ordering::SeqCst);
+    }
+    let batch = match &stage.queue {
+        StageQueue::Sharded(q) => q.try_pop_batch(slot.shard, max_batch),
+        StageQueue::Single(_) => {
+            unreachable!("Pool mode uses sharded queues")
+        }
+    };
+    if batch.is_empty() {
+        *st = SlotState::Free;
+        return false;
+    }
+    *st = SlotState::Busy;
+    pool.inflight.fetch_add(1, Ordering::SeqCst);
+    drop(st);
+    run_pool_batch(pool, env, slot_idx, batch);
+    true
+}
+
+/// Execute a popped batch on the calling worker; with pacing the
+/// delivery is parked in the wheel and the worker moves on.
+fn run_pool_batch(
+    pool: &PoolShared,
+    env: &ExecEnv<'_>,
+    slot_idx: usize,
+    batch: Vec<WorkItem<Ctx>>,
+) {
+    let stage = &pool.stages[pool.slots[slot_idx].stage];
+    let live = slo_filter(env, stage, batch);
+    if live.is_empty() {
+        free_slot(pool, slot_idx);
+        return;
+    }
+    let t0 = Instant::now();
+    let (out, exec_ms) = execute_batch(env, stage, &live);
+    if env.opts.time_scale > 0.0 {
+        let target = t0
+            + Duration::from_secs_f64(exec_ms * env.opts.time_scale / 1e3);
+        if Instant::now() < target {
+            pool.wheel.insert(
+                target,
+                WheelKind::BatchDone {
+                    slot: slot_idx,
+                    done: Box::new(DoneBatch { live, out, exec_ms }),
+                },
+            );
+            pool.notifier.notify();
+            return; // slot stays Busy until the wheel fires
+        }
+    }
+    finish_batch(pool, env, slot_idx, DoneBatch { live, out, exec_ms });
+}
+
+fn finish_batch(
+    pool: &PoolShared,
+    env: &ExecEnv<'_>,
+    slot_idx: usize,
+    done: DoneBatch,
+) {
+    let stage = &pool.stages[pool.slots[slot_idx].stage];
+    deliver(env, stage, done.live, done.out, done.exec_ms);
+    free_slot(pool, slot_idx);
+}
+
+fn free_slot(pool: &PoolShared, slot_idx: usize) {
+    *pool.slots[slot_idx].state.lock().unwrap() = SlotState::Free;
+    pool.inflight.fetch_sub(1, Ordering::SeqCst);
+    pool.notifier.notify();
 }

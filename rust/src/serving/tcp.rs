@@ -28,26 +28,40 @@ impl TcpFront {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let accept_handle = std::thread::spawn(move || {
-            let mut conn_handles = Vec::new();
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let server = server.clone();
-                        conn_handles.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, server);
-                        }));
+        let accept_handle = std::thread::Builder::new()
+            .name("graft-accept".into())
+            .spawn(move || {
+                let mut conn_handles = Vec::new();
+                let mut conn_id = 0u64;
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let server = server.clone();
+                            conn_id += 1;
+                            let h = std::thread::Builder::new()
+                                .name(format!("graft-conn-{conn_id}"))
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, server);
+                                })
+                                .expect("spawn connection thread");
+                            conn_handles.push(h);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(2),
+                            );
+                        }
+                        Err(_) => break,
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                    Err(_) => break,
                 }
-            }
-            for h in conn_handles {
-                let _ = h.join();
-            }
-        });
+                for h in conn_handles {
+                    let _ = h.join();
+                }
+            })
+            .expect("spawn acceptor thread");
         Ok(TcpFront { addr: local, stop, accept_handle: Some(accept_handle) })
     }
 
@@ -67,14 +81,22 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>) -> Result<()> {
     let writer = stream;
     let (tx, rx) = mpsc::channel::<Response>();
 
-    let wh = std::thread::spawn(move || -> Result<()> {
-        let mut w = std::io::BufWriter::new(writer);
-        for resp in rx {
-            write_frame(&mut w, &resp.encode())?;
-            w.flush()?;
-        }
-        Ok(())
-    });
+    let wh = std::thread::Builder::new()
+        .name("graft-conn-writer".into())
+        .spawn(move || -> Result<()> {
+            let mut w = std::io::BufWriter::new(writer);
+            // burst-drain: batched stages complete many responses at
+            // once; write the whole burst, then flush a single time
+            while let Ok(resp) = rx.recv() {
+                write_frame(&mut w, &resp.encode())?;
+                while let Ok(more) = rx.try_recv() {
+                    write_frame(&mut w, &more.encode())?;
+                }
+                w.flush()?;
+            }
+            Ok(())
+        })
+        .expect("spawn connection writer");
 
     loop {
         let frame = match read_frame(&mut reader) {

@@ -1,0 +1,85 @@
+//! Helpers shared by the integration/property test binaries (not a test
+//! target itself: lives in `tests/common/`, pulled in via `mod common`).
+#![allow(dead_code)]
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use graft::config::Config;
+use graft::coordinator::repartition::{realign_group, RepartitionOptions};
+use graft::coordinator::{ClientId, ExecutionPlan, FragmentSpec};
+use graft::profiler::CostModel;
+use graft::serving::MockExecutor;
+
+/// Per-test deadlock guard: aborts the whole process (so `cargo test`
+/// fails fast with a message) if the guard is still armed after
+/// `limit`.  Drop disarms it.  This is what gives the concurrency suite
+/// a *per-test* timeout — a deadlocked queue kills the run in seconds
+/// instead of hanging CI until the job-level timeout.
+pub struct Watchdog {
+    armed: Arc<AtomicBool>,
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+}
+
+pub fn watchdog(label: &str, limit: Duration) -> Watchdog {
+    let armed = Arc::new(AtomicBool::new(true));
+    let flag = armed.clone();
+    let label = label.to_string();
+    std::thread::spawn(move || {
+        let deadline = Instant::now() + limit;
+        while flag.load(Ordering::SeqCst) {
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "WATCHDOG: test {label} still running after {limit:?} \
+                     — aborting (likely deadlocked queue/executor)"
+                );
+                std::process::abort();
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    });
+    Watchdog { armed }
+}
+
+pub fn cm() -> CostModel {
+    CostModel::new(Config::embedded())
+}
+
+/// Re-align a small same-model client set into an execution plan
+/// (compiled partition points only, so the plan also runs on PJRT).
+pub fn plan_for(
+    cm: &CostModel,
+    model: &str,
+    specs: &[(u32, usize, f64, f64)],
+) -> ExecutionPlan {
+    let mi = cm.model_index(model).unwrap();
+    let specs: Vec<FragmentSpec> = specs
+        .iter()
+        .map(|&(c, p, t, q)| FragmentSpec::single(ClientId(c), mi, p, t, q))
+        .collect();
+    let points = cm.config().models[mi].points();
+    let plan = realign_group(
+        cm,
+        &specs,
+        &RepartitionOptions { point_set: Some(points), ..Default::default() },
+    );
+    assert!(plan.infeasible.is_empty());
+    plan
+}
+
+pub fn mock_executor(cm: &CostModel) -> Arc<MockExecutor> {
+    let dims: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    Arc::new(MockExecutor { dims })
+}

@@ -2,6 +2,10 @@
 //! offline crate set has no proptest).  Each property runs over many
 //! random cases; failures print the seed for reproduction.
 
+mod common;
+
+use std::time::Duration;
+
 use graft::config::Config;
 use graft::coordinator::grouping::{group_fragments, GroupOptions};
 use graft::coordinator::merging::{merge_fragments, MergeOptions};
@@ -11,7 +15,9 @@ use graft::coordinator::repartition::{
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::coordinator::{ClientId, FragmentSpec};
 use graft::profiler::{AllocConstraints, CostModel};
-use graft::serving::{Request, Response};
+use graft::serving::{
+    BatchQueue, Request, Response, ShardedBatchQueue, WorkItem,
+};
 use graft::util::{Json, Rng};
 
 fn cm() -> CostModel {
@@ -343,6 +349,163 @@ fn prop_json_roundtrip() {
         let re = Json::parse(&v.to_string())
             .unwrap_or_else(|e| panic!("case {case}: {e} on {v}"));
         assert_eq!(v, re, "case {case}");
+    }
+}
+
+/// Minimal queue interface so one harness drives both the sharded queue
+/// under test and the single-lock reference as the oracle.
+trait QueueUnderTest: Sync {
+    fn push_item(&self, item: WorkItem<u32>) -> bool;
+    fn pop_items(
+        &self,
+        home: usize,
+        max_batch: usize,
+    ) -> Option<Vec<WorkItem<u32>>>;
+    fn close_queue(&self);
+    fn rejected(&self) -> u64;
+}
+
+impl QueueUnderTest for ShardedBatchQueue<u32> {
+    fn push_item(&self, item: WorkItem<u32>) -> bool {
+        self.push(item)
+    }
+    fn pop_items(
+        &self,
+        home: usize,
+        max_batch: usize,
+    ) -> Option<Vec<WorkItem<u32>>> {
+        self.pop_batch(home, max_batch)
+    }
+    fn close_queue(&self) {
+        self.close()
+    }
+    fn rejected(&self) -> u64 {
+        self.metrics().rejected()
+    }
+}
+
+impl QueueUnderTest for BatchQueue<u32> {
+    fn push_item(&self, item: WorkItem<u32>) -> bool {
+        self.push(item)
+    }
+    fn pop_items(
+        &self,
+        _home: usize,
+        max_batch: usize,
+    ) -> Option<Vec<WorkItem<u32>>> {
+        self.pop_batch(max_batch)
+    }
+    fn close_queue(&self) {
+        self.close()
+    }
+    fn rejected(&self) -> u64 {
+        self.metrics().rejected()
+    }
+}
+
+fn qitem(v: u32) -> WorkItem<u32> {
+    WorkItem {
+        payload: Vec::new(),
+        server_arrival: std::time::Instant::now(),
+        budget_ms: 1e9,
+        accumulated_ms: 0.0,
+        ctx: v,
+    }
+}
+
+/// N producers push disjoint id ranges while M consumers pop batches
+/// until the queue closes; returns every popped id (unsorted).  Also
+/// asserts the batch-size bound and the rejected-after-close contract.
+fn run_queue<Q: QueueUnderTest>(
+    q: &Q,
+    producers: usize,
+    consumers: usize,
+    per_producer: usize,
+    max_batch: usize,
+) -> Vec<u32> {
+    std::thread::scope(|scope| {
+        let mut consumer_handles = Vec::new();
+        for cid in 0..consumers {
+            consumer_handles.push(scope.spawn(move || {
+                let mut got = Vec::new();
+                while let Some(batch) = q.pop_items(cid, max_batch) {
+                    assert!(
+                        batch.len() <= max_batch.max(1),
+                        "batch {} exceeds max_batch {max_batch}",
+                        batch.len()
+                    );
+                    got.extend(batch.into_iter().map(|w| w.ctx));
+                }
+                got
+            }));
+        }
+        let mut producer_handles = Vec::new();
+        for pid in 0..producers {
+            producer_handles.push(scope.spawn(move || {
+                for i in 0..per_producer {
+                    assert!(q.push_item(qitem((pid * 1_000_000 + i) as u32)));
+                }
+            }));
+        }
+        for h in producer_handles {
+            h.join().expect("producer");
+        }
+        q.close_queue();
+        // the shutdown contract: a late push is rejected and counted,
+        // never silently dropped
+        assert!(!q.push_item(qitem(u32::MAX)));
+        let mut got = Vec::new();
+        for h in consumer_handles {
+            got.extend(h.join().expect("consumer"));
+        }
+        got
+    })
+}
+
+#[test]
+fn prop_sharded_queue_equivalent_to_reference() {
+    let _wd = common::watchdog(
+        "prop_sharded_queue_equivalent_to_reference",
+        Duration::from_secs(180),
+    );
+    for case in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(9000 + case);
+        let shards = 1 + rng.below(8);
+        let producers = 1 + rng.below(4);
+        let consumers = 1 + rng.below(4);
+        let per_producer = 50 + rng.below(250);
+        let max_batch = 1 + rng.below(12);
+
+        let mut expected: Vec<u32> = (0..producers)
+            .flat_map(|p| (0..per_producer).map(move |i| (p * 1_000_000 + i) as u32))
+            .collect();
+        expected.sort_unstable();
+
+        let sharded: ShardedBatchQueue<u32> = ShardedBatchQueue::new(shards);
+        let mut got = run_queue(
+            &sharded, producers, consumers, per_producer, max_batch,
+        );
+        got.sort_unstable();
+        assert_eq!(
+            got, expected,
+            "case {case}: sharded queue lost or duplicated items"
+        );
+        assert_eq!(sharded.rejected(), 1, "case {case}");
+        let n = (producers * per_producer) as u64;
+        assert_eq!(sharded.metrics().pushed(), n, "case {case}");
+        assert_eq!(sharded.metrics().popped(), n, "case {case}");
+
+        // same harness against the single-lock reference as the oracle
+        let reference: BatchQueue<u32> = BatchQueue::new();
+        let mut got_ref = run_queue(
+            &reference, producers, consumers, per_producer, max_batch,
+        );
+        got_ref.sort_unstable();
+        assert_eq!(
+            got, got_ref,
+            "case {case}: sharded diverged from the reference queue"
+        );
+        assert_eq!(reference.rejected(), 1, "case {case}");
     }
 }
 

@@ -1,0 +1,171 @@
+//! Stress: 64 instances × 10k requests through the pooled serving core.
+//!
+//! `#[ignore]`d by default (seconds of wall time, heavy contention);
+//! run via `tools/ci.sh --stress` or
+//! `cargo test --release --test serving_stress -- --ignored`.
+
+mod common;
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use graft::serving::{ExecutorMode, Request, Server, ServerOptions};
+
+use common::{cm, mock_executor, plan_for, watchdog};
+
+const CLIENTS: u32 = 32;
+const PER_CLIENT: u32 = 313; // 32 × 313 = 10 016 requests
+const INSTANCES: u32 = 64;
+
+#[test]
+#[ignore = "stress test: run via tools/ci.sh --stress"]
+fn pooled_path_64_instances_10k_requests() {
+    let _wd = watchdog("serving_stress", Duration::from_secs(300));
+    let cm = cm();
+    let specs: Vec<(u32, usize, f64, f64)> = (0..CLIENTS)
+        .map(|c| (c, 2 + (c as usize % 2), 1e9, 30.0))
+        .collect();
+    let mut plan = plan_for(&cm, "inc", &specs);
+
+    // widen the planned instance counts until the plan provisions
+    // exactly INSTANCES slots (the planner sizes for modeled demand;
+    // the stress test wants maximum slot-level concurrency instead)
+    let mut n_stages = 0u32;
+    for set in &mut plan.sets {
+        set.shared.alloc.instances = 1;
+        n_stages += 1;
+        for a in plan_members(set) {
+            a.instances = 1;
+            n_stages += 1;
+        }
+    }
+    assert!(
+        (1..=INSTANCES).contains(&n_stages),
+        "unexpected stage count {n_stages}"
+    );
+    let mut remaining = INSTANCES - n_stages;
+    'grow: loop {
+        for set in &mut plan.sets {
+            if remaining == 0 {
+                break 'grow;
+            }
+            set.shared.alloc.instances += 1;
+            remaining -= 1;
+            for a in plan_members(set) {
+                if remaining == 0 {
+                    break 'grow;
+                }
+                a.instances += 1;
+                remaining -= 1;
+            }
+        }
+    }
+    let provisioned: u32 =
+        plan.stages().map(|s| s.alloc.instances).sum();
+    assert_eq!(provisioned, INSTANCES);
+
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+        },
+    );
+    let cpus = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4);
+    assert!(
+        server.thread_count() <= cpus.max(1).min(INSTANCES as usize),
+        "pool spawned {} workers",
+        server.thread_count()
+    );
+
+    let mi = cm.model_index("inc").unwrap();
+    let dims = cm.config().models[mi].dims.clone();
+    let total = (CLIENTS * PER_CLIENT) as usize;
+    let (tx, rx) = mpsc::channel();
+    let done = AtomicBool::new(false);
+
+    let (seen, max_depth) = std::thread::scope(|scope| {
+        let server_ref = &server;
+        let done_ref = &done;
+        let collector = scope.spawn(move || {
+            let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(total);
+            for _ in 0..total {
+                let r = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .expect("response lost (queue wedged?)");
+                assert!(!r.dropped, "unexpected drop {}/{}", r.client_id, r.seq);
+                assert!(
+                    seen.insert((r.client_id, r.seq)),
+                    "duplicate response {}/{}",
+                    r.client_id,
+                    r.seq
+                );
+            }
+            seen
+        });
+        let sampler = scope.spawn(move || {
+            let mut max_depth = 0usize;
+            while !done_ref.load(Ordering::SeqCst) {
+                let d: usize = server_ref.queue_depths().iter().sum();
+                max_depth = max_depth.max(d);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            max_depth
+        });
+        for seq in 0..PER_CLIENT {
+            for c in 0..CLIENTS {
+                let p = 2 + (c as usize % 2);
+                server_ref.submit(
+                    Request {
+                        client_id: c,
+                        model: mi as u16,
+                        p: p as u16,
+                        seq,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dims[p]],
+                    },
+                    tx.clone(),
+                );
+            }
+        }
+        drop(tx);
+        let seen = collector.join().expect("collector");
+        done.store(true, Ordering::SeqCst);
+        let max_depth = sampler.join().expect("sampler");
+        (seen, max_depth)
+    });
+
+    // zero lost, zero duplicated
+    assert_eq!(seen.len(), total);
+    // queue lengths stay bounded by the outstanding request count and
+    // fully drain
+    assert!(max_depth <= total, "queue depth {max_depth} > {total}");
+    assert!(server.queue_depths().iter().all(|&d| d == 0));
+    let served =
+        server.counters.served.load(std::sync::atomic::Ordering::Relaxed);
+    let rejected =
+        server.counters.rejected.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(served as usize, total);
+    assert_eq!(rejected, 0);
+    server.shutdown();
+}
+
+/// Mutable access to the align-stage allocs of a set (helper keeping the
+/// instance-widening loops readable).
+fn plan_members(
+    set: &mut graft::coordinator::RealignedSet,
+) -> Vec<&mut graft::profiler::Alloc> {
+    set.members
+        .iter_mut()
+        .filter_map(|m| m.align.as_mut().map(|a| &mut a.alloc))
+        .collect()
+}

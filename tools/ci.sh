@@ -2,19 +2,39 @@
 # CI pipeline: build, test, style gates, and a fast planner-bench smoke
 # run (n=200) that also re-validates cached==uncached plan identity.
 #
-#   tools/ci.sh           full pipeline
-#   tools/ci.sh --fast    build + test only
+#   tools/ci.sh            full pipeline
+#   tools/ci.sh --fast     build + test only
+#   tools/ci.sh --stress   build + the #[ignore]d serving stress test
+#                          (64 instances x 10k requests, pooled executor)
+#
+# Concurrency tests carry in-test watchdogs that abort on deadlock; the
+# `timeout` wrappers here are the outer belt-and-braces so a wedged
+# build can never hang the CI job until the job-level limit.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 FAST=0
+STRESS=0
 [[ "${1:-}" == "--fast" ]] && FAST=1
+[[ "${1:-}" == "--stress" ]] && STRESS=1
 
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+if [[ "$STRESS" == "1" ]]; then
+    echo "== serving stress (64 instances x 10k requests, cap 900s) =="
+    timeout 900 cargo test --release --test serving_stress -- \
+        --ignored --nocapture
+    echo "ci: stress OK"
+    exit 0
+fi
+
+echo "== cargo test -q (cap 1800s) =="
+timeout 1800 cargo test -q
+
+echo "== serving concurrency suite (release, cap 600s) =="
+timeout 600 cargo test --release -q \
+    --test serving_integration --test proptests
 
 if [[ "$FAST" == "1" ]]; then
     echo "ci: fast mode, skipping style gates and bench smoke"
@@ -39,5 +59,10 @@ echo "== bench smoke (n=200) =="
 cargo run --release -p graft -- bench-scheduler \
     --sizes 200 --reps 1 --out target/BENCH_scheduler_smoke.json
 test -s target/BENCH_scheduler_smoke.json
+
+echo "== serving bench smoke (n=100, both executors) =="
+timeout 600 cargo run --release -p graft -- bench-serving \
+    --sizes 100 --requests 2000 --out target/BENCH_serving_smoke.json
+test -s target/BENCH_serving_smoke.json
 
 echo "ci: OK"
