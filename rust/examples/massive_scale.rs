@@ -13,7 +13,6 @@ use graft::coordinator::merging::MergeOptions;
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::experiments::common::random_fragments;
 use graft::profiler::{AllocConstraints, CostModel};
-use graft::sim::pack;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,7 +44,11 @@ fn main() {
     let t0 = Instant::now();
     let (plan, stats) = sched.plan(&frags);
     let graft_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let gpus = pack(&cm, &plan, None).map(|p| p.gpus).unwrap_or(0);
+    // the scheduler stamps its own FFD placement (feedback-tightened
+    // when packing fragments badly); baselines below are packed post-hoc
+    let gpus = plan
+        .placed_gpus()
+        .map_or("nan".to_string(), |g| g.to_string());
     println!(
         "{:<10} {:>12} {:>8} {:>10} {:>10.1}",
         "graft",
@@ -55,8 +58,14 @@ fn main() {
         graft_ms
     );
     println!(
-        "  (merge {} -> {} fragments in {:.1} ms; {} groups)",
-        stats.n_input, stats.n_after_merge, stats.merge_ms, stats.n_groups
+        "  (merge {} -> {} fragments in {:.1} ms; {} groups; \
+         fragmentation {:.1}%, {} feedback rounds)",
+        stats.n_input,
+        stats.n_after_merge,
+        stats.merge_ms,
+        stats.n_groups,
+        stats.fragmentation * 100.0,
+        stats.placement_rounds
     );
 
     type Baseline = fn(
@@ -74,7 +83,9 @@ fn main() {
             "{:<10} {:>12} {:>8} {:>10} {:>10.1}",
             name,
             p.total_share(),
-            pack(&cm, &p, None).map(|x| x.gpus).unwrap_or(0),
+            // unstamped baseline: gpus() runs a fresh FFD placement
+            // ("nan" = some instance cannot fit a single GPU)
+            p.gpus(&cm).map_or("nan".to_string(), |g| g.to_string()),
             p.sets.len(),
             ms
         );

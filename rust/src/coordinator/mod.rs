@@ -7,11 +7,13 @@ pub mod fragment;
 pub mod grouping;
 pub mod merging;
 pub mod optimal;
+pub mod placement;
 pub mod plan;
 pub mod repartition;
 pub mod reuse;
 pub mod scheduler;
 
 pub use fragment::{ClientId, FragmentSpec};
+pub use placement::{place, GpuUsage, Placement, PlacementOptions};
 pub use plan::{ExecutionPlan, MemberPlan, RealignedSet, StagePlan};
 pub use scheduler::{ScheduleStats, Scheduler, SchedulerOptions};

@@ -1,0 +1,355 @@
+//! GPU placement as a first-class planner subsystem (§5.1/§5.3).
+//!
+//! Grown from the offline `sim::cluster::pack` oracle: the same
+//! first-fit-decreasing packing under the per-GPU share cap (≤ 100%)
+//! and memory capacity, but run *inside* `Scheduler::plan`, producing
+//! per-instance GPU assignments that are stamped into the
+//! [`ExecutionPlan`] (`StagePlan::gpus`) and consumed downstream by
+//! the serving executor (GPU-affinity shard→worker mapping), the
+//! deployment manifest and the placement benches.
+//!
+//! When placement fails (an instance that cannot fit any single GPU) or
+//! fragments badly (far more GPUs than the share lower bound), the
+//! scheduler re-enters re-partitioning with tightened per-instance
+//! ceilings ([`crate::profiler::AllocConstraints::max_share`] /
+//! `max_instance_mem_mb`) instead of emitting an unpackable plan — see
+//! `Scheduler::plan`.  `sim::cluster::pack` stays untouched as the
+//! post-hoc reference oracle: property tests assert the integrated
+//! planner never uses more GPUs than FFD-packing the same demand after
+//! the fact, and never violates a cap.
+
+use super::plan::ExecutionPlan;
+use crate::profiler::CostModel;
+
+/// Knobs for the planner-integrated placement pass.
+#[derive(Debug, Clone)]
+pub struct PlacementOptions {
+    /// Run placement inside `Scheduler::plan` (on by default; off gives
+    /// the pre-placement planner for oracle comparisons).
+    pub enabled: bool,
+    /// Hard cluster size; `None` = grow as needed.
+    pub max_gpus: Option<usize>,
+    /// Feedback trigger: the tolerated fraction of placed GPUs in
+    /// excess of the GPU-count lower bound (the larger of the share
+    /// bound `⌈total_share/max_share⌉` and the memory bound
+    /// [`gpus_mem_lower_bound`]) before the scheduler re-enters
+    /// re-partitioning with tightened ceilings.
+    pub frag_threshold: f64,
+    /// Maximum tightening rounds the feedback loop may evaluate.
+    pub max_rounds: usize,
+    /// How much total-share inflation a GPU-saving tightened plan may
+    /// cost: accepted only when `cand_share ≤ round0_share × (1 +
+    /// share_slack)`.  The default 0.0 keeps the planner share-optimal
+    /// (tightening is only accepted when the instance-granularity slack
+    /// makes it free), so share-metric comparisons against baselines
+    /// are unaffected; the capped-resource regime (Fig 17) can trade
+    /// share for GPUs by raising it.  An unplaceable round-0 plan is
+    /// always rescued regardless of slack.
+    pub share_slack: f64,
+}
+
+impl Default for PlacementOptions {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            max_gpus: None,
+            frag_threshold: 0.25,
+            max_rounds: 2,
+            share_slack: 0.0,
+        }
+    }
+}
+
+/// Unused share fraction of a packing: `1 − used / (gpus · max_share)`
+/// (0 for an empty packing).  The single definition shared by the
+/// planner-integrated [`Placement`] and the offline `sim::cluster`
+/// oracle so the two sides of the bench always compare the same metric.
+pub fn share_fragmentation(
+    used_share: u64,
+    gpus: usize,
+    max_share: u32,
+) -> f64 {
+    if gpus == 0 || max_share == 0 {
+        return 0.0;
+    }
+    1.0 - used_share as f64 / (gpus as u64 * max_share as u64) as f64
+}
+
+/// Aggregate load of one GPU.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GpuUsage {
+    pub share: u32,
+    pub mem_mb: f64,
+}
+
+/// A full placement of a plan: per-GPU usage plus per-stage,
+/// per-instance GPU ids in [`ExecutionPlan::stages`] order.
+#[derive(Debug, Clone, Default)]
+pub struct Placement {
+    pub usage: Vec<GpuUsage>,
+    /// `by_stage[stage][instance] = gpu`, stages in plan order.
+    pub by_stage: Vec<Vec<u32>>,
+}
+
+impl Placement {
+    pub fn gpus(&self) -> usize {
+        self.usage.len()
+    }
+
+    /// Unused share fraction across the placed GPUs (0 for an empty
+    /// placement): `1 − used / (gpus · max_share)`.
+    pub fn fragmentation(&self, max_share: u32) -> f64 {
+        let used: u64 = self.usage.iter().map(|u| u.share as u64).sum();
+        share_fragmentation(used, self.usage.len(), max_share)
+    }
+
+    /// Fraction of placed GPUs in excess of a lower bound — the
+    /// feedback-loop trigger metric (0 when packing is bound-tight).
+    pub fn excess_over(&self, lower_bound: usize) -> f64 {
+        if self.usage.is_empty() {
+            return 0.0;
+        }
+        self.usage.len().saturating_sub(lower_bound) as f64
+            / self.usage.len() as f64
+    }
+}
+
+/// Memory-only lower bound on a plan's GPU count: `⌈Σ instance memory
+/// / gpu_mem_mb⌉`.  Complements `ExecutionPlan::gpus_share_lower_bound`
+/// in the feedback trigger: tightening share ceilings can never beat a
+/// memory-bound packing, so excess is measured against the larger of
+/// the two bounds — a memory-bound fleet does not fire futile
+/// tightening rounds on every trigger.
+pub fn gpus_mem_lower_bound(cm: &CostModel, plan: &ExecutionPlan) -> usize {
+    let g = &cm.config().gpu;
+    if g.gpu_mem_mb <= 0.0 {
+        return 0;
+    }
+    let total: f64 = plan
+        .stages()
+        .map(|s| {
+            s.alloc.instances as f64 * cm.instance_mem_mb(s.frag, s.alloc.batch)
+        })
+        .sum();
+    (total / g.gpu_mem_mb).ceil() as usize
+}
+
+/// Placement failure: some instance exceeds a single GPU's capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Unplaceable {
+    /// Index into [`ExecutionPlan::stages`] order.
+    pub stage: usize,
+    pub share: u32,
+    pub mem_mb: f64,
+    /// `true` when the cluster cap (`max_gpus`) is what ran out rather
+    /// than a single GPU's capacity.
+    pub cluster_full: bool,
+}
+
+/// First-fit-decreasing placement of every instance of `plan` under the
+/// configured per-GPU share cap and memory capacity.  Deterministic:
+/// items are ordered by (share desc, memory desc) with stable
+/// tie-breaking on plan order — the same discipline as the
+/// `sim::cluster::pack` oracle, so an untightened plan places onto
+/// exactly the oracle's GPU count.
+pub fn place(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    max_gpus: Option<usize>,
+) -> Result<Placement, Unplaceable> {
+    let g = &cm.config().gpu;
+    // expand stages into placeable items
+    let mut items: Vec<(usize, usize, u32, f64)> = Vec::new();
+    let mut by_stage: Vec<Vec<u32>> = Vec::new();
+    for (si, s) in plan.stages().enumerate() {
+        let mem = cm.instance_mem_mb(s.frag, s.alloc.batch);
+        if s.alloc.share > g.max_share || mem > g.gpu_mem_mb {
+            return Err(Unplaceable {
+                stage: si,
+                share: s.alloc.share,
+                mem_mb: mem,
+                cluster_full: false,
+            });
+        }
+        for inst in 0..s.alloc.instances as usize {
+            items.push((si, inst, s.alloc.share, mem));
+        }
+        by_stage.push(vec![0; s.alloc.instances as usize]);
+    }
+    items.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.total_cmp(&a.3)));
+
+    let mut usage: Vec<GpuUsage> = Vec::new();
+    for (si, inst, share, mem) in items {
+        let slot = usage.iter().position(|u| {
+            u.share + share <= g.max_share && u.mem_mb + mem <= g.gpu_mem_mb
+        });
+        let gpu = match slot {
+            Some(i) => i,
+            None => {
+                if let Some(cap) = max_gpus {
+                    if usage.len() >= cap {
+                        return Err(Unplaceable {
+                            stage: si,
+                            share,
+                            mem_mb: mem,
+                            cluster_full: true,
+                        });
+                    }
+                }
+                usage.push(GpuUsage::default());
+                usage.len() - 1
+            }
+        };
+        usage[gpu].share += share;
+        usage[gpu].mem_mb += mem;
+        by_stage[si][inst] = gpu as u32;
+    }
+    Ok(Placement { usage, by_stage })
+}
+
+/// Stamp a placement's GPU assignments into the plan's stages (the
+/// planner does this once on the winning placement).
+pub fn stamp(plan: &mut ExecutionPlan, placement: &Placement) {
+    for (stage, gpus) in plan.stages_mut().zip(&placement.by_stage) {
+        stage.gpus = gpus.clone();
+    }
+}
+
+/// Verify a stamped plan against the caps: every stage fully placed and
+/// no GPU above `max_share` / `gpu_mem_mb`.  Returns the per-GPU usage
+/// reconstructed from the stamps (test/bench helper).
+pub fn stamped_usage(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+) -> Option<Vec<GpuUsage>> {
+    let n = plan.placed_gpus()?;
+    let mut usage = vec![GpuUsage::default(); n];
+    for s in plan.stages() {
+        let mem = cm.instance_mem_mb(s.frag, s.alloc.batch);
+        for &gpu in &s.gpus {
+            let u = &mut usage[gpu as usize];
+            u.share += s.alloc.share;
+            u.mem_mb += mem;
+        }
+    }
+    Some(usage)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::baselines::gslice;
+    use crate::coordinator::{ClientId, FragmentSpec};
+    use crate::profiler::AllocConstraints;
+    use crate::sim::cluster::pack;
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn plan(cm: &CostModel, n: u32) -> ExecutionPlan {
+        let inc = cm.model_index("inc").unwrap();
+        let specs: Vec<FragmentSpec> = (0..n)
+            .map(|i| FragmentSpec::single(ClientId(i), inc, 3, 100.0, 30.0))
+            .collect();
+        gslice(cm, &specs, &AllocConstraints::default())
+    }
+
+    #[test]
+    fn place_respects_caps_and_covers_every_instance() {
+        let cm = cm();
+        let p = plan(&cm, 12);
+        let placement = place(&cm, &p, None).unwrap();
+        let g = &cm.config().gpu;
+        for u in &placement.usage {
+            assert!(u.share <= g.max_share);
+            assert!(u.mem_mb <= g.gpu_mem_mb);
+        }
+        let stages: Vec<_> = p.stages().collect();
+        assert_eq!(placement.by_stage.len(), stages.len());
+        for (s, gpus) in stages.iter().zip(&placement.by_stage) {
+            assert_eq!(gpus.len(), s.alloc.instances as usize);
+        }
+        // share conservation
+        let placed: u64 =
+            placement.usage.iter().map(|u| u.share as u64).sum();
+        assert_eq!(placed, p.total_share() as u64);
+    }
+
+    #[test]
+    fn place_matches_pack_oracle_gpu_count() {
+        let cm = cm();
+        for n in [1u32, 4, 12, 40] {
+            let p = plan(&cm, n);
+            let ours = place(&cm, &p, None).unwrap();
+            let oracle = pack(&cm, &p, None).unwrap();
+            assert_eq!(ours.gpus(), oracle.gpus, "n={n}");
+            // the plan-level placement-backed count (fallback path for
+            // unstamped plans) agrees too
+            assert_eq!(p.gpus(&cm), Some(oracle.gpus), "n={n}");
+            assert_eq!(
+                ours.fragmentation(cm.config().gpu.max_share),
+                oracle.fragmentation(cm.config().gpu.max_share),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_cap_is_reported() {
+        let cm = cm();
+        let big = plan(&cm, 40);
+        let err = place(&cm, &big, Some(1)).unwrap_err();
+        assert!(err.cluster_full);
+        assert!(place(&cm, &big, None).is_ok());
+    }
+
+    #[test]
+    fn stamping_roundtrips_through_the_plan() {
+        let cm = cm();
+        let mut p = plan(&cm, 12);
+        let placement = place(&cm, &p, None).unwrap();
+        assert_eq!(p.placed_gpus(), None);
+        stamp(&mut p, &placement);
+        assert_eq!(p.placed_gpus(), Some(placement.gpus()));
+        assert_eq!(p.gpus(&cm), Some(placement.gpus()));
+        let usage = stamped_usage(&cm, &p).unwrap();
+        assert_eq!(usage.len(), placement.usage.len());
+        for (a, b) in usage.iter().zip(&placement.usage) {
+            assert_eq!(a.share, b.share);
+            assert!((a.mem_mb - b.mem_mb).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mem_lower_bound_scales_with_demand() {
+        let cm = cm();
+        let small = gpus_mem_lower_bound(&cm, &plan(&cm, 4));
+        let large = gpus_mem_lower_bound(&cm, &plan(&cm, 40));
+        assert!(large >= small);
+        assert_eq!(gpus_mem_lower_bound(&cm, &ExecutionPlan::default()), 0);
+        // never above what a real placement needs
+        let p = plan(&cm, 40);
+        let placed = place(&cm, &p, None).unwrap();
+        assert!(gpus_mem_lower_bound(&cm, &p) <= placed.gpus());
+    }
+
+    #[test]
+    fn fragmentation_and_excess_metrics() {
+        let empty = Placement::default();
+        assert_eq!(empty.fragmentation(100), 0.0);
+        assert_eq!(empty.excess_over(0), 0.0);
+        let p = Placement {
+            usage: vec![
+                GpuUsage { share: 100, mem_mb: 0.0 },
+                GpuUsage { share: 50, mem_mb: 0.0 },
+            ],
+            by_stage: vec![],
+        };
+        assert!((p.fragmentation(100) - 0.25).abs() < 1e-12);
+        assert!((p.excess_over(1) - 0.5).abs() < 1e-12);
+        assert_eq!(p.excess_over(2), 0.0);
+        assert_eq!(p.excess_over(5), 0.0);
+    }
+}

@@ -6,7 +6,7 @@
 //! (layers `p'+1..=L`) that batches all members' requests together.
 
 use super::fragment::FragmentSpec;
-use crate::profiler::{Alloc, FragmentId};
+use crate::profiler::{Alloc, CostModel, FragmentId};
 
 /// One provisioned stage: a fragment with its resource allocation and the
 /// time budget it was sized for.
@@ -17,11 +17,25 @@ pub struct StagePlan {
     pub budget_ms: f64,
     /// Demand this stage was sized for (RPS).
     pub demand_rps: f64,
+    /// Per-instance GPU assignment, one entry per `alloc.instances`,
+    /// stamped by the planner's placement pass
+    /// ([`crate::coordinator::placement`]).  Empty until placed.
+    pub gpus: Vec<u32>,
 }
 
 impl StagePlan {
     pub fn total_share(&self) -> u32 {
         self.alloc.total_share()
+    }
+
+    /// Whether every instance of this stage has a GPU assignment.
+    pub fn is_placed(&self) -> bool {
+        self.gpus.len() == self.alloc.instances as usize
+    }
+
+    /// GPU hosting instance `inst`, if placed.
+    pub fn gpu_of(&self, inst: usize) -> Option<u32> {
+        self.gpus.get(inst).copied()
     }
 }
 
@@ -76,9 +90,37 @@ impl ExecutionPlan {
         self.sets.iter().map(RealignedSet::total_share).sum()
     }
 
-    /// Number of GPUs needed at the configured per-GPU share cap.
-    pub fn gpus(&self, max_share: u32) -> u32 {
+    /// GPUs this plan needs, memory-aware and placement-backed: the
+    /// stamped placement when present, otherwise a fresh first-fit-
+    /// decreasing placement under the configured share + memory caps.
+    /// `None` when some instance cannot fit any single GPU.
+    pub fn gpus(&self, cm: &CostModel) -> Option<usize> {
+        if let Some(n) = self.placed_gpus() {
+            return Some(n);
+        }
+        super::placement::place(cm, self, None).ok().map(|p| p.gpus())
+    }
+
+    /// Share-only lower bound on the GPU count: `⌈total_share /
+    /// max_share⌉`.  Ignores memory and per-GPU packing, so any real
+    /// placement uses at least this many GPUs — kept as the documented
+    /// reference bound the placement tests compare against.
+    pub fn gpus_share_lower_bound(&self, max_share: u32) -> u32 {
         self.total_share().div_ceil(max_share)
+    }
+
+    /// GPU count of the stamped placement: `Some(max gpu id + 1)` when
+    /// every stage is fully placed (an empty plan is trivially placed on
+    /// zero GPUs), `None` otherwise.
+    pub fn placed_gpus(&self) -> Option<usize> {
+        let mut max_gpu: Option<u32> = None;
+        for s in self.stages() {
+            if !s.is_placed() {
+                return None;
+            }
+            max_gpu = max_gpu.max(s.gpus.iter().copied().max());
+        }
+        Some(max_gpu.map_or(0, |g| g as usize + 1))
     }
 
     /// All stages in the plan (alignment + shared).
@@ -88,6 +130,17 @@ impl ExecutionPlan {
                 .iter()
                 .filter_map(|m| m.align.as_ref())
                 .chain(std::iter::once(&s.shared))
+        })
+    }
+
+    /// Mutable stage iteration in the same order as [`Self::stages`]
+    /// (the placement pass stamps assignments through this).
+    pub fn stages_mut(&mut self) -> impl Iterator<Item = &mut StagePlan> {
+        self.sets.iter_mut().flat_map(|s| {
+            s.members
+                .iter_mut()
+                .filter_map(|m| m.align.as_mut())
+                .chain(std::iter::once(&mut s.shared))
         })
     }
 
@@ -115,6 +168,7 @@ mod tests {
             },
             budget_ms: 10.0,
             demand_rps: 60.0,
+            gpus: Vec::new(),
         }
     }
 
@@ -137,12 +191,12 @@ mod tests {
         assert_eq!(set.total_rate(), 60.0);
         let plan = ExecutionPlan { sets: vec![set], infeasible: vec![] };
         assert_eq!(plan.total_share(), 45);
-        assert_eq!(plan.gpus(100), 1);
+        assert_eq!(plan.gpus_share_lower_bound(100), 1);
         assert_eq!(plan.stages().count(), 2);
     }
 
     #[test]
-    fn gpus_rounds_up() {
+    fn share_lower_bound_rounds_up() {
         let set = RealignedSet {
             model: 0,
             point: 2,
@@ -151,6 +205,26 @@ mod tests {
         };
         let plan = ExecutionPlan { sets: vec![set], infeasible: vec![] };
         assert_eq!(plan.total_share(), 136);
-        assert_eq!(plan.gpus(100), 2);
+        assert_eq!(plan.gpus_share_lower_bound(100), 2);
+    }
+
+    #[test]
+    fn placed_gpus_requires_full_stamping() {
+        let mut set = RealignedSet {
+            model: 0,
+            point: 2,
+            members: vec![member(1, Some(stage(10, 2))), member(2, None)],
+            shared: stage(25, 1),
+        };
+        let unplaced = ExecutionPlan {
+            sets: vec![set.clone()],
+            infeasible: vec![],
+        };
+        assert_eq!(unplaced.placed_gpus(), None);
+        set.members[0].align.as_mut().unwrap().gpus = vec![0, 1];
+        set.shared.gpus = vec![2];
+        let placed = ExecutionPlan { sets: vec![set], infeasible: vec![] };
+        assert_eq!(placed.placed_gpus(), Some(3));
+        assert_eq!(ExecutionPlan::default().placed_gpus(), Some(0));
     }
 }

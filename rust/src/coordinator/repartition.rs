@@ -158,6 +158,7 @@ pub fn standalone_set(
             alloc,
             budget_ms: budget,
             demand_rps: spec.rate_rps,
+            gpus: Vec::new(),
         },
     })
 }
@@ -238,6 +239,7 @@ fn realign_set(
                 alloc,
                 budget_ms: d_i,
                 demand_rps: m.rate_rps,
+                gpus: Vec::new(),
             }),
         });
     }
@@ -250,6 +252,7 @@ fn realign_set(
             alloc: shared_alloc,
             budget_ms: d_shared,
             demand_rps: total_rate,
+            gpus: Vec::new(),
         },
     })
 }

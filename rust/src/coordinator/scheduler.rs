@@ -1,4 +1,5 @@
-//! The Graft scheduler (paper §3/§4): merge → group → re-partition.
+//! The Graft scheduler (paper §3/§4): merge → group → re-partition →
+//! place.
 //!
 //! Takes the live set of fragment demands (one per mobile client), runs
 //! the three §4 steps and emits an [`ExecutionPlan`].  Groups are
@@ -9,6 +10,18 @@
 //! hashed, and groups unchanged since the previous trigger reuse their
 //! re-aligned sets verbatim — a re-plan pays only for the groups that
 //! actually moved.
+//!
+//! Placement (§5.1/§5.3) is part of planning, not an afterthought: the
+//! assembled plan is packed onto GPUs first-fit-decreasing under the
+//! share + memory caps ([`crate::coordinator::placement`]) and the
+//! winning per-instance assignments are stamped into the plan.  When
+//! packing fails (an instance no single GPU can host) or fragments
+//! badly (placed GPUs far above the share lower bound), the scheduler
+//! *re-enters* re-partitioning with tightened per-instance ceilings —
+//! splitting fat instances into placeable ones — and keeps a tightened
+//! plan only when it strictly reduces the GPU count (or turns an
+//! unpackable plan packable), so the integrated planner never does
+//! worse than post-hoc FFD packing of the same demand.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -19,6 +32,7 @@ use std::time::Instant;
 use super::fragment::FragmentSpec;
 use super::grouping::{group_fragments, GroupOptions};
 use super::merging::{merge_fragments, MergeOptions};
+use super::placement::{place, stamp, Placement, PlacementOptions};
 use super::plan::ExecutionPlan;
 use super::repartition::{realign_group, RepartitionOptions};
 use crate::profiler::CostModel;
@@ -29,6 +43,8 @@ pub struct SchedulerOptions {
     pub merge: MergeOptions,
     pub group: GroupOptions,
     pub repartition: RepartitionOptions,
+    /// Planner-integrated GPU placement + feedback loop.
+    pub placement: PlacementOptions,
     /// Thread-pool size for parallel per-group re-alignment (Fig 19b).
     pub pool_size: usize,
     /// Reuse per-group plans across triggers when a group's fragment
@@ -44,6 +60,7 @@ impl Default for SchedulerOptions {
             merge: MergeOptions::default(),
             group: GroupOptions::default(),
             repartition: RepartitionOptions::default(),
+            placement: PlacementOptions::default(),
             pool_size: 2, // paper default (§5.9)
             incremental: true,
         }
@@ -61,6 +78,20 @@ pub struct ScheduleStats {
     pub merge_ms: f64,
     pub group_ms: f64,
     pub repartition_ms: f64,
+    pub placement_ms: f64,
+    /// Tightening rounds the placement feedback loop evaluated (0 =
+    /// the first placement was accepted as-is).
+    pub placement_rounds: usize,
+    /// GPUs of the stamped placement (0 when placement is disabled or
+    /// the plan is empty).
+    pub gpus: usize,
+    /// Unused share fraction across those GPUs.
+    pub fragmentation: f64,
+    /// Placement (and every tightening round) failed — reachable only
+    /// under a hard `max_gpus` cluster cap or with `max_rounds = 0`;
+    /// the returned plan is unstamped and the executor should expect
+    /// to shed load.
+    pub placement_failed: bool,
     pub total_ms: f64,
 }
 
@@ -173,23 +204,62 @@ impl Scheduler {
         // Step 3 — re-partitioning (§4.3): unchanged groups replay their
         // cached sets, the rest re-align in parallel.
         let t = Instant::now();
-        let opts_sig = repartition_signature(&self.opts.repartition);
+        if self.opts.incremental {
+            self.begin_trigger();
+        }
+        let (mut plan, reused_count) =
+            self.repartition_pass(&groups, &self.opts.repartition);
+        stats.n_groups_reused = reused_count;
+        stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        // Step 4 — placement (§5.1/§5.3): pack onto GPUs, and feed
+        // fragmentation/unplaceability back into re-partitioning.
+        if self.opts.placement.enabled {
+            let t = Instant::now();
+            self.place_with_feedback(&mut plan, &groups, &mut stats);
+            stats.placement_ms = t.elapsed().as_secs_f64() * 1e3;
+        }
+
+        stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        (plan, stats)
+    }
+
+    /// Open a new trigger generation: bump the cache generation once and
+    /// evict stale entries when over capacity.  Called once per `plan()`
+    /// — the placement feedback rounds within a trigger share the
+    /// generation, so the "previous trigger's working set survives
+    /// eviction" invariant holds regardless of how many re-partitioning
+    /// passes a trigger runs.
+    fn begin_trigger(&self) {
+        let mut cache = self.group_cache.lock().unwrap();
+        cache.generation += 1;
+        let gen = cache.generation;
+        if cache.entries > GROUP_CACHE_CAPACITY {
+            // evict everything not touched by the previous trigger;
+            // the live working set always survives
+            for bucket in cache.map.values_mut() {
+                bucket.retain(|e| e.generation + 1 >= gen);
+            }
+            cache.map.retain(|_, b| !b.is_empty());
+            let remaining: usize = cache.map.values().map(Vec::len).sum();
+            cache.entries = remaining;
+        }
+    }
+
+    /// One re-partitioning pass over the grouped demands with the given
+    /// options (the feedback loop calls this again with tightened
+    /// constraints — each options signature keeps its own cache
+    /// entries).  Returns the assembled plan and the reused-group count.
+    fn repartition_pass(
+        &self,
+        groups: &[Vec<FragmentSpec>],
+        rep_opts: &RepartitionOptions,
+    ) -> (ExecutionPlan, usize) {
+        let opts_sig = repartition_signature(rep_opts);
         let mut reused: Vec<Option<ExecutionPlan>> = vec![None; groups.len()];
         if self.opts.incremental {
             let mut cache = self.group_cache.lock().unwrap();
-            cache.generation += 1;
             let gen = cache.generation;
-            if cache.entries > GROUP_CACHE_CAPACITY {
-                // evict everything not touched by the previous trigger;
-                // the live working set always survives
-                for bucket in cache.map.values_mut() {
-                    bucket.retain(|e| e.generation + 1 >= gen);
-                }
-                cache.map.retain(|_, b| !b.is_empty());
-                let remaining: usize =
-                    cache.map.values().map(Vec::len).sum();
-                cache.entries = remaining;
-            }
             for (gi, g) in groups.iter().enumerate() {
                 if let Some(bucket) =
                     cache.map.get_mut(&group_signature(g, opts_sig))
@@ -211,14 +281,15 @@ impl Scheduler {
             .collect();
         let computed: Vec<ExecutionPlan> =
             parallel_map(&todo, self.opts.pool_size, |g| {
-                realign_group(&self.cm, g.as_slice(), &self.opts.repartition)
+                realign_group(&self.cm, g.as_slice(), rep_opts)
             });
         let mut computed = computed.into_iter();
         let mut plan = ExecutionPlan::default();
+        let mut n_reused = 0;
         for (gi, cached) in reused.into_iter().enumerate() {
             let p = match cached {
                 Some(p) => {
-                    stats.n_groups_reused += 1;
+                    n_reused += 1;
                     p
                 }
                 None => {
@@ -244,10 +315,112 @@ impl Scheduler {
             };
             plan.merge_with(p);
         }
-        stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
+        (plan, n_reused)
+    }
 
-        stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
-        (plan, stats)
+    /// The placement feedback loop.  Round 0 places the plan as
+    /// emitted; when that is unplaceable or fragments beyond the
+    /// configured threshold, up to `max_rounds` re-partitioning passes
+    /// run with progressively tighter per-instance ceilings
+    /// (`max_share` halved/thirded, per-instance memory capped at one
+    /// GPU).  A tightened plan is kept only when it strictly lowers
+    /// the GPU count without shedding clients, or turns an unpackable
+    /// plan packable — so the final plan never packs onto more GPUs
+    /// than post-hoc FFD of the round-0 plan.  The winning placement
+    /// is stamped into the plan.
+    fn place_with_feedback(
+        &self,
+        plan: &mut ExecutionPlan,
+        groups: &[Vec<FragmentSpec>],
+        stats: &mut ScheduleStats,
+    ) {
+        let popts = &self.opts.placement;
+        let g = &self.cm.config().gpu;
+        let mut best: Result<Placement, _> =
+            place(&self.cm, plan, popts.max_gpus);
+        let needs_feedback = match &best {
+            Ok(p) => {
+                // excess over the larger of the share and memory lower
+                // bounds: share-ceiling tightening cannot beat a
+                // memory-bound packing, so a memory-bound fleet must
+                // not fire futile rounds on every trigger
+                let lb = (plan.gpus_share_lower_bound(g.max_share)
+                    as usize)
+                    .max(super::placement::gpus_mem_lower_bound(
+                        &self.cm, plan,
+                    ));
+                p.excess_over(lb) > popts.frag_threshold
+            }
+            Err(_) => true,
+        };
+        if needs_feedback {
+            let base = self.opts.repartition.constraints;
+            for round in 1..=popts.max_rounds {
+                stats.placement_rounds = round;
+                // ceiling ladder: max_share/2, /3, … rounded up to the
+                // share grid; per-instance memory capped at one GPU so
+                // a tightened pass can always be placed
+                let unit = g.share_unit.max(1);
+                let ceiling = (g.max_share / (round as u32 + 1))
+                    .div_ceil(unit)
+                    .max(1)
+                    * unit;
+                let cons = crate::profiler::AllocConstraints {
+                    max_share: ceiling.min(base.max_share),
+                    max_instance_mem_mb: Some(
+                        base.max_instance_mem_mb
+                            .map_or(g.gpu_mem_mb, |m| m.min(g.gpu_mem_mb)),
+                    ),
+                    ..base
+                };
+                let rep_opts = RepartitionOptions {
+                    constraints: cons,
+                    ..self.opts.repartition.clone()
+                };
+                let (cand, _) = self.repartition_pass(groups, &rep_opts);
+                let Ok(cand_placed) =
+                    place(&self.cm, &cand, popts.max_gpus)
+                else {
+                    continue;
+                };
+                let accept = match &best {
+                    // a GPU-saving tightened plan must not shed clients
+                    // and may inflate total share only within the
+                    // configured slack (0 by default: the planner stays
+                    // share-optimal, so share-metric comparisons against
+                    // baselines are unaffected — tightening is accepted
+                    // exactly when instance-granularity slack makes the
+                    // denser packing free)
+                    Ok(p) => {
+                        cand.infeasible.len() <= plan.infeasible.len()
+                            && cand_placed.gpus() < p.gpus()
+                            && cand.total_share() as f64
+                                <= plan.total_share() as f64
+                                    * (1.0 + popts.share_slack)
+                                    + 1e-9
+                    }
+                    Err(_) => true,
+                };
+                if accept {
+                    *plan = cand;
+                    best = Ok(cand_placed);
+                    break;
+                }
+            }
+        }
+        match &best {
+            Ok(p) => {
+                stamp(plan, p);
+                stats.gpus = p.gpus();
+                stats.fragmentation = p.fragmentation(g.max_share);
+            }
+            // every tightened round failed too (reachable only with a
+            // hard `max_gpus` cluster cap or max_rounds = 0: the
+            // per-instance mem/share ceilings make unconstrained
+            // tightened plans placeable) — surface it instead of
+            // masquerading as placement-disabled
+            Err(_) => stats.placement_failed = true,
+        }
     }
 }
 
@@ -276,6 +449,11 @@ fn repartition_signature(opts: &RepartitionOptions) -> u64 {
     opts.constraints.max_instances.hash(&mut h);
     opts.constraints.max_batch.hash(&mut h);
     opts.constraints.mem_budget_mb.map(f64::to_bits).hash(&mut h);
+    opts.constraints.max_share.hash(&mut h);
+    opts.constraints
+        .max_instance_mem_mb
+        .map(f64::to_bits)
+        .hash(&mut h);
     match &opts.point_set {
         None => 0u8.hash(&mut h),
         Some(ps) => {
@@ -430,6 +608,57 @@ mod tests {
         let (b, st) = s.plan(&d);
         assert_eq!(st.n_groups_reused, 0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn plans_are_placed_by_default() {
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (plan, stats) = s.plan(&d);
+        let gpus = plan.placed_gpus().expect("default planner stamps GPUs");
+        assert_eq!(stats.gpus, gpus);
+        assert!(
+            gpus as u32
+                >= plan.gpus_share_lower_bound(
+                    s.cost_model().config().gpu.max_share
+                )
+        );
+        let usage = crate::coordinator::placement::stamped_usage(
+            s.cost_model(),
+            &plan,
+        )
+        .unwrap();
+        let g = &s.cost_model().config().gpu;
+        for u in &usage {
+            assert!(u.share <= g.max_share);
+            // epsilon: stamped_usage re-sums memory in stage order
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
+        }
+    }
+
+    #[test]
+    fn placement_disabled_leaves_plan_unstamped() {
+        let cm = CostModel::new(Config::embedded());
+        let d = demands(&cm);
+        let off = Scheduler::new(
+            cm.clone(),
+            SchedulerOptions {
+                placement: crate::coordinator::PlacementOptions {
+                    enabled: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let (plan, stats) = off.plan(&d);
+        assert_eq!(plan.placed_gpus(), None);
+        assert_eq!(stats.gpus, 0);
+        // tightening rounds only ever move away from the per-fragment
+        // optimum, so the placed planner never undercuts the share of
+        // the pre-placement plan
+        let on = Scheduler::new(cm, SchedulerOptions::default());
+        let (placed, _) = on.plan(&d);
+        assert!(placed.total_share() >= plan.total_share());
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! capped resources), Fig 18 (massive-scale simulation), Fig 19 (system
 //! overhead + realignment pool size), Fig 20 (SLO-ratio sensitivity),
 //! Fig 21 (energy consumption), plus the serving-path throughput
-//! harness ("serving": thread-per-instance vs pooled executor).
+//! harness ("serving": thread-per-instance vs pooled executor) and the
+//! GPU-placement comparison ("placement": planner-integrated packing
+//! vs the post-hoc FFD oracle and the GSLICE baseline).
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -12,9 +14,11 @@ use std::time::{Duration, Instant};
 use crate::coordinator::baselines::{gslice, gslice_plus};
 use crate::coordinator::merging::MergeOptions;
 use crate::coordinator::optimal::optimal_plan;
+use crate::coordinator::placement::{place, PlacementOptions};
 use crate::coordinator::repartition::RepartitionOptions;
 use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use crate::coordinator::{ExecutionPlan, FragmentSpec};
+use crate::sim::pack;
 use crate::hybrid::{choose_partition, DeviceKind};
 use crate::metrics::LatencyStats;
 use crate::profiler::{AllocConstraints, CostModel};
@@ -513,6 +517,85 @@ pub fn serving_scale(cm: &CostModel) -> Table {
     t
 }
 
+/// Experiment "placement": GPU counts and fragmentation of the
+/// planner-integrated placement vs the post-hoc FFD oracle (packing
+/// the feedback-free plan after the fact) and the GSLICE baseline
+/// placed post-hoc.  Small fleets so `experiment all` stays fast; the
+/// 1k–10k sweep lives in `graft bench-placement`.
+pub fn placement_scale(cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "n_clients",
+        "system",
+        "total_share",
+        "share_lb_gpus",
+        "gpus",
+        "fragmentation",
+        "feedback_rounds",
+    ]);
+    let max_share = cm.config().gpu.max_share;
+    for &n in &[64usize, 256] {
+        let specs = random_mixed_fragments(cm, n, 0x91ACE + n as u64);
+        // graft: placement integrated into planning (stamped plan)
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let (plan, stats) = sched.plan(&specs);
+        t.row(vec![
+            n.to_string(),
+            "graft".to_string(),
+            plan.total_share().to_string(),
+            plan.gpus_share_lower_bound(max_share).to_string(),
+            stats.gpus.to_string(),
+            f(stats.fragmentation, 3),
+            stats.placement_rounds.to_string(),
+        ]);
+        // oracle: FFD-pack the feedback-free plan after the fact
+        let base = Scheduler::new(
+            cm.clone(),
+            SchedulerOptions {
+                placement: PlacementOptions {
+                    enabled: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let (plan0, _) = base.plan(&specs);
+        let oracle = pack(cm, &plan0, None);
+        t.row(vec![
+            n.to_string(),
+            "graft-posthoc".to_string(),
+            plan0.total_share().to_string(),
+            plan0.gpus_share_lower_bound(max_share).to_string(),
+            // "nan" when the oracle cannot pack at all — 0 would read
+            // as beating every real placement
+            oracle
+                .as_ref()
+                .map_or("nan".into(), |p| p.gpus.to_string()),
+            oracle
+                .as_ref()
+                .map_or("nan".into(), |p| f(p.fragmentation(max_share), 3)),
+            "0".to_string(),
+        ]);
+        // GSLICE: no realignment, placed post-hoc ("nan" when some
+        // instance cannot fit a single GPU)
+        let gp = gslice(cm, &specs, &AllocConstraints::default());
+        let gplaced = place(cm, &gp, None).ok();
+        t.row(vec![
+            n.to_string(),
+            "gslice".to_string(),
+            gp.total_share().to_string(),
+            gp.gpus_share_lower_bound(max_share).to_string(),
+            gplaced
+                .as_ref()
+                .map_or("nan".into(), |p| p.gpus().to_string()),
+            gplaced
+                .as_ref()
+                .map_or("nan".into(), |p| f(p.fragmentation(max_share), 3)),
+            "0".to_string(),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -568,6 +651,32 @@ mod tests {
                     "pool spawned {} workers for {} cpus",
                     r.threads,
                     cpus
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn placement_table_integrated_never_beats_oracle_downward() {
+        let cm = cm();
+        let t = placement_scale(&cm);
+        for &n in &[64usize, 256] {
+            let col = |sys: &str, c: usize| -> Option<usize> {
+                t.rows
+                    .iter()
+                    .find(|r| r[0] == n.to_string() && r[1] == sys)
+                    .unwrap()[c]
+                    .parse()
+                    .ok()
+            };
+            let graft = col("graft", 4).expect("integrated always places");
+            assert!(graft >= col("graft", 3).unwrap(), "n={n}");
+            // integrated placement ≤ post-hoc FFD of the same demand
+            // ("nan" = the oracle could not pack; integrated wins then)
+            if let Some(oracle) = col("graft-posthoc", 4) {
+                assert!(
+                    graft <= oracle,
+                    "n={n}: integrated {graft} > oracle {oracle}"
                 );
             }
         }

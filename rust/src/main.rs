@@ -14,6 +14,11 @@
 //!                                     drive the serving data path under
 //!                                     both executor modes and emit
 //!                                     BENCH_serving.json
+//!   bench-placement [--sizes N,N,..] [--out FILE]
+//!                                     compare planner-integrated GPU
+//!                                     placement against the post-hoc
+//!                                     FFD oracle and emit
+//!                                     BENCH_placement.json
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -83,6 +88,7 @@ fn run() -> Result<()> {
         "plan" => cmd_plan(&cm, &args),
         "bench-scheduler" => cmd_bench_scheduler(&args),
         "bench-serving" => cmd_bench_serving(&cm, &args),
+        "bench-placement" => cmd_bench_placement(&args),
         "serve" => cmd_serve(&cm, &args),
         "trace" => cmd_trace(&args),
         "models" => {
@@ -103,12 +109,13 @@ fn print_usage() {
         "graft — inference serving for hybrid DL via DNN re-alignment\n\n\
          usage:\n\
          \x20 graft experiment <id|all> [--out results]\n\
-         \x20 graft plan --model inc --scale small-homo [--t 5]\n\
+         \x20 graft plan --model inc --scale small-homo [--t 5] [--deploy FILE]\n\
          \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0]\n\
          \x20 graft trace [--seed 7] [--len 60]\n\
          \x20 graft models\n\
          \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\
-         \x20 graft bench-serving [--sizes 1000,5000,10000] [--requests 40000] [--out BENCH_serving.json]\n\n\
+         \x20 graft bench-serving [--sizes 1000,5000,10000] [--requests 40000] [--out BENCH_serving.json]\n\
+         \x20 graft bench-placement [--sizes 1000,5000,10000] [--out BENCH_placement.json]\n\n\
          experiments: {}",
         experiments::ALL.join(" ")
     );
@@ -187,6 +194,26 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
         plan.total_share(),
         stats.total_ms,
     );
+    if stats.gpus > 0 {
+        println!(
+            "  placed on {} GPUs (share lower bound {}, fragmentation \
+             {:.1}%, {} feedback rounds)",
+            stats.gpus,
+            plan.gpus_share_lower_bound(cm.config().gpu.max_share),
+            stats.fragmentation * 100.0,
+            stats.placement_rounds,
+        );
+    }
+    if let Some(path) = args.flags.get("deploy") {
+        match graft::runtime::deployment_json(cm, &plan) {
+            Some(doc) => {
+                std::fs::write(path, format!("{doc}\n"))
+                    .with_context(|| format!("writing {path}"))?;
+                println!("  wrote deployment manifest to {path}");
+            }
+            None => println!("  no placement to deploy (plan unstamped)"),
+        }
+    }
     for (i, set) in plan.sets.iter().enumerate() {
         println!(
             "  set {i}: model {} repartition@{} shared {:?} ({} members)",
@@ -313,6 +340,14 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
                 "repartition_ms".into(),
                 ms3(cold_stats.repartition_ms),
             );
+            // placement joined the planner in PR 3 — its share of the
+            // cold time is reported so the merge/group/repartition
+            // trend stays comparable across PRs
+            row.insert(
+                "placement_ms".into(),
+                ms3(cold_stats.placement_ms),
+            );
+            row.insert("gpus".into(), num(cold_stats.gpus as f64));
             row.insert(
                 "n_after_merge".into(),
                 num(cold_stats.n_after_merge as f64),
@@ -500,6 +535,180 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
     );
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("serving".into()));
+    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("config".into(), Json::Obj(config));
+    doc.insert("runs".into(), Json::Arr(runs));
+    let json = Json::Obj(doc);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}
+
+/// `graft bench-placement`: plan mixed-model fleets with the
+/// placement-integrated scheduler and compare against the post-hoc FFD
+/// oracle (`sim::cluster::pack` over the feedback-free plan), emitting
+/// `BENCH_placement.json` with packed-GPU counts and fragmentation.
+/// Self-checking: the run aborts if the integrated placement ever uses
+/// more GPUs than the oracle or violates a per-GPU cap.
+fn cmd_bench_placement(args: &Args) -> Result<()> {
+    use graft::coordinator::placement::{stamped_usage, PlacementOptions};
+    use graft::experiments::common::random_mixed_fragments;
+    use graft::sim::pack;
+    use graft::util::Json;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let sizes: Vec<usize> = args
+        .flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,5000,10000")
+        .split(',')
+        .map(|s| s.trim().parse().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let out = PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_placement.json".into()),
+    );
+
+    let num = Json::Num;
+    let ms3 = |v: f64| Json::Num((v * 1e3).round() / 1e3);
+    let mut runs = Vec::new();
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>12}",
+        "n",
+        "share_lb",
+        "gpus_ffd",
+        "gpus_int",
+        "frag_int",
+        "rounds",
+        "place_ms",
+        "total_share"
+    );
+    for &n in &sizes {
+        let cm = CostModel::new(Config::embedded());
+        let g = cm.config().gpu.clone();
+        let specs = random_mixed_fragments(&cm, n, 0x9A7E);
+
+        // oracle: feedback-free plan, FFD-packed after the fact
+        let base = Scheduler::new(
+            cm.clone(),
+            SchedulerOptions {
+                placement: PlacementOptions {
+                    enabled: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let (plan0, _) = base.plan(&specs);
+        // `None` = the feedback-free plan is unpackable (an instance no
+        // single GPU can host) — exactly the case the integrated
+        // planner's feedback loop exists to rescue, so it skips the
+        // ≤-oracle check rather than failing the bench
+        let oracle = pack(&cm, &plan0, None);
+
+        // integrated: placement + feedback inside Scheduler::plan
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let t0 = Instant::now();
+        let (plan, stats) = sched.plan(&specs);
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let gpus_int = plan
+            .placed_gpus()
+            .context("integrated planner left the plan unstamped")?;
+        if let Some(o) = &oracle {
+            if gpus_int > o.gpus {
+                bail!(
+                    "integrated placement regressed at n={n}: {gpus_int} \
+                     GPUs vs post-hoc FFD {}",
+                    o.gpus
+                );
+            }
+        }
+        let usage = stamped_usage(&cm, &plan)
+            .context("stamped usage unavailable")?;
+        // small epsilon: stamped_usage re-sums per-GPU memory in stage
+        // order, not the FFD order place() validated, so a cap-exact
+        // GPU can drift a few ULPs
+        for (i, u) in usage.iter().enumerate() {
+            if u.share > g.max_share || u.mem_mb > g.gpu_mem_mb + 1e-6 {
+                bail!(
+                    "cap violation at n={n} gpu={i}: share {} mem {:.0}",
+                    u.share,
+                    u.mem_mb
+                );
+            }
+        }
+
+        let lb = plan0.gpus_share_lower_bound(g.max_share);
+        println!(
+            "{:>8} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>12}",
+            n,
+            lb,
+            oracle
+                .as_ref()
+                .map_or("nan".to_string(), |o| o.gpus.to_string()),
+            gpus_int,
+            format!("{:.3}", stats.fragmentation),
+            stats.placement_rounds,
+            format!("{:.1}", stats.placement_ms),
+            plan.total_share(),
+        );
+        // -1 marks an unpackable oracle in the JSON (same convention as
+        // bench-serving's non-finite latencies)
+        let mut row = BTreeMap::new();
+        row.insert("n_clients".into(), num(n as f64));
+        row.insert("share_lb_gpus".into(), num(lb as f64));
+        row.insert(
+            "gpus_ffd".into(),
+            num(oracle.as_ref().map_or(-1.0, |o| o.gpus as f64)),
+        );
+        row.insert("gpus_integrated".into(), num(gpus_int as f64));
+        row.insert(
+            "fragmentation_ffd".into(),
+            num(oracle.as_ref().map_or(-1.0, |o| {
+                (o.fragmentation(g.max_share) * 1e4).round() / 1e4
+            })),
+        );
+        row.insert(
+            "fragmentation_integrated".into(),
+            num((stats.fragmentation * 1e4).round() / 1e4),
+        );
+        row.insert(
+            "feedback_rounds".into(),
+            num(stats.placement_rounds as f64),
+        );
+        row.insert("placement_ms".into(), ms3(stats.placement_ms));
+        row.insert("plan_ms".into(), ms3(plan_ms));
+        row.insert(
+            "total_share_ffd".into(),
+            num(plan0.total_share() as f64),
+        );
+        row.insert(
+            "total_share_integrated".into(),
+            num(plan.total_share() as f64),
+        );
+        runs.push(Json::Obj(row));
+    }
+
+    let defaults = PlacementOptions::default();
+    let cfg = Config::embedded();
+    let mut config = BTreeMap::new();
+    config.insert("frag_threshold".into(), Json::Num(defaults.frag_threshold));
+    config.insert("max_rounds".into(), num(defaults.max_rounds as f64));
+    config.insert("share_slack".into(), Json::Num(defaults.share_slack));
+    config.insert("max_share".into(), num(cfg.gpu.max_share as f64));
+    config.insert("gpu_mem_mb".into(), Json::Num(cfg.gpu.gpu_mem_mb));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("placement".into()));
     doc.insert("schema_version".into(), num(1.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("runs".into(), Json::Arr(runs));

@@ -69,11 +69,25 @@ pub struct AllocConstraints {
     pub max_batch: u32,
     /// GPU memory budget (MiB) for *this fragment's* instances, if any.
     pub mem_budget_mb: Option<f64>,
+    /// Per-instance share ceiling (%).  The placement feedback loop
+    /// tightens this below the GPU's `max_share` to split fat instances
+    /// into placeable ones when first-fit packing fragments badly.
+    pub max_share: u32,
+    /// Per-instance memory ceiling (MiB): an instance above it can never
+    /// be placed on a single GPU, so the placement-aware planner caps it
+    /// at `gpu_mem_mb` rather than emitting an unpackable plan.
+    pub max_instance_mem_mb: Option<f64>,
 }
 
 impl Default for AllocConstraints {
     fn default() -> Self {
-        Self { max_instances: u32::MAX, max_batch: u32::MAX, mem_budget_mb: None }
+        Self {
+            max_instances: u32::MAX,
+            max_batch: u32::MAX,
+            mem_budget_mb: None,
+            max_share: u32::MAX,
+            max_instance_mem_mb: None,
+        }
     }
 }
 
@@ -89,6 +103,8 @@ struct AllocKey {
     max_instances: u32,
     max_batch: u32,
     mem_bits: Option<u64>,
+    max_share: u32,
+    inst_mem_bits: Option<u64>,
 }
 
 impl AllocKey {
@@ -105,6 +121,8 @@ impl AllocKey {
             max_instances: cons.max_instances,
             max_batch: cons.max_batch,
             mem_bits: cons.mem_budget_mb.map(f64::to_bits),
+            max_share: cons.max_share,
+            inst_mem_bits: cons.max_instance_mem_mb.map(f64::to_bits),
         }
     }
 
@@ -299,6 +317,7 @@ impl CostModel {
         }
         let g = &self.cfg.gpu;
         let max_batch = cons.max_batch.min(g.max_batch).max(1);
+        let share_cap = cons.max_share.min(g.max_share);
         let mut best: Option<Alloc> = None;
 
         for &batch in g.batch_buckets.iter().filter(|&&b| b <= max_batch) {
@@ -307,6 +326,14 @@ impl CostModel {
                 continue; // larger batches only get slower — but share
                           // saturation depends on batch, keep scanning
             };
+            if s_min > share_cap {
+                continue; // only more share could meet the budget
+            }
+            if let Some(mem) = cons.max_instance_mem_mb {
+                if self.instance_mem_mb(frag, batch) > mem {
+                    continue; // instance would never fit one GPU
+                }
+            }
             if let Some(mem) = cons.mem_budget_mb {
                 if self.instance_mem_mb(frag, batch) > mem {
                     continue;
@@ -316,6 +343,9 @@ impl CostModel {
             let (shares, n_shares) =
                 self.candidate_shares(frag, batch, s_min, demand_rps);
             for &share in &shares[..n_shares] {
+                if share > share_cap {
+                    continue;
+                }
                 let lat = self.latency_ms(frag, batch, share);
                 if lat > budget_ms + 1e-9 {
                     continue;
@@ -554,6 +584,91 @@ mod tests {
             AllocConstraints { max_instances: 1, ..Default::default() },
         );
         assert!(impossible.is_none());
+    }
+
+    #[test]
+    fn min_alloc_respects_share_ceiling() {
+        let cm = cm();
+        let f = frag(&cm, "inc");
+        let free = cm
+            .min_alloc(f, 40.0, 300.0, AllocConstraints::default())
+            .unwrap();
+        let ceiling = free.share.saturating_sub(cm.config().gpu.share_unit);
+        if ceiling >= cm.config().gpu.share_unit {
+            let capped = cm.min_alloc(
+                f,
+                40.0,
+                300.0,
+                AllocConstraints { max_share: ceiling, ..Default::default() },
+            );
+            if let Some(a) = capped {
+                assert!(a.share <= ceiling, "{a:?} above ceiling {ceiling}");
+                // forcing away from the optimum never lowers total cost
+                assert!(a.total_share() >= free.total_share());
+            }
+        }
+        // a ceiling below the minimal feasible share is infeasible
+        let s_min = cm.min_share_for(f, 1, 40.0).unwrap();
+        assert!(cm
+            .min_alloc(
+                f,
+                40.0,
+                1.0,
+                AllocConstraints { max_share: s_min - 1, ..Default::default() },
+            )
+            .is_none());
+    }
+
+    #[test]
+    fn min_alloc_respects_instance_mem_ceiling() {
+        let cm = cm();
+        let f = frag(&cm, "vgg");
+        let free = cm
+            .min_alloc(f, 60.0, 200.0, AllocConstraints::default())
+            .unwrap();
+        let per_inst = cm.instance_mem_mb(f, free.batch);
+        // a generous per-instance ceiling changes nothing
+        let same = cm
+            .min_alloc(
+                f,
+                60.0,
+                200.0,
+                AllocConstraints {
+                    max_instance_mem_mb: Some(per_inst + 1.0),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(free, same);
+        // a ceiling below the batch-1 footprint is infeasible
+        let floor = cm.instance_mem_mb(f, 1);
+        assert!(cm
+            .min_alloc(
+                f,
+                60.0,
+                200.0,
+                AllocConstraints {
+                    max_instance_mem_mb: Some(floor / 2.0),
+                    ..Default::default()
+                },
+            )
+            .is_none());
+        // a ceiling between batch-1 and the free batch forces a smaller
+        // batch (every returned instance fits the ceiling)
+        if per_inst > floor {
+            let capped = cm
+                .min_alloc(
+                    f,
+                    60.0,
+                    200.0,
+                    AllocConstraints {
+                        max_instance_mem_mb: Some(per_inst - 1e-9),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            assert!(cm.instance_mem_mb(f, capped.batch) < per_inst);
+        }
     }
 
     #[test]

@@ -1,16 +1,27 @@
-//! AOT artifact manifest (`artifacts/manifest.json`).
+//! AOT artifact manifest (`artifacts/manifest.json`) and the
+//! deployment manifest for placed execution plans.
 //!
-//! Written once by `python/compile/aot.py`; indexes every compiled
-//! fragment executable by `(model, start, end, batch)` plus the weight
-//! blob per model.  The Rust runtime never parses HLO itself — it hands
-//! the text to PJRT — so this manifest is the only metadata contract
-//! between the Python compile path and the Rust request path.
+//! The artifact manifest is written once by `python/compile/aot.py`;
+//! it indexes every compiled fragment executable by `(model, start,
+//! end, batch)` plus the weight blob per model.  The Rust runtime never
+//! parses HLO itself — it hands the text to PJRT — so this manifest is
+//! the only metadata contract between the Python compile path and the
+//! Rust request path.
+//!
+//! [`deployment_json`] is the outbound counterpart: it serialises a
+//! *placed* [`ExecutionPlan`] as a per-GPU instance listing (one MPS
+//! server per GPU, each instance with its fragment, batch bucket and
+//! share) so launch tooling can consume the planner's placement
+//! decisions (`graft plan --deploy FILE`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::placement::stamped_usage;
+use crate::coordinator::ExecutionPlan;
+use crate::profiler::CostModel;
 use crate::util::Json;
 
 /// One compiled fragment executable.
@@ -165,6 +176,48 @@ impl Manifest {
     }
 }
 
+/// Serialise a placed plan as a deployment manifest: one entry per
+/// GPU with its aggregate share/memory load and the instances it
+/// hosts.  Returns `None` when the plan carries no (complete) GPU
+/// placement — an unplaced plan has nothing to deploy.
+pub fn deployment_json(cm: &CostModel, plan: &ExecutionPlan) -> Option<Json> {
+    let usage = stamped_usage(cm, plan)?;
+    let mut per_gpu: Vec<Vec<Json>> = vec![Vec::new(); usage.len()];
+    for s in plan.stages() {
+        let model = &cm.config().models[s.frag.model].name;
+        for &gpu in &s.gpus {
+            let mut inst = BTreeMap::new();
+            inst.insert("model".into(), Json::Str(model.clone()));
+            inst.insert("start".into(), Json::Num(s.frag.start as f64));
+            inst.insert("end".into(), Json::Num(s.frag.end as f64));
+            inst.insert("batch".into(), Json::Num(s.alloc.batch as f64));
+            inst.insert("share".into(), Json::Num(s.alloc.share as f64));
+            per_gpu[gpu as usize].push(Json::Obj(inst));
+        }
+    }
+    let gpus: Vec<Json> = usage
+        .iter()
+        .zip(per_gpu)
+        .enumerate()
+        .map(|(i, (u, instances))| {
+            let mut o = BTreeMap::new();
+            o.insert("gpu".into(), Json::Num(i as f64));
+            o.insert("share".into(), Json::Num(u.share as f64));
+            o.insert(
+                "mem_mb".into(),
+                Json::Num((u.mem_mb * 1e3).round() / 1e3),
+            );
+            o.insert("instances".into(), Json::Arr(instances));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("manifest".into(), Json::Str("deployment".into()));
+    doc.insert("schema_version".into(), Json::Num(1.0));
+    doc.insert("gpus".into(), Json::Arr(gpus));
+    Some(Json::Obj(doc))
+}
+
 /// Default artifacts directory: `$GRAFT_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
     std::env::var_os("GRAFT_ARTIFACTS")
@@ -217,5 +270,38 @@ mod tests {
         let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
         assert_eq!(m.fragments("vgg"), vec![(1, 6)]);
         assert!(m.fragments("inc").is_empty());
+    }
+
+    #[test]
+    fn deployment_manifest_lists_every_placed_instance() {
+        use crate::config::Config;
+        use crate::coordinator::baselines::gslice;
+        use crate::coordinator::placement::{place, stamp};
+        use crate::coordinator::{ClientId, FragmentSpec};
+        use crate::profiler::AllocConstraints;
+
+        let cm = CostModel::new(Config::embedded());
+        let inc = cm.model_index("inc").unwrap();
+        let specs: Vec<FragmentSpec> = (0..6)
+            .map(|i| FragmentSpec::single(ClientId(i), inc, 3, 100.0, 30.0))
+            .collect();
+        let mut plan = gslice(&cm, &specs, &AllocConstraints::default());
+        assert!(deployment_json(&cm, &plan).is_none(), "unplaced plan");
+        let placement = place(&cm, &plan, None).unwrap();
+        stamp(&mut plan, &placement);
+        let doc = deployment_json(&cm, &plan).unwrap();
+        // the document round-trips through the JSON printer/parser
+        let re = Json::parse(&doc.to_string()).unwrap();
+        let gpus = re.get("gpus").unwrap().as_arr().unwrap();
+        assert_eq!(gpus.len(), placement.gpus());
+        let total_instances: usize = gpus
+            .iter()
+            .map(|g| g.get("instances").unwrap().as_arr().unwrap().len())
+            .sum();
+        let planned: usize = plan
+            .stages()
+            .map(|s| s.alloc.instances as usize)
+            .sum();
+        assert_eq!(total_instances, planned);
     }
 }

@@ -10,5 +10,8 @@ mod manifest;
 mod weights;
 
 pub use engine::{Engine, ExecOutput};
-pub use manifest::{default_artifacts_dir, ArtifactEntry, Manifest, ManifestModel};
+pub use manifest::{
+    default_artifacts_dir, deployment_json, ArtifactEntry, Manifest,
+    ManifestModel,
+};
 pub use weights::ModelWeights;

@@ -19,6 +19,9 @@
 //!   instance, power-of-two-choices push routing, work-stealing pop),
 //!   and pacing no longer sleeps a thread: a paced batch is parked in a
 //!   deadline wheel and the worker immediately steals other ready work.
+//!   When the plan carries GPU placements (`StagePlan::gpus`), slots
+//!   are ordered by GPU so co-located instances share one worker's slot
+//!   range, and [`ServerCounters`] tracks per-GPU busy share-time.
 //!
 //! Instances execute the *real* AOT-compiled fragment on PJRT, then pace
 //! to the modeled MPS latency of their (batch, share) configuration —
@@ -179,6 +182,10 @@ struct Stage {
     frag: FragmentId,
     model_name: String,
     alloc: Alloc,
+    /// Per-instance GPU assignment from the placed plan
+    /// ([`crate::coordinator::StagePlan::gpus`]); empty for unplaced
+    /// plans.
+    gpus: Vec<u32>,
     /// Index of the downstream (shared) stage, if this is an alignment
     /// stage.
     next: Option<usize>,
@@ -187,6 +194,10 @@ struct Stage {
     /// backlog parks one FormCheck per stage, not one per instance.
     forming: AtomicBool,
 }
+
+/// Sentinel GPU id for instances of unplaced plans (sorts last, skips
+/// the per-GPU counters).
+const NO_GPU: u32 = u32::MAX;
 
 impl Stage {
     /// Batch-formation window: the plan's throughput assumes batches of
@@ -217,6 +228,39 @@ pub struct ServerCounters {
     /// Work items refused by a closed queue (shutdown races); mirrors
     /// the per-queue `QueueMetrics::rejected` counters.
     pub rejected: AtomicU64,
+    /// Per-GPU busy time in share-microseconds (modeled batch latency ×
+    /// instance share), indexed by the placed plan's GPU ids.  Empty
+    /// when the served plan carries no placement.
+    pub gpu_busy_share_us: Vec<AtomicU64>,
+}
+
+impl ServerCounters {
+    /// Counters sized for a plan placed on `gpus` GPUs.
+    pub fn with_gpus(gpus: usize) -> Self {
+        Self {
+            gpu_busy_share_us: (0..gpus).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    fn record_gpu_busy(&self, gpu: u32, exec_ms: f64, share: u32) {
+        if let Some(c) = self.gpu_busy_share_us.get(gpu as usize) {
+            let us = (exec_ms * 1e3) as u64 * share as u64;
+            c.fetch_add(us, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-GPU utilization over a wall window: modeled busy share-time
+    /// divided by the window's share capacity (`max_share`, i.e. 100 ==
+    /// one whole GPU).  Values can exceed 1.0 when pacing is off —
+    /// modeled GPU time is then compressed into less wall time.
+    pub fn gpu_utilization(&self, wall_ms: f64, max_share: u32) -> Vec<f64> {
+        let denom = (wall_ms * 1e3 * max_share.max(1) as f64).max(1e-9);
+        self.gpu_busy_share_us
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as f64 / denom)
+            .collect()
+    }
 }
 
 /// The running server.
@@ -239,7 +283,9 @@ impl Server {
         let sharded = opts.mode == ExecutorMode::Pool;
         let (stages, routes) = build_stages(cm, plan, sharded);
         let stages = Arc::new(stages);
-        let counters = Arc::new(ServerCounters::default());
+        let counters = Arc::new(ServerCounters::with_gpus(
+            plan.placed_gpus().unwrap_or(0),
+        ));
         match opts.mode {
             ExecutorMode::Threads => Self::start_threads(
                 executor, cm, opts, stages, routes, counters,
@@ -261,6 +307,11 @@ impl Server {
         let mut handles = Vec::new();
         for (idx, stage) in stages.iter().enumerate() {
             for inst in 0..stage.alloc.instances {
+                let gpu = stage
+                    .gpus
+                    .get(inst as usize)
+                    .copied()
+                    .unwrap_or(NO_GPU);
                 let stages = stages.clone();
                 let executor = executor.clone();
                 let cm = cm.clone();
@@ -279,7 +330,7 @@ impl Server {
                             counters: &counters,
                             notify: None,
                         };
-                        instance_loop(idx, &env);
+                        instance_loop(idx, gpu, &env);
                     })
                     .expect("spawn instance thread");
                 handles.push(h);
@@ -296,16 +347,28 @@ impl Server {
         routes: HashMap<u32, usize>,
         counters: Arc<ServerCounters>,
     ) -> Server {
-        let mut slots = Vec::new();
+        // GPU-affinity slot order: instances placed on the same GPU are
+        // contiguous, so the even worker→cursor split below hands each
+        // worker whole GPUs' worth of slots (one pacing wheel + slot
+        // set per co-located group; stealing still covers everything).
+        // Unplaced instances (NO_GPU) sort last in plan order.
+        let mut order: Vec<(u32, usize, usize)> = Vec::new();
         for (idx, stage) in stages.iter().enumerate() {
             for shard in 0..stage.alloc.instances.max(1) as usize {
-                slots.push(Slot {
-                    stage: idx,
-                    shard,
-                    state: Mutex::new(SlotState::Free),
-                });
+                let gpu = stage.gpus.get(shard).copied().unwrap_or(NO_GPU);
+                order.push((gpu, idx, shard));
             }
         }
+        order.sort_unstable();
+        let slots: Vec<Slot> = order
+            .into_iter()
+            .map(|(gpu, stage, shard)| Slot {
+                stage,
+                shard,
+                gpu,
+                state: Mutex::new(SlotState::Free),
+            })
+            .collect();
         let n_slots = slots.len();
         let workers = num_cpus().min(n_slots).max(1);
         let pool = Arc::new(PoolShared {
@@ -397,6 +460,12 @@ impl Server {
         self.handles.len()
     }
 
+    /// GPUs the served plan was placed on (0 for unplaced plans — the
+    /// per-GPU utilization counters are absent then).
+    pub fn gpu_count(&self) -> usize {
+        self.counters.gpu_busy_share_us.len()
+    }
+
     /// Close all queues and join the executor threads.
     pub fn shutdown(mut self) {
         for s in self.stages.iter() {
@@ -441,6 +510,7 @@ fn build_stages(
             frag: set.shared.frag,
             model_name: model_name.clone(),
             alloc: set.shared.alloc,
+            gpus: set.shared.gpus.clone(),
             next: None,
             forming: AtomicBool::new(false),
         });
@@ -453,6 +523,7 @@ fn build_stages(
                         frag: a.frag,
                         model_name: model_name.clone(),
                         alloc: a.alloc,
+                        gpus: a.gpus.clone(),
                         next: Some(shared_idx),
                         forming: AtomicBool::new(false),
                     });
@@ -542,9 +613,12 @@ fn slo_filter(
 
 /// Run the fragment on the executor backend; returns the raw result and
 /// the modeled MPS latency of this (batch, share) configuration.
+/// `gpu` attributes the modeled busy time to the hosting GPU's
+/// utilization counter ([`NO_GPU`] = unplaced, not attributed).
 fn execute_batch(
     env: &ExecEnv<'_>,
     stage: &Stage,
+    gpu: u32,
     live: &[WorkItem<Ctx>],
 ) -> (Result<ExecOutput>, f64) {
     let rows: Vec<Vec<f32>> = live.iter().map(|i| i.payload.clone()).collect();
@@ -563,6 +637,7 @@ fn execute_batch(
     env.counters
         .batched_requests
         .fetch_add(rows.len() as u64, Ordering::Relaxed);
+    env.counters.record_gpu_busy(gpu, exec_ms, stage.alloc.share);
     (out, exec_ms)
 }
 
@@ -655,7 +730,7 @@ fn deliver(
 }
 
 /// Thread-per-instance executor loop (ExecutorMode::Threads).
-fn instance_loop(stage_idx: usize, env: &ExecEnv<'_>) {
+fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
     let stage = &env.stages[stage_idx];
     let window = stage.window(env.opts);
     let queue = match &stage.queue {
@@ -679,7 +754,7 @@ fn instance_loop(stage_idx: usize, env: &ExecEnv<'_>) {
             continue;
         }
         let t0 = Instant::now();
-        let (out, exec_ms) = execute_batch(env, stage, &live);
+        let (out, exec_ms) = execute_batch(env, stage, gpu, &live);
         // pace to the modeled MPS latency
         if env.opts.time_scale > 0.0 {
             let target = exec_ms * env.opts.time_scale / 1e3;
@@ -873,6 +948,8 @@ struct Slot {
     stage: usize,
     /// Home shard in the stage's sharded queue.
     shard: usize,
+    /// GPU hosting this instance ([`NO_GPU`] for unplaced plans).
+    gpu: u32,
     state: Mutex<SlotState>,
 }
 
@@ -1073,14 +1150,15 @@ fn run_pool_batch(
     slot_idx: usize,
     batch: Vec<WorkItem<Ctx>>,
 ) {
-    let stage = &pool.stages[pool.slots[slot_idx].stage];
+    let slot = &pool.slots[slot_idx];
+    let stage = &pool.stages[slot.stage];
     let live = slo_filter(env, stage, batch);
     if live.is_empty() {
         free_slot(pool, slot_idx);
         return;
     }
     let t0 = Instant::now();
-    let (out, exec_ms) = execute_batch(env, stage, &live);
+    let (out, exec_ms) = execute_batch(env, stage, slot.gpu, &live);
     if env.opts.time_scale > 0.0 {
         let target = t0
             + Duration::from_secs_f64(exec_ms * env.opts.time_scale / 1e3);

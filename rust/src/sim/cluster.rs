@@ -2,6 +2,11 @@
 //! per-GPU share cap (≤100%, §5.1) and memory capacity.  Used by the
 //! capped-resource experiments (Fig 17) and the large-scale memory
 //! bottleneck notes of §5.3.
+//!
+//! This is the *offline reference oracle*: the planner-integrated
+//! placement pass lives in [`crate::coordinator::placement`] (grown
+//! from this module) and is property-tested to never use more GPUs
+//! than post-hoc [`pack`]ing of the same demand.
 
 use crate::coordinator::plan::ExecutionPlan;
 use crate::profiler::CostModel;
@@ -21,6 +26,20 @@ pub struct Packing {
     pub placements: Vec<PlacedInstance>,
     /// Per-GPU (share used, memory used).
     pub usage: Vec<(u32, f64)>,
+}
+
+impl Packing {
+    /// Unused share fraction across the packed GPUs (0 for an empty
+    /// packing); shares the metric definition with the planner-side
+    /// `Placement::fragmentation`.
+    pub fn fragmentation(&self, max_share: u32) -> f64 {
+        let used: u64 = self.usage.iter().map(|(s, _)| *s as u64).sum();
+        crate::coordinator::placement::share_fragmentation(
+            used,
+            self.usage.len(),
+            max_share,
+        )
+    }
 }
 
 /// First-fit-decreasing packing of every instance in the plan.
@@ -93,7 +112,8 @@ mod tests {
     #[test]
     fn packing_respects_caps() {
         let cm = cm();
-        let p = pack(&cm, &plan(&cm, 12), None).unwrap();
+        let the_plan = plan(&cm, 12);
+        let p = pack(&cm, &the_plan, None).unwrap();
         let g = &cm.config().gpu;
         assert!(p.gpus >= 1);
         for (share, mem) in &p.usage {
@@ -101,8 +121,7 @@ mod tests {
             assert!(*mem <= g.gpu_mem_mb);
         }
         let placed: u32 = p.placements.iter().map(|i| i.share).sum();
-        let wanted: u32 = plan(&cm, 12).total_share();
-        assert_eq!(placed, wanted);
+        assert_eq!(placed, the_plan.total_share());
     }
 
     #[test]

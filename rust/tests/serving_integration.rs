@@ -387,6 +387,86 @@ fn pool_thread_count_is_bounded_by_cpus() {
 }
 
 #[test]
+fn placed_plan_reports_per_gpu_utilization() {
+    use graft::coordinator::placement::{place, stamp};
+    let _wd = watchdog("per_gpu_utilization", Duration::from_secs(120));
+    for mode in MODES {
+        let cm = cm();
+        let mut plan = plan_for(
+            &cm,
+            "inc",
+            &[(0, 2, 110.0, 30.0), (1, 3, 95.0, 30.0), (2, 3, 100.0, 30.0)],
+        );
+        let placement = place(&cm, &plan, None).unwrap();
+        stamp(&mut plan, &placement);
+        let server = Server::start(
+            mock_executor(&cm),
+            &cm,
+            &plan,
+            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+        );
+        assert_eq!(server.gpu_count(), placement.gpus(), "{mode:?}");
+
+        let mi = cm.model_index("inc").unwrap();
+        let dims = &cm.config().models[mi].dims;
+        let (tx, rx) = mpsc::channel();
+        for c in 0..3u32 {
+            for seq in 0..8u32 {
+                let p = if c == 0 { 2 } else { 3 };
+                server.submit(
+                    Request {
+                        client_id: c,
+                        model: mi as u16,
+                        p: p as u16,
+                        seq,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dims[p]],
+                    },
+                    tx.clone(),
+                );
+            }
+        }
+        drop(tx);
+        let got = rx.iter().take(24).count();
+        assert_eq!(got, 24, "{mode:?}");
+        // every executed batch attributed modeled busy time to a GPU
+        let busy: u64 = server
+            .counters
+            .gpu_busy_share_us
+            .iter()
+            .map(|c| c.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+        assert!(busy > 0, "{mode:?}: no per-GPU busy time recorded");
+        let util = server.counters.gpu_utilization(1000.0, 100);
+        assert_eq!(util.len(), placement.gpus(), "{mode:?}");
+        assert!(util.iter().any(|&u| u > 0.0), "{mode:?}");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn unplaced_plan_has_no_gpu_counters() {
+    let _wd = watchdog("unplaced_no_gpu_counters", Duration::from_secs(60));
+    let cm = cm();
+    let plan = plan_for(&cm, "vgg", &[(0, 1, 80.0, 30.0)]);
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+        },
+    );
+    assert_eq!(server.gpu_count(), 0);
+    assert!(server.counters.gpu_utilization(1000.0, 100).is_empty());
+    server.shutdown();
+}
+
+#[test]
 fn tcp_front_with_real_engine() {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

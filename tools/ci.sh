@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# CI pipeline: build, test, style gates, and a fast planner-bench smoke
-# run (n=200) that also re-validates cached==uncached plan identity.
+# CI pipeline: build, test, style gates, and fast bench smoke runs:
+# planner (n=200, re-validates cached==uncached plan identity), serving
+# (n=100, both executors) and placement (n=200, integrated-vs-oracle
+# GPU counts + cap checks).
 #
 #   tools/ci.sh            full pipeline
 #   tools/ci.sh --fast     build + test only
@@ -64,5 +66,10 @@ echo "== serving bench smoke (n=100, both executors) =="
 timeout 600 cargo run --release -p graft -- bench-serving \
     --sizes 100 --requests 2000 --out target/BENCH_serving_smoke.json
 test -s target/BENCH_serving_smoke.json
+
+echo "== placement bench smoke (n=200, integrated vs post-hoc FFD) =="
+timeout 600 cargo run --release -p graft -- bench-placement \
+    --sizes 200 --out target/BENCH_placement_smoke.json
+test -s target/BENCH_placement_smoke.json
 
 echo "ci: OK"
