@@ -8,8 +8,26 @@
 //! of 0 ("Uniform" merging) merges every uniform fragment; Graft's
 //! Uniform⁺ stops early to leave slack for grouping/re-partitioning
 //! (paper §5.5 shows why that wins for low-margin models like ResNet).
+//!
+//! **Incremental (dirty-class) merging.**  The sorted demand set
+//! segments into *uniform classes*: maximal runs with one `(model, p)`
+//! whose consecutive budgets gap by at most the uniformity tolerance.
+//! The merge accumulator's budget only ever tightens downward, so a
+//! budget gap wider than the tolerance can never close — specs in
+//! different classes cannot merge, classes merge independently, and
+//! their outputs concatenate to exactly `merge_fragments`' result.
+//! [`merge_fragments_incremental`] exploits this under trigger-based
+//! re-planning: classes whose membership is unchanged since the
+//! previous trigger (verified by full spec equality, so hash
+//! collisions cannot splice a wrong result) reuse their cached merge
+//! output; only dirty classes re-run the margin scan.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 
 use super::fragment::FragmentSpec;
+use super::reuse::{group_signature, hash_constraints};
 use crate::profiler::{AllocConstraints, CostModel, FragmentId};
 
 /// Strategy knobs for the merging step.
@@ -74,8 +92,22 @@ pub fn merge_fragments(
     // "mergesort" the fragments into uniform classes (model, p, budget)
     let mut sorted = specs.to_vec();
     sort_specs(&mut sorted);
-
     let mut out: Vec<FragmentSpec> = Vec::new();
+    merge_scan(cm, sorted, opts, &mut out);
+    out
+}
+
+/// The linear §4.1 scan over one sorted sequence (the whole demand set,
+/// or one uniform class — the scan state resets exactly at class
+/// boundaries, so per-class scans concatenate to the global scan).
+/// Takes owned specs so the from-scratch path moves them instead of
+/// cloning.
+fn merge_scan(
+    cm: &CostModel,
+    sorted: impl IntoIterator<Item = FragmentSpec>,
+    opts: &MergeOptions,
+    out: &mut Vec<FragmentSpec>,
+) {
     let mut current: Option<FragmentSpec> = None;
     for spec in sorted {
         match current.take() {
@@ -96,7 +128,6 @@ pub fn merge_fragments(
         }
     }
     out.extend(current);
-    out
 }
 
 fn sort_specs(specs: &mut [FragmentSpec]) {
@@ -106,6 +137,150 @@ fn sort_specs(specs: &mut [FragmentSpec]) {
             .then(a.budget_ms.total_cmp(&b.budget_ms))
             .then(a.rate_rps.total_cmp(&b.rate_rps))
     });
+}
+
+/// Segment a sorted demand set into independent uniform classes:
+/// maximal runs with one `(model, p)` whose *consecutive* budgets gap
+/// by at most `tol_ms`.  An accumulator's budget is the minimum of its
+/// members (≤ every budget seen so far in the run), so a gap > tol
+/// between neighbours guarantees the global scan pushes its
+/// accumulator there — classes never interact.
+fn class_ranges(sorted: &[FragmentSpec], tol_ms: f64) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    for i in 1..=sorted.len() {
+        let split = i == sorted.len() || {
+            let (a, b) = (&sorted[i - 1], &sorted[i]);
+            a.model != b.model
+                || a.p != b.p
+                || (b.budget_ms - a.budget_ms).abs() > tol_ms
+        };
+        if split {
+            if i > start {
+                out.push((start, i));
+            }
+            start = i;
+        }
+    }
+    out
+}
+
+/// One cached uniform class: the exact sorted member specs (hash
+/// collisions are resolved by full equality, so a stale entry can never
+/// splice a wrong result) and its merge output.
+struct MergeClassEntry {
+    specs: Vec<FragmentSpec>,
+    merged: Vec<FragmentSpec>,
+    generation: u64,
+}
+
+/// Generational cache of per-class merge results, owned by the
+/// scheduler's replan context.  Every incremental merge pass opens a
+/// new generation and refreshes the entries it hits; when the entry
+/// count exceeds the capacity, eviction drops only entries not touched
+/// within the last trigger — the live working set always survives.
+#[derive(Default)]
+pub struct MergeCache {
+    map: HashMap<u64, Vec<MergeClassEntry>>,
+    entries: usize,
+    generation: u64,
+}
+
+const MERGE_CACHE_CAPACITY: usize = 1 << 16;
+
+impl MergeCache {
+    /// Drop everything (e.g. after mutating merge options — the options
+    /// are folded into every class signature, so this is belt-and-
+    /// braces, not correctness).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.entries = 0;
+    }
+
+    fn begin_trigger(&mut self) {
+        self.generation += 1;
+        let gen = self.generation;
+        if self.entries > MERGE_CACHE_CAPACITY {
+            for bucket in self.map.values_mut() {
+                bucket.retain(|e| e.generation + 1 >= gen);
+            }
+            self.map.retain(|_, b| !b.is_empty());
+            self.entries = self.map.values().map(Vec::len).sum();
+        }
+    }
+}
+
+/// Outcome of one incremental merge pass.
+pub struct MergeOutcome {
+    /// Identical to `merge_fragments` on the same demand
+    /// (property-tested).
+    pub merged: Vec<FragmentSpec>,
+    /// Uniform classes the demand set segmented into.
+    pub classes: usize,
+    /// Classes whose membership changed since the previous trigger
+    /// (recomputed; the rest spliced their cached output).
+    pub classes_remerged: usize,
+}
+
+fn merge_signature(opts: &MergeOptions) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts.threshold.to_bits().hash(&mut h);
+    opts.budget_tol_ms.to_bits().hash(&mut h);
+    hash_constraints(&mut h, &opts.constraints);
+    h.finish()
+}
+
+/// [`merge_fragments`], incrementally: diff the demand set against the
+/// previous trigger by uniform class and re-run the margin scan only
+/// for classes whose membership changed, splicing cached results for
+/// the clean ones.  Output is exactly `merge_fragments`' (the class
+/// segmentation argument above; property-tested).
+pub fn merge_fragments_incremental(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    opts: &MergeOptions,
+    cache: &mut MergeCache,
+) -> MergeOutcome {
+    let mut sorted = specs.to_vec();
+    sort_specs(&mut sorted);
+    if opts.threshold.is_infinite() && opts.threshold > 0.0 {
+        // "no merging": the sorted demand passes through untouched
+        let classes = class_ranges(&sorted, opts.budget_tol_ms).len();
+        return MergeOutcome { merged: sorted, classes, classes_remerged: 0 };
+    }
+    cache.begin_trigger();
+    let gen = cache.generation;
+    let opts_sig = merge_signature(opts);
+    let ranges = class_ranges(&sorted, opts.budget_tol_ms);
+    let classes = ranges.len();
+    let mut merged = Vec::new();
+    let mut remerged = 0usize;
+    for (a, b) in ranges {
+        let class = &sorted[a..b];
+        // the exact spec-level hash shared with the scheduler's group
+        // cache (`reuse::group_signature`), under the merge options
+        let sig = group_signature(class, opts_sig);
+        if let Some(e) = cache
+            .map
+            .get_mut(&sig)
+            .and_then(|bucket| bucket.iter_mut().find(|e| e.specs == class))
+        {
+            e.generation = gen;
+            merged.extend(e.merged.iter().cloned());
+            continue;
+        }
+        remerged += 1;
+        let mut out = Vec::new();
+        merge_scan(cm, class.iter().cloned(), opts, &mut out);
+        merged.extend(out.iter().cloned());
+        cache.map.entry(sig).or_default().push(MergeClassEntry {
+            specs: class.to_vec(),
+            merged: out,
+            generation: gen,
+        });
+        cache.entries += 1;
+    }
+    MergeOutcome { merged, classes, classes_remerged: remerged }
 }
 
 #[cfg(test)]
@@ -188,6 +363,70 @@ mod tests {
         let clients: usize = out.iter().map(|f| f.clients.len()).sum();
         assert_eq!(rate, 360.0);
         assert_eq!(clients, 12);
+    }
+
+    #[test]
+    fn class_ranges_split_on_model_point_and_budget_gap() {
+        let mut s = vec![
+            FragmentSpec::single(ClientId(0), 0, 4, 80.0, 30.0),
+            FragmentSpec::single(ClientId(1), 0, 4, 80.6, 30.0),
+            FragmentSpec::single(ClientId(2), 0, 4, 83.0, 30.0), // gap > 1
+            FragmentSpec::single(ClientId(3), 0, 5, 83.0, 30.0), // new p
+            FragmentSpec::single(ClientId(4), 1, 5, 83.0, 30.0), // new model
+        ];
+        sort_specs(&mut s);
+        assert_eq!(
+            class_ranges(&s, 1.0),
+            vec![(0, 2), (2, 3), (3, 4), (4, 5)]
+        );
+        assert!(class_ranges(&[], 1.0).is_empty());
+        // chained runs stay one class even when the ends gap > tol
+        let mut chain = vec![
+            FragmentSpec::single(ClientId(0), 0, 4, 80.0, 30.0),
+            FragmentSpec::single(ClientId(1), 0, 4, 80.9, 30.0),
+            FragmentSpec::single(ClientId(2), 0, 4, 81.8, 30.0),
+        ];
+        sort_specs(&mut chain);
+        assert_eq!(class_ranges(&chain, 1.0), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn incremental_merge_equals_scratch_and_reuses_clean_classes() {
+        let cm = cm();
+        let mut s = specs(10, 0, 4, 80.0, 30.0);
+        s.extend(specs(6, 1, 3, 60.0, 10.0));
+        let opts = MergeOptions::default();
+        let mut cache = MergeCache::default();
+        let first = merge_fragments_incremental(&cm, &s, &opts, &mut cache);
+        assert_eq!(first.merged, merge_fragments(&cm, &s, &opts));
+        assert_eq!(first.classes_remerged, first.classes);
+        assert!(first.classes >= 2);
+        // unchanged demand: everything splices from the cache
+        let replay = merge_fragments_incremental(&cm, &s, &opts, &mut cache);
+        assert_eq!(replay.merged, first.merged);
+        assert_eq!(replay.classes_remerged, 0);
+        // dirty one class: only it re-merges
+        s[0].budget_ms = 80.4;
+        let third = merge_fragments_incremental(&cm, &s, &opts, &mut cache);
+        assert_eq!(third.merged, merge_fragments(&cm, &s, &opts));
+        assert!(third.classes_remerged >= 1);
+        assert!(third.classes_remerged < third.classes);
+    }
+
+    #[test]
+    fn incremental_merge_none_threshold_passes_through() {
+        let cm = cm();
+        let s = specs(5, 0, 4, 80.0, 30.0);
+        let mut cache = MergeCache::default();
+        let out = merge_fragments_incremental(
+            &cm,
+            &s,
+            &MergeOptions::none(),
+            &mut cache,
+        );
+        assert_eq!(out.merged.len(), 5);
+        assert_eq!(out.classes_remerged, 0);
+        assert_eq!(out.merged, merge_fragments(&cm, &s, &MergeOptions::none()));
     }
 
     #[test]

@@ -123,6 +123,17 @@ impl ExecutionPlan {
         Some(max_gpu.map_or(0, |g| g as usize + 1))
     }
 
+    /// The distinct re-partition points of this plan's sets, sorted.
+    /// These are the warm-start hints the scheduler persists across
+    /// triggers to seed the next suffix-DP run
+    /// ([`crate::coordinator::repartition::realign_group_warm`]).
+    pub fn realign_points(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.sets.iter().map(|s| s.point).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     /// All stages in the plan (alignment + shared).
     pub fn stages(&self) -> impl Iterator<Item = &StagePlan> {
         self.sets.iter().flat_map(|s| {
@@ -206,6 +217,22 @@ mod tests {
         let plan = ExecutionPlan { sets: vec![set], infeasible: vec![] };
         assert_eq!(plan.total_share(), 136);
         assert_eq!(plan.gpus_share_lower_bound(100), 2);
+    }
+
+    #[test]
+    fn realign_points_sorted_and_deduped() {
+        let mk = |point| RealignedSet {
+            model: 0,
+            point,
+            members: vec![member(point, None)],
+            shared: stage(10, 1),
+        };
+        let plan = ExecutionPlan {
+            sets: vec![mk(7), mk(2), mk(7), mk(4)],
+            infeasible: vec![],
+        };
+        assert_eq!(plan.realign_points(), vec![2, 4, 7]);
+        assert!(ExecutionPlan::default().realign_points().is_empty());
     }
 
     #[test]

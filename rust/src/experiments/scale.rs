@@ -2,15 +2,19 @@
 //! capped resources), Fig 18 (massive-scale simulation), Fig 19 (system
 //! overhead + realignment pool size), Fig 20 (SLO-ratio sensitivity),
 //! Fig 21 (energy consumption), plus the serving-path throughput
-//! harness ("serving": thread-per-instance vs pooled executor) and the
+//! harness ("serving": thread-per-instance vs pooled executor), the
 //! GPU-placement comparison ("placement": planner-integrated packing
-//! vs the post-hoc FFD oracle and the GSLICE baseline).
+//! vs the post-hoc FFD oracle and the GSLICE baseline) and the
+//! trigger-to-trigger replanning harness ("replan": perturb k% of the
+//! clients, re-plan incrementally, compare against cold planning —
+//! shared by `graft bench-scheduler`'s replan scenario).
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use crate::config::Config;
 use crate::coordinator::baselines::{gslice, gslice_plus};
 use crate::coordinator::merging::MergeOptions;
 use crate::coordinator::optimal::optimal_plan;
@@ -596,10 +600,135 @@ pub fn placement_scale(cm: &CostModel) -> Table {
     t
 }
 
+/// One measured trigger-to-trigger replan run (the `replan` scenario of
+/// `graft bench-scheduler` and experiment "replan").
+#[derive(Debug, Clone)]
+pub struct ReplanPoint {
+    pub n_clients: usize,
+    pub perturb_pct: usize,
+    /// First trigger on a fresh scheduler (cold caches).
+    pub cold_ms: f64,
+    /// Re-plan of the perturbed demands on the same scheduler.
+    pub replan_ms: f64,
+    /// Fresh-scheduler cold plan of the *perturbed* demands — the
+    /// apples-to-apples baseline the replan's time and plan identity
+    /// are checked against.
+    pub cold_fresh_ms: f64,
+    /// `cold_fresh_ms / replan_ms` (same demand set on both sides).
+    pub speedup: f64,
+    pub n_groups: usize,
+    pub groups_reused: usize,
+    pub merge_classes: usize,
+    pub classes_remerged: usize,
+    pub dp_warm_hits: u64,
+    pub grid_points_cold: u64,
+    pub grid_points_replan: u64,
+    pub total_share: u32,
+    pub gpus: usize,
+    /// Replanned plan is byte-identical to the fresh cold plan.
+    pub identical: bool,
+}
+
+/// Move `pct`% of the clients' partition points and budgets — the
+/// trigger-based re-planning steady state (`pct` clamps to 1..=100).
+/// Split points rotate through every valid value `0..layers` (and a
+/// 1-layer model degenerates to a budget-only trigger instead of a
+/// division by zero).
+pub fn perturb_fragments(
+    cm: &CostModel,
+    specs: &mut [FragmentSpec],
+    pct: usize,
+) {
+    let step = (100 / pct.clamp(1, 100)).max(1);
+    for i in (0..specs.len()).step_by(step) {
+        let s = &mut specs[i];
+        let layers = cm.config().models[s.model].layers;
+        s.p = (s.p + 1) % layers.max(1);
+        s.budget_ms += 1.0;
+    }
+}
+
+/// Cold-plan a mixed fleet of `n` clients, perturb `pct`% of them,
+/// re-plan incrementally on the same scheduler and compare against a
+/// fresh cold plan of the perturbed demands (time *and* plan identity).
+pub fn replan_scenario(n: usize, pct: usize, seed: u64) -> ReplanPoint {
+    use crate::util::bench::time_ms;
+    let cfg = Config::embedded();
+    let cm = CostModel::new(cfg.clone());
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let mut specs = random_mixed_fragments(&cm, n, seed);
+
+    let (cold_ms, (_, cold_stats)) = time_ms(|| sched.plan(&specs));
+    perturb_fragments(&cm, &mut specs, pct);
+    let (replan_ms, (replan_plan, replan_stats)) =
+        time_ms(|| sched.plan(&specs));
+    // identity reference: a fresh scheduler, cold, on the same demands
+    let fresh = Scheduler::new(
+        CostModel::new(cfg),
+        SchedulerOptions::default(),
+    );
+    let (cold_fresh_ms, (fresh_plan, _)) = time_ms(|| fresh.plan(&specs));
+
+    ReplanPoint {
+        n_clients: n,
+        perturb_pct: pct,
+        cold_ms,
+        replan_ms,
+        cold_fresh_ms,
+        speedup: cold_fresh_ms / replan_ms.max(1e-9),
+        n_groups: replan_stats.n_groups,
+        groups_reused: replan_stats.n_groups_reused,
+        merge_classes: replan_stats.merge_classes,
+        classes_remerged: replan_stats.classes_remerged,
+        dp_warm_hits: replan_stats.dp_warm_hits,
+        grid_points_cold: cold_stats.grid_points_evaluated,
+        grid_points_replan: replan_stats.grid_points_evaluated,
+        total_share: replan_plan.total_share(),
+        gpus: replan_stats.gpus,
+        identical: replan_plan == fresh_plan,
+    }
+}
+
+/// Experiment "replan": small-fleet incremental-replanning table (the
+/// 1k–10k sweep lives in `graft bench-scheduler`'s replan scenario).
+pub fn replan_scale(_cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "n_clients",
+        "perturb_pct",
+        "cold_ms",
+        "replan_ms",
+        "speedup",
+        "groups_reused",
+        "n_groups",
+        "classes_remerged",
+        "merge_classes",
+        "dp_warm_hits",
+        "identical",
+    ]);
+    for &n in &[256usize, 1024] {
+        for &pct in &[1usize, 5, 20] {
+            let r = replan_scenario(n, pct, 0x9EB1A + n as u64);
+            t.row(vec![
+                n.to_string(),
+                pct.to_string(),
+                f(r.cold_ms, 2),
+                f(r.replan_ms, 2),
+                f(r.speedup, 2),
+                r.groups_reused.to_string(),
+                r.n_groups.to_string(),
+                r.classes_remerged.to_string(),
+                r.merge_classes.to_string(),
+                r.dp_warm_hits.to_string(),
+                r.identical.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
 
     fn cm() -> CostModel {
         CostModel::new(Config::embedded())
@@ -680,6 +809,34 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn replan_scenario_is_exact_and_reuses() {
+        let r = replan_scenario(48, 20, 7);
+        assert!(r.identical, "incremental replan diverged from cold");
+        assert!(r.groups_reused <= r.n_groups);
+        assert!(r.classes_remerged <= r.merge_classes);
+        assert!(r.cold_ms > 0.0 && r.replan_ms > 0.0);
+        // 20% of 48 clients moved: something must actually be dirty …
+        assert!(r.classes_remerged > 0);
+        // … and something must replay (same-model clean classes exist)
+        assert!(r.merge_classes > r.classes_remerged);
+    }
+
+    #[test]
+    fn perturb_touches_the_requested_share() {
+        let cm = cm();
+        let base = random_mixed_fragments(&cm, 100, 3);
+        let mut p1 = base.clone();
+        perturb_fragments(&cm, &mut p1, 1);
+        let changed = |a: &[FragmentSpec], b: &[FragmentSpec]| {
+            a.iter().zip(b).filter(|(x, y)| x != y).count()
+        };
+        assert_eq!(changed(&base, &p1), 1);
+        let mut p20 = base.clone();
+        perturb_fragments(&cm, &mut p20, 20);
+        assert_eq!(changed(&base, &p20), 20);
     }
 
     #[test]

@@ -194,6 +194,17 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
         plan.total_share(),
         stats.total_ms,
     );
+    println!(
+        "  reuse: {}/{} groups replayed, {}/{} merge classes re-merged, \
+         {} warm DP hits, {} grid points costed ({} screened out)",
+        stats.n_groups_reused,
+        stats.n_groups,
+        stats.classes_remerged,
+        stats.merge_classes,
+        stats.dp_warm_hits,
+        stats.grid_points_evaluated,
+        stats.grid_points_pruned,
+    );
     if stats.gpus > 0 {
         println!(
             "  placed on {} GPUs (share lower bound {}, fragmentation \
@@ -248,12 +259,22 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
 ///               budget (the trigger-based re-planning steady state),
 /// plus `uncached` — allocation cache and incremental reuse disabled —
 /// as the reference the speedup is measured against.
+///
+/// A second `replan` section then measures trigger-to-trigger
+/// replanning head-on: per size and perturbation share k ∈ {1, 5, 20}%
+/// it cold-plans a fresh fleet, perturbs k% of the clients, re-plans on
+/// the same scheduler and self-checks that (a) the incremental plan is
+/// byte-identical to a fresh cold plan of the same demands and (b) the
+/// warm replan is not slower than cold planning (small absolute slack
+/// absorbs timer noise at CI smoke sizes — at bench sizes the margin is
+/// orders of magnitude).
 fn cmd_bench_scheduler(args: &Args) -> Result<()> {
     use graft::coordinator::FragmentSpec;
     use graft::experiments::common::random_mixed_fragments;
+    use graft::experiments::scale::{perturb_fragments, replan_scenario};
+    use graft::util::bench::time_ms;
     use graft::util::Json;
     use std::collections::BTreeMap;
-    use std::time::Instant;
 
     let sizes: Vec<usize> = args
         .flags
@@ -276,19 +297,9 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
             .unwrap_or_else(|| "BENCH_scheduler.json".into()),
     );
 
-    // ~1% of clients move their partition point / budget (a trigger)
-    let perturb = |cm: &CostModel, specs: &mut [FragmentSpec]| {
-        for i in (0..specs.len()).step_by(100) {
-            let s = &mut specs[i];
-            let layers = cm.config().models[s.model].layers;
-            s.p = (s.p + 1) % (layers - 1);
-            s.budget_ms += 1.0;
-        }
-    };
     let time_plan = |sched: &Scheduler, specs: &[FragmentSpec]| {
-        let t = Instant::now();
-        let (plan, stats) = sched.plan(specs);
-        (t.elapsed().as_secs_f64() * 1e3, plan, stats)
+        let (ms, (plan, stats)) = time_ms(|| sched.plan(specs));
+        (ms, plan, stats)
     };
     let num = Json::Num;
     let ms3 = |v: f64| Json::Num((v * 1e3).round() / 1e3);
@@ -314,7 +325,9 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
             if warm_plan != cold_plan {
                 bail!("incremental re-plan diverged from cold plan at n={n}");
             }
-            perturb(&cm, &mut specs);
+            // ~1% of clients move their partition point / budget (the
+            // shared replan-scenario perturbation)
+            perturb_fragments(&cm, &mut specs, 1);
             let (pert_ms, pert_plan, pert_stats) = time_plan(&sched, &specs);
 
             // reference: no allocation cache, no incremental reuse
@@ -357,6 +370,25 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
                 "n_groups_reused_perturbed".into(),
                 num(pert_stats.n_groups_reused as f64),
             );
+            // PR 4 delta-awareness counters: merge classes re-merged /
+            // warm DP hits on the perturbed trigger, grid points the
+            // cold plan's adaptive d_shared search actually costed
+            row.insert(
+                "merge_classes".into(),
+                num(cold_stats.merge_classes as f64),
+            );
+            row.insert(
+                "classes_remerged_perturbed".into(),
+                num(pert_stats.classes_remerged as f64),
+            );
+            row.insert(
+                "dp_warm_hits_perturbed".into(),
+                num(pert_stats.dp_warm_hits as f64),
+            );
+            row.insert(
+                "grid_points_evaluated".into(),
+                num(cold_stats.grid_points_evaluated as f64),
+            );
             row.insert(
                 "alloc_cache_hit_rate".into(),
                 num((hits as f64 / (hits + misses).max(1) as f64 * 1e4)
@@ -389,19 +421,102 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
         runs.push(Json::Obj(row));
     }
 
+    // `replan` scenario: trigger-to-trigger incremental replanning at
+    // several perturbation shares, self-checked for plan identity and
+    // warm-not-slower-than-cold.
+    let mut replans = Vec::new();
+    println!(
+        "\n{:>8} {:>5} {:>10} {:>10} {:>8} {:>9} {:>9} {:>8} {:>8}",
+        "n", "k%", "cold_ms", "replan_ms", "speedup", "reused", "remerged",
+        "dp_hits", "share"
+    );
+    for &n in &sizes {
+        for &pct in &[1usize, 5, 20] {
+            let r = replan_scenario(n, pct, 0xB15C);
+            if !r.identical {
+                bail!(
+                    "incremental replan diverged from cold plan at n={n} \
+                     k={pct}%"
+                );
+            }
+            // warm replan must not lose to cold-planning the *same*
+            // perturbed demands (10% + 5 ms slack for timer noise at
+            // the n=200 CI smoke size; at bench sizes the margin is
+            // orders of magnitude)
+            if r.replan_ms > r.cold_fresh_ms * 1.1 + 5.0 {
+                bail!(
+                    "warm replan slower than cold at n={n} k={pct}%: \
+                     {:.2} ms vs {:.2} ms",
+                    r.replan_ms,
+                    r.cold_fresh_ms
+                );
+            }
+            println!(
+                "{:>8} {:>5} {:>10} {:>10} {:>8} {:>9} {:>9} {:>8} {:>8}",
+                n,
+                pct,
+                format!("{:.1}", r.cold_ms),
+                format!("{:.1}", r.replan_ms),
+                format!("{:.2}x", r.speedup),
+                format!("{}/{}", r.groups_reused, r.n_groups),
+                format!("{}/{}", r.classes_remerged, r.merge_classes),
+                r.dp_warm_hits,
+                r.total_share,
+            );
+            let mut row = BTreeMap::new();
+            row.insert("n_clients".into(), num(r.n_clients as f64));
+            row.insert("perturb_pct".into(), num(r.perturb_pct as f64));
+            row.insert("cold_ms".into(), ms3(r.cold_ms));
+            row.insert("replan_ms".into(), ms3(r.replan_ms));
+            row.insert("cold_fresh_ms".into(), ms3(r.cold_fresh_ms));
+            row.insert(
+                "speedup".into(),
+                num((r.speedup * 1e3).round() / 1e3),
+            );
+            row.insert("n_groups".into(), num(r.n_groups as f64));
+            row.insert("groups_reused".into(), num(r.groups_reused as f64));
+            row.insert("merge_classes".into(), num(r.merge_classes as f64));
+            row.insert(
+                "classes_remerged".into(),
+                num(r.classes_remerged as f64),
+            );
+            row.insert("dp_warm_hits".into(), num(r.dp_warm_hits as f64));
+            row.insert(
+                "grid_points_cold".into(),
+                num(r.grid_points_cold as f64),
+            );
+            row.insert(
+                "grid_points_replan".into(),
+                num(r.grid_points_replan as f64),
+            );
+            row.insert("total_share".into(), num(r.total_share as f64));
+            row.insert("gpus".into(), num(r.gpus as f64));
+            replans.push(Json::Obj(row));
+        }
+    }
+
     // record the options the benchmark actually ran with, not literals
     let defaults = SchedulerOptions::default();
     let mut config = BTreeMap::new();
     config.insert("pool_size".into(), num(defaults.pool_size as f64));
     config.insert("d_grid".into(), num(defaults.repartition.d_grid as f64));
+    config.insert(
+        "coarse_grid".into(),
+        num(defaults.repartition.coarse_grid as f64),
+    );
+    config.insert(
+        "adaptive_grid".into(),
+        Json::Bool(defaults.repartition.adaptive_grid),
+    );
     config.insert("group_size".into(), num(defaults.group.group_size as f64));
     config.insert("merge_threshold".into(), Json::Num(defaults.merge.threshold));
     config.insert("reps".into(), num(reps as f64));
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("scheduler".into()));
-    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("schema_version".into(), num(2.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("runs".into(), Json::Arr(runs));
+    doc.insert("replan".into(), Json::Arr(replans));
     let json = Json::Obj(doc);
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {

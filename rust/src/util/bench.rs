@@ -24,6 +24,14 @@ impl BenchResult {
     }
 }
 
+/// Time one call, returning `(elapsed ms, result)` — the shared
+/// wall-clock helper of the bench CLIs and the replan scenario.
+pub fn time_ms<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let t = Instant::now();
+    let r = f();
+    (t.elapsed().as_secs_f64() * 1e3, r)
+}
+
 /// Benchmark a closure: warm up for `warmup` iterations, then measure
 /// until `target_time` elapses (at least `min_iters`).
 pub fn bench<F, R>(name: &str, mut f: F) -> BenchResult
@@ -92,6 +100,13 @@ mod tests {
         );
         assert!(r.iters >= 10);
         assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn time_ms_returns_result_and_nonnegative_time() {
+        let (ms, v) = time_ms(|| 6 * 7);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
     }
 
     #[test]

@@ -8,9 +8,12 @@ use std::time::Duration;
 
 use graft::config::Config;
 use graft::coordinator::grouping::{group_fragments, GroupOptions};
-use graft::coordinator::merging::{merge_fragments, MergeOptions};
+use graft::coordinator::merging::{
+    merge_fragments, merge_fragments_incremental, MergeCache, MergeOptions,
+};
 use graft::coordinator::repartition::{
-    plan_covers_demand, plan_is_slo_safe, realign_group, RepartitionOptions,
+    plan_covers_demand, plan_is_slo_safe, realign_group, realign_group_warm,
+    RepartitionOptions,
 };
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::coordinator::{ClientId, FragmentSpec};
@@ -280,6 +283,163 @@ fn prop_incremental_replanning_identical_to_from_scratch() {
             SchedulerOptions { incremental: false, ..Default::default() },
         );
         assert_eq!(replay, fresh.plan(&specs).0, "case {case} final replay");
+    }
+}
+
+#[test]
+fn prop_adaptive_grid_identical_to_exhaustive() {
+    // The adaptive d_shared search (coarse sweep + bound-screened
+    // refinement) must return byte-identical plans to the exhaustive
+    // grid scan at the same resolution, for any grid/coarse setting.
+    let cm = cm();
+    for case in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(13_000 + case);
+        let model = rng.below(cm.config().models.len());
+        let n = 1 + rng.below(6);
+        let specs = random_specs(&mut rng, &cm, model, n);
+        let d_grid = 2 + rng.below(31);
+        let adaptive = RepartitionOptions {
+            d_grid,
+            coarse_grid: 2 + rng.below(10),
+            adaptive_grid: true,
+            ..Default::default()
+        };
+        let exhaustive = RepartitionOptions {
+            d_grid,
+            adaptive_grid: false,
+            ..Default::default()
+        };
+        let a = realign_group(&cm, &specs, &adaptive);
+        let b = realign_group(&cm, &specs, &exhaustive);
+        assert_eq!(
+            a, b,
+            "case {case}: adaptive (d_grid={d_grid}) diverged"
+        );
+    }
+}
+
+#[test]
+fn prop_warm_hints_are_advisory() {
+    // Any hint — the true winning points, a random subset, garbage —
+    // must yield exactly the cold plan: hints seed the DP incumbent,
+    // they never replace the search.
+    let cm = cm();
+    for case in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(14_000 + case);
+        let model = rng.below(cm.config().models.len());
+        let layers = cm.config().models[model].layers;
+        let n = 1 + rng.below(6);
+        let specs = random_specs(&mut rng, &cm, model, n);
+        let opts = RepartitionOptions::default();
+        let cold = realign_group(&cm, &specs, &opts);
+        let mut hints: Vec<Vec<usize>> = vec![cold.realign_points()];
+        hints.push(
+            (0..1 + rng.below(5)).map(|_| rng.below(layers + 4)).collect(),
+        );
+        hints.push(Vec::new());
+        for hint in hints {
+            let warm =
+                realign_group_warm(&cm, &specs, &opts, Some(&hint), None);
+            assert_eq!(warm, cold, "case {case}: hint {hint:?} changed plan");
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_merge_identical_to_scratch() {
+    // Dirty-class incremental merging must splice to exactly the
+    // from-scratch merge output across an evolving demand set, for
+    // every merging strategy sharing one cache.
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(15_000 + case);
+        let cfg = Config::embedded();
+        let cm = CostModel::new(cfg);
+        let n = 10 + rng.below(60);
+        let mut specs = random_mixed_specs(&mut rng, &cm, n);
+        let mut cache = MergeCache::default();
+        for step in 0..4 {
+            if step > 0 {
+                for s in specs.iter_mut() {
+                    if rng.f64() < 0.25 {
+                        let m = &cm.config().models[s.model];
+                        s.p = rng.below(m.layers);
+                        let tail =
+                            m.server_ms_ref * m.rel_cost_range(s.p, m.layers);
+                        s.budget_ms = tail * rng.range(2.5, 8.0);
+                    }
+                }
+            }
+            for opts in [
+                MergeOptions::default(),
+                MergeOptions::merge_all(),
+                MergeOptions::none(),
+            ] {
+                let inc = merge_fragments_incremental(
+                    &cm, &specs, &opts, &mut cache,
+                );
+                let scratch = merge_fragments(&cm, &specs, &opts);
+                assert_eq!(
+                    inc.merged, scratch,
+                    "case {case} step {step} thr={}",
+                    opts.threshold
+                );
+                assert!(inc.classes_remerged <= inc.classes);
+                // replaying the identical demand is all cache hits
+                let replay = merge_fragments_incremental(
+                    &cm, &specs, &opts, &mut cache,
+                );
+                assert_eq!(replay.merged, scratch);
+                assert_eq!(
+                    replay.classes_remerged, 0,
+                    "case {case} step {step}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_warm_replan_never_worse_than_cold() {
+    // The delta-aware pipeline (dirty-class merge + group replay +
+    // warm-started DP + adaptive grid) must track a fresh cold planner
+    // exactly across perturbation triggers: same total share, same GPU
+    // count — in fact byte-identical plans.
+    for case in 0..5u64 {
+        let mut rng = Rng::seed_from_u64(16_000 + case);
+        let cfg = Config::embedded();
+        let cm = CostModel::new(cfg.clone());
+        let n = 10 + rng.below(50);
+        let mut specs = random_mixed_specs(&mut rng, &cm, n);
+        let live = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        for step in 0..4 {
+            if step > 0 {
+                for s in specs.iter_mut() {
+                    if rng.f64() < 0.2 {
+                        let m = &cm.config().models[s.model];
+                        s.p = rng.below(m.layers);
+                        s.budget_ms += rng.range(0.5, 3.0);
+                    }
+                }
+            }
+            let (warm, _) = live.plan(&specs);
+            let cold = Scheduler::new(
+                CostModel::new(cfg.clone()),
+                SchedulerOptions::default(),
+            );
+            let (cold_plan, _) = cold.plan(&specs);
+            // the stated bound: no worse on share or GPUs …
+            assert!(
+                warm.total_share() <= cold_plan.total_share(),
+                "case {case} step {step}: {} > {}",
+                warm.total_share(),
+                cold_plan.total_share()
+            );
+            let wg = warm.placed_gpus().expect("warm plan placed");
+            let cg = cold_plan.placed_gpus().expect("cold plan placed");
+            assert!(wg <= cg, "case {case} step {step}: {wg} > {cg} GPUs");
+            // … and the stronger invariant the design guarantees
+            assert_eq!(warm, cold_plan, "case {case} step {step}");
+        }
     }
 }
 

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI pipeline: build, test, style gates, and fast bench smoke runs:
-# planner (n=200, re-validates cached==uncached plan identity), serving
+# planner (n=200, re-validates cached==uncached plan identity plus the
+# replan scenario's warm<=cold and plan-identity self-checks), serving
 # (n=100, both executors) and placement (n=200, integrated-vs-oracle
 # GPU counts + cap checks).
 #
@@ -57,10 +58,14 @@ else
     echo "ci: clippy unavailable, skipping lint"
 fi
 
-echo "== bench smoke (n=200) =="
-cargo run --release -p graft -- bench-scheduler \
+echo "== bench smoke (n=200, incl. trigger-to-trigger replan scenario) =="
+# the replan scenario self-checks warm replan <= cold plan time and
+# incremental-vs-cold plan identity inside the bench (it bails hard);
+# the grep asserts the section actually landed in the JSON
+timeout 600 cargo run --release -p graft -- bench-scheduler \
     --sizes 200 --reps 1 --out target/BENCH_scheduler_smoke.json
 test -s target/BENCH_scheduler_smoke.json
+grep -q '"replan"' target/BENCH_scheduler_smoke.json
 
 echo "== serving bench smoke (n=100, both executors) =="
 timeout 600 cargo run --release -p graft -- bench-serving \
