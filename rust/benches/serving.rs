@@ -104,6 +104,7 @@ fn main() {
             time_scale: 0.0,
             drop_on_slo: false,
             mode: ExecutorMode::Pool,
+            ..Default::default()
         },
     );
     let payload: Vec<f32> = vec![0.5; dims[1]];

@@ -141,6 +141,7 @@ fn main() -> anyhow::Result<()> {
                 time_scale,
                 drop_on_slo: true,
                 mode: ExecutorMode::Pool,
+                ..Default::default()
             },
         ));
         let front = TcpFront::start("127.0.0.1:0", server.clone())?;

@@ -1,0 +1,265 @@
+//! The replan controller — the monitor → re-plan → redeploy loop of
+//! Fig 6, bridging the delta-aware planner and the live serving core.
+//!
+//! The controller owns the current demand specs and watches the
+//! *observed* per-model arrival counts of the live server (the
+//! balancer's routed-submit counters,
+//! [`crate::serving::Server::model_arrivals`] —
+//! inter-stage forwards are excluded, so pipeline depth cannot inflate
+//! the estimate).  Each [`ReplanController::tick`]:
+//!
+//! 1. diffs the arrival counters against the previous baseline into
+//!    observed per-model rates over the window;
+//! 2. compares them with the *planned* rates (the demand specs the
+//!    deployed plan was built from) — the max relative drift decides;
+//! 3. on drift ≥ the threshold, scales the drifted models' demand
+//!    rates to the observation, re-plans on the shared (incremental,
+//!    PR-4 delta-aware) [`Scheduler`], re-places with the
+//!    migration-minimizing delta placement
+//!    ([`crate::coordinator::placement::place_delta`]) and applies the
+//!    new plan through the live transition engine
+//!    ([`LiveServer::reconfigure`]) — in-flight requests finish on the
+//!    old shards while the new ones open.
+//!
+//! `tick` is synchronous and deterministic given the counters, so the
+//! tests drive it directly; [`ReplanController::run`] wraps it in a
+//! background watcher thread for `graft serve --reconfigure`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::fragment::FragmentSpec;
+use super::placement::{place_delta, stamp};
+use super::scheduler::Scheduler;
+use crate::runtime::transition::{diff_plans, LiveServer, TransitionReport};
+
+#[derive(Debug, Clone)]
+pub struct ControllerOptions {
+    /// Relative per-model drift `|observed − planned| / planned` that
+    /// fires a replan.
+    pub drift_threshold: f64,
+    /// Arrivals a window must contain before its rate estimate is
+    /// trusted (windows keep accumulating until then).
+    pub min_requests: u64,
+    /// Watcher thread poll interval ([`ReplanController::run`]).
+    pub interval: Duration,
+    /// Clamp on the per-model demand rescale factor per trigger, so a
+    /// measurement artifact cannot blow the demand model up (or to 0).
+    pub rate_clamp: (f64, f64),
+    /// Persist the scheduler's replan context here after every replan
+    /// ([`Scheduler::save_replan_context`]), so a restarted scheduler
+    /// warm-starts its first live replan.
+    pub context_path: Option<PathBuf>,
+}
+
+impl Default for ControllerOptions {
+    fn default() -> Self {
+        Self {
+            drift_threshold: 0.25,
+            min_requests: 50,
+            interval: Duration::from_secs(1),
+            rate_clamp: (0.2, 5.0),
+            context_path: None,
+        }
+    }
+}
+
+/// What one controller tick did.
+#[derive(Debug)]
+pub enum TickOutcome {
+    /// First observation (or post-swap counter reset): baseline stored.
+    Baseline,
+    /// The window has too few arrivals to trust; it keeps accumulating.
+    TooFewRequests { arrivals: u64 },
+    /// Every model within the drift threshold.
+    Stable { max_drift: f64 },
+    /// Drift fired but the replanner produced a configuration-identical
+    /// plan (discreteness absorbed the rate move) — nothing to deploy.
+    PlanUnchanged { max_drift: f64 },
+    /// Re-planned and hot-swapped.
+    Replanned {
+        max_drift: f64,
+        scaled_models: usize,
+        report: TransitionReport,
+    },
+}
+
+struct CtrlState {
+    demands: Vec<FragmentSpec>,
+    /// Arrival counters + wall clock of the window start, and the swap
+    /// generation they were read under (a swap resets the counters).
+    baseline: Option<(HashMap<String, u64>, Instant)>,
+    swap_gen: u64,
+}
+
+pub struct ReplanController {
+    sched: Arc<Scheduler>,
+    live: Arc<LiveServer>,
+    pub opts: ControllerOptions,
+    state: Mutex<CtrlState>,
+}
+
+impl ReplanController {
+    pub fn new(
+        sched: Arc<Scheduler>,
+        live: Arc<LiveServer>,
+        demands: Vec<FragmentSpec>,
+        opts: ControllerOptions,
+    ) -> Self {
+        Self {
+            sched,
+            live,
+            opts,
+            state: Mutex::new(CtrlState {
+                demands,
+                baseline: None,
+                swap_gen: 0,
+            }),
+        }
+    }
+
+    /// The demand specs the deployed plan was built from.
+    pub fn demands(&self) -> Vec<FragmentSpec> {
+        self.state.lock().unwrap().demands.clone()
+    }
+
+    /// One monitor → (maybe) re-plan → (maybe) redeploy step.
+    pub fn tick(&self) -> TickOutcome {
+        let mut st = self.state.lock().unwrap();
+        let server = self.live.server();
+        let gen = self.live.swap_count();
+        let now = Instant::now();
+        let arrivals = server.model_arrivals();
+
+        let Some((base, t0)) = st
+            .baseline
+            .as_ref()
+            .filter(|_| st.swap_gen == gen)
+            .cloned()
+        else {
+            // first tick, or a swap reset the counters mid-window
+            st.baseline = Some((arrivals, now));
+            st.swap_gen = gen;
+            return TickOutcome::Baseline;
+        };
+
+        let dt_s = now.duration_since(t0).as_secs_f64().max(1e-9);
+        let mut window_total = 0u64;
+        let mut observed: HashMap<&str, f64> = HashMap::new();
+        for (model, &count) in &arrivals {
+            let delta = count.saturating_sub(*base.get(model).unwrap_or(&0));
+            window_total += delta;
+            observed.insert(model.as_str(), delta as f64 / dt_s);
+        }
+        if window_total < self.opts.min_requests {
+            // keep the window open until the estimate means something
+            return TickOutcome::TooFewRequests { arrivals: window_total };
+        }
+
+        // planned per-model rates from the current demand model
+        let cm = self.sched.cost_model();
+        let mut planned: HashMap<&str, f64> = HashMap::new();
+        for s in &st.demands {
+            *planned
+                .entry(cm.config().models[s.model].name.as_str())
+                .or_insert(0.0) += s.rate_rps;
+        }
+        let mut max_drift = 0.0f64;
+        let mut factors: HashMap<usize, f64> = HashMap::new();
+        for (mi, m) in cm.config().models.iter().enumerate() {
+            let p = *planned.get(m.name.as_str()).unwrap_or(&0.0);
+            let o = *observed.get(m.name.as_str()).unwrap_or(&0.0);
+            if p <= 0.0 {
+                continue; // nothing deployed for this model
+            }
+            let drift = (o - p).abs() / p;
+            max_drift = max_drift.max(drift);
+            if drift >= self.opts.drift_threshold {
+                let (lo, hi) = self.opts.rate_clamp;
+                factors.insert(mi, (o / p).clamp(lo, hi));
+            }
+        }
+        // window consumed either way: re-baseline on the fresh counters
+        st.baseline = Some((arrivals, now));
+        st.swap_gen = gen;
+        if factors.is_empty() {
+            return TickOutcome::Stable { max_drift };
+        }
+
+        // drift: rescale the drifted models' demand and re-plan
+        // incrementally on the shared scheduler
+        let mut demands = st.demands.clone();
+        for s in &mut demands {
+            if let Some(f) = factors.get(&s.model) {
+                s.rate_rps *= f;
+            }
+        }
+        let (mut new_plan, _stats) = self.sched.plan(&demands);
+        let old_plan = self.live.plan();
+        let t = diff_plans(&old_plan, &new_plan);
+        if t.updated_sets + t.added_sets + t.removed_sets == 0 {
+            st.demands = demands;
+            return TickOutcome::PlanUnchanged { max_drift };
+        }
+        // migration-minimizing re-placement against the deployed plan
+        // (falls back to the scheduler's own FFD stamps on failure)
+        if let Ok(d) = place_delta(cm, &old_plan, &new_plan, None) {
+            stamp(&mut new_plan, &d.placement);
+        }
+        let report = self.live.reconfigure(&new_plan);
+        st.demands = demands;
+        st.swap_gen = self.live.swap_count();
+        st.baseline = None; // fresh counters next tick
+        if let Some(path) = &self.opts.context_path {
+            let _ = self.sched.save_replan_context(path);
+        }
+        TickOutcome::Replanned {
+            max_drift,
+            scaled_models: factors.len(),
+            report,
+        }
+    }
+
+    /// Background watcher: tick every `opts.interval` until `stop` is
+    /// set.  Returns the watcher thread handle.
+    pub fn run(self: Arc<Self>, stop: Arc<AtomicBool>) -> JoinHandle<()> {
+        let interval = self.opts.interval;
+        std::thread::Builder::new()
+            .name("graft-replan-ctrl".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let outcome = self.tick();
+                    if let TickOutcome::Replanned {
+                        max_drift, report, ..
+                    } = &outcome
+                    {
+                        eprintln!(
+                            "[controller] drift {:.0}% -> replanned: {} kept / \
+                             {} updated / {} added / {} removed sets, swap \
+                             {:.1} ms (drain {:.1} ms), old core rejected {}",
+                            max_drift * 100.0,
+                            report.transition.kept_sets,
+                            report.transition.updated_sets,
+                            report.transition.added_sets,
+                            report.transition.removed_sets,
+                            report.total_ms,
+                            report.drain_ms,
+                            report.old_rejected,
+                        );
+                    }
+                    // sleep in small steps so stop is honored promptly
+                    let deadline = Instant::now() + interval;
+                    while !stop.load(Ordering::SeqCst)
+                        && Instant::now() < deadline
+                    {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            })
+            .expect("spawn replan controller")
+    }
+}

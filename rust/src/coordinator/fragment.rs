@@ -58,6 +58,44 @@ impl FragmentSpec {
     pub fn property_vector(&self) -> [f64; 3] {
         [self.p as f64, self.budget_ms, self.rate_rps]
     }
+
+    /// JSON form for replan-context persistence.  Exact: floats
+    /// round-trip bit-identically through the shortest-repr printer, so
+    /// a reloaded spec still satisfies the caches' equality checks.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("model".into(), Json::Num(self.model as f64));
+        o.insert("p".into(), Json::Num(self.p as f64));
+        o.insert("budget_ms".into(), Json::Num(self.budget_ms));
+        o.insert("rate_rps".into(), Json::Num(self.rate_rps));
+        o.insert(
+            "clients".into(),
+            Json::Arr(
+                self.clients
+                    .iter()
+                    .map(|c| Json::Num(c.0 as f64))
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<FragmentSpec> {
+        Ok(FragmentSpec {
+            model: v.get("model")?.as_usize()?,
+            p: v.get("p")?.as_usize()?,
+            budget_ms: v.get("budget_ms")?.as_f64()?,
+            rate_rps: v.get("rate_rps")?.as_f64()?,
+            clients: v
+                .get("clients")?
+                .as_arr()?
+                .iter()
+                .map(|c| Ok(ClientId(c.as_usize()? as u32)))
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
 }
 
 /// A client's identity + current fragment demand, as tracked online.
@@ -101,5 +139,17 @@ mod tests {
     #[test]
     fn property_vector_order() {
         assert_eq!(spec(3, 50.0, 30.0).property_vector(), [3.0, 50.0, 30.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut s = spec(3, 80.6, 31.25);
+        s.clients = vec![ClientId(4), ClientId(9)];
+        let doc = s.to_json().to_string();
+        let back = FragmentSpec::from_json(
+            &crate::util::Json::parse(&doc).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, s);
     }
 }

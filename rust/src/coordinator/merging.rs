@@ -208,6 +208,66 @@ impl MergeCache {
             self.entries = self.map.values().map(Vec::len).sum();
         }
     }
+
+    /// Cached class entries (for persistence bookkeeping/tests).
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// JSON form for replan-context persistence
+    /// ([`crate::coordinator::Scheduler::save_replan_context`]): every
+    /// cached class with its signature, exact member specs and merge
+    /// output.  Generations are not persisted — a reloaded cache starts
+    /// a fresh generation clock, which only affects eviction order,
+    /// never correctness (entries are always verified by full spec
+    /// equality on lookup).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut classes = Vec::new();
+        for (sig, bucket) in &self.map {
+            for e in bucket {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("sig".into(), Json::Str(format!("{sig:016x}")));
+                o.insert(
+                    "specs".into(),
+                    Json::Arr(e.specs.iter().map(|s| s.to_json()).collect()),
+                );
+                o.insert(
+                    "merged".into(),
+                    Json::Arr(e.merged.iter().map(|s| s.to_json()).collect()),
+                );
+                classes.push(Json::Obj(o));
+            }
+        }
+        Json::Arr(classes)
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<MergeCache> {
+        let mut cache = MergeCache::default();
+        for entry in v.as_arr()? {
+            let sig = u64::from_str_radix(entry.get("sig")?.as_str()?, 16)?;
+            let parse = |key: &str| -> anyhow::Result<Vec<FragmentSpec>> {
+                entry
+                    .get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(FragmentSpec::from_json)
+                    .collect()
+            };
+            cache.map.entry(sig).or_default().push(MergeClassEntry {
+                specs: parse("specs")?,
+                merged: parse("merged")?,
+                generation: 0,
+            });
+            cache.entries += 1;
+        }
+        Ok(cache)
+    }
 }
 
 /// Outcome of one incremental merge pass.

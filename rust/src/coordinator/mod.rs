@@ -3,6 +3,7 @@
 //! the execution-plan types, and the baselines it is evaluated against.
 
 pub mod baselines;
+pub mod controller;
 pub mod fragment;
 pub mod grouping;
 pub mod merging;
@@ -13,7 +14,11 @@ pub mod repartition;
 pub mod reuse;
 pub mod scheduler;
 
+pub use controller::{ControllerOptions, ReplanController, TickOutcome};
 pub use fragment::{ClientId, FragmentSpec};
-pub use placement::{place, GpuUsage, Placement, PlacementOptions};
+pub use placement::{
+    place, place_delta, DeltaPlacement, GpuUsage, Placement,
+    PlacementOptions,
+};
 pub use plan::{ExecutionPlan, MemberPlan, RealignedSet, StagePlan};
 pub use scheduler::{ScheduleStats, Scheduler, SchedulerOptions};

@@ -19,7 +19,7 @@
 //! the fact, and never violates a cap.
 
 use super::plan::ExecutionPlan;
-use crate::profiler::CostModel;
+use crate::profiler::{Alloc, CostModel};
 
 /// Knobs for the planner-integrated placement pass.
 #[derive(Debug, Clone)]
@@ -235,6 +235,246 @@ pub fn stamped_usage(
     Some(usage)
 }
 
+// ---------------------------------------------------------------------------
+// Delta re-placement (migration-minimizing, live reconfiguration)
+// ---------------------------------------------------------------------------
+
+/// Result of a migration-minimizing delta placement
+/// ([`place_delta`]).
+#[derive(Debug, Clone)]
+pub struct DeltaPlacement {
+    /// The chosen placement of the new plan (delta-packed, or the full
+    /// repack on the fallback path).  GPU ids are stable: pinned
+    /// instances keep their previous id, so the usage vector may hold
+    /// empty (vacated) GPUs.
+    pub placement: Placement,
+    /// Instances that stay exactly where they were.
+    pub pinned: usize,
+    /// Instances that must (re)start on a GPU: instances of new or
+    /// changed stages, plus — on the fallback path — unchanged
+    /// instances the repack moved anyway.
+    pub migrated: usize,
+    /// GPUs actually hosting at least one instance (≤
+    /// `placement.gpus()` because vacated ids stay in the vector).
+    pub gpus_used: usize,
+    /// Migration count of the full-repack oracle on the same plan pair
+    /// (`migrated ≤ repack_migrated` always holds).
+    pub repack_migrated: usize,
+    /// GPU count of the full-repack oracle.
+    pub repack_gpus: usize,
+    /// Delta packing would have needed more GPUs than the repack, so
+    /// the repack was used instead — this is what guarantees the delta
+    /// path never exceeds the oracle's GPU count.
+    pub fell_back: bool,
+}
+
+/// Perturbation-stable identity of every stage in `plan.stages()`
+/// order: stage kind (alignment/shared) + model + the sorted client-id
+/// set the stage serves.  Client sets are disjoint across sets and
+/// members, so identities are unique within a plan; across plans they
+/// find "the same" logical instance group again after budgets, rates
+/// or allocations moved (the same idea as
+/// [`crate::coordinator::reuse::warm_signature`], applied per stage).
+pub fn stage_identities(plan: &ExecutionPlan) -> Vec<u64> {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let ident = |kind: u8, model: usize, clients: &mut Vec<u32>| {
+        clients.sort_unstable();
+        let mut h = DefaultHasher::new();
+        kind.hash(&mut h);
+        model.hash(&mut h);
+        clients.hash(&mut h);
+        h.finish()
+    };
+    let mut out = Vec::new();
+    for set in &plan.sets {
+        // stages() order: members' alignment stages, then the shared
+        for m in &set.members {
+            if m.align.is_some() {
+                let mut c: Vec<u32> =
+                    m.spec.clients.iter().map(|c| c.0).collect();
+                out.push(ident(0, set.model, &mut c));
+            }
+        }
+        let mut c: Vec<u32> = set
+            .members
+            .iter()
+            .flat_map(|m| m.spec.clients.iter().map(|c| c.0))
+            .collect();
+        out.push(ident(1, set.model, &mut c));
+    }
+    out
+}
+
+/// Multiset overlap of two GPU-assignment lists: how many instances of
+/// a stage can be considered "not moved" between two placements
+/// (instances of one stage are fungible, so the fair count matches
+/// assignments as multisets, not positionally).
+fn gpu_overlap(a: &[u32], b: &[u32]) -> usize {
+    let mut counts: std::collections::HashMap<u32, usize> =
+        std::collections::HashMap::new();
+    for &g in a {
+        *counts.entry(g).or_insert(0) += 1;
+    }
+    let mut k = 0;
+    for &g in b {
+        if let Some(c) = counts.get_mut(&g) {
+            if *c > 0 {
+                *c -= 1;
+                k += 1;
+            }
+        }
+    }
+    k
+}
+
+/// Migration-minimizing placement of `new` against the previously
+/// deployed (stamped) `old` plan: instances of stages unchanged between
+/// the plans (same identity, same fragment, same allocation) are
+/// *pinned* to their current GPU; only the diff — instances of new or
+/// changed stages — is FFD-packed into the vacated and residual
+/// capacity.  The full repack ([`place`]) is always computed as the
+/// oracle: if the delta packing would occupy more GPUs, the repack is
+/// used instead (`fell_back`), so the result never exceeds the
+/// oracle's GPU count while migrating no more instances than it
+/// (`migrated ≤ repack_migrated`, property-tested).
+pub fn place_delta(
+    cm: &CostModel,
+    old: &ExecutionPlan,
+    new: &ExecutionPlan,
+    max_gpus: Option<usize>,
+) -> Result<DeltaPlacement, Unplaceable> {
+    let g = &cm.config().gpu;
+    let repack = place(cm, new, max_gpus)?;
+
+    // index the old plan's stamped stages by identity (an unstamped old
+    // plan pins nothing and the repack wins trivially)
+    let mut old_stages: std::collections::HashMap<
+        u64,
+        Vec<(crate::profiler::FragmentId, Alloc, Vec<u32>)>,
+    > = std::collections::HashMap::new();
+    if old.placed_gpus().is_some() {
+        for (id, s) in stage_identities(old).into_iter().zip(old.stages()) {
+            old_stages.entry(id).or_default().push((
+                s.frag,
+                s.alloc,
+                s.gpus.clone(),
+            ));
+        }
+    }
+
+    let new_ids = stage_identities(new);
+    let new_stages: Vec<&super::plan::StagePlan> = new.stages().collect();
+    let n_old_gpus = old.placed_gpus().unwrap_or(0);
+    let mut usage = vec![GpuUsage::default(); n_old_gpus];
+    let mut by_stage: Vec<Vec<u32>> = Vec::with_capacity(new_stages.len());
+    let mut pinned_gpus: Vec<Option<Vec<u32>>> =
+        Vec::with_capacity(new_stages.len());
+    let mut pinned = 0usize;
+    let mut repack_migrated = 0usize;
+    for (si, s) in new_stages.iter().enumerate() {
+        by_stage.push(vec![0; s.alloc.instances as usize]);
+        let matched = old_stages.get_mut(&new_ids[si]).and_then(|bucket| {
+            bucket
+                .iter()
+                .position(|(frag, alloc, _)| {
+                    *frag == s.frag && *alloc == s.alloc
+                })
+                .map(|i| bucket.swap_remove(i).2)
+        });
+        match matched {
+            Some(gpus) => {
+                // unchanged stage: pin every instance to its current GPU
+                let mem = cm.instance_mem_mb(s.frag, s.alloc.batch);
+                for &gpu in &gpus {
+                    usage[gpu as usize].share += s.alloc.share;
+                    usage[gpu as usize].mem_mb += mem;
+                }
+                pinned += gpus.len();
+                // the repack restarts whatever it did not keep in place
+                repack_migrated += gpus.len()
+                    - gpu_overlap(&gpus, &repack.by_stage[si]);
+                pinned_gpus.push(Some(gpus));
+            }
+            None => {
+                // new or changed stage: all instances restart under
+                // either strategy
+                repack_migrated += s.alloc.instances as usize;
+                pinned_gpus.push(None);
+            }
+        }
+    }
+
+    // FFD the diff into the vacated + residual capacity (same
+    // deterministic ordering discipline as `place`)
+    let mut items: Vec<(usize, usize, u32, f64)> = Vec::new();
+    for (si, s) in new_stages.iter().enumerate() {
+        match &pinned_gpus[si] {
+            Some(gpus) => by_stage[si] = gpus.clone(),
+            None => {
+                let mem = cm.instance_mem_mb(s.frag, s.alloc.batch);
+                for inst in 0..s.alloc.instances as usize {
+                    items.push((si, inst, s.alloc.share, mem));
+                }
+            }
+        }
+    }
+    let migrated = items.len();
+    items.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.total_cmp(&a.3)));
+    let mut delta_ok = true;
+    for (si, inst, share, mem) in items {
+        let slot = usage.iter().position(|u| {
+            u.share + share <= g.max_share && u.mem_mb + mem <= g.gpu_mem_mb
+        });
+        let gpu = match slot {
+            Some(i) => i,
+            None => {
+                if max_gpus.is_some_and(|cap| usage.len() >= cap) {
+                    // the repack fit under the cap, so fall back to it
+                    delta_ok = false;
+                    break;
+                }
+                usage.push(GpuUsage::default());
+                usage.len() - 1
+            }
+        };
+        usage[gpu].share += share;
+        usage[gpu].mem_mb += mem;
+        by_stage[si][inst] = gpu as u32;
+    }
+    let gpus_used = usage
+        .iter()
+        .filter(|u| u.share > 0 || u.mem_mb > 0.0)
+        .count();
+    let repack_gpus = repack.gpus();
+    if delta_ok && gpus_used <= repack_gpus {
+        Ok(DeltaPlacement {
+            placement: Placement { usage, by_stage },
+            pinned,
+            migrated,
+            gpus_used,
+            repack_migrated,
+            repack_gpus,
+            fell_back: false,
+        })
+    } else {
+        // delta packing fragments past the oracle: take the repack
+        let total: usize = new_stages
+            .iter()
+            .map(|s| s.alloc.instances as usize)
+            .sum();
+        Ok(DeltaPlacement {
+            placement: repack,
+            pinned: total - repack_migrated,
+            migrated: repack_migrated,
+            gpus_used: repack_gpus,
+            repack_migrated,
+            repack_gpus,
+            fell_back: true,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +573,91 @@ mod tests {
         let p = plan(&cm, 40);
         let placed = place(&cm, &p, None).unwrap();
         assert!(gpus_mem_lower_bound(&cm, &p) <= placed.gpus());
+    }
+
+    #[test]
+    fn delta_identical_plan_pins_everything() {
+        let cm = cm();
+        let mut old = plan(&cm, 12);
+        let placement = place(&cm, &old, None).unwrap();
+        stamp(&mut old, &placement);
+        let new = old.clone();
+        let d = place_delta(&cm, &old, &new, None).unwrap();
+        assert!(!d.fell_back);
+        assert_eq!(d.migrated, 0);
+        let total: usize =
+            new.stages().map(|s| s.alloc.instances as usize).sum();
+        assert_eq!(d.pinned, total);
+        assert_eq!(d.gpus_used, placement.gpus());
+        // pinned assignments are byte-identical to the old stamps
+        for (old_s, gpus) in old.stages().zip(&d.placement.by_stage) {
+            assert_eq!(&old_s.gpus, gpus);
+        }
+    }
+
+    #[test]
+    fn delta_never_exceeds_repack_and_respects_caps() {
+        let cm = cm();
+        let g = cm.config().gpu.clone();
+        let mut old = plan(&cm, 24);
+        let placement = place(&cm, &old, None).unwrap();
+        stamp(&mut old, &placement);
+        // grow the fleet: 6 more clients — old sets unchanged, new set
+        // packs into the residual capacity
+        let mut new = plan(&cm, 30);
+        assert_eq!(new.placed_gpus(), None);
+        let d = place_delta(&cm, &old, &new, None).unwrap();
+        let total: usize =
+            new.stages().map(|s| s.alloc.instances as usize).sum();
+        assert_eq!(d.pinned + d.migrated, total);
+        assert!(d.migrated <= d.repack_migrated);
+        assert!(d.gpus_used <= d.repack_gpus);
+        // caps hold on every (possibly partially vacated) GPU
+        for u in &d.placement.usage {
+            assert!(u.share <= g.max_share);
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
+        }
+        // stamping the delta placement round-trips
+        stamp(&mut new, &d.placement);
+        assert!(new.placed_gpus().is_some());
+    }
+
+    #[test]
+    fn delta_unstamped_old_plan_falls_back_to_repack() {
+        let cm = cm();
+        let old = plan(&cm, 8); // never stamped
+        let new = plan(&cm, 8);
+        let d = place_delta(&cm, &old, &new, None).unwrap();
+        assert!(d.fell_back || d.migrated == d.repack_migrated);
+        assert_eq!(d.gpus_used, d.repack_gpus);
+    }
+
+    #[test]
+    fn stage_identities_are_unique_and_stable_under_perturbation() {
+        let cm = cm();
+        let inc = cm.model_index("inc").unwrap();
+        let specs: Vec<FragmentSpec> = (0..6)
+            .map(|i| {
+                FragmentSpec::single(ClientId(i), inc, 3, 100.0 + i as f64, 30.0)
+            })
+            .collect();
+        let a = gslice(&cm, &specs, &AllocConstraints::default());
+        let ids_a = stage_identities(&a);
+        assert_eq!(ids_a.len(), a.stages().count());
+        let mut dedup = ids_a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids_a.len(), "identities collide");
+        // a rate/budget move keeps the identity (same clients)
+        let mut specs_b = specs.clone();
+        for s in &mut specs_b {
+            s.budget_ms += 5.0;
+            s.rate_rps *= 1.5;
+        }
+        let b = gslice(&cm, &specs_b, &AllocConstraints::default());
+        if b.stages().count() == a.stages().count() {
+            assert_eq!(ids_a, stage_identities(&b));
+        }
     }
 
     #[test]

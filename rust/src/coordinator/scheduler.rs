@@ -205,6 +205,78 @@ impl Scheduler {
         &self.cm
     }
 
+    /// Persist the cross-trigger replan context (merge-class cache +
+    /// DP choice tables) as JSON, so a restarted scheduler's first live
+    /// replan is still warm.  The exact group-plan cache is *not*
+    /// persisted: it stores whole plans (orders of magnitude bigger)
+    /// and a cold group recompute is precisely what the warm DP hints
+    /// accelerate.  Written atomically (tmp + rename), so a crash
+    /// mid-save never leaves a truncated context.
+    pub fn save_replan_context(
+        &self,
+        path: &std::path::Path,
+    ) -> anyhow::Result<()> {
+        use crate::util::Json;
+        let ctx = self.replan.lock().unwrap();
+        let mut dp = Vec::new();
+        for (sig, e) in &ctx.dp {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("sig".into(), Json::Str(format!("{sig:016x}")));
+            o.insert(
+                "points".into(),
+                Json::Arr(
+                    e.points.iter().map(|&p| Json::Num(p as f64)).collect(),
+                ),
+            );
+            dp.push(Json::Obj(o));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("context".into(), Json::Str("replan".into()));
+        doc.insert("schema_version".into(), Json::Num(1.0));
+        doc.insert("merge".into(), ctx.merge.to_json());
+        doc.insert("dp".into(), Json::Arr(dp));
+        drop(ctx);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, format!("{}\n", Json::Obj(doc)))?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Reload a context saved by [`Self::save_replan_context`] into
+    /// this scheduler, replacing its current replan state.  Returns
+    /// `(merge classes, dp hints)` loaded.  Safe against stale or
+    /// mismatched files: merge entries are verified by full spec
+    /// equality on every lookup and DP hints are advisory, so the
+    /// worst a wrong context can do is miss.
+    pub fn load_replan_context(
+        &self,
+        path: &std::path::Path,
+    ) -> anyhow::Result<(usize, usize)> {
+        use crate::util::Json;
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(text.trim())?;
+        if doc.get("context")?.as_str()? != "replan" {
+            anyhow::bail!("not a replan context file");
+        }
+        let version = doc.get("schema_version")?.as_usize()?;
+        if version != 1 {
+            anyhow::bail!("unsupported replan-context schema v{version}");
+        }
+        let merge = MergeCache::from_json(doc.get("merge")?)?;
+        let mut dp = HashMap::new();
+        for e in doc.get("dp")?.as_arr()? {
+            let sig = u64::from_str_radix(e.get("sig")?.as_str()?, 16)?;
+            let points = e.get("points")?.as_usize_vec()?;
+            dp.insert(sig, DpHintEntry { points, generation: 0 });
+        }
+        let counts = (merge.len(), dp.len());
+        let mut ctx = self.replan.lock().unwrap();
+        ctx.merge = merge;
+        ctx.dp = dp;
+        ctx.generation = 0;
+        Ok(counts)
+    }
+
     /// Drop all incrementally cached replan state — group plans, merge
     /// classes and DP choice tables (e.g. after mutating `opts` —
     /// signatures also cover the options, so this is belt-and-braces,
@@ -821,6 +893,41 @@ mod tests {
             },
         );
         assert_eq!(incremental, fresh.plan(&d).0);
+    }
+
+    #[test]
+    fn persisted_context_warms_a_restarted_scheduler() {
+        let path = std::env::temp_dir().join(format!(
+            "graft_replan_ctx_{}.json",
+            std::process::id()
+        ));
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (first, _) = s.plan(&d);
+        s.save_replan_context(&path).unwrap();
+        // "restart": a fresh scheduler, cold caches, reloaded context
+        let s2 = scheduler();
+        let (merge_classes, dp_hints) =
+            s2.load_replan_context(&path).unwrap();
+        assert!(merge_classes > 0, "no merge classes persisted");
+        assert!(dp_hints > 0, "no dp hints persisted");
+        // the first replan after the restart is warm: merging splices
+        // entirely from the reloaded cache and the suffix DP seeds from
+        // the reloaded hints — with a byte-identical plan
+        let (replanned, st) = s2.plan(&d);
+        assert_eq!(st.classes_remerged, 0, "merge cache not warm");
+        // a winning standalone fallback is rank-0 (never "hinted"), so
+        // warm hits are only guaranteed where the plan truly realigned
+        let realigned = first.sets.iter().any(|s| {
+            s.members.len() > 1 || s.point != s.members[0].spec.p
+        });
+        if realigned {
+            assert!(st.dp_warm_hits > 0, "dp hints not warm");
+        }
+        assert_eq!(replanned, first);
+        // garbage or missing files fail cleanly
+        assert!(s2.load_replan_context(&path.with_extension("nope")).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub const ALL: &[&str] = &[
     "fig2", "fig4", "tab2", "fig6", "fig7", "tab3", "fig8", "fig9",
     "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
     "fig17", "fig18", "fig19", "fig20", "fig21", "serving", "placement",
-    "replan",
+    "replan", "transition",
 ];
 
 /// Run one experiment by id.
@@ -51,6 +51,7 @@ pub fn run(id: &str, cm: &CostModel) -> Result<Table> {
         "serving" => scale::serving_scale(cm),
         "placement" => scale::placement_scale(cm),
         "replan" => scale::replan_scale(cm),
+        "transition" => scale::transition_scale(cm),
         _ => bail!("unknown experiment {id:?}; known: {ALL:?}"),
     })
 }

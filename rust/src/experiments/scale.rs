@@ -328,6 +328,11 @@ pub struct ServingBenchPoint {
     pub batches: u64,
     pub served: u64,
     pub dropped: u64,
+    /// Work items refused by closed queues (balancer + per-queue
+    /// rejection counters).  Queue rejections were counted in
+    /// `QueueMetrics` since PR 2 but never surfaced in the bench —
+    /// non-zero here means the run lost items to a shutdown race.
+    pub rejected: u64,
 }
 
 pub fn mode_name(mode: ExecutorMode) -> &'static str {
@@ -375,6 +380,7 @@ pub fn serve_synthetic(
         batches: 0,
         served: 0,
         dropped: 0,
+        rejected: 0,
     };
     if targets.is_empty() || total_reqs == 0 {
         return point;
@@ -389,7 +395,7 @@ pub fn serve_synthetic(
         Arc::new(MockExecutor { dims }),
         cm,
         plan,
-        ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+        ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
     );
     point.threads = server.thread_count();
 
@@ -464,6 +470,9 @@ pub fn serve_synthetic(
     point.batches = server.counters.batches.load(Ordering::Relaxed);
     point.served = server.counters.served.load(Ordering::Relaxed);
     point.dropped = server.counters.dropped.load(Ordering::Relaxed);
+    // queue-level count only: ServerCounters::rejected mirrors the same
+    // refusals, so adding both would double-count every lost item
+    point.rejected = server.queue_rejections();
     server.shutdown();
     point
 }
@@ -726,6 +735,251 @@ pub fn replan_scale(_cm: &CostModel) -> Table {
     t
 }
 
+/// One measured live-reconfiguration run (`graft bench-transition` and
+/// experiment "transition"): serve a planned fleet with the pooled
+/// executor, perturb `pct`% of the clients' demand rates, re-plan
+/// incrementally, delta-place against the deployed plan and hot-swap
+/// under live traffic.
+#[derive(Debug, Clone)]
+pub struct TransitionPoint {
+    pub n_clients: usize,
+    pub perturb_pct: usize,
+    /// Requests submitted across the swap.
+    pub requests: usize,
+    /// Responses collected (must equal `requests`: zero-drop swap).
+    pub responses: usize,
+    /// SLO/error drops across old + new cores (must be 0 here).
+    pub dropped: u64,
+    /// Closed-queue rejections across old + new cores (must be 0: the
+    /// ordered drain never loses an in-flight item).
+    pub rejected: u64,
+    /// End-to-end reconfigure latency and its phases.
+    pub swap_ms: f64,
+    pub prepare_ms: f64,
+    pub switch_ms: f64,
+    pub drain_ms: f64,
+    /// Diff summary of the applied transition.
+    pub kept_instances: usize,
+    pub restarted_instances: usize,
+    /// Delta placement vs the full-repack oracle.
+    pub migrated_delta: usize,
+    pub migrated_repack: usize,
+    pub gpus_delta: usize,
+    pub gpus_repack: usize,
+    pub fell_back: bool,
+    pub plan_changed: bool,
+}
+
+/// Scale `pct`% of the clients' demand rates by 1.5× (plus a budget
+/// nudge) — the live-reconfiguration trigger.  Partition points stay
+/// put so in-flight payload dimensions remain valid across the swap.
+pub fn perturb_rates(specs: &mut [FragmentSpec], pct: usize) {
+    let step = (100 / pct.clamp(1, 100)).max(1);
+    for i in (0..specs.len()).step_by(step) {
+        specs[i].rate_rps *= 1.5;
+        specs[i].budget_ms += 1.0;
+    }
+}
+
+/// Plan → serve → perturb → incremental replan → delta-place →
+/// hot-swap under load, measuring the whole transition.
+pub fn transition_scenario(
+    n: usize,
+    pct: usize,
+    total_reqs: usize,
+    seed: u64,
+) -> TransitionPoint {
+    use crate::coordinator::placement::{place_delta, stamp};
+    use crate::runtime::transition::{diff_plans, LiveServer};
+    use std::sync::atomic::AtomicUsize;
+
+    let cm = CostModel::new(Config::embedded());
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let mut specs = random_mixed_fragments(&cm, n, seed);
+    let (plan_a, _) = sched.plan(&specs);
+    perturb_rates(&mut specs, pct);
+    let (mut plan_b, _) = sched.plan(&specs);
+    let pre_diff = diff_plans(&plan_a, &plan_b);
+    let plan_changed = pre_diff.updated_sets
+        + pre_diff.added_sets
+        + pre_diff.removed_sets
+        > 0;
+    let delta = place_delta(&cm, &plan_a, &plan_b, None)
+        .expect("scheduler-placed plans stay placeable");
+    stamp(&mut plan_b, &delta.placement);
+
+    let dims: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    let live = LiveServer::start(
+        Arc::new(MockExecutor { dims }),
+        &cm,
+        &plan_a,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    );
+    // routed clients (identical in both plans: the perturbation moves
+    // rates/budgets, never clients or partition points)
+    let mut targets: Vec<(u32, u16, u16, usize)> = Vec::new();
+    for set in &plan_a.sets {
+        for m in &set.members {
+            let dim = cm.config().models[set.model].dims[m.spec.p];
+            for c in &m.spec.clients {
+                targets.push((c.0, set.model as u16, m.spec.p as u16, dim));
+            }
+        }
+    }
+    let mut point = TransitionPoint {
+        n_clients: n,
+        perturb_pct: pct,
+        requests: 0,
+        responses: 0,
+        dropped: 0,
+        rejected: 0,
+        swap_ms: 0.0,
+        prepare_ms: 0.0,
+        switch_ms: 0.0,
+        drain_ms: 0.0,
+        kept_instances: 0,
+        restarted_instances: 0,
+        migrated_delta: delta.migrated,
+        migrated_repack: delta.repack_migrated,
+        gpus_delta: delta.gpus_used,
+        gpus_repack: delta.repack_gpus,
+        fell_back: delta.fell_back,
+        plan_changed,
+    };
+    if targets.is_empty() || total_reqs == 0 {
+        live.shutdown();
+        return point;
+    }
+
+    let producers = 2usize.min(total_reqs).max(1);
+    let submitted = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<Response>();
+    let report = std::thread::scope(|scope| {
+        let collector = scope.spawn(move || {
+            let mut got = 0usize;
+            let mut dropped_resp = 0usize;
+            while got < total_reqs {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(r) => {
+                        got += 1;
+                        if r.dropped {
+                            dropped_resp += 1;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            (got, dropped_resp)
+        });
+        let mut prods = Vec::new();
+        for pidx in 0..producers {
+            let tx = tx.clone();
+            let live = &live;
+            let targets = &targets;
+            let submitted = submitted.clone();
+            prods.push(scope.spawn(move || {
+                let mut i = pidx;
+                while i < total_reqs {
+                    let (cid, model, p, dim) = targets[i % targets.len()];
+                    crate::serving::RequestSink::submit(
+                        live,
+                        Request {
+                            client_id: cid,
+                            model,
+                            p,
+                            seq: i as u32,
+                            t_capture_ms: 0.0,
+                            upstream_ms: 0.0,
+                            budget_ms: 1e9,
+                            payload: vec![0.5; dim],
+                        },
+                        tx.clone(),
+                    );
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    i += producers;
+                }
+            }));
+        }
+        drop(tx);
+        // swap once the load is truly live (a third of the way in), so
+        // both cores serve real traffic during the transition
+        let swap_at = (total_reqs / 3).max(1);
+        while submitted.load(Ordering::Relaxed) < swap_at {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let report = live.reconfigure(&plan_b);
+        for p in prods {
+            p.join().expect("producer");
+        }
+        let (got, dropped_resp) = collector.join().expect("collector");
+        point.requests = total_reqs;
+        point.responses = got;
+        point.dropped += dropped_resp as u64;
+        report
+    });
+    let totals = live.totals();
+    // the two views count the same events (every server-side drop also
+    // sends a dropped response), so take the max instead of summing —
+    // it still catches a drop notice the counters missed
+    point.dropped = point.dropped.max(totals.dropped);
+    point.rejected = totals.rejected;
+    point.swap_ms = report.total_ms;
+    point.prepare_ms = report.prepare_ms;
+    point.switch_ms = report.switch_ms;
+    point.drain_ms = report.drain_ms;
+    point.kept_instances = report.transition.kept_instances;
+    point.restarted_instances = report.transition.restarted_instances;
+    live.shutdown();
+    point
+}
+
+/// Experiment "transition": small-fleet live-reconfiguration table
+/// (the 1k+ sweep lives in `graft bench-transition`).
+pub fn transition_scale(_cm: &CostModel) -> Table {
+    let mut t = Table::new(vec![
+        "n_clients",
+        "perturb_pct",
+        "responses",
+        "dropped",
+        "rejected",
+        "swap_ms",
+        "kept_instances",
+        "migrated_delta",
+        "migrated_repack",
+        "gpus_delta",
+        "gpus_repack",
+    ]);
+    for &n in &[64usize, 256] {
+        for &pct in &[5usize, 20] {
+            let r = transition_scenario(n, pct, 2000, 0x7A51 + n as u64);
+            t.row(vec![
+                n.to_string(),
+                pct.to_string(),
+                format!("{}/{}", r.responses, r.requests),
+                r.dropped.to_string(),
+                r.rejected.to_string(),
+                f(r.swap_ms, 2),
+                r.kept_instances.to_string(),
+                r.migrated_delta.to_string(),
+                r.migrated_repack.to_string(),
+                r.gpus_delta.to_string(),
+                r.gpus_repack.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -822,6 +1076,32 @@ mod tests {
         assert!(r.classes_remerged > 0);
         // … and something must replay (same-model clean classes exist)
         assert!(r.merge_classes > r.classes_remerged);
+    }
+
+    #[test]
+    fn transition_scenario_zero_drop_and_delta_bounds() {
+        let r = transition_scenario(24, 20, 600, 11);
+        assert_eq!(r.responses, r.requests, "live swap lost responses");
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.rejected, 0);
+        assert!(r.migrated_delta <= r.migrated_repack);
+        assert!(r.gpus_delta <= r.gpus_repack);
+        if r.plan_changed {
+            assert!(r.restarted_instances > 0);
+        }
+        assert!(r.swap_ms >= r.drain_ms);
+    }
+
+    #[test]
+    fn perturb_rates_touches_the_requested_share() {
+        let base = random_mixed_fragments(&cm(), 100, 5);
+        let mut p = base.clone();
+        perturb_rates(&mut p, 10);
+        let changed =
+            base.iter().zip(&p).filter(|(a, b)| a != b).count();
+        assert_eq!(changed, 10);
+        // partition points never move (in-flight payloads stay valid)
+        assert!(base.iter().zip(&p).all(|(a, b)| a.p == b.p));
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //!   experiment <id|all> [--out DIR]   regenerate paper tables/figures
 //!   plan --model M --scale S [--t T]  print an execution plan
 //!   serve [--model M] [--clients N] [--duration S] [--addr A]
-//!                                     run the real serving data path
+//!         [--reconfigure]             run the real serving data path
+//!                                     (--reconfigure: replan controller
+//!                                     hot-swaps plans on demand drift)
 //!   trace [--seed N] [--len S]        print a synthetic 5G trace
 //!   models                            list model specs (Table 2)
 //!   bench-scheduler [--sizes N,N,..] [--reps R] [--out FILE]
@@ -19,6 +21,11 @@
 //!                                     placement against the post-hoc
 //!                                     FFD oracle and emit
 //!                                     BENCH_placement.json
+//!   bench-transition [--sizes N,N,..] [--requests R] [--out FILE]
+//!                                     hot-swap perturbed plans under
+//!                                     live traffic (zero-drop,
+//!                                     delta-placement vs full repack)
+//!                                     and emit BENCH_transition.json
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -29,11 +36,12 @@ use anyhow::{bail, Context, Result};
 use graft::config::Config;
 use graft::coordinator::repartition::RepartitionOptions;
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::coordinator::{ControllerOptions, ReplanController};
 use graft::experiments;
 use graft::hybrid::{BandwidthTrace, TraceParams};
 use graft::profiler::{AllocConstraints, CostModel};
-use graft::runtime::{default_artifacts_dir, Engine};
-use graft::serving::{Server, ServerOptions, TcpFront};
+use graft::runtime::{default_artifacts_dir, Engine, LiveServer};
+use graft::serving::{ServerOptions, TcpFront};
 
 fn main() {
     // die quietly on closed pipes (`graft ... | head`), like other CLIs
@@ -89,6 +97,7 @@ fn run() -> Result<()> {
         "bench-scheduler" => cmd_bench_scheduler(&args),
         "bench-serving" => cmd_bench_serving(&cm, &args),
         "bench-placement" => cmd_bench_placement(&args),
+        "bench-transition" => cmd_bench_transition(&args),
         "serve" => cmd_serve(&cm, &args),
         "trace" => cmd_trace(&args),
         "models" => {
@@ -110,12 +119,13 @@ fn print_usage() {
          usage:\n\
          \x20 graft experiment <id|all> [--out results]\n\
          \x20 graft plan --model inc --scale small-homo [--t 5] [--deploy FILE]\n\
-         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0]\n\
+         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0] [--reconfigure]\n\
          \x20 graft trace [--seed 7] [--len 60]\n\
          \x20 graft models\n\
          \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\
          \x20 graft bench-serving [--sizes 1000,5000,10000] [--requests 40000] [--out BENCH_serving.json]\n\
-         \x20 graft bench-placement [--sizes 1000,5000,10000] [--out BENCH_placement.json]\n\n\
+         \x20 graft bench-placement [--sizes 1000,5000,10000] [--out BENCH_placement.json]\n\
+         \x20 graft bench-transition [--sizes 1000,5000,10000] [--requests 8000] [--out BENCH_transition.json]\n\n\
          experiments: {}",
         experiments::ALL.join(" ")
     );
@@ -578,6 +588,9 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
         o.insert("batches".into(), num(r.batches as f64));
         o.insert("served".into(), num(r.served as f64));
         o.insert("dropped".into(), num(r.dropped as f64));
+        // rejected = balancer + closed-queue refusals; anything non-zero
+        // means the run lost work items to a shutdown race
+        o.insert("rejected".into(), num(r.rejected as f64));
         Json::Obj(o)
     };
 
@@ -650,7 +663,8 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
     );
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("serving".into()));
-    doc.insert("schema_version".into(), num(1.0));
+    // v2: per-mode rejected counters (satellite of the live-reconfig PR)
+    doc.insert("schema_version".into(), num(2.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("runs".into(), Json::Arr(runs));
     let json = Json::Obj(doc);
@@ -839,6 +853,185 @@ fn cmd_bench_placement(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `graft bench-transition`: measure live reconfiguration — serve a
+/// planned fleet with the pooled executor, perturb k ∈ {1, 5, 20}% of
+/// the clients' demand rates, re-plan incrementally, delta-place
+/// against the deployed plan and hot-swap under live traffic — and
+/// emit `BENCH_transition.json` (swap latency split into prepare /
+/// switch / drain, migrated-instance counts delta-vs-full-repack,
+/// requests dropped).
+///
+/// Self-checking, the run aborts unless:
+///   * every submitted request got exactly one response and nothing
+///     was dropped or rejected across the swap (zero-drop transition);
+///   * per k, delta re-placement migrates no more instances than the
+///     full-repack oracle and packs onto no more GPUs;
+///   * per size, delta re-placement migrates *strictly fewer*
+///     instances than the repack summed over k ∈ {1, 5, 20}% (per-k
+///     strictness can degenerate at smoke sizes when FFD happens to
+///     leave every kept instance in place, so strictness is enforced
+///     on the aggregate).
+fn cmd_bench_transition(args: &Args) -> Result<()> {
+    use graft::experiments::scale::transition_scenario;
+    use graft::util::Json;
+    use std::collections::BTreeMap;
+
+    let sizes: Vec<usize> = args
+        .flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,5000,10000")
+        .split(',')
+        .map(|s| s.trim().parse().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let requests_flag: Option<usize> = args
+        .flags
+        .get("requests")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --requests")?;
+    let out = PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_transition.json".into()),
+    );
+
+    let num = Json::Num;
+    let ms3 = |v: f64| Json::Num((v * 1e3).round() / 1e3);
+    let mut rows = Vec::new();
+    println!(
+        "{:>8} {:>5} {:>10} {:>9} {:>9} {:>9} {:>8} {:>10} {:>11} {:>9} {:>9}",
+        "n",
+        "k%",
+        "responses",
+        "swap_ms",
+        "drain_ms",
+        "kept",
+        "restart",
+        "migr_delta",
+        "migr_repack",
+        "gpus_dlt",
+        "gpus_rpk"
+    );
+    for &n in &sizes {
+        let total_reqs = requests_flag.unwrap_or_else(|| (2 * n).max(4000));
+        let (mut agg_delta, mut agg_repack) = (0usize, 0usize);
+        for &pct in &[1usize, 5, 20] {
+            let r = transition_scenario(n, pct, total_reqs, 0x7245);
+            if !r.plan_changed {
+                bail!("perturbing {pct}% at n={n} left the plan unchanged");
+            }
+            if r.responses != r.requests {
+                bail!(
+                    "live swap lost responses at n={n} k={pct}%: \
+                     {}/{}",
+                    r.responses,
+                    r.requests
+                );
+            }
+            if r.dropped != 0 || r.rejected != 0 {
+                bail!(
+                    "live swap dropped work at n={n} k={pct}%: dropped {} \
+                     rejected {}",
+                    r.dropped,
+                    r.rejected
+                );
+            }
+            if r.migrated_delta > r.migrated_repack {
+                bail!(
+                    "delta re-placement migrated more than the repack at \
+                     n={n} k={pct}%: {} vs {}",
+                    r.migrated_delta,
+                    r.migrated_repack
+                );
+            }
+            if r.gpus_delta > r.gpus_repack {
+                bail!(
+                    "delta re-placement used more GPUs than the repack at \
+                     n={n} k={pct}%: {} vs {}",
+                    r.gpus_delta,
+                    r.gpus_repack
+                );
+            }
+            agg_delta += r.migrated_delta;
+            agg_repack += r.migrated_repack;
+            println!(
+                "{:>8} {:>5} {:>10} {:>9} {:>9} {:>9} {:>8} {:>10} {:>11} {:>9} {:>9}",
+                n,
+                pct,
+                format!("{}/{}", r.responses, r.requests),
+                format!("{:.2}", r.swap_ms),
+                format!("{:.2}", r.drain_ms),
+                r.kept_instances,
+                r.restarted_instances,
+                r.migrated_delta,
+                r.migrated_repack,
+                r.gpus_delta,
+                r.gpus_repack,
+            );
+            let mut row = BTreeMap::new();
+            row.insert("n_clients".into(), num(r.n_clients as f64));
+            row.insert("perturb_pct".into(), num(r.perturb_pct as f64));
+            row.insert("requests".into(), num(r.requests as f64));
+            row.insert("responses".into(), num(r.responses as f64));
+            row.insert("dropped".into(), num(r.dropped as f64));
+            row.insert("rejected".into(), num(r.rejected as f64));
+            row.insert("swap_ms".into(), ms3(r.swap_ms));
+            row.insert("prepare_ms".into(), ms3(r.prepare_ms));
+            row.insert("switch_ms".into(), ms3(r.switch_ms));
+            row.insert("drain_ms".into(), ms3(r.drain_ms));
+            row.insert(
+                "kept_instances".into(),
+                num(r.kept_instances as f64),
+            );
+            row.insert(
+                "restarted_instances".into(),
+                num(r.restarted_instances as f64),
+            );
+            row.insert(
+                "migrated_delta".into(),
+                num(r.migrated_delta as f64),
+            );
+            row.insert(
+                "migrated_repack".into(),
+                num(r.migrated_repack as f64),
+            );
+            row.insert("gpus_delta".into(), num(r.gpus_delta as f64));
+            row.insert("gpus_repack".into(), num(r.gpus_repack as f64));
+            row.insert("fell_back".into(), Json::Bool(r.fell_back));
+            rows.push(Json::Obj(row));
+        }
+        if agg_delta >= agg_repack {
+            bail!(
+                "delta re-placement failed to beat the full repack at n={n}: \
+                 {agg_delta} vs {agg_repack} migrations over k∈{{1,5,20}}%"
+            );
+        }
+    }
+
+    let mut config = BTreeMap::new();
+    config.insert("time_scale".into(), num(0.0));
+    config.insert("drop_on_slo".into(), Json::Bool(false));
+    config.insert("producers".into(), num(2.0));
+    config.insert("perturb_rate_factor".into(), Json::Num(1.5));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("transition".into()));
+    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("config".into(), Json::Obj(config));
+    doc.insert("transition".into(), Json::Arr(rows));
+    let json = Json::Obj(doc);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}
+
 fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
     let model = args.flags.get("model").map(String::as_str).unwrap_or("vgg");
     let n_clients: usize = args
@@ -893,18 +1086,51 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
         plan.sets.len(),
         plan.total_share()
     );
-    let server =
-        Arc::new(Server::start(engine, cm, &plan, ServerOptions::default()));
-    let front = TcpFront::start(&addr, server.clone())?;
-    println!("listening on {} for {duration}s", front.addr);
-    std::thread::sleep(std::time::Duration::from_secs_f64(duration));
-    front.stop();
+    // the data path is always fronted by the live server; --reconfigure
+    // additionally runs the replan controller, which watches observed
+    // per-model arrival rates and hot-swaps the plan on drift without
+    // dropping in-flight requests
+    let reconfigure = args.flags.contains_key("reconfigure");
+    let live = Arc::new(LiveServer::start(
+        engine,
+        cm,
+        &plan,
+        ServerOptions::default(),
+    ));
+    let front = TcpFront::start(&addr, live.clone())?;
     println!(
-        "served={} dropped={} batches={}",
-        server.counters.served.load(std::sync::atomic::Ordering::Relaxed),
-        server.counters.dropped.load(std::sync::atomic::Ordering::Relaxed),
-        server.counters.batches.load(std::sync::atomic::Ordering::Relaxed),
+        "listening on {} for {duration}s{}",
+        front.addr,
+        if reconfigure { " (live reconfiguration on)" } else { "" }
     );
+    if reconfigure {
+        let sched = Arc::new(sched);
+        let ctrl = Arc::new(ReplanController::new(
+            sched,
+            live.clone(),
+            specs,
+            ControllerOptions::default(),
+        ));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let watcher = ctrl.run(stop.clone());
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = watcher.join();
+    } else {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+    }
+    front.stop();
+    let totals = live.totals();
+    println!(
+        "served={} dropped={} batches={} plan_swaps={}",
+        totals.served,
+        totals.dropped,
+        totals.batches,
+        live.swap_count(),
+    );
+    if let Ok(l) = Arc::try_unwrap(live) {
+        l.shutdown();
+    }
     Ok(())
 }
 

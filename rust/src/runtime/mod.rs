@@ -7,11 +7,16 @@
 
 mod engine;
 mod manifest;
+pub mod transition;
 mod weights;
 
 pub use engine::{Engine, ExecOutput};
 pub use manifest::{
     default_artifacts_dir, deployment_json, ArtifactEntry, Manifest,
     ManifestModel,
+};
+pub use transition::{
+    diff_plans, LiveServer, LiveTotals, SetChange, TransitionPlan,
+    TransitionReport,
 };
 pub use weights::ModelWeights;

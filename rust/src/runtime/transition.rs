@@ -1,0 +1,420 @@
+//! Live reconfiguration: the plan-transition engine (paper §4.1/Fig 6:
+//! monitor → re-plan → redeploy, without restarting the data path).
+//!
+//! Two pieces live here:
+//!
+//! * [`diff_plans`] — diff an old and a new [`ExecutionPlan`] into a
+//!   minimal-migration [`TransitionPlan`].  Re-aligned sets are matched
+//!   by their perturbation-stable identity (model + client-id set, the
+//!   same notion as [`crate::coordinator::reuse::warm_signature`]);
+//!   matched sets whose configuration is unchanged keep their instances
+//!   (and, through [`crate::coordinator::placement::place_delta`],
+//!   their GPU), changed ones are staged prepare → drain →
+//!   atomic-switch.
+//! * [`LiveServer`] — a reconfigurable serving front over
+//!   [`Server`].  [`LiveServer::reconfigure`] applies a new plan under
+//!   live traffic without dropping or double-executing any in-flight
+//!   request: the new plan's stages are *prepared* (spawned idle), the
+//!   routing is *switched* atomically (submissions hold a read lock
+//!   across their queue push, so no submit can race the swap into a
+//!   closed queue), and the old core *drains* gracefully
+//!   ([`Server::drain`]: alignment stages first, then shared stages,
+//!   so an in-flight alignment batch always finds its downstream queue
+//!   open).  Old shards finish under their SLO while the new shards
+//!   are already serving.
+//!
+//! The replan controller
+//! ([`crate::coordinator::controller::ReplanController`]) drives this
+//! engine from observed arrival rates; `graft bench-transition`
+//! measures it (swap latency, migrations vs the full-repack oracle,
+//! zero dropped requests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::coordinator::plan::{ExecutionPlan, RealignedSet, StagePlan};
+use crate::profiler::CostModel;
+use crate::serving::server::RequestSink;
+use crate::serving::{
+    FragmentExecutor, Request, Response, Server, ServerOptions,
+};
+
+/// How one re-aligned set moves from the old plan to the new one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetChange {
+    /// Same identity, identical configuration: instances keep serving
+    /// (and keep their GPU under delta placement).
+    Keep { old: usize, new: usize },
+    /// Same identity, changed configuration (point, members, allocs):
+    /// prepare the new stages, drain the old ones, switch.
+    Update { old: usize, new: usize },
+    /// New set: prepare + open.
+    Add { new: usize },
+    /// Departed set: drain + retire.
+    Remove { old: usize },
+}
+
+/// The minimal-migration diff between two execution plans.
+#[derive(Debug, Clone, Default)]
+pub struct TransitionPlan {
+    pub changes: Vec<SetChange>,
+    pub kept_sets: usize,
+    pub updated_sets: usize,
+    pub added_sets: usize,
+    pub removed_sets: usize,
+    /// Instances of kept sets — they survive the swap untouched.
+    pub kept_instances: usize,
+    /// Instances that must start (or restart) under the new plan.
+    pub restarted_instances: usize,
+    /// Old instances that must drain and retire (updated + removed).
+    pub retired_instances: usize,
+}
+
+fn set_identity(set: &RealignedSet) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut clients: Vec<u32> = set
+        .members
+        .iter()
+        .flat_map(|m| m.spec.clients.iter().map(|c| c.0))
+        .collect();
+    clients.sort_unstable();
+    let mut h = DefaultHasher::new();
+    set.model.hash(&mut h);
+    clients.hash(&mut h);
+    h.finish()
+}
+
+/// Configuration equality modulo GPU stamps (the old plan is stamped,
+/// the new one may not be yet — placement must not affect whether a
+/// set counts as changed).
+fn stage_config_eq(a: &StagePlan, b: &StagePlan) -> bool {
+    a.frag == b.frag
+        && a.alloc == b.alloc
+        && a.budget_ms == b.budget_ms
+        && a.demand_rps == b.demand_rps
+}
+
+fn set_config_eq(a: &RealignedSet, b: &RealignedSet) -> bool {
+    a.model == b.model
+        && a.point == b.point
+        && a.members.len() == b.members.len()
+        && stage_config_eq(&a.shared, &b.shared)
+        && a.members.iter().zip(&b.members).all(|(ma, mb)| {
+            ma.spec == mb.spec
+                && match (&ma.align, &mb.align) {
+                    (None, None) => true,
+                    (Some(x), Some(y)) => stage_config_eq(x, y),
+                    _ => false,
+                }
+        })
+}
+
+fn set_instances(set: &RealignedSet) -> usize {
+    set.shared.alloc.instances as usize
+        + set
+            .members
+            .iter()
+            .filter_map(|m| m.align.as_ref())
+            .map(|a| a.alloc.instances as usize)
+            .sum::<usize>()
+}
+
+/// Diff `old` → `new` into a minimal-migration transition plan.  Sets
+/// are matched by perturbation-stable identity (model + client ids);
+/// matched sets with identical configuration are kept, the rest are
+/// staged as update/add/remove.
+pub fn diff_plans(old: &ExecutionPlan, new: &ExecutionPlan) -> TransitionPlan {
+    use std::collections::HashMap;
+    let mut by_id: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, set) in old.sets.iter().enumerate() {
+        by_id.entry(set_identity(set)).or_default().push(i);
+    }
+    let mut t = TransitionPlan::default();
+    for (ni, nset) in new.sets.iter().enumerate() {
+        let matched = by_id
+            .get_mut(&set_identity(nset))
+            .and_then(|bucket| bucket.pop());
+        match matched {
+            Some(oi) if set_config_eq(&old.sets[oi], nset) => {
+                t.kept_sets += 1;
+                t.kept_instances += set_instances(nset);
+                t.changes.push(SetChange::Keep { old: oi, new: ni });
+            }
+            Some(oi) => {
+                t.updated_sets += 1;
+                t.restarted_instances += set_instances(nset);
+                t.retired_instances += set_instances(&old.sets[oi]);
+                t.changes.push(SetChange::Update { old: oi, new: ni });
+            }
+            None => {
+                t.added_sets += 1;
+                t.restarted_instances += set_instances(nset);
+                t.changes.push(SetChange::Add { new: ni });
+            }
+        }
+    }
+    for bucket in by_id.values() {
+        for &oi in bucket {
+            t.removed_sets += 1;
+            t.retired_instances += set_instances(&old.sets[oi]);
+            t.changes.push(SetChange::Remove { old: oi });
+        }
+    }
+    t
+}
+
+/// What one [`LiveServer::reconfigure`] did, and how long each phase
+/// took.
+#[derive(Debug, Clone)]
+pub struct TransitionReport {
+    pub transition: TransitionPlan,
+    /// Building the new serving core (queues + executors, idle).
+    pub prepare_ms: f64,
+    /// The atomic routing switch (blocks only on in-progress submits).
+    pub switch_ms: f64,
+    /// Graceful drain of the old core (in-flight work finishing).
+    pub drain_ms: f64,
+    pub total_ms: f64,
+    /// Items the *old* core refused after the switch.  Must be 0: the
+    /// submit/switch locking makes a post-switch push into the old core
+    /// impossible, and the ordered drain never closes a queue that can
+    /// still receive forwards.
+    pub old_rejected: u64,
+    /// Requests the old core dropped over its lifetime (SLO drops
+    /// under `drop_on_slo`; 0 in the zero-drop bench configuration).
+    pub old_dropped: u64,
+}
+
+/// Aggregated counters across the current core and every retired one.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LiveTotals {
+    pub served: u64,
+    pub dropped: u64,
+    pub rejected: u64,
+    pub batches: u64,
+}
+
+/// A serving front that can swap execution plans under live traffic.
+pub struct LiveServer {
+    executor: Arc<dyn FragmentExecutor>,
+    cm: CostModel,
+    opts: ServerOptions,
+    current: RwLock<Arc<Server>>,
+    plan: Mutex<ExecutionPlan>,
+    /// Serializes reconfigurations (ticks can overlap a slow drain).
+    swap_lock: Mutex<()>,
+    swaps: AtomicU64,
+    retired_served: AtomicU64,
+    retired_dropped: AtomicU64,
+    retired_rejected: AtomicU64,
+    retired_batches: AtomicU64,
+}
+
+impl LiveServer {
+    /// Start serving `plan` (the executor/options apply to every
+    /// subsequent plan as well).
+    pub fn start(
+        executor: Arc<dyn FragmentExecutor>,
+        cm: &CostModel,
+        plan: &ExecutionPlan,
+        opts: ServerOptions,
+    ) -> LiveServer {
+        let server =
+            Arc::new(Server::start(executor.clone(), cm, plan, opts));
+        LiveServer {
+            executor,
+            cm: cm.clone(),
+            opts,
+            current: RwLock::new(server),
+            plan: Mutex::new(plan.clone()),
+            swap_lock: Mutex::new(()),
+            swaps: AtomicU64::new(0),
+            retired_served: AtomicU64::new(0),
+            retired_dropped: AtomicU64::new(0),
+            retired_rejected: AtomicU64::new(0),
+            retired_batches: AtomicU64::new(0),
+        }
+    }
+
+    /// The current serving core (snapshot — may be retired by a later
+    /// reconfigure, but keeps serving its in-flight work either way).
+    pub fn server(&self) -> Arc<Server> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// The currently deployed plan.
+    pub fn plan(&self) -> ExecutionPlan {
+        self.plan.lock().unwrap().clone()
+    }
+
+    /// Completed reconfigurations.
+    pub fn swap_count(&self) -> u64 {
+        self.swaps.load(Ordering::SeqCst)
+    }
+
+    /// Counters summed over the live core and every retired core.
+    /// Rejections are the per-queue counts only — the balancer-level
+    /// `ServerCounters::rejected` mirrors the same events, so summing
+    /// both would double-count every refusal.
+    pub fn totals(&self) -> LiveTotals {
+        let cur = self.server();
+        LiveTotals {
+            served: self.retired_served.load(Ordering::Relaxed)
+                + cur.counters.served.load(Ordering::Relaxed),
+            dropped: self.retired_dropped.load(Ordering::Relaxed)
+                + cur.counters.dropped.load(Ordering::Relaxed),
+            rejected: self.retired_rejected.load(Ordering::Relaxed)
+                + cur.queue_rejections(),
+            batches: self.retired_batches.load(Ordering::Relaxed)
+                + cur.counters.batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Hot-swap to `new_plan`: prepare the new core, switch the routing
+    /// atomically, drain the old core gracefully.  In-flight requests
+    /// finish on the old core (their reply channels are per-request, so
+    /// responses route correctly); requests submitted after the switch
+    /// run on the new core — nothing is dropped, nothing runs twice.
+    pub fn reconfigure(&self, new_plan: &ExecutionPlan) -> TransitionReport {
+        let _swap = self.swap_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let old_plan = self.plan();
+        let transition = diff_plans(&old_plan, new_plan);
+
+        // prepare: the new core's queues open and its executors idle
+        let new_server = Arc::new(Server::start(
+            self.executor.clone(),
+            &self.cm,
+            new_plan,
+            self.opts,
+        ));
+        let prepare_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // switch: the write lock waits for in-progress submits (they
+        // hold the read lock across their queue push), then every later
+        // submit sees the new core — no push can land in a queue the
+        // drain is about to close
+        let t1 = Instant::now();
+        let old_server = {
+            let mut cur = self.current.write().unwrap();
+            std::mem::replace(&mut *cur, new_server)
+        };
+        *self.plan.lock().unwrap() = new_plan.clone();
+        let switch_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        // drain: old shards finish under their SLO while the new
+        // shards already serve
+        let t2 = Instant::now();
+        old_server.drain();
+        let drain_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+        let c = &old_server.counters;
+        // queue-level count only: ServerCounters::rejected mirrors the
+        // same refusals, so adding it would report every loss twice
+        let old_rejected = old_server.queue_rejections();
+        let old_dropped = c.dropped.load(Ordering::Relaxed);
+        self.retired_served
+            .fetch_add(c.served.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.retired_dropped.fetch_add(old_dropped, Ordering::Relaxed);
+        self.retired_rejected.fetch_add(old_rejected, Ordering::Relaxed);
+        self.retired_batches
+            .fetch_add(c.batches.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.swaps.fetch_add(1, Ordering::SeqCst);
+
+        TransitionReport {
+            transition,
+            prepare_ms,
+            switch_ms,
+            drain_ms,
+            total_ms: t0.elapsed().as_secs_f64() * 1e3,
+            old_rejected,
+            old_dropped,
+        }
+    }
+
+    /// Tear down the current core (end of process; retired cores were
+    /// already drained and joined by their reconfigure).
+    pub fn shutdown(self) {
+        let server = self.current.into_inner().unwrap();
+        match Arc::try_unwrap(server) {
+            Ok(s) => s.shutdown(),
+            // a front-end still holds the Arc: close the queues so its
+            // executors exit; threads are detached with the Arc
+            Err(s) => s.drain(),
+        }
+    }
+}
+
+impl RequestSink for LiveServer {
+    fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
+        // hold the read lock across the push: reconfigure's write lock
+        // then guarantees no submit is still targeting the old core
+        // when its drain begins
+        let cur = self.current.read().unwrap();
+        cur.submit(req, reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::repartition::{realign_group, RepartitionOptions};
+    use crate::coordinator::{ClientId, FragmentSpec};
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn plan_of(cm: &CostModel, specs: &[(u32, usize, f64, f64)]) -> ExecutionPlan {
+        let mi = cm.model_index("inc").unwrap();
+        let specs: Vec<FragmentSpec> = specs
+            .iter()
+            .map(|&(c, p, t, q)| {
+                FragmentSpec::single(ClientId(c), mi, p, t, q)
+            })
+            .collect();
+        realign_group(cm, &specs, &RepartitionOptions::default())
+    }
+
+    #[test]
+    fn identical_plans_diff_to_all_keep() {
+        let cm = cm();
+        let a = plan_of(&cm, &[(0, 2, 110.0, 30.0), (1, 3, 95.0, 30.0)]);
+        let t = diff_plans(&a, &a.clone());
+        assert_eq!(t.kept_sets, a.sets.len());
+        assert_eq!(t.updated_sets + t.added_sets + t.removed_sets, 0);
+        assert_eq!(t.restarted_instances, 0);
+        assert_eq!(t.retired_instances, 0);
+        assert!(t.kept_instances > 0);
+    }
+
+    #[test]
+    fn changed_budget_diffs_to_update_not_add() {
+        let cm = cm();
+        // single-client plans: one set with the same identity on both
+        // sides regardless of how realignment shapes it
+        let a = plan_of(&cm, &[(0, 2, 110.0, 30.0)]);
+        let b = plan_of(&cm, &[(0, 2, 100.0, 30.0)]);
+        assert_ne!(a, b, "budget move must change the plan");
+        let t = diff_plans(&a, &b);
+        assert_eq!(t.added_sets, 0);
+        assert_eq!(t.removed_sets, 0);
+        assert_eq!(t.updated_sets, b.sets.len());
+        assert!(t.restarted_instances > 0);
+        assert!(t.retired_instances > 0);
+    }
+
+    #[test]
+    fn arrivals_and_departures_diff_to_add_remove() {
+        let cm = cm();
+        let a = plan_of(&cm, &[(0, 2, 110.0, 30.0)]);
+        let b = plan_of(&cm, &[(7, 2, 110.0, 30.0)]);
+        let t = diff_plans(&a, &b);
+        assert_eq!(t.added_sets, b.sets.len());
+        assert_eq!(t.removed_sets, a.sets.len());
+        assert_eq!(t.kept_sets + t.updated_sets, 0);
+    }
+}

@@ -21,8 +21,17 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Process-wide monotonic epoch for the lock-free arrival-rate EWMA
+/// (an `Instant` cannot live in an atomic, so arrivals are stamped as
+/// microseconds since the first use).
+fn epoch_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    // +1 so a stamp of 0 can mean "no arrival recorded yet"
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64 + 1
+}
 
 /// An item travelling through the serving pipeline.
 #[derive(Debug)]
@@ -47,7 +56,19 @@ pub struct QueueMetrics {
     pub popped: AtomicU64,
     /// Pushes refused because the queue was closed.
     pub rejected: AtomicU64,
+    /// Micro-timestamp ([`epoch_us`]) of the last accepted push (0 =
+    /// none yet).
+    last_arrival_us: AtomicU64,
+    /// EWMA of the inter-arrival gap in microseconds, stored as f64
+    /// bits (0 = fewer than two arrivals).  Feeds the adaptive
+    /// batch-formation window.
+    ewma_gap_us: AtomicU64,
 }
+
+/// EWMA smoothing factor for inter-arrival gaps: ~20 arrivals of
+/// memory, enough to ride out batch bursts without lagging a real
+/// demand shift by more than a second at serving rates.
+const ARRIVAL_EWMA_ALPHA: f64 = 0.05;
 
 impl QueueMetrics {
     pub fn pushed(&self) -> u64 {
@@ -58,6 +79,37 @@ impl QueueMetrics {
     }
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Fold one accepted arrival into the inter-arrival EWMA.  Racy by
+    /// design (plain load/store, no CAS loop): a lost update skews the
+    /// estimate by one gap, which the EWMA absorbs — the rate feeds a
+    /// batching heuristic, not an invariant.
+    fn note_arrival(&self) {
+        let now = epoch_us();
+        let prev = self.last_arrival_us.swap(now, Ordering::Relaxed);
+        if prev == 0 || now <= prev {
+            return;
+        }
+        let gap = (now - prev) as f64;
+        let old = f64::from_bits(self.ewma_gap_us.load(Ordering::Relaxed));
+        let new = if old <= 0.0 {
+            gap
+        } else {
+            (1.0 - ARRIVAL_EWMA_ALPHA) * old + ARRIVAL_EWMA_ALPHA * gap
+        };
+        self.ewma_gap_us.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Observed arrival rate (requests/s) from the inter-arrival EWMA;
+    /// 0.0 until at least two arrivals have been recorded.
+    pub fn arrival_rate_rps(&self) -> f64 {
+        let gap = f64::from_bits(self.ewma_gap_us.load(Ordering::Relaxed));
+        if gap <= 0.0 {
+            0.0
+        } else {
+            1e6 / gap
+        }
     }
 }
 
@@ -101,13 +153,19 @@ impl<T> BatchQueue<T> {
         g.items.push_back(item);
         drop(g);
         self.metrics.pushed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.note_arrival();
         self.cv.notify_one();
         true
     }
 
+    /// Count handed-out items *while still holding the queue lock*:
+    /// `len()` also takes the lock, so any observer that reads the
+    /// queue as drained is guaranteed to see the matching `popped`
+    /// count — the property the graceful-drain check
+    /// (`empty ∧ completed == popped`) relies on.
     fn count_popped(&self, n: usize) {
         if n > 0 {
-            self.metrics.popped.fetch_add(n as u64, Ordering::Relaxed);
+            self.metrics.popped.fetch_add(n as u64, Ordering::SeqCst);
         }
     }
 
@@ -120,8 +178,8 @@ impl<T> BatchQueue<T> {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max_batch.max(1));
                 let out: Vec<_> = g.items.drain(..n).collect();
-                drop(g);
                 self.count_popped(out.len());
+                drop(g);
                 return Some(out);
             }
             if g.closed {
@@ -164,8 +222,8 @@ impl<T> BatchQueue<T> {
         }
         let n = g.items.len().min(max_batch.max(1));
         let out: Vec<_> = g.items.drain(..n).collect();
-        drop(g);
         self.count_popped(out.len());
+        drop(g);
         Some(out)
     }
 
@@ -181,8 +239,8 @@ impl<T> BatchQueue<T> {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max_batch.max(1));
                 let out: Vec<_> = g.items.drain(..n).collect();
-                drop(g);
                 self.count_popped(out.len());
+                drop(g);
                 return Some(out);
             }
             if g.closed {
@@ -231,6 +289,10 @@ struct Shard<T> {
     items: Mutex<VecDeque<WorkItem<T>>>,
     /// Cached length so routing never takes a lock it will not use.
     len: AtomicUsize,
+    /// Per-shard close flag (live reconfiguration: a retiring instance's
+    /// shard stops accepting work while the rest of the queue stays
+    /// open).  Consumers still drain a closed shard.
+    closed: AtomicBool,
 }
 
 /// MPMC batch queue sharded per consumer instance.
@@ -266,6 +328,7 @@ impl<T> ShardedBatchQueue<T> {
                 .map(|_| Shard {
                     items: Mutex::new(VecDeque::new()),
                     len: AtomicUsize::new(0),
+                    closed: AtomicBool::new(false),
                 })
                 .collect(),
             total: AtomicUsize::new(0),
@@ -309,48 +372,141 @@ impl<T> ShardedBatchQueue<T> {
         }
     }
 
-    /// Push one item (power-of-two-choices shard routing).  Returns
-    /// `false` (and counts the rejection) once the queue is closed; the
-    /// closed check is re-done under the shard lock, so after `close()`
-    /// returns no push can slip an item in.
+    /// Push one item (power-of-two-choices shard routing over the open
+    /// shards).  Returns `false` (and counts the rejection) once the
+    /// queue — or every shard — is closed; the closed checks are re-done
+    /// under the shard lock, so after `close()` / `close_shard()`
+    /// returns no push can slip an item into a closed shard.
     pub fn push(&self, item: WorkItem<T>) -> bool {
+        self.push_inner(item, true).is_none()
+    }
+
+    /// The routed push shared by `push` and the `close_shard` handoff:
+    /// `None` = accepted, `Some(item)` = refused (the item is handed
+    /// back so the handoff path can park it instead of losing it).
+    /// `count_metrics` is false on the handoff path: a rerouted item was
+    /// already counted as pushed when it first entered the queue.
+    fn push_inner(
+        &self,
+        item: WorkItem<T>,
+        count_metrics: bool,
+    ) -> Option<WorkItem<T>> {
         if self.closed.load(Ordering::SeqCst) {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return false;
+            if count_metrics {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some(item);
         }
         let n = self.shards.len();
-        let idx = if n == 1 {
+        // p2c over the shard lengths picks the starting shard; the scan
+        // below walks on from it past closed shards (the common case —
+        // no closed shard — commits on the first iteration)
+        let start = if n == 1 {
             0
         } else {
             let h = splitmix64(self.ticket.fetch_add(1, Ordering::Relaxed));
             let a = (h as u32 as usize) % n;
             let b = ((h >> 32) as usize) % n;
+            let a_closed = self.shards[a].closed.load(Ordering::Relaxed);
+            let b_closed = self.shards[b].closed.load(Ordering::Relaxed);
             let la = self.shards[a].len.load(Ordering::Relaxed);
             let lb = self.shards[b].len.load(Ordering::Relaxed);
-            if la <= lb {
+            if b_closed || (!a_closed && la <= lb) {
                 a
             } else {
                 b
             }
         };
-        {
-            let mut g = self.shards[idx].items.lock().unwrap();
+        let mut item = Some(item);
+        for k in 0..n {
+            let idx = (start + k) % n;
+            let shard = &self.shards[idx];
+            if shard.closed.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut g = shard.items.lock().unwrap();
             if self.closed.load(Ordering::SeqCst) {
                 drop(g);
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                return false;
+                if count_metrics {
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                return item.take();
             }
-            g.push_back(item);
+            if shard.closed.load(Ordering::SeqCst) {
+                // raced with close_shard: its drain already ran, so an
+                // item slipped in here would strand — try the next shard
+                continue;
+            }
+            g.push_back(item.take().expect("item pushed at most once"));
             // count while holding the shard lock: a pop (which also
             // holds it) must never see an item whose increment is still
             // pending, or len/total could transiently wrap below zero
             // and close()+drain could miss an accepted item
-            self.shards[idx].len.fetch_add(1, Ordering::SeqCst);
+            shard.len.fetch_add(1, Ordering::SeqCst);
             self.total.fetch_add(1, Ordering::SeqCst);
+            drop(g);
+            if count_metrics {
+                self.metrics.pushed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.note_arrival();
+            }
+            self.wake_sleepers();
+            return None;
         }
-        self.metrics.pushed.fetch_add(1, Ordering::Relaxed);
+        // every shard is closed: reject like a closed queue
+        if count_metrics {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        item.take()
+    }
+
+    /// Whether a shard has been closed via [`Self::close_shard`].
+    pub fn shard_closed(&self, shard: usize) -> bool {
+        self.shards[shard].closed.load(Ordering::SeqCst)
+    }
+
+    /// Close one shard and hand its backlog to the remaining open
+    /// shards: a retiring instance stops receiving work and its queued
+    /// items reroute instead of draining cold.  Returns the number of
+    /// items rerouted.  When no other shard is open the backlog stays
+    /// in the closed shard (consumers can still drain it); producers
+    /// then see the queue as closed.
+    ///
+    /// This is the queue-level primitive for *incremental server
+    /// surgery* (shrinking a live stage's instance count in place — a
+    /// ROADMAP follow-on); today's plan swap prepares a whole new core
+    /// and drains the old one stage-by-stage, so production traffic
+    /// does not exercise this path yet.
+    pub fn close_shard(&self, shard: usize) -> usize {
+        let s = &self.shards[shard];
+        s.closed.store(true, Ordering::SeqCst);
+        // serialize with in-flight pushes: after the lock round-trip no
+        // push can add to this shard, so the drained backlog is final
+        let backlog: Vec<WorkItem<T>> = {
+            let mut g = s.items.lock().unwrap();
+            let k = g.len();
+            if k > 0 {
+                s.len.fetch_sub(k, Ordering::SeqCst);
+                self.total.fetch_sub(k, Ordering::SeqCst);
+            }
+            g.drain(..).collect()
+        };
+        let mut rerouted = 0;
+        for item in backlog {
+            match self.push_inner(item, false) {
+                None => rerouted += 1,
+                Some(item) => {
+                    // no open shard left: park the item back in this
+                    // (now closed) shard — consumers drain closed
+                    // shards, so nothing is lost
+                    let mut g = s.items.lock().unwrap();
+                    g.push_back(item);
+                    s.len.fetch_add(1, Ordering::SeqCst);
+                    self.total.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
         self.wake_sleepers();
-        true
+        rerouted
     }
 
     /// Non-blocking batched pop with work stealing: drain `home` first,
@@ -372,23 +528,33 @@ impl<T> ShardedBatchQueue<T> {
                 continue;
             }
             let mut g = shard.items.lock().unwrap();
+            let mut taken = 0usize;
             while out.len() < cap {
                 match g.pop_front() {
                     Some(it) => {
-                        shard.len.fetch_sub(1, Ordering::SeqCst);
-                        self.total.fetch_sub(1, Ordering::SeqCst);
+                        taken += 1;
                         out.push(it);
                     }
                     None => break,
                 }
             }
+            if taken > 0 {
+                // popped is counted BEFORE the length decrements become
+                // visible (all under the shard lock): an observer that
+                // reads the queue as empty is then guaranteed to see
+                // every removed item in `popped` — the graceful-drain
+                // check (`empty ∧ completed == popped`) depends on
+                // exactly this ordering
+                self.metrics
+                    .popped
+                    .fetch_add(taken as u64, Ordering::SeqCst);
+                shard.len.fetch_sub(taken, Ordering::SeqCst);
+                self.total.fetch_sub(taken, Ordering::SeqCst);
+            }
             drop(g);
             if out.len() >= cap {
                 break;
             }
-        }
-        if !out.is_empty() {
-            self.metrics.popped.fetch_add(out.len() as u64, Ordering::Relaxed);
         }
         out
     }
@@ -591,6 +757,77 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.push(item(1.0));
         assert_eq!(h.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn arrival_rate_tracks_push_cadence() {
+        let q: BatchQueue<u32> = BatchQueue::new();
+        assert_eq!(q.metrics().arrival_rate_rps(), 0.0);
+        q.push(item(0.0));
+        // one arrival: still no gap to estimate from
+        assert_eq!(q.metrics().arrival_rate_rps(), 0.0);
+        for i in 1..40 {
+            std::thread::sleep(Duration::from_millis(1));
+            q.push(item(i as f32));
+        }
+        let rate = q.metrics().arrival_rate_rps();
+        // ~1 kHz cadence; sleep overshoot only slows it down, so accept
+        // a wide band that still rules out nonsense
+        assert!(rate > 2.0 && rate < 2000.0, "rate {rate}");
+        // sharded queue feeds the same estimator
+        let s: ShardedBatchQueue<u32> = ShardedBatchQueue::new(4);
+        for i in 0..20 {
+            std::thread::sleep(Duration::from_millis(1));
+            s.push(item(i as f32));
+        }
+        assert!(s.metrics().arrival_rate_rps() > 0.0);
+    }
+
+    #[test]
+    fn close_shard_reroutes_backlog_exactly_once() {
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(4);
+        for i in 0..80 {
+            assert!(q.push(item(i as f32)));
+        }
+        let before = q.shard_len(0);
+        let rerouted = q.close_shard(0);
+        assert_eq!(rerouted, before, "whole backlog reroutes");
+        assert!(q.shard_closed(0));
+        assert_eq!(q.shard_len(0), 0);
+        assert_eq!(q.len(), 80, "no item lost in the handoff");
+        // new pushes never land on the closed shard
+        for i in 80..160 {
+            assert!(q.push(item(i as f32)));
+        }
+        assert_eq!(q.shard_len(0), 0);
+        // pushed metric counts first entries only, not the reroute
+        assert_eq!(q.metrics().pushed(), 160);
+        // everything pops exactly once
+        let mut got = Vec::new();
+        loop {
+            let b = q.try_pop_batch(1, 16);
+            if b.is_empty() {
+                break;
+            }
+            got.extend(b.into_iter().map(|w| w.ctx));
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..160).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn closing_every_shard_rejects_like_a_closed_queue() {
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(2);
+        assert!(q.push(item(1.0)));
+        assert!(q.push(item(2.0)));
+        q.close_shard(0);
+        // last open shard: backlog stays put but is still drainable
+        q.close_shard(1);
+        assert_eq!(q.len(), 2);
+        assert!(!q.push(item(3.0)));
+        assert_eq!(q.metrics().rejected(), 1);
+        let b = q.try_pop_batch(0, 8);
+        assert_eq!(b.len(), 2);
     }
 
     #[test]

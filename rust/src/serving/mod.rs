@@ -12,7 +12,7 @@ pub mod tcp;
 pub use batcher::{BatchQueue, QueueMetrics, ShardedBatchQueue, WorkItem};
 pub use messages::{read_frame, write_frame, Request, Response};
 pub use server::{
-    ExecutorMode, FragmentExecutor, MockExecutor, Server, ServerCounters,
-    ServerOptions,
+    ExecutorMode, FragmentExecutor, MockExecutor, RequestSink, Server,
+    ServerCounters, ServerOptions,
 };
 pub use tcp::{TcpClient, TcpFront};

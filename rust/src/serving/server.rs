@@ -116,6 +116,14 @@ pub struct ServerOptions {
     pub drop_on_slo: bool,
     /// Executor implementation (pooled by default).
     pub mode: ExecutorMode,
+    /// Derive each stage's batch-formation window from its observed
+    /// arrival rate (inter-arrival EWMA in the queue metrics) instead
+    /// of the static planned window: wait only as long as the missing
+    /// batch slots are expected to take to arrive, never longer than
+    /// the planned window (which is the §4.3 SLO-queueing envelope, so
+    /// the adaptive window always stays within the SLO headroom).  Off
+    /// by default: the static window remains the reference behaviour.
+    pub adaptive_window: bool,
 }
 
 impl Default for ServerOptions {
@@ -124,6 +132,7 @@ impl Default for ServerOptions {
             time_scale: 1.0,
             drop_on_slo: true,
             mode: ExecutorMode::default(),
+            adaptive_window: false,
         }
     }
 }
@@ -169,11 +178,15 @@ impl StageQueue {
         }
     }
 
-    fn rejected(&self) -> u64 {
+    fn metrics(&self) -> &super::batcher::QueueMetrics {
         match self {
-            StageQueue::Single(q) => q.metrics().rejected(),
-            StageQueue::Sharded(q) => q.metrics().rejected(),
+            StageQueue::Single(q) => q.metrics(),
+            StageQueue::Sharded(q) => q.metrics(),
         }
+    }
+
+    fn rejected(&self) -> u64 {
+        self.metrics().rejected()
     }
 }
 
@@ -193,6 +206,19 @@ struct Stage {
     /// batch-formation window.  Gates Free→Forming so a sub-batch
     /// backlog parks one FormCheck per stage, not one per instance.
     forming: AtomicBool,
+    /// Items this stage has fully processed: responded, forwarded
+    /// downstream, or dropped (SLO filter / executor error).  Together
+    /// with the queue's `popped` metric this makes "drained" decidable
+    /// — `queue empty ∧ completed == popped` means no batch of this
+    /// stage is queued, executing, or parked in the pacing wheel
+    /// (completion is only counted after delivery).  Live
+    /// reconfiguration's graceful drain waits on exactly that.
+    completed: AtomicU64,
+    /// External requests the balancer routed into this stage (forwarded
+    /// alignment output is *not* counted — that lands in the queue's
+    /// `pushed` metric only), so the replan controller can read observed
+    /// per-model arrival counts without double-counting pipeline hops.
+    arrivals: AtomicU64,
 }
 
 /// Sentinel GPU id for instances of unplaced plans (sorts last, skips
@@ -204,14 +230,26 @@ impl Stage {
     /// `alloc.batch`; greedy pop-1 under-delivers by the amortisation
     /// factor.  Waiting up to one planned execution time stays within
     /// the §4.3 worst-case-queueing envelope.
+    ///
+    /// With `opts.adaptive_window` the wait shrinks to the time the
+    /// missing batch slots are *expected* to take at the observed
+    /// arrival rate (EWMA over this stage's queue pushes), clamped to
+    /// the planned window — under-provisioned bursts fire full batches
+    /// just as fast, while a trickling stage stops idling a full
+    /// planned window for stragglers that are not coming.
     fn window(&self, opts: ServerOptions) -> Duration {
-        if opts.time_scale > 0.0 && self.alloc.batch > 1 {
-            Duration::from_secs_f64(
-                self.alloc.latency_ms * opts.time_scale / 1e3,
-            )
-        } else {
-            Duration::ZERO
+        if opts.time_scale <= 0.0 || self.alloc.batch <= 1 {
+            return Duration::ZERO;
         }
+        let planned = self.alloc.latency_ms * opts.time_scale / 1e3;
+        if opts.adaptive_window {
+            let rate = self.queue.metrics().arrival_rate_rps();
+            if rate > 0.0 {
+                let fill_s = (self.alloc.batch - 1) as f64 / rate;
+                return Duration::from_secs_f64(fill_s.min(planned));
+            }
+        }
+        Duration::from_secs_f64(planned)
     }
 }
 
@@ -263,11 +301,29 @@ impl ServerCounters {
     }
 }
 
+/// Anything the front-ends can submit requests into: the [`Server`]
+/// itself, or a live-reconfigurable wrapper around one
+/// ([`crate::runtime::LiveServer`]).
+pub trait RequestSink: Send + Sync {
+    fn submit(&self, req: Request, reply: mpsc::Sender<Response>);
+}
+
+impl RequestSink for Server {
+    fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
+        Server::submit(self, req, reply)
+    }
+}
+
 /// The running server.
 pub struct Server {
     stages: Arc<Vec<Stage>>,
     routes: HashMap<u32, usize>,
-    handles: Vec<JoinHandle<()>>,
+    /// Joined by `shutdown`/`drain` (behind a mutex so both can run on
+    /// a shared `&self` — live reconfiguration drains retired servers
+    /// through an `Arc`).
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Executor threads spawned at start (stable after joins).
+    n_threads: usize,
     pool: Option<Arc<PoolShared>>,
     pub counters: Arc<ServerCounters>,
 }
@@ -336,7 +392,15 @@ impl Server {
                 handles.push(h);
             }
         }
-        Server { stages, routes, handles, pool: None, counters }
+        let n_threads = handles.len();
+        Server {
+            stages,
+            routes,
+            handles: Mutex::new(handles),
+            n_threads,
+            pool: None,
+            counters,
+        }
     }
 
     fn start_pool(
@@ -402,13 +466,22 @@ impl Server {
                 .expect("spawn pool worker");
             handles.push(h);
         }
-        Server { stages, routes, handles, pool: Some(pool), counters }
+        let n_threads = handles.len();
+        Server {
+            stages,
+            routes,
+            handles: Mutex::new(handles),
+            n_threads,
+            pool: Some(pool),
+            counters,
+        }
     }
 
     /// Submit a request; the response arrives on `reply`.
     pub fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
         match self.routes.get(&req.client_id) {
             Some(&idx) => {
+                self.stages[idx].arrivals.fetch_add(1, Ordering::Relaxed);
                 let accepted = self.stages[idx].queue.push(WorkItem {
                     payload: req.payload,
                     server_arrival: Instant::now(),
@@ -457,7 +530,30 @@ impl Server {
 
     /// Executor threads backing this server (instances or pool workers).
     pub fn thread_count(&self) -> usize {
-        self.handles.len()
+        self.n_threads
+    }
+
+    /// Observed external arrivals per model (the balancer's routed
+    /// submit counts, *not* inter-stage forwards), summed over each
+    /// model's entry stages.  The replan controller diffs successive
+    /// snapshots to get observed per-model arrival rates.
+    pub fn model_arrivals(&self) -> HashMap<String, u64> {
+        let mut out: HashMap<String, u64> = HashMap::new();
+        for s in self.stages.iter() {
+            *out.entry(s.model_name.clone()).or_insert(0) +=
+                s.arrivals.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Observed arrival rate (rps, inter-arrival EWMA) of each stage's
+    /// queue, in stage order — the signal behind adaptive batch
+    /// windows, exposed for tests and the controller's diagnostics.
+    pub fn stage_arrival_rates(&self) -> Vec<f64> {
+        self.stages
+            .iter()
+            .map(|s| s.queue.metrics().arrival_rate_rps())
+            .collect()
     }
 
     /// GPUs the served plan was placed on (0 for unplaced plans — the
@@ -466,8 +562,12 @@ impl Server {
         self.counters.gpu_busy_share_us.len()
     }
 
-    /// Close all queues and join the executor threads.
-    pub fn shutdown(mut self) {
+    /// Close all queues and join the executor threads.  Fast but
+    /// *unordered*: an alignment batch still in flight can find its
+    /// downstream queue already closed and lose the items (counted in
+    /// `rejected`).  Fine for end-of-process teardown; live
+    /// reconfiguration uses [`Self::drain`] instead.
+    pub fn shutdown(self) {
         for s in self.stages.iter() {
             s.queue.close();
         }
@@ -475,7 +575,57 @@ impl Server {
             p.shutdown.store(true, Ordering::SeqCst);
             p.notifier.force_notify();
         }
-        for h in self.handles.drain(..) {
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Whether a stage has nothing queued, executing, or parked in the
+    /// pacing wheel: every popped item has been delivered and the queue
+    /// is empty.  Reading the queue before `completed` would race (pop
+    /// empties the queue before the delivery count catches up), so
+    /// `completed == popped` is checked *after* emptiness — a consumer
+    /// between pop and delivery still holds `completed < popped`.
+    fn stage_drained(s: &Stage) -> bool {
+        s.queue.is_empty()
+            && s.completed.load(Ordering::SeqCst) == s.queue.metrics().popped()
+    }
+
+    /// Graceful ordered drain for live reconfiguration: stop taking new
+    /// work and let every in-flight request finish — nothing is dropped
+    /// and nothing is lost to a closed downstream queue.
+    ///
+    /// The stage DAG is two layers deep (alignment → shared), so two
+    /// waves suffice: close the alignment queues, wait until each is
+    /// empty with all popped items delivered (their outputs are pushed
+    /// into the still-open shared queues), then close the shared queues
+    /// and wait again.  Only then are the executors stopped and joined.
+    /// The caller must have stopped external submissions first (the
+    /// live server atomically reroutes them before draining).
+    pub fn drain(&self) {
+        let wave = |pred: &dyn Fn(&Stage) -> bool| {
+            for s in self.stages.iter().filter(|&s| pred(s)) {
+                s.queue.close();
+            }
+            if let Some(p) = &self.pool {
+                p.notifier.force_notify();
+            }
+            while !self
+                .stages
+                .iter()
+                .filter(|&s| pred(s))
+                .all(Self::stage_drained)
+            {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        };
+        wave(&|s: &Stage| s.next.is_some()); // alignment stages
+        wave(&|s: &Stage| s.next.is_none()); // shared stages
+        if let Some(p) = &self.pool {
+            p.shutdown.store(true, Ordering::SeqCst);
+            p.notifier.force_notify();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
     }
@@ -513,6 +663,8 @@ fn build_stages(
             gpus: set.shared.gpus.clone(),
             next: None,
             forming: AtomicBool::new(false),
+            completed: AtomicU64::new(0),
+            arrivals: AtomicU64::new(0),
         });
         for m in &set.members {
             let entry = match &m.align {
@@ -526,6 +678,8 @@ fn build_stages(
                         gpus: a.gpus.clone(),
                         next: Some(shared_idx),
                         forming: AtomicBool::new(false),
+                        completed: AtomicU64::new(0),
+                        arrivals: AtomicU64::new(0),
                     });
                     idx
                 }
@@ -604,6 +758,8 @@ fn slo_filter(
                 so_far,
                 upstream + so_far,
             ));
+            // a drop notice is a completed outcome for drain accounting
+            stage.completed.fetch_add(1, Ordering::SeqCst);
             continue;
         }
         live.push(item);
@@ -650,6 +806,10 @@ fn deliver(
     out: Result<ExecOutput>,
     exec_ms: f64,
 ) {
+    // every item of this batch reaches a final outcome below (respond,
+    // forward, or drop) — count them all as completed for the drain
+    // accounting once the outcomes are delivered
+    let n_live = live.len() as u64;
     let out = match out {
         Ok(o) => o,
         Err(_) => {
@@ -663,6 +823,7 @@ fn deliver(
                     upstream,
                 ));
             }
+            stage.completed.fetch_add(n_live, Ordering::SeqCst);
             return;
         }
     };
@@ -722,6 +883,7 @@ fn deliver(
             }
         }
     }
+    stage.completed.fetch_add(n_live, Ordering::SeqCst);
     if forwarded {
         if let Some(n) = env.notify {
             n.notify();
@@ -732,7 +894,6 @@ fn deliver(
 /// Thread-per-instance executor loop (ExecutorMode::Threads).
 fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
     let stage = &env.stages[stage_idx];
-    let window = stage.window(env.opts);
     let queue = match &stage.queue {
         StageQueue::Single(q) => q,
         StageQueue::Sharded(_) => {
@@ -740,6 +901,9 @@ fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
         }
     };
     loop {
+        // recomputed per batch: the adaptive window tracks the live
+        // arrival-rate EWMA (constant when adaptive_window is off)
+        let window = stage.window(env.opts);
         let batch = if window.is_zero() {
             queue.pop_batch(stage.alloc.batch as usize)
         } else {

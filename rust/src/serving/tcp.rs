@@ -11,9 +11,12 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::messages::{read_frame, write_frame, Request, Response};
-use super::server::Server;
+use super::server::RequestSink;
 
-/// A running TCP acceptor in front of a [`Server`].
+/// A running TCP acceptor in front of any [`RequestSink`] — a plain
+/// [`crate::serving::Server`] or the live-reconfigurable
+/// [`crate::runtime::LiveServer`] (connections survive plan swaps: the
+/// sink reroutes each submit to the current serving core).
 pub struct TcpFront {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -22,7 +25,10 @@ pub struct TcpFront {
 
 impl TcpFront {
     /// Bind `addr` (use port 0 for ephemeral) and serve until stopped.
-    pub fn start(addr: &str, server: Arc<Server>) -> Result<TcpFront> {
+    pub fn start<S: RequestSink + ?Sized + 'static>(
+        addr: &str,
+        server: Arc<S>,
+    ) -> Result<TcpFront> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -76,7 +82,10 @@ impl TcpFront {
 /// One connection: a reader loop submitting requests + a writer loop
 /// pumping responses back (responses may arrive out of order thanks to
 /// batching across stages).
-fn handle_conn(stream: TcpStream, server: Arc<Server>) -> Result<()> {
+fn handle_conn<S: RequestSink + ?Sized>(
+    stream: TcpStream,
+    server: Arc<S>,
+) -> Result<()> {
     let mut reader = stream.try_clone()?;
     let writer = stream;
     let (tx, rx) = mpsc::channel::<Response>();

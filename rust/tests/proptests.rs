@@ -817,3 +817,118 @@ fn prop_wire_protocol_roundtrip() {
         );
     }
 }
+
+#[test]
+fn prop_delta_replacement_never_exceeds_repack_and_respects_caps() {
+    use graft::coordinator::placement::{place_delta, stamp};
+    let cm = cm();
+    for case in 0..20u64 {
+        let mut rng = Rng::seed_from_u64(9100 + case);
+        let n = 10 + rng.below(40);
+        let mut specs = random_mixed_specs(&mut rng, &cm, n);
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let (old, _) = sched.plan(&specs);
+        if old.placed_gpus().is_none() {
+            continue; // degenerate draw: nothing deployed
+        }
+        // perturb a random subset of the demand (rates + budgets): the
+        // live-reconfiguration trigger
+        for s in specs.iter_mut() {
+            if rng.below(4) == 0 {
+                s.rate_rps *= rng.range(1.2, 2.0);
+                s.budget_ms += rng.range(0.5, 3.0);
+            }
+        }
+        let (new_plan, _) = sched.plan(&specs);
+        let d = place_delta(&cm, &old, &new_plan, None)
+            .expect("scheduler-placed demand stays placeable");
+        let total: usize = new_plan
+            .stages()
+            .map(|s| s.alloc.instances as usize)
+            .sum();
+        // conservation: every instance is pinned or migrated
+        assert_eq!(d.pinned + d.migrated, total, "case {case}");
+        // migration-minimality vs the full-repack oracle
+        assert!(
+            d.migrated <= d.repack_migrated,
+            "case {case}: delta migrated {} > repack {}",
+            d.migrated,
+            d.repack_migrated
+        );
+        // never more GPUs than the repack (the fallback guarantees it)
+        assert!(
+            d.gpus_used <= d.repack_gpus,
+            "case {case}: delta {} GPUs > repack {}",
+            d.gpus_used,
+            d.repack_gpus
+        );
+        // per-GPU caps hold on the (possibly partially vacated) usage
+        let g = &cm.config().gpu;
+        for u in &d.placement.usage {
+            assert!(u.share <= g.max_share, "case {case}");
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6, "case {case}");
+        }
+        // stamping the delta placement yields a fully placed plan
+        let mut stamped = new_plan.clone();
+        stamp(&mut stamped, &d.placement);
+        assert!(stamped.placed_gpus().is_some(), "case {case}");
+        // an unperturbed replay pins everything and migrates nothing
+        let d0 = place_delta(&cm, &old, &old, None).unwrap();
+        assert_eq!(d0.migrated, 0, "case {case}");
+    }
+}
+
+#[test]
+fn prop_shard_close_reroute_preserves_every_item() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(9300 + case);
+        let shards = 2 + rng.below(6);
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(shards);
+        let n = 20 + rng.below(200);
+        for i in 0..n {
+            assert!(q.push(qitem(i as u32)), "case {case}");
+        }
+        // close a random subset of shards (possibly all of them)
+        let mut n_closed = 0;
+        for s in 0..shards {
+            if rng.below(2) == 0 {
+                q.close_shard(s);
+                n_closed += 1;
+            }
+        }
+        // later pushes land only on open shards — or are rejected like
+        // a closed queue when every shard is closed
+        let m = rng.below(100);
+        let mut accepted = 0;
+        for i in 0..m {
+            if q.push(qitem((n + i) as u32)) {
+                accepted += 1;
+            }
+        }
+        if n_closed < shards {
+            assert_eq!(accepted, m, "case {case}");
+            // an open shard existed at every close, so every closed
+            // shard handed its backlog off completely
+            for s in 0..shards {
+                if q.shard_closed(s) {
+                    assert_eq!(q.shard_len(s), 0, "case {case} shard {s}");
+                }
+            }
+        } else {
+            assert_eq!(accepted, 0, "case {case}");
+            assert_eq!(q.metrics().rejected(), m as u64, "case {case}");
+        }
+        // exactly-once drain of everything accepted
+        let mut got = Vec::new();
+        loop {
+            let b = q.try_pop_batch(rng.below(shards), 1 + rng.below(9));
+            if b.is_empty() {
+                break;
+            }
+            got.extend(b.into_iter().map(|w| w.ctx));
+        }
+        got.sort_unstable();
+        let want: Vec<u32> = (0..(n + accepted) as u32).collect();
+        assert_eq!(got, want, "case {case}");
+    }
+}

@@ -32,7 +32,7 @@ fn roundtrip(mode: ExecutorMode) {
         mock_executor(&cm),
         &cm,
         &plan,
-        ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+        ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
     );
 
     let mi = cm.model_index("inc").unwrap();
@@ -93,7 +93,7 @@ fn unknown_client_is_rejected() {
             mock_executor(&cm),
             &cm,
             &plan,
-            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
         );
         let (tx, rx) = mpsc::channel();
         server.submit(
@@ -125,7 +125,7 @@ fn slo_hopeless_requests_are_dropped() {
             mock_executor(&cm),
             &cm,
             &plan,
-            ServerOptions { time_scale: 0.0, drop_on_slo: true, mode },
+            ServerOptions { time_scale: 0.0, drop_on_slo: true, mode, ..Default::default() },
         );
         let mi = cm.model_index("inc").unwrap();
         let dims = &cm.config().models[mi].dims;
@@ -171,7 +171,7 @@ fn drop_accounting(
         mock_executor(&cm),
         &cm,
         &plan,
-        ServerOptions { time_scale: 0.0, drop_on_slo: true, mode },
+        ServerOptions { time_scale: 0.0, drop_on_slo: true, mode, ..Default::default() },
     );
     let mi = cm.model_index("inc").unwrap();
     let dims = &cm.config().models[mi].dims;
@@ -250,7 +250,7 @@ fn response_multiset_identical_across_modes() {
             mock_executor(&cm),
             &cm,
             &plan,
-            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
         );
         let mi = cm.model_index("vgg").unwrap();
         let dims = &cm.config().models[mi].dims;
@@ -310,7 +310,7 @@ fn batching_forms_batches(mode: ExecutorMode) {
         &cm,
         &plan,
         // small pacing so the queue has time to fill while a batch runs
-        ServerOptions { time_scale: 0.05, drop_on_slo: false, mode },
+        ServerOptions { time_scale: 0.05, drop_on_slo: false, mode, ..Default::default() },
     );
     let mi = cm.model_index("vgg").unwrap();
     let dims = &cm.config().models[mi].dims;
@@ -372,6 +372,7 @@ fn pool_thread_count_is_bounded_by_cpus() {
             time_scale: 0.0,
             drop_on_slo: false,
             mode: ExecutorMode::Pool,
+            ..Default::default()
         },
     );
     let cpus = std::thread::available_parallelism()
@@ -403,7 +404,7 @@ fn placed_plan_reports_per_gpu_utilization() {
             mock_executor(&cm),
             &cm,
             &plan,
-            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode },
+            ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
         );
         assert_eq!(server.gpu_count(), placement.gpus(), "{mode:?}");
 
@@ -459,6 +460,7 @@ fn unplaced_plan_has_no_gpu_counters() {
             time_scale: 0.0,
             drop_on_slo: false,
             mode: ExecutorMode::Pool,
+            ..Default::default()
         },
     );
     assert_eq!(server.gpu_count(), 0);
@@ -486,6 +488,7 @@ fn tcp_front_with_real_engine() {
             time_scale: 0.0,
             drop_on_slo: false,
             mode: ExecutorMode::Pool,
+            ..Default::default()
         },
     ));
     let front = TcpFront::start("127.0.0.1:0", server.clone()).unwrap();

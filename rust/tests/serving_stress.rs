@@ -74,6 +74,7 @@ fn pooled_path_64_instances_10k_requests() {
             time_scale: 0.0,
             drop_on_slo: false,
             mode: ExecutorMode::Pool,
+            ..Default::default()
         },
     );
     let cpus = std::thread::available_parallelism()

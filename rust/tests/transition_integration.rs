@@ -1,0 +1,325 @@
+//! Live-reconfiguration integration: hot-swap an execution plan under
+//! load and prove the transition invariants — zero dropped requests,
+//! exactly-once execution (the response multiset equals a no-swap
+//! run's), graceful ordered drain (no closed-queue rejections), and
+//! the replan controller driving the whole monitor → re-plan →
+//! redeploy loop from observed arrival counters.
+
+mod common;
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use graft::coordinator::{ClientId, ControllerOptions, FragmentSpec, ReplanController, TickOutcome};
+use graft::runtime::{diff_plans, LiveServer};
+use graft::serving::{ExecutorMode, Request, RequestSink, ServerOptions};
+use graft::util::Rng;
+
+use common::{cm, mock_executor, plan_for, watchdog};
+
+/// Deterministic payload for (client, seq): identical across runs, so
+/// the mock executor's outputs are comparable bit-for-bit.
+fn payload(c: u32, seq: u32, dim: usize) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(((c as u64) << 32) | seq as u64 | 1);
+    (0..dim).map(|_| rng.normal() as f32).collect()
+}
+
+/// Drive 3 clients × 60 requests through a live server; when `swap` is
+/// set, hot-swap to a re-planned (budget/rate-perturbed, same clients
+/// and points) plan a third of the way in.  Returns the sorted
+/// response multiset (client, seq, output bits).
+fn run_workload(swap: bool, time_scale: f64) -> Vec<(u32, u32, Vec<u32>)> {
+    let cm = cm();
+    let plan_a = plan_for(
+        &cm,
+        "inc",
+        &[(0, 2, 150.0, 30.0), (1, 3, 140.0, 30.0), (2, 3, 130.0, 30.0)],
+    );
+    // same clients at the same points (in-flight payload dims stay
+    // valid), different budgets/rates → a genuinely different plan
+    let plan_b = plan_for(
+        &cm,
+        "inc",
+        &[(0, 2, 110.0, 45.0), (1, 3, 100.0, 45.0), (2, 3, 95.0, 45.0)],
+    );
+    let live = LiveServer::start(
+        mock_executor(&cm),
+        &cm,
+        &plan_a,
+        ServerOptions {
+            time_scale,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    );
+    let mi = cm.model_index("inc").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let total = 3 * 60;
+    for seq in 0..60u32 {
+        for c in 0..3u32 {
+            let p = if c == 0 { 2 } else { 3 };
+            live.submit(
+                Request {
+                    client_id: c,
+                    model: mi as u16,
+                    p: p as u16,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: payload(c, seq, dims[p]),
+                },
+                tx.clone(),
+            );
+            if swap && seq == 20 && c == 2 {
+                // mid-stream hot swap: drains the old core before
+                // returning, with a third of the load already in flight
+                let report = live.reconfigure(&plan_b);
+                assert_eq!(report.old_rejected, 0, "drain lost items");
+                assert_eq!(report.old_dropped, 0);
+                assert!(report.transition.restarted_instances > 0);
+            }
+        }
+    }
+    drop(tx);
+    let mut got = Vec::new();
+    for resp in rx.iter() {
+        assert!(!resp.dropped, "{resp:?}");
+        got.push((
+            resp.client_id,
+            resp.seq,
+            resp.output.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+        ));
+        if got.len() == total {
+            break;
+        }
+    }
+    assert_eq!(got.len(), total, "swap={swap} lost responses");
+    let totals = live.totals();
+    assert_eq!(totals.served, total as u64, "swap={swap}");
+    assert_eq!(totals.dropped, 0, "swap={swap}");
+    assert_eq!(totals.rejected, 0, "swap={swap}");
+    if swap {
+        assert_eq!(live.swap_count(), 1);
+    }
+    live.shutdown();
+    got.sort();
+    got
+}
+
+#[test]
+fn hot_swap_preserves_the_response_multiset() {
+    let _wd = watchdog("hot_swap_multiset", Duration::from_secs(120));
+    // zero drops, exactly-once: the swapped run's response multiset
+    // (including output tensors) equals the undisturbed run's
+    assert_eq!(run_workload(false, 0.0), run_workload(true, 0.0));
+}
+
+#[test]
+fn hot_swap_with_pacing_drains_the_wheel() {
+    let _wd = watchdog("hot_swap_pacing", Duration::from_secs(120));
+    // with pacing on, batches park in the deadline wheel during the
+    // drain — the ordered drain must wait them out, not lose them
+    assert_eq!(run_workload(false, 0.02), run_workload(true, 0.02));
+}
+
+#[test]
+fn repeated_swaps_are_stable() {
+    let _wd = watchdog("repeated_swaps", Duration::from_secs(120));
+    let cm = cm();
+    let mk = |t: f64| {
+        plan_for(&cm, "vgg", &[(0, 1, t, 30.0), (1, 2, t - 10.0, 30.0)])
+    };
+    let plans = [mk(120.0), mk(100.0), mk(90.0)];
+    let live = LiveServer::start(
+        mock_executor(&cm),
+        &cm,
+        &plans[0],
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    );
+    let mi = cm.model_index("vgg").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let mut sent = 0u32;
+    for round in 0..3usize {
+        for seq in 0..25u32 {
+            for c in 0..2u32 {
+                let p = (c + 1) as usize;
+                live.submit(
+                    Request {
+                        client_id: c,
+                        model: mi as u16,
+                        p: p as u16,
+                        seq: sent,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dims[p]],
+                    },
+                    tx.clone(),
+                );
+                sent += 1;
+            }
+        }
+        if round < 2 {
+            let report = live.reconfigure(&plans[round + 1]);
+            assert_eq!(report.old_rejected, 0, "round {round}");
+        }
+    }
+    drop(tx);
+    let got = rx.iter().take(sent as usize).count();
+    assert_eq!(got, sent as usize);
+    assert_eq!(live.swap_count(), 2);
+    let totals = live.totals();
+    assert_eq!(totals.served, sent as u64);
+    assert_eq!(totals.rejected, 0);
+    live.shutdown();
+}
+
+#[test]
+fn controller_replans_on_observed_drift() {
+    let _wd = watchdog("controller_drift", Duration::from_secs(180));
+    let cm = cm();
+    let mi = cm.model_index("inc").unwrap();
+    // tiny planned rates: any real burst reads as massive drift no
+    // matter how slow the test host is
+    let specs: Vec<FragmentSpec> = (0..4)
+        .map(|i| {
+            FragmentSpec::single(ClientId(i), mi, 3, 130.0 + i as f64, 1.0)
+        })
+        .collect();
+    let sched =
+        Arc::new(Scheduler::new(cm.clone(), SchedulerOptions::default()));
+    let (plan, _) = sched.plan(&specs);
+    let live = Arc::new(LiveServer::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    ));
+    let ctrl = ReplanController::new(
+        sched,
+        live.clone(),
+        specs.clone(),
+        ControllerOptions {
+            drift_threshold: 0.5,
+            min_requests: 10,
+            rate_clamp: (0.2, 1e9),
+            ..Default::default()
+        },
+    );
+    // first tick records the baseline; an idle window is not trusted
+    assert!(matches!(ctrl.tick(), TickOutcome::Baseline));
+    assert!(matches!(ctrl.tick(), TickOutcome::TooFewRequests { .. }));
+
+    // a burst far above the planned 4 rps total
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let total = 4 * 300;
+    for seq in 0..300u32 {
+        for c in 0..4u32 {
+            live.submit(
+                Request {
+                    client_id: c,
+                    model: mi as u16,
+                    p: 3,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: vec![0.25; dims[3]],
+                },
+                tx.clone(),
+            );
+        }
+    }
+    drop(tx);
+    assert_eq!(rx.iter().take(total).count(), total);
+
+    match ctrl.tick() {
+        TickOutcome::Replanned { max_drift, report, .. } => {
+            assert!(max_drift >= 0.5, "drift {max_drift}");
+            assert_eq!(report.old_rejected, 0);
+            assert_eq!(report.old_dropped, 0);
+            assert_eq!(live.swap_count(), 1);
+            // the demand model followed the observation upward, and the
+            // deployed plan changed with it
+            let scaled = ctrl.demands();
+            assert!(scaled.iter().all(|s| s.rate_rps > 1.0));
+            let t = diff_plans(&plan, &live.plan());
+            assert!(
+                t.updated_sets + t.added_sets + t.removed_sets > 0,
+                "deployed plan did not change"
+            );
+        }
+        other => panic!("expected a replan, got {other:?}"),
+    }
+    drop(ctrl); // releases the controller's handle on the live server
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(_) => panic!("live server still shared"),
+    }
+}
+
+#[test]
+fn adaptive_batch_window_serves_the_same_workload() {
+    let _wd = watchdog("adaptive_window", Duration::from_secs(120));
+    // adaptive windows are a pacing heuristic: with a live arrival-rate
+    // estimate the stage must still serve everything (and the EWMA must
+    // actually be populated)
+    let cm = cm();
+    let plan = plan_for(&cm, "vgg", &[(0, 2, 120.0, 30.0)]);
+    let live = LiveServer::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions {
+            time_scale: 0.02,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            adaptive_window: true,
+        },
+    );
+    let mi = cm.model_index("vgg").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let n = 60u32;
+    for seq in 0..n {
+        live.submit(
+            Request {
+                client_id: 0,
+                model: mi as u16,
+                p: 2,
+                seq,
+                t_capture_ms: 0.0,
+                upstream_ms: 0.0,
+                budget_ms: 1e9,
+                payload: vec![0.5; dims[2]],
+            },
+            tx.clone(),
+        );
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    drop(tx);
+    let got = rx.iter().take(n as usize).count();
+    assert_eq!(got, n as usize);
+    let rates = live.server().stage_arrival_rates();
+    assert!(
+        rates.iter().any(|&r| r > 0.0),
+        "arrival-rate EWMA never populated: {rates:?}"
+    );
+    live.shutdown();
+}

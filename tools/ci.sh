@@ -2,8 +2,9 @@
 # CI pipeline: build, test, style gates, and fast bench smoke runs:
 # planner (n=200, re-validates cached==uncached plan identity plus the
 # replan scenario's warm<=cold and plan-identity self-checks), serving
-# (n=100, both executors) and placement (n=200, integrated-vs-oracle
-# GPU counts + cap checks).
+# (n=100, both executors), placement (n=200, integrated-vs-oracle GPU
+# counts + cap checks) and transition (n=200, live hot-swap: zero-drop
+# + delta-vs-repack migration bounds).
 #
 #   tools/ci.sh            full pipeline
 #   tools/ci.sh --fast     build + test only
@@ -37,7 +38,8 @@ timeout 1800 cargo test -q
 
 echo "== serving concurrency suite (release, cap 600s) =="
 timeout 600 cargo test --release -q \
-    --test serving_integration --test proptests
+    --test serving_integration --test transition_integration \
+    --test proptests
 
 if [[ "$FAST" == "1" ]]; then
     echo "ci: fast mode, skipping style gates and bench smoke"
@@ -76,5 +78,16 @@ echo "== placement bench smoke (n=200, integrated vs post-hoc FFD) =="
 timeout 600 cargo run --release -p graft -- bench-placement \
     --sizes 200 --out target/BENCH_placement_smoke.json
 test -s target/BENCH_placement_smoke.json
+
+echo "== transition bench smoke (n=200, live hot-swap, zero-drop) =="
+# self-checking inside the bench: every request answered exactly once
+# across the swap (dropped == rejected == 0), delta re-placement
+# migrates <= / packs onto <= GPUs than the full-repack oracle per k
+# and strictly fewer migrations summed over k in {1,5,20}%; the grep
+# asserts the transition section actually landed in the JSON
+timeout 600 cargo run --release -p graft -- bench-transition \
+    --sizes 200 --requests 3000 --out target/BENCH_transition_smoke.json
+test -s target/BENCH_transition_smoke.json
+grep -q '"transition"' target/BENCH_transition_smoke.json
 
 echo "ci: OK"
