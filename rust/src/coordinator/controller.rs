@@ -25,7 +25,7 @@
 //! tests drive it directly; [`ReplanController::run`] wraps it in a
 //! background watcher thread for `graft serve --reconfigure`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -36,6 +36,7 @@ use super::fragment::FragmentSpec;
 use super::placement::{place_delta, stamp};
 use super::scheduler::Scheduler;
 use crate::runtime::transition::{diff_plans, LiveServer, TransitionReport};
+use crate::util::lock::lock_recover;
 
 #[derive(Debug, Clone)]
 pub struct ControllerOptions {
@@ -86,6 +87,13 @@ pub enum TickOutcome {
         scaled_models: usize,
         report: TransitionReport,
     },
+    /// The live core reported GPU failures: re-planned immediately with
+    /// the dead GPUs excluded from placement and hot-swapped the
+    /// surviving capacity in (bypasses the drift/min-requests gates).
+    EmergencyReplanned {
+        failed_gpus: Vec<u32>,
+        report: TransitionReport,
+    },
 }
 
 struct CtrlState {
@@ -94,6 +102,12 @@ struct CtrlState {
     /// generation they were read under (a swap resets the counters).
     baseline: Option<(HashMap<String, u64>, Instant)>,
     swap_gen: u64,
+    /// GPUs reported failed by any core so far.  Accumulated across
+    /// swaps (each new core starts a fresh
+    /// [`crate::serving::HealthRegistry`]) and excluded from every
+    /// subsequent placement — a replanned fleet never lands back on
+    /// hardware that already failed.
+    dead_gpus: BTreeSet<u32>,
 }
 
 pub struct ReplanController {
@@ -118,19 +132,74 @@ impl ReplanController {
                 demands,
                 baseline: None,
                 swap_gen: 0,
+                dead_gpus: BTreeSet::new(),
             }),
         }
     }
 
     /// The demand specs the deployed plan was built from.
     pub fn demands(&self) -> Vec<FragmentSpec> {
-        self.state.lock().unwrap().demands.clone()
+        lock_recover(&self.state).demands.clone()
+    }
+
+    /// GPUs the controller has seen fail so far (excluded from every
+    /// placement it produces).
+    pub fn dead_gpus(&self) -> Vec<u32> {
+        lock_recover(&self.state).dead_gpus.iter().copied().collect()
+    }
+
+    /// Re-plan with the accumulated dead GPUs excluded, re-place
+    /// against the deployed plan and hot-swap.  Shared by the drift
+    /// path and the emergency (failure-triggered) path.
+    fn replan_and_swap(
+        &self,
+        st: &mut CtrlState,
+        demands: Vec<FragmentSpec>,
+        mut new_plan: crate::coordinator::plan::ExecutionPlan,
+    ) -> TransitionReport {
+        let cm = self.sched.cost_model();
+        let old_plan = self.live.plan();
+        let avoid: Vec<u32> = st.dead_gpus.iter().copied().collect();
+        // migration-minimizing re-placement against the deployed plan
+        // (falls back to the scheduler's own FFD stamps on failure —
+        // only reachable with an empty avoid set, where the stamps are
+        // equivalent)
+        if let Ok(d) = place_delta(cm, &old_plan, &new_plan, None, &avoid) {
+            stamp(&mut new_plan, &d.placement);
+        }
+        let report = self.live.reconfigure(&new_plan);
+        st.demands = demands;
+        st.swap_gen = self.live.swap_count();
+        st.baseline = None; // fresh counters next tick
+        if let Some(path) = &self.opts.context_path {
+            let _ = self.sched.save_replan_context(path);
+        }
+        report
     }
 
     /// One monitor → (maybe) re-plan → (maybe) redeploy step.
     pub fn tick(&self) -> TickOutcome {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let server = self.live.server();
+
+        // failure detection first: a GPU loss bypasses the drift and
+        // min-requests gates — surviving capacity must be rebalanced
+        // now, not after the window fills
+        let failed = server.health().take_unacked_gpu_failures();
+        if !failed.is_empty() {
+            st.dead_gpus.extend(failed.iter().copied());
+            let demands = st.demands.clone();
+            let (new_plan, _stats) = self.sched.plan(&demands);
+            let report = self.replan_and_swap(&mut st, demands, new_plan);
+            // the swap installed a fresh core whose registry starts
+            // clean; close the epoch so `degraded()` reads false
+            self.live.server().health().note_recovery();
+            return TickOutcome::EmergencyReplanned {
+                failed_gpus: failed,
+                report,
+            };
+        }
+
         let gen = self.live.swap_count();
         let now = Instant::now();
         let arrivals = server.model_arrivals();
@@ -198,25 +267,14 @@ impl ReplanController {
                 s.rate_rps *= f;
             }
         }
-        let (mut new_plan, _stats) = self.sched.plan(&demands);
+        let (new_plan, _stats) = self.sched.plan(&demands);
         let old_plan = self.live.plan();
         let t = diff_plans(&old_plan, &new_plan);
         if t.updated_sets + t.added_sets + t.removed_sets == 0 {
             st.demands = demands;
             return TickOutcome::PlanUnchanged { max_drift };
         }
-        // migration-minimizing re-placement against the deployed plan
-        // (falls back to the scheduler's own FFD stamps on failure)
-        if let Ok(d) = place_delta(cm, &old_plan, &new_plan, None) {
-            stamp(&mut new_plan, &d.placement);
-        }
-        let report = self.live.reconfigure(&new_plan);
-        st.demands = demands;
-        st.swap_gen = self.live.swap_count();
-        st.baseline = None; // fresh counters next tick
-        if let Some(path) = &self.opts.context_path {
-            let _ = self.sched.save_replan_context(path);
-        }
+        let report = self.replan_and_swap(&mut st, demands, new_plan);
         TickOutcome::Replanned {
             max_drift,
             scaled_models: factors.len(),
@@ -233,6 +291,18 @@ impl ReplanController {
             .spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
                     let outcome = self.tick();
+                    if let TickOutcome::EmergencyReplanned {
+                        failed_gpus,
+                        report,
+                    } = &outcome
+                    {
+                        eprintln!(
+                            "[controller] EMERGENCY: gpu(s) {:?} failed -> \
+                             replanned around them, swap {:.1} ms (drain \
+                             {:.1} ms)",
+                            failed_gpus, report.total_ms, report.drain_ms,
+                        );
+                    }
                     if let TickOutcome::Replanned {
                         max_drift, report, ..
                     } = &outcome

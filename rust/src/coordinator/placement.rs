@@ -157,6 +157,20 @@ pub fn place(
     plan: &ExecutionPlan,
     max_gpus: Option<usize>,
 ) -> Result<Placement, Unplaceable> {
+    place_avoiding(cm, plan, max_gpus, &[])
+}
+
+/// [`place`] with a set of GPU ids nothing may be placed on (failed
+/// hardware during an emergency replan).  Avoided ids below the
+/// allocated range appear in the usage vector as empty entries so every
+/// other id keeps its meaning; avoided ids are never handed out and do
+/// not count against `max_gpus`.
+pub fn place_avoiding(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    max_gpus: Option<usize>,
+    avoid: &[u32],
+) -> Result<Placement, Unplaceable> {
     let g = &cm.config().gpu;
     // expand stages into placeable items
     let mut items: Vec<(usize, usize, u32, f64)> = Vec::new();
@@ -178,16 +192,24 @@ pub fn place(
     }
     items.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.total_cmp(&a.3)));
 
+    let blocked = |gpu: usize| avoid.contains(&(gpu as u32));
     let mut usage: Vec<GpuUsage> = Vec::new();
     for (si, inst, share, mem) in items {
-        let slot = usage.iter().position(|u| {
-            u.share + share <= g.max_share && u.mem_mb + mem <= g.gpu_mem_mb
+        let slot = usage.iter().enumerate().position(|(i, u)| {
+            !blocked(i)
+                && u.share + share <= g.max_share
+                && u.mem_mb + mem <= g.gpu_mem_mb
         });
         let gpu = match slot {
             Some(i) => i,
             None => {
                 if let Some(cap) = max_gpus {
-                    if usage.len() >= cap {
+                    let usable = usage
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| !blocked(*i))
+                        .count();
+                    if usable >= cap {
                         return Err(Unplaceable {
                             stage: si,
                             share,
@@ -195,6 +217,10 @@ pub fn place(
                             cluster_full: true,
                         });
                     }
+                }
+                // skip over avoided ids so they are never handed out
+                while blocked(usage.len()) {
+                    usage.push(GpuUsage::default());
                 }
                 usage.push(GpuUsage::default());
                 usage.len() - 1
@@ -338,14 +364,20 @@ fn gpu_overlap(a: &[u32], b: &[u32]) -> usize {
 /// used instead (`fell_back`), so the result never exceeds the
 /// oracle's GPU count while migrating no more instances than it
 /// (`migrated ≤ repack_migrated`, property-tested).
+///
+/// `avoid` lists failed GPU ids (emergency replans): stages currently
+/// stamped onto an avoided GPU are not pinned — their instances
+/// restart elsewhere — and neither the delta pack nor the repack
+/// oracle ever places onto an avoided id.
 pub fn place_delta(
     cm: &CostModel,
     old: &ExecutionPlan,
     new: &ExecutionPlan,
     max_gpus: Option<usize>,
+    avoid: &[u32],
 ) -> Result<DeltaPlacement, Unplaceable> {
     let g = &cm.config().gpu;
-    let repack = place(cm, new, max_gpus)?;
+    let repack = place_avoiding(cm, new, max_gpus, avoid)?;
 
     // index the old plan's stamped stages by identity (an unstamped old
     // plan pins nothing and the repack wins trivially)
@@ -374,14 +406,19 @@ pub fn place_delta(
     let mut repack_migrated = 0usize;
     for (si, s) in new_stages.iter().enumerate() {
         by_stage.push(vec![0; s.alloc.instances as usize]);
-        let matched = old_stages.get_mut(&new_ids[si]).and_then(|bucket| {
-            bucket
-                .iter()
-                .position(|(frag, alloc, _)| {
-                    *frag == s.frag && *alloc == s.alloc
-                })
-                .map(|i| bucket.swap_remove(i).2)
-        });
+        let matched = old_stages
+            .get_mut(&new_ids[si])
+            .and_then(|bucket| {
+                bucket
+                    .iter()
+                    .position(|(frag, alloc, _)| {
+                        *frag == s.frag && *alloc == s.alloc
+                    })
+                    .map(|i| bucket.swap_remove(i).2)
+            })
+            // a stage stamped onto failed hardware cannot stay: unpin
+            // it so every instance restarts on surviving GPUs
+            .filter(|gpus| !gpus.iter().any(|gpu| avoid.contains(gpu)));
         match matched {
             Some(gpus) => {
                 // unchanged stage: pin every instance to its current GPU
@@ -421,18 +458,29 @@ pub fn place_delta(
     }
     let migrated = items.len();
     items.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.total_cmp(&a.3)));
+    let blocked = |gpu: usize| avoid.contains(&(gpu as u32));
     let mut delta_ok = true;
     for (si, inst, share, mem) in items {
-        let slot = usage.iter().position(|u| {
-            u.share + share <= g.max_share && u.mem_mb + mem <= g.gpu_mem_mb
+        let slot = usage.iter().enumerate().position(|(i, u)| {
+            !blocked(i)
+                && u.share + share <= g.max_share
+                && u.mem_mb + mem <= g.gpu_mem_mb
         });
         let gpu = match slot {
             Some(i) => i,
             None => {
-                if max_gpus.is_some_and(|cap| usage.len() >= cap) {
+                let usable = usage
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !blocked(*i))
+                    .count();
+                if max_gpus.is_some_and(|cap| usable >= cap) {
                     // the repack fit under the cap, so fall back to it
                     delta_ok = false;
                     break;
+                }
+                while blocked(usage.len()) {
+                    usage.push(GpuUsage::default());
                 }
                 usage.push(GpuUsage::default());
                 usage.len() - 1
@@ -582,7 +630,7 @@ mod tests {
         let placement = place(&cm, &old, None).unwrap();
         stamp(&mut old, &placement);
         let new = old.clone();
-        let d = place_delta(&cm, &old, &new, None).unwrap();
+        let d = place_delta(&cm, &old, &new, None, &[]).unwrap();
         assert!(!d.fell_back);
         assert_eq!(d.migrated, 0);
         let total: usize =
@@ -606,7 +654,7 @@ mod tests {
         // packs into the residual capacity
         let mut new = plan(&cm, 30);
         assert_eq!(new.placed_gpus(), None);
-        let d = place_delta(&cm, &old, &new, None).unwrap();
+        let d = place_delta(&cm, &old, &new, None, &[]).unwrap();
         let total: usize =
             new.stages().map(|s| s.alloc.instances as usize).sum();
         assert_eq!(d.pinned + d.migrated, total);
@@ -627,7 +675,7 @@ mod tests {
         let cm = cm();
         let old = plan(&cm, 8); // never stamped
         let new = plan(&cm, 8);
-        let d = place_delta(&cm, &old, &new, None).unwrap();
+        let d = place_delta(&cm, &old, &new, None, &[]).unwrap();
         assert!(d.fell_back || d.migrated == d.repack_migrated);
         assert_eq!(d.gpus_used, d.repack_gpus);
     }
@@ -657,6 +705,48 @@ mod tests {
         let b = gslice(&cm, &specs_b, &AllocConstraints::default());
         if b.stages().count() == a.stages().count() {
             assert_eq!(ids_a, stage_identities(&b));
+        }
+    }
+
+    #[test]
+    fn avoided_gpus_never_receive_instances() {
+        let cm = cm();
+        let g = cm.config().gpu.clone();
+        let mut old = plan(&cm, 24);
+        let placement = place(&cm, &old, None).unwrap();
+        stamp(&mut old, &placement);
+        assert!(placement.gpus() >= 2, "need a multi-GPU packing");
+
+        // plain avoid-aware placement: blocked ids are skipped entirely
+        let p = place_avoiding(&cm, &old, None, &[0, 2]).unwrap();
+        for gpus in &p.by_stage {
+            assert!(!gpus.contains(&0) && !gpus.contains(&2));
+        }
+        for (i, u) in p.usage.iter().enumerate() {
+            if i == 0 || i == 2 {
+                assert_eq!(u.share, 0, "blocked id {i} was used");
+            }
+            assert!(u.share <= g.max_share);
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
+        }
+
+        // delta replacement around a failed GPU: stages pinned there
+        // are evicted, nothing lands back on the dead id
+        let new = old.clone();
+        let d = place_delta(&cm, &old, &new, None, &[0]).unwrap();
+        for gpus in &d.placement.by_stage {
+            assert!(!gpus.contains(&0), "instance placed on failed GPU");
+        }
+        // everything that lived on GPU 0 migrated
+        let evicted: usize = old
+            .stages()
+            .map(|s| s.gpus.iter().filter(|&&gp| gp == 0).count())
+            .sum();
+        assert!(evicted > 0, "seed packing left GPU 0 empty");
+        assert!(d.migrated >= evicted);
+        for u in &d.placement.usage {
+            assert!(u.share <= g.max_share);
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
         }
     }
 

@@ -59,6 +59,7 @@ use super::repartition::{
 };
 use super::reuse::{group_signature, repartition_signature, warm_signature};
 use crate::profiler::CostModel;
+use crate::util::lock::lock_recover;
 use crate::util::parallel_map;
 
 #[derive(Debug, Clone)]
@@ -217,7 +218,7 @@ impl Scheduler {
         path: &std::path::Path,
     ) -> anyhow::Result<()> {
         use crate::util::Json;
-        let ctx = self.replan.lock().unwrap();
+        let ctx = lock_recover(&self.replan);
         let mut dp = Vec::new();
         for (sig, e) in &ctx.dp {
             let mut o = std::collections::BTreeMap::new();
@@ -270,7 +271,7 @@ impl Scheduler {
             dp.insert(sig, DpHintEntry { points, generation: 0 });
         }
         let counts = (merge.len(), dp.len());
-        let mut ctx = self.replan.lock().unwrap();
+        let mut ctx = lock_recover(&self.replan);
         ctx.merge = merge;
         ctx.dp = dp;
         ctx.generation = 0;
@@ -282,11 +283,11 @@ impl Scheduler {
     /// signatures also cover the options, so this is belt-and-braces,
     /// not correctness).
     pub fn clear_plan_cache(&self) {
-        let mut cache = self.group_cache.lock().unwrap();
+        let mut cache = lock_recover(&self.group_cache);
         cache.map.clear();
         cache.entries = 0;
         drop(cache);
-        let mut ctx = self.replan.lock().unwrap();
+        let mut ctx = lock_recover(&self.replan);
         ctx.merge.clear();
         ctx.dp.clear();
     }
@@ -306,7 +307,7 @@ impl Scheduler {
         // incremental mode re-merges only the dirty uniform classes.
         let t = Instant::now();
         let merged = if self.opts.incremental {
-            let mut ctx = self.replan.lock().unwrap();
+            let mut ctx = lock_recover(&self.replan);
             let out = merge_fragments_incremental(
                 &self.cm,
                 demands,
@@ -395,7 +396,7 @@ impl Scheduler {
     /// re-partitioning passes a trigger runs.  (The merge cache bumps
     /// its own generation inside `merge_fragments_incremental`.)
     fn begin_trigger(&self) {
-        let mut cache = self.group_cache.lock().unwrap();
+        let mut cache = lock_recover(&self.group_cache);
         cache.generation += 1;
         let gen = cache.generation;
         if cache.entries > GROUP_CACHE_CAPACITY {
@@ -409,7 +410,7 @@ impl Scheduler {
             cache.entries = remaining;
         }
         drop(cache);
-        let mut ctx = self.replan.lock().unwrap();
+        let mut ctx = lock_recover(&self.replan);
         ctx.generation += 1;
         let gen = ctx.generation;
         if ctx.dp.len() > DP_HINT_CAPACITY {
@@ -439,7 +440,7 @@ impl Scheduler {
                 .map(|g| warm_signature(g, opts_sig))
                 .collect();
             {
-                let mut cache = self.group_cache.lock().unwrap();
+                let mut cache = lock_recover(&self.group_cache);
                 let gen = cache.generation;
                 for (gi, g) in groups.iter().enumerate() {
                     if let Some(bucket) =
@@ -455,7 +456,7 @@ impl Scheduler {
                 }
             }
             // warm DP hints for the groups that must recompute
-            let ctx = self.replan.lock().unwrap();
+            let ctx = lock_recover(&self.replan);
             for gi in 0..groups.len() {
                 if reused[gi].is_none() {
                     if let Some(e) = ctx.dp.get(&warm_sigs[gi]) {
@@ -510,7 +511,7 @@ impl Scheduler {
         }
         if self.opts.incremental {
             if !fresh.is_empty() {
-                let mut cache = self.group_cache.lock().unwrap();
+                let mut cache = lock_recover(&self.group_cache);
                 let generation = cache.generation;
                 for (gi, p) in fresh {
                     cache
@@ -525,7 +526,7 @@ impl Scheduler {
                     cache.entries += 1;
                 }
             }
-            let mut ctx = self.replan.lock().unwrap();
+            let mut ctx = lock_recover(&self.replan);
             let generation = ctx.generation;
             for (sig, points) in dp_updates {
                 // latest trigger wins: hints are advisory, one entry

@@ -27,7 +27,9 @@ use crate::hybrid::{choose_partition, DeviceKind};
 use crate::metrics::LatencyStats;
 use crate::profiler::{AllocConstraints, CostModel};
 use crate::serving::{
-    ExecutorMode, MockExecutor, Request, Response, Server, ServerOptions,
+    ExecutorMode, FaultDomain, FaultKind, FaultPlan, FaultyExecutor,
+    FragmentExecutor, MockExecutor, Request, Response, Server,
+    ServerOptions,
 };
 use crate::sim::plan_energy_j;
 use crate::util::csv::{f, Table};
@@ -342,6 +344,23 @@ pub fn mode_name(mode: ExecutorMode) -> &'static str {
     }
 }
 
+/// Fire the control-domain faults due at this submit tick against the
+/// live server: GPU failures kill every co-located instance, shard
+/// poisonings panic a lock that the queue then recovers.
+fn apply_control_faults(server: &Server, plan: &FaultPlan) {
+    for kind in plan.tick(FaultDomain::Control) {
+        match kind {
+            FaultKind::GpuFail { gpu } => {
+                server.fail_gpu(gpu);
+            }
+            FaultKind::PoisonShard { stage, shard } => {
+                server.poison_stage_queue(stage, shard);
+            }
+            _ => {}
+        }
+    }
+}
+
 /// Drive `total_reqs` synthetic requests through a real [`Server`] for
 /// `plan` (mock executor, no pacing, no SLO drops) and measure
 /// end-to-end throughput and latency.  Producers submit round-robin
@@ -352,6 +371,21 @@ pub fn serve_synthetic(
     plan: &ExecutionPlan,
     mode: ExecutorMode,
     total_reqs: usize,
+) -> ServingBenchPoint {
+    serve_synthetic_with_faults(cm, plan, mode, total_reqs, None)
+}
+
+/// [`serve_synthetic`] under an optional [`FaultPlan`]: executor-domain
+/// events fire through a [`FaultyExecutor`] wrapper (one tick per batch
+/// execution), control-domain events (GPU failures, shard poisonings)
+/// tick once per submitted request in the producers.  Seeded plans make
+/// the whole chaos run reproducible.
+pub fn serve_synthetic_with_faults(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    mode: ExecutorMode,
+    total_reqs: usize,
+    faults: Option<Arc<FaultPlan>>,
 ) -> ServingBenchPoint {
     // every routed client with its partition point / payload width
     let mut targets: Vec<(u32, u16, u16, usize)> = Vec::new();
@@ -391,8 +425,13 @@ pub fn serve_synthetic(
         .iter()
         .map(|m| (m.name.clone(), m.dims.clone()))
         .collect();
+    let mock: Arc<dyn FragmentExecutor> = Arc::new(MockExecutor { dims });
+    let executor: Arc<dyn FragmentExecutor> = match &faults {
+        Some(fp) => Arc::new(FaultyExecutor::new(mock, fp.clone())),
+        None => mock,
+    };
     let server = Server::start(
-        Arc::new(MockExecutor { dims }),
+        executor,
         cm,
         plan,
         ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
@@ -419,10 +458,14 @@ pub fn serve_synthetic(
             let tx = tx.clone();
             let server = &server;
             let targets = &targets;
+            let faults = faults.clone();
             prod_handles.push(scope.spawn(move || {
                 let mut local: Vec<(u32, Instant)> = Vec::new();
                 let mut i = pidx;
                 while i < total_reqs {
+                    if let Some(fp) = &faults {
+                        apply_control_faults(server, fp);
+                    }
                     let (cid, model, p, dim) = targets[i % targets.len()];
                     let req = Request {
                         client_id: cid,
@@ -789,6 +832,19 @@ pub fn transition_scenario(
     total_reqs: usize,
     seed: u64,
 ) -> TransitionPoint {
+    transition_scenario_with_faults(n, pct, total_reqs, seed, None)
+}
+
+/// [`transition_scenario`] under an optional [`FaultPlan`] (same
+/// domains as [`serve_synthetic_with_faults`]): chaos during a live
+/// hot-swap, reproducible per seed.
+pub fn transition_scenario_with_faults(
+    n: usize,
+    pct: usize,
+    total_reqs: usize,
+    seed: u64,
+    faults: Option<Arc<FaultPlan>>,
+) -> TransitionPoint {
     use crate::coordinator::placement::{place_delta, stamp};
     use crate::runtime::transition::{diff_plans, LiveServer};
     use std::sync::atomic::AtomicUsize;
@@ -804,7 +860,7 @@ pub fn transition_scenario(
         + pre_diff.added_sets
         + pre_diff.removed_sets
         > 0;
-    let delta = place_delta(&cm, &plan_a, &plan_b, None)
+    let delta = place_delta(&cm, &plan_a, &plan_b, None, &[])
         .expect("scheduler-placed plans stay placeable");
     stamp(&mut plan_b, &delta.placement);
 
@@ -814,8 +870,13 @@ pub fn transition_scenario(
         .iter()
         .map(|m| (m.name.clone(), m.dims.clone()))
         .collect();
+    let mock: Arc<dyn FragmentExecutor> = Arc::new(MockExecutor { dims });
+    let executor: Arc<dyn FragmentExecutor> = match &faults {
+        Some(fp) => Arc::new(FaultyExecutor::new(mock, fp.clone())),
+        None => mock,
+    };
     let live = LiveServer::start(
-        Arc::new(MockExecutor { dims }),
+        executor,
         &cm,
         &plan_a,
         ServerOptions {
@@ -887,9 +948,13 @@ pub fn transition_scenario(
             let live = &live;
             let targets = &targets;
             let submitted = submitted.clone();
+            let faults = faults.clone();
             prods.push(scope.spawn(move || {
                 let mut i = pidx;
                 while i < total_reqs {
+                    if let Some(fp) = &faults {
+                        apply_control_faults(&live.server(), fp);
+                    }
                     let (cid, model, p, dim) = targets[i % targets.len()];
                     crate::serving::RequestSink::submit(
                         live,
@@ -978,6 +1043,230 @@ pub fn transition_scale(_cm: &CostModel) -> Table {
         }
     }
     t
+}
+
+/// One measured failure-recovery run ([`fault_scenario`]).
+#[derive(Debug, Clone)]
+pub struct FaultBenchPoint {
+    pub n_clients: usize,
+    /// Requests submitted across the failure and recovery.
+    pub requests: usize,
+    /// Responses collected — must equal `requests`: every request gets
+    /// exactly one response (a result or an explicit drop notice), even
+    /// the ones in flight on the failed GPU.
+    pub responses: usize,
+    /// Requests already submitted when the GPU failed.
+    pub pre_fault_submitted: usize,
+    /// The injected failure.
+    pub failed_gpu: u32,
+    /// Instances the failure took down.
+    pub killed_instances: usize,
+    /// Drop notices across old + new cores (degradation losses — all
+    /// visible to clients, never silent).
+    pub dropped: u64,
+    /// Closed-queue rejections across cores (every one also produced a
+    /// drop notice).
+    pub rejected: u64,
+    /// Drop notices issued between the failure and the completed
+    /// emergency swap — the degraded-window SLO violations.
+    pub degraded_drops: u64,
+    /// Failure detection → emergency replan → hot-swap complete (ms).
+    pub recovery_ms: f64,
+    pub swap_ms: f64,
+    pub drain_ms: f64,
+    /// The controller saw the failure and emergency-replanned.
+    pub emergency_fired: bool,
+    /// Instances the emergency plan stamped onto the failed GPU — must
+    /// be 0 (the replan routes around dead hardware).
+    pub new_plan_on_failed_gpu: usize,
+}
+
+/// Plan → serve → **fail a GPU under load** → detect → emergency
+/// replan (failed GPU excluded from placement) → hot-swap, measuring
+/// recovery time and request accounting.  The failed GPU is picked
+/// deterministically (seeded) from the deployed plan's stamps, so the
+/// fault always hits live instances.
+pub fn fault_scenario(
+    n: usize,
+    total_reqs: usize,
+    seed: u64,
+) -> FaultBenchPoint {
+    use crate::coordinator::controller::{
+        ControllerOptions, ReplanController, TickOutcome,
+    };
+    use crate::runtime::transition::LiveServer;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicUsize;
+
+    let cm = CostModel::new(Config::embedded());
+    let sched =
+        Arc::new(Scheduler::new(cm.clone(), SchedulerOptions::default()));
+    let specs = random_mixed_fragments(&cm, n, seed);
+    let (plan_a, _) = sched.plan(&specs);
+
+    // pick the victim among the GPUs actually hosting instances
+    let mut stamped: Vec<u32> =
+        plan_a.stages().flat_map(|s| s.gpus.iter().copied()).collect();
+    stamped.sort_unstable();
+    stamped.dedup();
+    let mut rng = Rng::seed_from_u64(seed ^ 0xFA17);
+    let failed_gpu = if stamped.is_empty() {
+        u32::MAX // unplaced plan: kills everything (degenerate)
+    } else {
+        stamped[rng.below(stamped.len())]
+    };
+
+    let dims: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    let live = Arc::new(LiveServer::start(
+        Arc::new(MockExecutor { dims }),
+        &cm,
+        &plan_a,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    ));
+    let controller = ReplanController::new(
+        sched.clone(),
+        live.clone(),
+        specs.clone(),
+        ControllerOptions::default(),
+    );
+
+    let mut targets: Vec<(u32, u16, u16, usize)> = Vec::new();
+    for set in &plan_a.sets {
+        for m in &set.members {
+            let dim = cm.config().models[set.model].dims[m.spec.p];
+            for c in &m.spec.clients {
+                targets.push((c.0, set.model as u16, m.spec.p as u16, dim));
+            }
+        }
+    }
+    let mut point = FaultBenchPoint {
+        n_clients: n,
+        requests: 0,
+        responses: 0,
+        pre_fault_submitted: 0,
+        failed_gpu,
+        killed_instances: 0,
+        dropped: 0,
+        rejected: 0,
+        degraded_drops: 0,
+        recovery_ms: 0.0,
+        swap_ms: 0.0,
+        drain_ms: 0.0,
+        emergency_fired: false,
+        new_plan_on_failed_gpu: 0,
+    };
+    if targets.is_empty() || total_reqs == 0 {
+        return point;
+    }
+
+    let producers = 2usize.min(total_reqs).max(1);
+    let submitted = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<Response>();
+    std::thread::scope(|scope| {
+        let collector = scope.spawn(move || {
+            let mut got = 0usize;
+            let mut dropped_resp = 0usize;
+            while got < total_reqs {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(r) => {
+                        got += 1;
+                        if r.dropped {
+                            dropped_resp += 1;
+                        }
+                    }
+                    Err(_) => break, // lost responses: report the gap
+                }
+            }
+            (got, dropped_resp)
+        });
+        let mut prods = Vec::new();
+        for pidx in 0..producers {
+            let tx = tx.clone();
+            let live = &live;
+            let targets = &targets;
+            let submitted = submitted.clone();
+            prods.push(scope.spawn(move || {
+                let mut i = pidx;
+                while i < total_reqs {
+                    let (cid, model, p, dim) = targets[i % targets.len()];
+                    crate::serving::RequestSink::submit(
+                        live.as_ref(),
+                        Request {
+                            client_id: cid,
+                            model,
+                            p,
+                            seq: i as u32,
+                            t_capture_ms: 0.0,
+                            upstream_ms: 0.0,
+                            budget_ms: 1e9,
+                            payload: vec![0.5; dim],
+                        },
+                        tx.clone(),
+                    );
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    i += producers;
+                }
+            }));
+        }
+        drop(tx);
+        // fail the GPU once the load is truly live
+        let fail_at = (total_reqs / 3).max(1);
+        while submitted.load(Ordering::Relaxed) < fail_at {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let drops_before = live.totals().dropped;
+        point.pre_fault_submitted = submitted.load(Ordering::Relaxed);
+        let t_fail = Instant::now();
+        point.killed_instances = live.server().fail_gpu(failed_gpu);
+        // detection + emergency replan + hot-swap (one controller tick)
+        match controller.tick() {
+            TickOutcome::EmergencyReplanned { report, .. } => {
+                point.emergency_fired = true;
+                point.swap_ms = report.total_ms;
+                point.drain_ms = report.drain_ms;
+            }
+            _ => point.emergency_fired = false,
+        }
+        point.recovery_ms = t_fail.elapsed().as_secs_f64() * 1e3;
+        point.degraded_drops =
+            live.totals().dropped.saturating_sub(drops_before);
+        for p in prods {
+            p.join().expect("producer");
+        }
+        let (got, dropped_resp) = collector.join().expect("collector");
+        point.requests = total_reqs;
+        point.responses = got;
+        point.dropped = dropped_resp as u64;
+    });
+    let totals = live.totals();
+    // the two views count the same losses (every server-side drop also
+    // sent a dropped response); take the max, don't double-count
+    point.dropped = point.dropped.max(totals.dropped);
+    point.rejected = totals.rejected;
+    // the emergency plan must have routed around the failed GPU
+    let new_plan = live.plan();
+    point.new_plan_on_failed_gpu = new_plan
+        .stages()
+        .map(|s| s.gpus.iter().filter(|&&g| g == failed_gpu).count())
+        .sum();
+    drop(controller); // releases its Arc so the unwrap below succeeds
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(l) => {
+            l.server().drain();
+        }
+    }
+    point
 }
 
 #[cfg(test)]

@@ -91,6 +91,24 @@ impl ClientSim {
         }
     }
 
+    /// Latency of running the whole model on-device (partition point =
+    /// all layers, nothing uploaded) — the degraded-mode fallback when
+    /// the server is unreachable (connection retries exhausted) or has
+    /// lost its capacity.  Device-only execution needs no uplink, so
+    /// the figure is bandwidth-independent.
+    pub fn device_only_ms(&self, cm: &CostModel) -> f64 {
+        let m = &cm.config().models[self.model];
+        self.device.mobile_ms(m, m.layers)
+    }
+
+    /// Whether the device-only fallback still meets this client's SLO
+    /// (weak devices on large models generally cannot — those clients
+    /// can only wait out the server's recovery).
+    pub fn device_fallback_feasible(&self, cm: &CostModel) -> bool {
+        let m = &cm.config().models[self.model];
+        self.device_only_ms(cm) <= self.device.slo_ms(m, self.slo_ratio)
+    }
+
     /// The sequence of (time, spec) *changes* over the whole trace — the
     /// re-plan triggers. A change is a new partition point or a budget
     /// shift larger than `budget_tol_ms`.
@@ -206,6 +224,32 @@ mod tests {
         );
         // distinct traces per client
         assert_ne!(f[0].trace.mbps, f[1].trace.mbps);
+    }
+
+    #[test]
+    fn device_only_fallback_is_bandwidth_independent() {
+        let cm = cm();
+        let i = cm.model_index("inc").unwrap();
+        let c = ClientSim::new(
+            ClientId(0),
+            i,
+            DeviceKind::Nano,
+            BandwidthTrace::embedded(),
+            0.95,
+        );
+        let full = c.device_only_ms(&cm);
+        let m = &cm.config().models[i];
+        assert!(full > 0.0);
+        // full on-device = the device's total model latency
+        assert!((full - c.device.mobile_ms(m, m.layers)).abs() < 1e-9);
+        // always at least the cost of any hybrid split's mobile part
+        let st = c.state_at(&cm, 0.0);
+        assert!(full >= st.mobile_ms);
+        // feasibility is exactly the SLO comparison
+        assert_eq!(
+            c.device_fallback_feasible(&cm),
+            full <= c.device.slo_ms(m, 0.95)
+        );
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!                                     live traffic (zero-drop,
 //!                                     delta-placement vs full repack)
 //!                                     and emit BENCH_transition.json
+//!   bench-faults [--sizes N,N,..] [--requests R] [--out FILE]
+//!                                     fail a live GPU under load,
+//!                                     measure detection → emergency
+//!                                     replan → hot-swap recovery and
+//!                                     emit BENCH_faults.json
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -98,6 +103,7 @@ fn run() -> Result<()> {
         "bench-serving" => cmd_bench_serving(&cm, &args),
         "bench-placement" => cmd_bench_placement(&args),
         "bench-transition" => cmd_bench_transition(&args),
+        "bench-faults" => cmd_bench_faults(&args),
         "serve" => cmd_serve(&cm, &args),
         "trace" => cmd_trace(&args),
         "models" => {
@@ -125,7 +131,8 @@ fn print_usage() {
          \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\
          \x20 graft bench-serving [--sizes 1000,5000,10000] [--requests 40000] [--out BENCH_serving.json]\n\
          \x20 graft bench-placement [--sizes 1000,5000,10000] [--out BENCH_placement.json]\n\
-         \x20 graft bench-transition [--sizes 1000,5000,10000] [--requests 8000] [--out BENCH_transition.json]\n\n\
+         \x20 graft bench-transition [--sizes 1000,5000,10000] [--requests 8000] [--out BENCH_transition.json]\n\
+         \x20 graft bench-faults [--sizes 1000,5000,10000] [--requests 8000] [--out BENCH_faults.json]\n\n\
          experiments: {}",
         experiments::ALL.join(" ")
     );
@@ -1020,6 +1027,161 @@ fn cmd_bench_transition(args: &Args) -> Result<()> {
     doc.insert("schema_version".into(), num(1.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("transition".into(), Json::Arr(rows));
+    let json = Json::Obj(doc);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, format!("{json}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}
+
+/// `graft bench-faults`: failure-recovery bench — serve a planned
+/// fleet with the pooled executor, fail one live GPU a third of the
+/// way through the load (every co-located instance dies, its shards
+/// close and reroute), let the replan controller detect it and
+/// emergency-replan with the dead GPU excluded from placement, and
+/// emit `BENCH_faults.json` (recovery latency, degraded-window drops,
+/// request accounting).
+///
+/// Self-checking, the run aborts unless:
+///   * the controller detected the failure and emergency-replanned;
+///   * the failure actually killed instances (the victim GPU is drawn
+///     from the deployed plan's stamps, so it always hosts some);
+///   * every submitted request — including every request accepted
+///     before the fault — got exactly one response (a result or an
+///     explicit drop notice): nothing is ever silently lost;
+///   * the emergency plan placed zero instances on the failed GPU.
+fn cmd_bench_faults(args: &Args) -> Result<()> {
+    use graft::experiments::scale::fault_scenario;
+    use graft::util::Json;
+    use std::collections::BTreeMap;
+
+    let sizes: Vec<usize> = args
+        .flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,5000,10000")
+        .split(',')
+        .map(|s| s.trim().parse().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let requests_flag: Option<usize> = args
+        .flags
+        .get("requests")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --requests")?;
+    let out = PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_faults.json".into()),
+    );
+
+    let num = Json::Num;
+    let ms3 = |v: f64| Json::Num((v * 1e3).round() / 1e3);
+    let mut rows = Vec::new();
+    println!(
+        "{:>8} {:>10} {:>8} {:>7} {:>11} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "n",
+        "responses",
+        "killed",
+        "gpu",
+        "recovery_ms",
+        "swap_ms",
+        "drain_ms",
+        "degraded",
+        "dropped",
+        "rejected"
+    );
+    for &n in &sizes {
+        let total_reqs = requests_flag.unwrap_or_else(|| (2 * n).max(4000));
+        let r = fault_scenario(n, total_reqs, 0xFA17 + n as u64);
+        if !r.emergency_fired {
+            bail!(
+                "controller missed the GPU failure at n={n}: no emergency \
+                 replan fired"
+            );
+        }
+        if r.killed_instances == 0 {
+            bail!(
+                "injected failure of GPU {} at n={n} killed no instances",
+                r.failed_gpu
+            );
+        }
+        if r.responses != r.requests {
+            bail!(
+                "failure run lost responses at n={n}: {}/{} — a request \
+                 (accepted before or after the fault) vanished without a \
+                 drop notice",
+                r.responses,
+                r.requests
+            );
+        }
+        if r.new_plan_on_failed_gpu != 0 {
+            bail!(
+                "emergency replan placed {} instance(s) back on failed \
+                 GPU {} at n={n}",
+                r.new_plan_on_failed_gpu,
+                r.failed_gpu
+            );
+        }
+        println!(
+            "{:>8} {:>10} {:>8} {:>7} {:>11} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            n,
+            format!("{}/{}", r.responses, r.requests),
+            r.killed_instances,
+            r.failed_gpu,
+            format!("{:.2}", r.recovery_ms),
+            format!("{:.2}", r.swap_ms),
+            format!("{:.2}", r.drain_ms),
+            r.degraded_drops,
+            r.dropped,
+            r.rejected,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("n_clients".into(), num(r.n_clients as f64));
+        row.insert("requests".into(), num(r.requests as f64));
+        row.insert("responses".into(), num(r.responses as f64));
+        row.insert(
+            "pre_fault_submitted".into(),
+            num(r.pre_fault_submitted as f64),
+        );
+        row.insert("failed_gpu".into(), num(r.failed_gpu as f64));
+        row.insert(
+            "killed_instances".into(),
+            num(r.killed_instances as f64),
+        );
+        row.insert("dropped".into(), num(r.dropped as f64));
+        row.insert("rejected".into(), num(r.rejected as f64));
+        row.insert(
+            "degraded_drops".into(),
+            num(r.degraded_drops as f64),
+        );
+        row.insert("recovery_ms".into(), ms3(r.recovery_ms));
+        row.insert("swap_ms".into(), ms3(r.swap_ms));
+        row.insert("drain_ms".into(), ms3(r.drain_ms));
+        row.insert(
+            "new_plan_on_failed_gpu".into(),
+            num(r.new_plan_on_failed_gpu as f64),
+        );
+        rows.push(Json::Obj(row));
+    }
+
+    let mut config = BTreeMap::new();
+    config.insert("time_scale".into(), num(0.0));
+    config.insert("drop_on_slo".into(), Json::Bool(false));
+    config.insert("producers".into(), num(2.0));
+    config.insert("fault".into(), Json::Str("single_gpu_failure".into()));
+    config.insert("fail_at_fraction".into(), Json::Num(1.0 / 3.0));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("faults".into()));
+    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("config".into(), Json::Obj(config));
+    doc.insert("faults".into(), Json::Arr(rows));
     let json = Json::Obj(doc);
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {

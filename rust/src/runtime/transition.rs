@@ -39,6 +39,7 @@ use crate::serving::server::RequestSink;
 use crate::serving::{
     FragmentExecutor, Request, Response, Server, ServerOptions,
 };
+use crate::util::lock::{lock_recover, read_recover, write_recover};
 
 /// How one re-aligned set moves from the old plan to the new one.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -241,12 +242,12 @@ impl LiveServer {
     /// The current serving core (snapshot — may be retired by a later
     /// reconfigure, but keeps serving its in-flight work either way).
     pub fn server(&self) -> Arc<Server> {
-        self.current.read().unwrap().clone()
+        read_recover(&self.current).clone()
     }
 
     /// The currently deployed plan.
     pub fn plan(&self) -> ExecutionPlan {
-        self.plan.lock().unwrap().clone()
+        lock_recover(&self.plan).clone()
     }
 
     /// Completed reconfigurations.
@@ -278,7 +279,7 @@ impl LiveServer {
     /// responses route correctly); requests submitted after the switch
     /// run on the new core — nothing is dropped, nothing runs twice.
     pub fn reconfigure(&self, new_plan: &ExecutionPlan) -> TransitionReport {
-        let _swap = self.swap_lock.lock().unwrap();
+        let _swap = lock_recover(&self.swap_lock);
         let t0 = Instant::now();
         let old_plan = self.plan();
         let transition = diff_plans(&old_plan, new_plan);
@@ -298,10 +299,10 @@ impl LiveServer {
         // drain is about to close
         let t1 = Instant::now();
         let old_server = {
-            let mut cur = self.current.write().unwrap();
+            let mut cur = write_recover(&self.current);
             std::mem::replace(&mut *cur, new_server)
         };
-        *self.plan.lock().unwrap() = new_plan.clone();
+        *lock_recover(&self.plan) = new_plan.clone();
         let switch_ms = t1.elapsed().as_secs_f64() * 1e3;
 
         // drain: old shards finish under their SLO while the new
@@ -337,7 +338,10 @@ impl LiveServer {
     /// Tear down the current core (end of process; retired cores were
     /// already drained and joined by their reconfigure).
     pub fn shutdown(self) {
-        let server = self.current.into_inner().unwrap();
+        let server = self
+            .current
+            .into_inner()
+            .unwrap_or_else(|e| e.into_inner());
         match Arc::try_unwrap(server) {
             Ok(s) => s.shutdown(),
             // a front-end still holds the Arc: close the queues so its
@@ -352,8 +356,12 @@ impl RequestSink for LiveServer {
         // hold the read lock across the push: reconfigure's write lock
         // then guarantees no submit is still targeting the old core
         // when its drain begins
-        let cur = self.current.read().unwrap();
+        let cur = read_recover(&self.current);
         cur.submit(req, reply);
+    }
+
+    fn on_conn_evicted(&self) {
+        self.server().on_conn_evicted();
     }
 }
 

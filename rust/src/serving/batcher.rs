@@ -21,8 +21,10 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
+
+use crate::util::lock::{lock_counted, wait_recover, wait_timeout_recover};
 
 /// Process-wide monotonic epoch for the lock-free arrival-rate EWMA
 /// (an `Instant` cannot live in an atomic, so arrivals are stamped as
@@ -56,6 +58,9 @@ pub struct QueueMetrics {
     pub popped: AtomicU64,
     /// Pushes refused because the queue was closed.
     pub rejected: AtomicU64,
+    /// Poisoned-lock recoveries on this queue (a consumer panicked while
+    /// holding a queue lock; the queue carried on).
+    pub poisoned: AtomicU64,
     /// Micro-timestamp ([`epoch_us`]) of the last accepted push (0 =
     /// none yet).
     last_arrival_us: AtomicU64,
@@ -79,6 +84,9 @@ impl QueueMetrics {
     }
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
+    }
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned.load(Ordering::Relaxed)
     }
 
     /// Fold one accepted arrival into the inter-arrival EWMA.  Racy by
@@ -141,21 +149,35 @@ impl<T> BatchQueue<T> {
         }
     }
 
+    /// Acquire the queue lock, recovering (and counting) poisoning: a
+    /// consumer that panics while holding the lock must not take every
+    /// other producer/consumer down with it.
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
+        lock_counted(&self.inner, Some(&self.metrics.poisoned))
+    }
+
     /// Push one item.  Returns `false` (and counts the rejection) if the
     /// queue has been closed; the item is dropped in that case.
     pub fn push(&self, item: WorkItem<T>) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        self.push_or_return(item).is_none()
+    }
+
+    /// Like [`Self::push`], but a rejected item is handed back (`Some`)
+    /// instead of dropped, so the caller can deliver a drop notice to
+    /// its context rather than losing it silently.
+    pub fn push_or_return(&self, item: WorkItem<T>) -> Option<WorkItem<T>> {
+        let mut g = self.lock();
         if g.closed {
             drop(g);
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return false;
+            return Some(item);
         }
         g.items.push_back(item);
         drop(g);
         self.metrics.pushed.fetch_add(1, Ordering::Relaxed);
         self.metrics.note_arrival();
         self.cv.notify_one();
-        true
+        None
     }
 
     /// Count handed-out items *while still holding the queue lock*:
@@ -173,7 +195,7 @@ impl<T> BatchQueue<T> {
     /// drains whatever else is immediately available (greedy batching).
     /// Returns `None` once closed and drained.
     pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<WorkItem<T>>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         loop {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max_batch.max(1));
@@ -185,7 +207,7 @@ impl<T> BatchQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_recover(&self.cv, g);
         }
     }
 
@@ -199,7 +221,7 @@ impl<T> BatchQueue<T> {
         max_batch: usize,
         window: Duration,
     ) -> Option<Vec<WorkItem<T>>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         // phase 1: block for the first item
         loop {
             if !g.items.is_empty() {
@@ -208,7 +230,7 @@ impl<T> BatchQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_recover(&self.cv, g);
         }
         // phase 2: give the batch `window` to fill
         let deadline = Instant::now() + window;
@@ -217,7 +239,8 @@ impl<T> BatchQueue<T> {
             if now >= deadline {
                 break;
             }
-            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (ng, _) =
+                wait_timeout_recover(&self.cv, g, deadline - now);
             g = ng;
         }
         let n = g.items.len().min(max_batch.max(1));
@@ -234,7 +257,7 @@ impl<T> BatchQueue<T> {
         timeout: Duration,
     ) -> Option<Vec<WorkItem<T>>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         loop {
             if !g.items.is_empty() {
                 let n = g.items.len().min(max_batch.max(1));
@@ -250,9 +273,10 @@ impl<T> BatchQueue<T> {
             if now >= deadline {
                 return Some(Vec::new());
             }
-            let (ng, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (ng, timed_out) =
+                wait_timeout_recover(&self.cv, g, deadline - now);
             g = ng;
-            if res.timed_out() && g.items.is_empty() {
+            if timed_out && g.items.is_empty() {
                 return Some(Vec::new());
             }
         }
@@ -260,12 +284,22 @@ impl<T> BatchQueue<T> {
 
     /// Close the queue: consumers drain remaining items then get `None`.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.lock().closed = true;
         self.cv.notify_all();
     }
 
+    /// Chaos hook: poison the queue mutex the way a panicking consumer
+    /// would (panic while holding the lock, caught at this boundary).
+    /// Subsequent operations must recover and count the recovery.
+    pub fn poison(&self) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = self.lock();
+            panic!("injected queue poison");
+        }));
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -363,9 +397,17 @@ impl<T> ShardedBatchQueue<T> {
         &self.metrics
     }
 
+    /// Acquire one shard's lock, recovering (and counting) poisoning.
+    fn shard_lock<'a>(
+        &'a self,
+        shard: &'a Shard<T>,
+    ) -> MutexGuard<'a, VecDeque<WorkItem<T>>> {
+        lock_counted(&shard.items, Some(&self.metrics.poisoned))
+    }
+
     fn wake_sleepers(&self) {
         if self.sleepers.load(Ordering::SeqCst) > 0 {
-            let g = self.gate.lock().unwrap();
+            let g = lock_counted(&self.gate, Some(&self.metrics.poisoned));
             self.epoch.fetch_add(1, Ordering::SeqCst);
             drop(g);
             self.cv.notify_all();
@@ -379,6 +421,12 @@ impl<T> ShardedBatchQueue<T> {
     /// returns no push can slip an item into a closed shard.
     pub fn push(&self, item: WorkItem<T>) -> bool {
         self.push_inner(item, true).is_none()
+    }
+
+    /// Like [`Self::push`], but a rejected item is handed back (`Some`)
+    /// so the caller can drop-notice its context instead of losing it.
+    pub fn push_or_return(&self, item: WorkItem<T>) -> Option<WorkItem<T>> {
+        self.push_inner(item, true)
     }
 
     /// The routed push shared by `push` and the `close_shard` handoff:
@@ -424,7 +472,7 @@ impl<T> ShardedBatchQueue<T> {
             if shard.closed.load(Ordering::SeqCst) {
                 continue;
             }
-            let mut g = shard.items.lock().unwrap();
+            let mut g = self.shard_lock(shard);
             if self.closed.load(Ordering::SeqCst) {
                 drop(g);
                 if count_metrics {
@@ -482,7 +530,7 @@ impl<T> ShardedBatchQueue<T> {
         // serialize with in-flight pushes: after the lock round-trip no
         // push can add to this shard, so the drained backlog is final
         let backlog: Vec<WorkItem<T>> = {
-            let mut g = s.items.lock().unwrap();
+            let mut g = self.shard_lock(s);
             let k = g.len();
             if k > 0 {
                 s.len.fetch_sub(k, Ordering::SeqCst);
@@ -498,7 +546,7 @@ impl<T> ShardedBatchQueue<T> {
                     // no open shard left: park the item back in this
                     // (now closed) shard — consumers drain closed
                     // shards, so nothing is lost
-                    let mut g = s.items.lock().unwrap();
+                    let mut g = self.shard_lock(s);
                     g.push_back(item);
                     s.len.fetch_add(1, Ordering::SeqCst);
                     self.total.fetch_add(1, Ordering::SeqCst);
@@ -527,7 +575,7 @@ impl<T> ShardedBatchQueue<T> {
             if shard.len.load(Ordering::SeqCst) == 0 {
                 continue;
             }
-            let mut g = shard.items.lock().unwrap();
+            let mut g = self.shard_lock(shard);
             let mut taken = 0usize;
             while out.len() < cap {
                 match g.pop_front() {
@@ -581,14 +629,16 @@ impl<T> ShardedBatchQueue<T> {
                 return None;
             }
             {
-                let mut g = self.gate.lock().unwrap();
+                let mut g =
+                    lock_counted(&self.gate, Some(&self.metrics.poisoned));
                 while self.epoch.load(Ordering::SeqCst) == seen {
-                    let (ng, res) = self
-                        .cv
-                        .wait_timeout(g, Duration::from_millis(50))
-                        .unwrap();
+                    let (ng, timed_out) = wait_timeout_recover(
+                        &self.cv,
+                        g,
+                        Duration::from_millis(50),
+                    );
                     g = ng;
-                    if res.timed_out() {
+                    if timed_out {
                         // safety tick: re-scan even without a wakeup so a
                         // raced drain/close can never strand this waiter
                         break;
@@ -606,12 +656,23 @@ impl<T> ShardedBatchQueue<T> {
     pub fn close(&self) {
         self.closed.store(true, Ordering::SeqCst);
         for s in &self.shards {
-            drop(s.items.lock().unwrap());
+            drop(self.shard_lock(s));
         }
-        let g = self.gate.lock().unwrap();
+        let g = lock_counted(&self.gate, Some(&self.metrics.poisoned));
         self.epoch.fetch_add(1, Ordering::SeqCst);
         drop(g);
         self.cv.notify_all();
+    }
+
+    /// Chaos hook: poison one shard's mutex the way a panicking consumer
+    /// would (panic while holding the lock, caught at this boundary).
+    /// Pushes, pops and drains must recover and count the recovery.
+    pub fn poison_shard(&self, shard: usize) {
+        let s = &self.shards[shard];
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = self.shard_lock(s);
+            panic!("injected shard poison");
+        }));
     }
 }
 
@@ -828,6 +889,42 @@ mod tests {
         assert_eq!(q.metrics().rejected(), 1);
         let b = q.try_pop_batch(0, 8);
         assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn poisoned_queue_recovers_and_counts() {
+        let q = BatchQueue::new();
+        assert!(q.push(item(1.0)));
+        q.poison();
+        // the queue keeps working after a consumer panic poisoned it
+        assert!(q.push(item(2.0)));
+        assert_eq!(q.pop_batch(8).unwrap().len(), 2);
+        assert!(q.metrics().poisoned() >= 1);
+    }
+
+    #[test]
+    fn poisoned_shard_recovers_and_loses_nothing() {
+        let q: ShardedBatchQueue<u32> = ShardedBatchQueue::new(4);
+        for i in 0..40 {
+            assert!(q.push(item(i as f32)));
+        }
+        for s in 0..4 {
+            q.poison_shard(s);
+        }
+        for i in 40..80 {
+            assert!(q.push(item(i as f32)));
+        }
+        let mut got = Vec::new();
+        loop {
+            let b = q.try_pop_batch(0, 16);
+            if b.is_empty() {
+                break;
+            }
+            got.extend(b.into_iter().map(|w| w.ctx));
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..80).collect::<Vec<u32>>());
+        assert!(q.metrics().poisoned() >= 4);
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Deterministic fault injection for chaos runs.
+//!
+//! A [`FaultPlan`] is a seeded, sorted list of [`FaultEvent`]s — "at
+//! tick N, kill a worker / fail GPU g / poison shard s / drop the
+//! connection".  Ticks are counted by whoever consumes the event's
+//! *domain*: executor faults tick once per batch execution (the
+//! [`FaultyExecutor`] wrapper), control faults once per submitted
+//! request (the serving harnesses), connection faults once per received
+//! frame (the TCP front).  Everything is seeded through
+//! [`crate::util::rng::Rng`], so a chaos run replays identically.
+
+use std::panic::panic_any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::server::{FragmentExecutor, KillWorker};
+use crate::runtime::ExecOutput;
+use crate::util::lock::lock_recover;
+use crate::util::rng::Rng;
+
+/// What to break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill the instance executing the batch at the tick (the executor
+    /// panics with the [`KillWorker`] marker; the serving core retires
+    /// the instance and reroutes its shard).
+    WorkerKill,
+    /// Plain executor panic: the batch is dropped with notices, the
+    /// instance survives.
+    ExecPanic,
+    /// Fail a GPU: every co-located instance dies at once.
+    GpuFail { gpu: u32 },
+    /// Poison one queue shard's lock (recovered, counted, reported).
+    PoisonShard { stage: usize, shard: usize },
+    /// Drop the TCP connection mid-stream.
+    ConnDrop,
+    /// Stall the TCP connection for `ms` before the next submit.
+    ConnDelay { ms: u64 },
+}
+
+/// Which tick counter an event is consumed against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDomain {
+    /// Batch executions ([`FaultyExecutor`]).
+    Exec,
+    /// Submitted requests (serving harnesses).
+    Control,
+    /// Received frames (TCP front).
+    Conn,
+}
+
+impl FaultKind {
+    pub fn domain(&self) -> FaultDomain {
+        match self {
+            FaultKind::WorkerKill | FaultKind::ExecPanic => FaultDomain::Exec,
+            FaultKind::GpuFail { .. } | FaultKind::PoisonShard { .. } => {
+                FaultDomain::Control
+            }
+            FaultKind::ConnDrop | FaultKind::ConnDelay { .. } => {
+                FaultDomain::Conn
+            }
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    /// Domain tick (1-based) at which the fault fires; it fires on the
+    /// first tick `>= at_tick` its consumer observes.
+    pub at_tick: u64,
+    pub kind: FaultKind,
+}
+
+/// A reproducible chaos schedule.  Thread-safe: producers/executors on
+/// any thread consume events exactly once.
+pub struct FaultPlan {
+    /// Sorted by `at_tick`; `taken` flags give exactly-once consumption.
+    events: Mutex<Vec<(FaultEvent, bool)>>,
+    /// Tick counter per domain (Exec, Control, Conn).
+    ticks: [AtomicU64; 3],
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.at_tick);
+        Self {
+            events: Mutex::new(events.into_iter().map(|e| (e, false)).collect()),
+            ticks: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            seed,
+        }
+    }
+
+    /// A single-GPU-failure schedule (the bench's canonical fault).
+    pub fn single_gpu_failure(gpu: u32, at_tick: u64) -> Self {
+        Self::new(
+            0,
+            vec![FaultEvent { at_tick, kind: FaultKind::GpuFail { gpu } }],
+        )
+    }
+
+    /// A seeded random chaos mix over the given GPUs and (stage, shard)
+    /// pairs: `n_each` events of each applicable kind, spread uniformly
+    /// over `(0, ticks]`.  Deterministic per seed.
+    pub fn chaos(
+        seed: u64,
+        ticks: u64,
+        gpus: &[u32],
+        shards: &[(usize, usize)],
+        n_each: usize,
+    ) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut tick = |rng: &mut Rng| rng.below(ticks.max(1) as usize) as u64 + 1;
+        let mut events = Vec::new();
+        for _ in 0..n_each {
+            let at = tick(&mut rng);
+            events.push(FaultEvent { at_tick: at, kind: FaultKind::WorkerKill });
+            let at = tick(&mut rng);
+            events.push(FaultEvent { at_tick: at, kind: FaultKind::ExecPanic });
+            if !gpus.is_empty() {
+                let gpu = gpus[rng.below(gpus.len())];
+                let at = tick(&mut rng);
+                events.push(FaultEvent {
+                    at_tick: at,
+                    kind: FaultKind::GpuFail { gpu },
+                });
+            }
+            if !shards.is_empty() {
+                let (stage, shard) = shards[rng.below(shards.len())];
+                let at = tick(&mut rng);
+                events.push(FaultEvent {
+                    at_tick: at,
+                    kind: FaultKind::PoisonShard { stage, shard },
+                });
+            }
+        }
+        Self::new(seed, events)
+    }
+
+    fn domain_idx(domain: FaultDomain) -> usize {
+        match domain {
+            FaultDomain::Exec => 0,
+            FaultDomain::Control => 1,
+            FaultDomain::Conn => 2,
+        }
+    }
+
+    /// Advance `domain`'s tick by one and return the faults due at or
+    /// before it (each event fires exactly once, across all threads).
+    pub fn tick(&self, domain: FaultDomain) -> Vec<FaultKind> {
+        let t = self.ticks[Self::domain_idx(domain)]
+            .fetch_add(1, Ordering::Relaxed)
+            + 1;
+        self.take_due(domain, t)
+    }
+
+    /// Faults of `domain` due at or before tick `t`, not yet consumed.
+    pub fn take_due(&self, domain: FaultDomain, t: u64) -> Vec<FaultKind> {
+        let mut g = lock_recover(&self.events);
+        let mut out = Vec::new();
+        for (ev, taken) in g.iter_mut() {
+            if ev.at_tick > t {
+                break; // sorted: nothing later is due
+            }
+            if !*taken && ev.kind.domain() == domain {
+                *taken = true;
+                out.push(ev.kind);
+            }
+        }
+        out
+    }
+
+    /// Events injected so far (consumed), for reporting.
+    pub fn injected(&self) -> Vec<FaultEvent> {
+        lock_recover(&self.events)
+            .iter()
+            .filter(|(_, taken)| *taken)
+            .map(|(e, _)| *e)
+            .collect()
+    }
+
+    /// Total scheduled events.
+    pub fn len(&self) -> usize {
+        lock_recover(&self.events).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// [`FragmentExecutor`] wrapper that fires the plan's executor-domain
+/// faults: one tick per `execute` call, panicking with [`KillWorker`]
+/// (instance death) or a plain panic (batch loss) when a fault is due.
+pub struct FaultyExecutor {
+    inner: Arc<dyn FragmentExecutor>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultyExecutor {
+    pub fn new(inner: Arc<dyn FragmentExecutor>, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl FragmentExecutor for FaultyExecutor {
+    fn execute(
+        &self,
+        model: &str,
+        start: usize,
+        end: usize,
+        rows: &[Vec<f32>],
+    ) -> Result<ExecOutput> {
+        for kind in self.plan.tick(FaultDomain::Exec) {
+            match kind {
+                FaultKind::WorkerKill => panic_any(KillWorker),
+                FaultKind::ExecPanic => panic!("injected executor panic"),
+                _ => unreachable!("non-exec fault in exec domain"),
+            }
+        }
+        self.inner.execute(model, start, end, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_exactly_once_in_their_domain() {
+        let plan = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { at_tick: 2, kind: FaultKind::WorkerKill },
+                FaultEvent { at_tick: 2, kind: FaultKind::GpuFail { gpu: 1 } },
+                FaultEvent { at_tick: 5, kind: FaultKind::ConnDrop },
+            ],
+        );
+        assert!(plan.tick(FaultDomain::Exec).is_empty()); // tick 1
+        assert_eq!(plan.tick(FaultDomain::Exec), vec![FaultKind::WorkerKill]);
+        assert!(plan.tick(FaultDomain::Exec).is_empty(), "fired once");
+        // the control-domain event is untouched by exec ticks and fires
+        // late if its consumer is past the tick already
+        assert_eq!(
+            plan.take_due(FaultDomain::Control, 10),
+            vec![FaultKind::GpuFail { gpu: 1 }]
+        );
+        assert!(plan.take_due(FaultDomain::Conn, 4).is_empty());
+        assert_eq!(plan.take_due(FaultDomain::Conn, 5), vec![FaultKind::ConnDrop]);
+        assert_eq!(plan.injected().len(), 3);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_seed() {
+        let a = FaultPlan::chaos(9, 100, &[0, 1], &[(0, 0), (0, 1)], 3);
+        let b = FaultPlan::chaos(9, 100, &[0, 1], &[(0, 0), (0, 1)], 3);
+        let ea: Vec<_> =
+            lock_recover(&a.events).iter().map(|(e, _)| *e).collect();
+        let eb: Vec<_> =
+            lock_recover(&b.events).iter().map(|(e, _)| *e).collect();
+        assert_eq!(ea.len(), eb.len());
+        for (x, y) in ea.iter().zip(&eb) {
+            assert_eq!(x.at_tick, y.at_tick);
+            assert_eq!(x.kind, y.kind);
+        }
+        let c = FaultPlan::chaos(10, 100, &[0, 1], &[(0, 0)], 3);
+        assert_eq!(c.len(), 12);
+    }
+}

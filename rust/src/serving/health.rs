@@ -1,0 +1,222 @@
+//! Failure detection state for the serving core.
+//!
+//! The [`HealthRegistry`] is the server's failure ledger: executor
+//! heartbeats (one beat per delivered batch) and explicit death marks
+//! (a panicking worker, a failed GPU, a poisoned queue shard) land
+//! here, stamped with a monotonically increasing event sequence.  The
+//! replan controller polls it between ticks: a GPU failure it has not
+//! yet acknowledged triggers an *emergency replan* that excludes the
+//! dead GPUs from placement and hot-swaps the surviving capacity in.
+//!
+//! Epochs partition time into health regimes: `failure_epoch` bumps on
+//! every detected failure, `recovery_epoch` on every completed
+//! emergency replan.  `failure_epoch > recovery_epoch` therefore means
+//! "degraded: running around a failure the planner has not yet routed
+//! around".
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::lock::lock_recover;
+
+/// What happened to a failure-domain member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthEventKind {
+    /// One instance died (worker panic / kill).
+    InstanceDown,
+    /// A whole GPU failed; every co-located instance is down.
+    GpuDown,
+    /// A queue shard's lock was poisoned (and recovered).
+    ShardPoisoned,
+    /// An emergency replan completed; the plan no longer depends on the
+    /// failed capacity.
+    Recovered,
+}
+
+/// One entry in the failure ledger.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthEvent {
+    /// Monotonic sequence number (total order over events).
+    pub seq: u64,
+    pub kind: HealthEventKind,
+    /// Stage index (meaningless for `GpuDown`/`Recovered`: 0).
+    pub stage: usize,
+    /// Instance index within the stage (ditto).
+    pub instance: usize,
+    /// GPU id (`u32::MAX` when unplaced / not applicable).
+    pub gpu: u32,
+}
+
+/// Per-server failure ledger; see the module docs.
+#[derive(Default)]
+pub struct HealthRegistry {
+    seq: AtomicU64,
+    failure_epoch: AtomicU64,
+    recovery_epoch: AtomicU64,
+    /// Batches delivered per (stage, instance) — the liveness signal.
+    beats: Mutex<HashMap<(usize, usize), u64>>,
+    dead_gpus: Mutex<BTreeSet<u32>>,
+    /// GPU failures not yet consumed by the controller.
+    unacked_gpus: Mutex<BTreeSet<u32>>,
+    dead_instances: Mutex<BTreeSet<(usize, usize)>>,
+    events: Mutex<Vec<HealthEvent>>,
+}
+
+impl HealthRegistry {
+    fn push_event(
+        &self,
+        kind: HealthEventKind,
+        stage: usize,
+        instance: usize,
+        gpu: u32,
+    ) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        lock_recover(&self.events).push(HealthEvent {
+            seq,
+            kind,
+            stage,
+            instance,
+            gpu,
+        });
+        seq
+    }
+
+    /// Heartbeat: instance `(stage, instance)` delivered a batch.
+    pub fn beat(&self, stage: usize, instance: usize) {
+        *lock_recover(&self.beats).entry((stage, instance)).or_insert(0) += 1;
+    }
+
+    /// Batches delivered by `(stage, instance)` so far.
+    pub fn beats(&self, stage: usize, instance: usize) -> u64 {
+        lock_recover(&self.beats)
+            .get(&(stage, instance))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Mark one instance dead.  Returns `false` if it was already dead
+    /// (idempotent; no second event is recorded).
+    pub fn mark_instance_down(
+        &self,
+        stage: usize,
+        instance: usize,
+        gpu: u32,
+    ) -> bool {
+        if !lock_recover(&self.dead_instances).insert((stage, instance)) {
+            return false;
+        }
+        self.failure_epoch.fetch_add(1, Ordering::SeqCst);
+        self.push_event(HealthEventKind::InstanceDown, stage, instance, gpu);
+        true
+    }
+
+    /// Mark a GPU dead (the per-instance marks arrive separately from
+    /// the instances being torn down).  Idempotent.
+    pub fn mark_gpu_down(&self, gpu: u32) -> bool {
+        if !lock_recover(&self.dead_gpus).insert(gpu) {
+            return false;
+        }
+        lock_recover(&self.unacked_gpus).insert(gpu);
+        self.failure_epoch.fetch_add(1, Ordering::SeqCst);
+        self.push_event(HealthEventKind::GpuDown, 0, 0, gpu);
+        true
+    }
+
+    /// Record a recovered shard poisoning (detection only — the queue
+    /// already recovered the lock).
+    pub fn mark_shard_poisoned(&self, stage: usize, shard: usize) {
+        self.push_event(HealthEventKind::ShardPoisoned, stage, shard, u32::MAX);
+    }
+
+    /// An emergency replan routed around the failures; close the epoch.
+    pub fn note_recovery(&self) {
+        self.recovery_epoch.fetch_add(1, Ordering::SeqCst);
+        self.push_event(HealthEventKind::Recovered, 0, 0, u32::MAX);
+    }
+
+    /// GPUs marked dead so far (sorted).
+    pub fn failed_gpus(&self) -> Vec<u32> {
+        lock_recover(&self.dead_gpus).iter().copied().collect()
+    }
+
+    /// Drain the GPU failures the controller has not yet seen — each
+    /// failure is handed out exactly once, so one fault triggers one
+    /// emergency replan.
+    pub fn take_unacked_gpu_failures(&self) -> Vec<u32> {
+        let mut g = lock_recover(&self.unacked_gpus);
+        let out: Vec<u32> = g.iter().copied().collect();
+        g.clear();
+        out
+    }
+
+    pub fn is_instance_dead(&self, stage: usize, instance: usize) -> bool {
+        lock_recover(&self.dead_instances).contains(&(stage, instance))
+    }
+
+    pub fn dead_instance_count(&self) -> usize {
+        lock_recover(&self.dead_instances).len()
+    }
+
+    /// Failures detected since start.
+    pub fn failure_epoch(&self) -> u64 {
+        self.failure_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Emergency replans completed since start.
+    pub fn recovery_epoch(&self) -> u64 {
+        self.recovery_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Degraded = failures the planner has not routed around yet.
+    pub fn degraded(&self) -> bool {
+        self.failure_epoch() > self.recovery_epoch()
+    }
+
+    /// Snapshot of the event ledger (ordered by `seq`).
+    pub fn events(&self) -> Vec<HealthEvent> {
+        lock_recover(&self.events).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idempotent_marks_and_epochs() {
+        let h = HealthRegistry::default();
+        assert!(!h.degraded());
+        assert!(h.mark_instance_down(0, 1, 3));
+        assert!(!h.mark_instance_down(0, 1, 3), "second mark is a no-op");
+        assert!(h.mark_gpu_down(3));
+        assert!(!h.mark_gpu_down(3));
+        assert_eq!(h.failure_epoch(), 2);
+        assert!(h.degraded());
+        assert_eq!(h.failed_gpus(), vec![3]);
+        assert_eq!(h.take_unacked_gpu_failures(), vec![3]);
+        assert!(h.take_unacked_gpu_failures().is_empty(), "handed out once");
+        h.note_recovery();
+        assert!(!h.degraded());
+        // the ledger kept everything, in order
+        let kinds: Vec<_> = h.events().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                HealthEventKind::InstanceDown,
+                HealthEventKind::GpuDown,
+                HealthEventKind::Recovered
+            ]
+        );
+    }
+
+    #[test]
+    fn beats_accumulate() {
+        let h = HealthRegistry::default();
+        assert_eq!(h.beats(1, 0), 0);
+        h.beat(1, 0);
+        h.beat(1, 0);
+        assert_eq!(h.beats(1, 0), 2);
+        assert!(!h.is_instance_dead(1, 0));
+    }
+}

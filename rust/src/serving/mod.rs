@@ -5,14 +5,20 @@
 //! run AOT artifacts through [`crate::runtime::Engine`].
 
 pub mod batcher;
+pub mod faults;
+pub mod health;
 pub mod messages;
 pub mod server;
 pub mod tcp;
 
 pub use batcher::{BatchQueue, QueueMetrics, ShardedBatchQueue, WorkItem};
+pub use faults::{
+    FaultDomain, FaultEvent, FaultKind, FaultPlan, FaultyExecutor,
+};
+pub use health::{HealthEvent, HealthEventKind, HealthRegistry};
 pub use messages::{read_frame, write_frame, Request, Response};
 pub use server::{
-    ExecutorMode, FragmentExecutor, MockExecutor, RequestSink, Server,
-    ServerCounters, ServerOptions,
+    ExecutorMode, FragmentExecutor, KillWorker, MockExecutor, RequestSink,
+    Server, ServerCounters, ServerOptions,
 };
-pub use tcp::{TcpClient, TcpFront};
+pub use tcp::{FrontOptions, RetryPolicy, TcpClient, TcpFront};

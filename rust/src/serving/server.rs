@@ -40,10 +40,20 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::{BatchQueue, ShardedBatchQueue, WorkItem};
+use super::health::HealthRegistry;
 use super::messages::{Request, Response};
 use crate::coordinator::plan::ExecutionPlan;
 use crate::profiler::{Alloc, CostModel, FragmentId};
 use crate::runtime::{Engine, ExecOutput};
+use crate::util::lock::{
+    lock_counted, lock_recover, try_lock_counted, wait_timeout_recover,
+};
+
+/// Panic payload meaning "this instance is dead" (fault injection:
+/// [`crate::serving::FaultyExecutor`] throws it mid-batch).  Caught at
+/// the execution boundary; the doomed batch gets drop notices and the
+/// instance retires — its shard reroutes to the survivors.
+pub struct KillWorker;
 
 /// Abstraction over fragment execution so the serving layer is testable
 /// without artifacts (and so alternative backends can plug in).
@@ -153,10 +163,22 @@ enum StageQueue {
 }
 
 impl StageQueue {
-    fn push(&self, item: WorkItem<Ctx>) -> bool {
+    /// Push; a rejected item comes back (`Some`) so the caller can send
+    /// its context a drop notice instead of losing it silently.
+    fn push_or_return(&self, item: WorkItem<Ctx>) -> Option<WorkItem<Ctx>> {
         match self {
-            StageQueue::Single(q) => q.push(item),
-            StageQueue::Sharded(q) => q.push(item),
+            StageQueue::Single(q) => q.push_or_return(item),
+            StageQueue::Sharded(q) => q.push_or_return(item),
+        }
+    }
+
+    /// Non-blocking pop of up to `max` items (dead-stage flushing).
+    fn try_drain(&self, max: usize) -> Vec<WorkItem<Ctx>> {
+        match self {
+            StageQueue::Single(q) => {
+                q.pop_batch_timeout(max, Duration::ZERO).unwrap_or_default()
+            }
+            StageQueue::Sharded(q) => q.try_pop_batch(0, max),
         }
     }
 
@@ -219,6 +241,14 @@ struct Stage {
     /// `pushed` metric only), so the replan controller can read observed
     /// per-model arrival counts without double-counting pipeline hops.
     arrivals: AtomicU64,
+    /// Per-instance death marks (worker kill / GPU failure).  A killed
+    /// Threads-mode instance exits its loop; a killed Pool-mode
+    /// instance's slot goes [`SlotState::Dead`] and its shard is closed.
+    killed: Vec<AtomicBool>,
+    /// Count of dead instances (== `killed` trues); when it reaches the
+    /// instance count the stage has no consumer left and queued items
+    /// are flushed with drop notices.
+    dead: AtomicUsize,
 }
 
 /// Sentinel GPU id for instances of unplaced plans (sorts last, skips
@@ -251,6 +281,36 @@ impl Stage {
         }
         Duration::from_secs_f64(planned)
     }
+
+    /// No live instance left: queued items can only be flushed.
+    fn all_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+            >= self.alloc.instances.max(1) as usize
+    }
+}
+
+/// Flush a consumer-less stage: every queued item gets a drop notice and
+/// counts as completed, so the drain invariant (`empty ∧ completed ==
+/// popped`) keeps holding with zero silent losses.
+fn flush_dead_stage(stage: &Stage, counters: &ServerCounters) {
+    loop {
+        let batch = stage.queue.try_drain(64);
+        if batch.is_empty() {
+            return;
+        }
+        let n = batch.len() as u64;
+        for item in batch {
+            counters.dropped.fetch_add(1, Ordering::Relaxed);
+            let upstream = item.ctx.upstream_ms;
+            let _ = item.ctx.reply.send(Response::drop_notice(
+                item.ctx.client_id,
+                item.ctx.seq,
+                item.accumulated_ms,
+                upstream + item.accumulated_ms,
+            ));
+        }
+        stage.completed.fetch_add(n, Ordering::SeqCst);
+    }
 }
 
 /// Serving statistics counters.
@@ -266,6 +326,14 @@ pub struct ServerCounters {
     /// Work items refused by a closed queue (shutdown races); mirrors
     /// the per-queue `QueueMetrics::rejected` counters.
     pub rejected: AtomicU64,
+    /// Poisoned-lock recoveries in the serving core (slot states, pool
+    /// gates); per-queue recoveries are in `QueueMetrics::poisoned`.
+    pub poisoned: AtomicU64,
+    /// Stalled TCP connections evicted by the slow-loris guard.
+    pub evicted: AtomicU64,
+    /// Executor panics caught at the execution boundary (includes
+    /// injected worker kills).
+    pub exec_panics: AtomicU64,
     /// Per-GPU busy time in share-microseconds (modeled batch latency ×
     /// instance share), indexed by the placed plan's GPU ids.  Empty
     /// when the served plan carries no placement.
@@ -306,11 +374,19 @@ impl ServerCounters {
 /// ([`crate::runtime::LiveServer`]).
 pub trait RequestSink: Send + Sync {
     fn submit(&self, req: Request, reply: mpsc::Sender<Response>);
+
+    /// A front-end evicted a stalled connection (slow-loris guard).
+    /// Default: ignore; the [`Server`] counts it.
+    fn on_conn_evicted(&self) {}
 }
 
 impl RequestSink for Server {
     fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
         Server::submit(self, req, reply)
+    }
+
+    fn on_conn_evicted(&self) {
+        self.counters.evicted.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -326,6 +402,8 @@ pub struct Server {
     n_threads: usize,
     pool: Option<Arc<PoolShared>>,
     pub counters: Arc<ServerCounters>,
+    /// Failure ledger: instance/GPU deaths, heartbeats, epochs.
+    health: Arc<HealthRegistry>,
 }
 
 impl Server {
@@ -342,16 +420,18 @@ impl Server {
         let counters = Arc::new(ServerCounters::with_gpus(
             plan.placed_gpus().unwrap_or(0),
         ));
+        let health = Arc::new(HealthRegistry::default());
         match opts.mode {
             ExecutorMode::Threads => Self::start_threads(
-                executor, cm, opts, stages, routes, counters,
+                executor, cm, opts, stages, routes, counters, health,
             ),
-            ExecutorMode::Pool => {
-                Self::start_pool(executor, cm, opts, stages, routes, counters)
-            }
+            ExecutorMode::Pool => Self::start_pool(
+                executor, cm, opts, stages, routes, counters, health,
+            ),
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn start_threads(
         executor: Arc<dyn FragmentExecutor>,
         cm: &CostModel,
@@ -359,6 +439,7 @@ impl Server {
         stages: Arc<Vec<Stage>>,
         routes: HashMap<u32, usize>,
         counters: Arc<ServerCounters>,
+        health: Arc<HealthRegistry>,
     ) -> Server {
         let mut handles = Vec::new();
         for (idx, stage) in stages.iter().enumerate() {
@@ -372,6 +453,7 @@ impl Server {
                 let executor = executor.clone();
                 let cm = cm.clone();
                 let counters = counters.clone();
+                let health = health.clone();
                 let h = std::thread::Builder::new()
                     .name(format!("graft-inst-{idx}.{inst}"))
                     // modest stacks keep thread-per-instance viable as a
@@ -384,9 +466,10 @@ impl Server {
                             cm: &cm,
                             opts,
                             counters: &counters,
+                            health: &health,
                             notify: None,
                         };
-                        instance_loop(idx, gpu, &env);
+                        instance_loop(idx, inst as usize, gpu, &env);
                     })
                     .expect("spawn instance thread");
                 handles.push(h);
@@ -400,9 +483,11 @@ impl Server {
             n_threads,
             pool: None,
             counters,
+            health,
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn start_pool(
         executor: Arc<dyn FragmentExecutor>,
         cm: &CostModel,
@@ -410,6 +495,7 @@ impl Server {
         stages: Arc<Vec<Stage>>,
         routes: HashMap<u32, usize>,
         counters: Arc<ServerCounters>,
+        health: Arc<HealthRegistry>,
     ) -> Server {
         // GPU-affinity slot order: instances placed on the same GPU are
         // contiguous, so the even worker→cursor split below hands each
@@ -431,6 +517,7 @@ impl Server {
                 shard,
                 gpu,
                 state: Mutex::new(SlotState::Free),
+                doomed: AtomicBool::new(false),
             })
             .collect();
         let n_slots = slots.len();
@@ -449,6 +536,7 @@ impl Server {
             let executor = executor.clone();
             let cm = cm.clone();
             let counters = counters.clone();
+            let health = health.clone();
             let cursor = if n_slots == 0 { 0 } else { w * n_slots / workers };
             let h = std::thread::Builder::new()
                 .name(format!("graft-pool-{w}"))
@@ -459,6 +547,7 @@ impl Server {
                         cm: &cm,
                         opts,
                         counters: &counters,
+                        health: &health,
                         notify: Some(&pool.notifier),
                     };
                     pool_worker(&pool, &env, cursor);
@@ -474,15 +563,32 @@ impl Server {
             n_threads,
             pool: Some(pool),
             counters,
+            health,
         }
     }
 
-    /// Submit a request; the response arrives on `reply`.
+    /// Submit a request; the response arrives on `reply`.  Every submit
+    /// produces exactly one response: served, or an explicit drop
+    /// notice (unknown client, dead stage, or a rejected push) — never
+    /// a silent loss.
     pub fn submit(&self, req: Request, reply: mpsc::Sender<Response>) {
         match self.routes.get(&req.client_id) {
             Some(&idx) => {
-                self.stages[idx].arrivals.fetch_add(1, Ordering::Relaxed);
-                let accepted = self.stages[idx].queue.push(WorkItem {
+                let stage = &self.stages[idx];
+                stage.arrivals.fetch_add(1, Ordering::Relaxed);
+                if stage.all_dead() {
+                    // no consumer left (failed GPU / killed workers):
+                    // fail fast instead of queueing into a void
+                    self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Response::drop_notice(
+                        req.client_id,
+                        req.seq,
+                        0.0,
+                        req.upstream_ms,
+                    ));
+                    return;
+                }
+                let refused = stage.queue.push_or_return(WorkItem {
                     payload: req.payload,
                     server_arrival: Instant::now(),
                     budget_ms: req.budget_ms,
@@ -494,12 +600,24 @@ impl Server {
                         reply,
                     },
                 });
-                if accepted {
-                    if let Some(p) = &self.pool {
-                        p.notifier.notify();
+                match refused {
+                    None => {
+                        if let Some(p) = &self.pool {
+                            p.notifier.notify();
+                        }
                     }
-                } else {
-                    self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    Some(item) => {
+                        // closed queue (shutdown race): reject *with* a
+                        // notice — the client must never hang
+                        self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        let upstream = item.ctx.upstream_ms;
+                        let _ = item.ctx.reply.send(Response::drop_notice(
+                            item.ctx.client_id,
+                            item.ctx.seq,
+                            0.0,
+                            upstream,
+                        ));
+                    }
                 }
             }
             None => {
@@ -562,6 +680,92 @@ impl Server {
         self.counters.gpu_busy_share_us.len()
     }
 
+    /// The server's failure ledger (instance/GPU deaths, heartbeats).
+    pub fn health(&self) -> Arc<HealthRegistry> {
+        self.health.clone()
+    }
+
+    /// Instance counts per stage, in stage order (chaos targeting).
+    pub fn stage_instances(&self) -> Vec<usize> {
+        self.stages
+            .iter()
+            .map(|s| s.alloc.instances.max(1) as usize)
+            .collect()
+    }
+
+    /// Poisoned-lock recoveries observed by this server: serving-core
+    /// locks plus every stage queue.
+    pub fn poison_recoveries(&self) -> u64 {
+        self.counters.poisoned.load(Ordering::Relaxed)
+            + self
+                .stages
+                .iter()
+                .map(|s| s.queue.metrics().poisoned())
+                .sum::<u64>()
+    }
+
+    /// Kill one instance: mark it dead, close its queue shard (Pool
+    /// mode: the backlog reroutes to surviving shards), doom its slot,
+    /// and — if it was the stage's last instance — flush the stage's
+    /// remaining items with drop notices.  Returns `false` if the
+    /// instance was already dead (idempotent).
+    pub fn kill_instance(&self, stage_idx: usize, inst: usize) -> bool {
+        let Some(stage) = self.stages.get(stage_idx) else { return false };
+        let gpu = stage.gpus.get(inst).copied().unwrap_or(NO_GPU);
+        if !retire_instance(
+            self.stages.as_slice(),
+            &self.health,
+            &self.counters,
+            stage_idx,
+            inst,
+            gpu,
+        ) {
+            return false;
+        }
+        if let Some(p) = &self.pool {
+            if let Some(slot) = p
+                .slots
+                .iter()
+                .find(|s| s.stage == stage_idx && s.shard == inst)
+            {
+                doom_slot(stage, slot, &self.counters);
+            }
+            p.notifier.force_notify();
+        }
+        true
+    }
+
+    /// Fail a whole GPU: every co-located instance dies at once (the
+    /// ParvaGPU-style failure domain).  Returns the number of instances
+    /// killed.  The health ledger records the GPU death even when no
+    /// instance was placed on it.
+    pub fn fail_gpu(&self, gpu: u32) -> usize {
+        self.health.mark_gpu_down(gpu);
+        let mut killed = 0;
+        for (idx, stage) in self.stages.iter().enumerate() {
+            for inst in 0..stage.alloc.instances.max(1) as usize {
+                if stage.gpus.get(inst).copied().unwrap_or(NO_GPU) == gpu
+                    && self.kill_instance(idx, inst)
+                {
+                    killed += 1;
+                }
+            }
+        }
+        killed
+    }
+
+    /// Chaos hook: poison one stage queue's lock (shard `shard` in Pool
+    /// mode; the single queue in Threads mode) the way a panicking
+    /// consumer would.  The queue recovers on the next acquisition and
+    /// counts it; the ledger records the event.
+    pub fn poison_stage_queue(&self, stage_idx: usize, shard: usize) {
+        match &self.stages[stage_idx].queue {
+            StageQueue::Single(q) => q.poison(),
+            StageQueue::Sharded(q) => q.poison_shard(shard),
+        }
+        self.health.mark_shard_poisoned(stage_idx, shard);
+    }
+
     /// Close all queues and join the executor threads.  Fast but
     /// *unordered*: an alignment batch still in flight can find its
     /// downstream queue already closed and lose the items (counted in
@@ -575,7 +779,7 @@ impl Server {
             p.shutdown.store(true, Ordering::SeqCst);
             p.notifier.force_notify();
         }
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in lock_recover(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -616,6 +820,15 @@ impl Server {
                 .filter(|&s| pred(s))
                 .all(Self::stage_drained)
             {
+                // a stage that lost its last instance has no consumer:
+                // flush it from here so the drain can never deadlock on
+                // a dead stage's backlog (exact accounting holds — the
+                // flush counts popped == completed with drop notices)
+                for s in self.stages.iter().filter(|&s| pred(s)) {
+                    if s.all_dead() && !s.queue.is_empty() {
+                        flush_dead_stage(s, &self.counters);
+                    }
+                }
                 std::thread::sleep(Duration::from_micros(200));
             }
         };
@@ -625,8 +838,57 @@ impl Server {
             p.shutdown.store(true, Ordering::SeqCst);
             p.notifier.force_notify();
         }
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in lock_recover(&self.handles).drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// Shared instance-retirement core (Threads: the dying loop calls it on
+/// itself; Pool: the worker that caught the kill, or
+/// [`Server::kill_instance`]).  Idempotent via the `killed` flag.
+fn retire_instance(
+    stages: &[Stage],
+    health: &HealthRegistry,
+    counters: &ServerCounters,
+    stage_idx: usize,
+    inst: usize,
+    gpu: u32,
+) -> bool {
+    let stage = &stages[stage_idx];
+    if stage
+        .killed
+        .get(inst)
+        .map_or(true, |k| k.swap(true, Ordering::SeqCst))
+    {
+        return false; // unknown instance or already dead
+    }
+    stage.dead.fetch_add(1, Ordering::SeqCst);
+    health.mark_instance_down(stage_idx, inst, gpu);
+    if let StageQueue::Sharded(q) = &stage.queue {
+        // the dead instance's backlog reroutes to surviving shards
+        q.close_shard(inst);
+    }
+    if stage.all_dead() {
+        flush_dead_stage(stage, counters);
+    }
+    true
+}
+
+/// Mark a Pool-mode slot dead: never dispatched again.  A Busy slot is
+/// only doomed — `free_slot` finishes the transition when its in-flight
+/// batch delivers.
+fn doom_slot(stage: &Stage, slot: &Slot, counters: &ServerCounters) {
+    slot.doomed.store(true, Ordering::SeqCst);
+    if let Some(mut st) = try_lock_counted(&slot.state, Some(&counters.poisoned))
+    {
+        match *st {
+            SlotState::Busy | SlotState::Dead => {}
+            SlotState::Forming { .. } => {
+                stage.forming.store(false, Ordering::SeqCst);
+                *st = SlotState::Dead;
+            }
+            SlotState::Free => *st = SlotState::Dead,
         }
     }
 }
@@ -650,6 +912,11 @@ fn build_stages(
             StageQueue::Single(BatchQueue::new())
         }
     };
+    let killed_for = |alloc: &Alloc| {
+        (0..alloc.instances.max(1))
+            .map(|_| AtomicBool::new(false))
+            .collect::<Vec<_>>()
+    };
     let mut stages: Vec<Stage> = Vec::new();
     let mut routes = HashMap::new();
     for set in &plan.sets {
@@ -665,6 +932,8 @@ fn build_stages(
             forming: AtomicBool::new(false),
             completed: AtomicU64::new(0),
             arrivals: AtomicU64::new(0),
+            killed: killed_for(&set.shared.alloc),
+            dead: AtomicUsize::new(0),
         });
         for m in &set.members {
             let entry = match &m.align {
@@ -680,6 +949,8 @@ fn build_stages(
                         forming: AtomicBool::new(false),
                         completed: AtomicU64::new(0),
                         arrivals: AtomicU64::new(0),
+                        killed: killed_for(&a.alloc),
+                        dead: AtomicUsize::new(0),
                     });
                     idx
                 }
@@ -702,6 +973,7 @@ struct ExecEnv<'a> {
     cm: &'a CostModel,
     opts: ServerOptions,
     counters: &'a ServerCounters,
+    health: &'a HealthRegistry,
     /// Pool notifier for inter-stage forwards (None in Threads mode:
     /// the BatchQueue condvar wakes the consumer directly).
     notify: Option<&'a Notifier>,
@@ -767,34 +1039,56 @@ fn slo_filter(
     live
 }
 
-/// Run the fragment on the executor backend; returns the raw result and
-/// the modeled MPS latency of this (batch, share) configuration.
+/// Run the fragment on the executor backend; returns the raw result,
+/// the modeled MPS latency of this (batch, share) configuration, and
+/// whether the executor demanded the instance's death ([`KillWorker`]).
 /// `gpu` attributes the modeled busy time to the hosting GPU's
 /// utilization counter ([`NO_GPU`] = unplaced, not attributed).
+///
+/// Executor panics are caught here — the panic boundary of the serving
+/// core.  A panic maps onto the existing `Err` delivery path (drop
+/// notices + exact completion accounting), so one bad batch or one
+/// injected kill can never wedge a worker or skew the drain invariant.
 fn execute_batch(
     env: &ExecEnv<'_>,
     stage: &Stage,
     gpu: u32,
     live: &[WorkItem<Ctx>],
-) -> (Result<ExecOutput>, f64) {
+) -> (Result<ExecOutput>, f64, bool) {
     let rows: Vec<Vec<f32>> = live.iter().map(|i| i.payload.clone()).collect();
     let exec_ms = env.cm.latency_ms(
         stage.frag,
         bucket_for(env.cm, rows.len()),
         stage.alloc.share,
     );
-    let out = env.executor.execute(
-        &stage.model_name,
-        stage.frag.start,
-        stage.frag.end,
-        &rows,
-    );
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        env.executor.execute(
+            &stage.model_name,
+            stage.frag.start,
+            stage.frag.end,
+            &rows,
+        )
+    }));
+    let (out, kill) = match caught {
+        Ok(res) => (res, false),
+        Err(payload) => {
+            env.counters.exec_panics.fetch_add(1, Ordering::Relaxed);
+            let kill = payload.is::<KillWorker>();
+            (
+                Err(anyhow!(
+                    "executor panicked{}",
+                    if kill { " (instance killed)" } else { "" }
+                )),
+                kill,
+            )
+        }
+    };
     env.counters.batches.fetch_add(1, Ordering::Relaxed);
     env.counters
         .batched_requests
         .fetch_add(rows.len() as u64, Ordering::Relaxed);
     env.counters.record_gpu_busy(gpu, exec_ms, stage.alloc.share);
-    (out, exec_ms)
+    (out, exec_ms, kill)
 }
 
 /// Deliver an executed batch: forward alignment output downstream or
@@ -833,17 +1127,43 @@ fn deliver(
         let acc = item.accumulated_ms + exec_ms;
         match stage.next {
             Some(next) => {
-                let accepted = env.stages[next].queue.push(WorkItem {
+                let ns = &env.stages[next];
+                if ns.all_dead() {
+                    // downstream lost its last instance: fail fast with
+                    // a notice instead of queueing into a void
+                    env.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                    let upstream = item.ctx.upstream_ms;
+                    let _ = item.ctx.reply.send(Response::drop_notice(
+                        item.ctx.client_id,
+                        item.ctx.seq,
+                        acc,
+                        upstream + acc,
+                    ));
+                    continue;
+                }
+                let refused = ns.queue.push_or_return(WorkItem {
                     payload: row,
                     server_arrival: item.server_arrival,
                     budget_ms: item.budget_ms,
                     accumulated_ms: acc,
                     ctx: item.ctx,
                 });
-                if accepted {
-                    forwarded = true;
-                } else {
-                    env.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                match refused {
+                    None => forwarded = true,
+                    Some(item) => {
+                        // closed downstream queue (shutdown race): the
+                        // item comes back so its client still gets an
+                        // explicit notice — no silent loss
+                        env.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                        env.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                        let upstream = item.ctx.upstream_ms;
+                        let _ = item.ctx.reply.send(Response::drop_notice(
+                            item.ctx.client_id,
+                            item.ctx.seq,
+                            acc,
+                            upstream + acc,
+                        ));
+                    }
                 }
             }
             None => {
@@ -892,7 +1212,7 @@ fn deliver(
 }
 
 /// Thread-per-instance executor loop (ExecutorMode::Threads).
-fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
+fn instance_loop(stage_idx: usize, inst: usize, gpu: u32, env: &ExecEnv<'_>) {
     let stage = &env.stages[stage_idx];
     let queue = match &stage.queue {
         StageQueue::Single(q) => q,
@@ -901,11 +1221,19 @@ fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
         }
     };
     loop {
+        // a kill (fail_gpu / kill_instance) lands between batches; the
+        // timed pop below bounds how long it can go unnoticed
+        if stage.killed[inst].load(Ordering::SeqCst) {
+            break;
+        }
         // recomputed per batch: the adaptive window tracks the live
         // arrival-rate EWMA (constant when adaptive_window is off)
         let window = stage.window(env.opts);
         let batch = if window.is_zero() {
-            queue.pop_batch(stage.alloc.batch as usize)
+            queue.pop_batch_timeout(
+                stage.alloc.batch as usize,
+                Duration::from_millis(50),
+            )
         } else {
             queue.pop_batch_window(stage.alloc.batch as usize, window)
         };
@@ -918,7 +1246,7 @@ fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
             continue;
         }
         let t0 = Instant::now();
-        let (out, exec_ms) = execute_batch(env, stage, gpu, &live);
+        let (out, exec_ms, kill) = execute_batch(env, stage, gpu, &live);
         // pace to the modeled MPS latency
         if env.opts.time_scale > 0.0 {
             let target = exec_ms * env.opts.time_scale / 1e3;
@@ -938,6 +1266,19 @@ fn instance_loop(stage_idx: usize, gpu: u32, env: &ExecEnv<'_>) {
             }
         }
         deliver(env, stage, live, out, exec_ms);
+        env.health.beat(stage_idx, inst);
+        if kill {
+            // the batch got its drop notices above; now the thread dies
+            retire_instance(
+                env.stages,
+                env.health,
+                env.counters,
+                stage_idx,
+                inst,
+                gpu,
+            );
+            break;
+        }
     }
 }
 
@@ -992,7 +1333,7 @@ impl Notifier {
     }
 
     fn force_notify(&self) {
-        let g = self.gate.lock().unwrap();
+        let g = lock_recover(&self.gate);
         self.seq.fetch_add(1, Ordering::SeqCst);
         drop(g);
         self.cv.notify_all();
@@ -1009,13 +1350,13 @@ impl Notifier {
     /// Sleep until the epoch moves past `seen` or `timeout` elapses.
     fn wait(&self, seen: u64, timeout: Duration) {
         let deadline = Instant::now() + timeout;
-        let mut g = self.gate.lock().unwrap();
+        let mut g = lock_recover(&self.gate);
         while self.seq.load(Ordering::SeqCst) == seen {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (ng, _) = wait_timeout_recover(&self.cv, g, deadline - now);
             g = ng;
         }
     }
@@ -1075,11 +1416,11 @@ struct DeadlineWheel {
 impl DeadlineWheel {
     fn insert(&self, deadline: Instant, kind: WheelKind) {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        self.heap.lock().unwrap().push(WheelEntry { deadline, seq, kind });
+        lock_recover(&self.heap).push(WheelEntry { deadline, seq, kind });
     }
 
     fn pop_expired(&self, now: Instant) -> Option<WheelKind> {
-        let mut h = self.heap.lock().unwrap();
+        let mut h = lock_recover(&self.heap);
         if h.peek().is_some_and(|e| e.deadline <= now) {
             h.pop().map(|e| e.kind)
         } else {
@@ -1088,11 +1429,11 @@ impl DeadlineWheel {
     }
 
     fn next_deadline(&self) -> Option<Instant> {
-        self.heap.lock().unwrap().peek().map(|e| e.deadline)
+        lock_recover(&self.heap).peek().map(|e| e.deadline)
     }
 
     fn is_empty(&self) -> bool {
-        self.heap.lock().unwrap().is_empty()
+        lock_recover(&self.heap).is_empty()
     }
 }
 
@@ -1105,6 +1446,9 @@ enum SlotState {
     Forming { deadline: Instant },
     /// Executing / pacing a batch (completion parked in the wheel).
     Busy,
+    /// Instance died (worker kill / GPU failure): never dispatched
+    /// again; its shard is closed and rerouted.
+    Dead,
 }
 
 /// One planned DNN instance, schedulable by any pool worker.
@@ -1115,6 +1459,9 @@ struct Slot {
     /// GPU hosting this instance ([`NO_GPU`] for unplaced plans).
     gpu: u32,
     state: Mutex<SlotState>,
+    /// Death sentence for a Busy slot: `free_slot` turns it
+    /// [`SlotState::Dead`] once the in-flight batch delivers.
+    doomed: AtomicBool,
 }
 
 struct PoolShared {
@@ -1156,6 +1503,15 @@ fn pool_worker(pool: &PoolShared, env: &ExecEnv<'_>, start: usize) {
                 WheelKind::FormCheck { slot } => {
                     progressed |= dispatch_slot(pool, env, slot);
                 }
+            }
+        }
+        // 1.5. flush stages that lost their last instance: nothing will
+        // ever pop them, so their backlog gets drop notices here — this
+        // is also what lets shutdown reach quiescence after a failure
+        for s in pool.stages.iter() {
+            if s.all_dead() && !s.queue.is_empty() {
+                flush_dead_stage(s, env.counters);
+                progressed = true;
             }
         }
         // 2. dispatch one batch, scanning slots from a rotating cursor
@@ -1203,10 +1559,12 @@ fn slot_has_work(pool: &PoolShared, slot_idx: usize) -> bool {
     let stage = &pool.stages[slot.stage];
     let Ok(st) = slot.state.try_lock() else {
         // contended: its holder is making progress and will notify
+        // (poisoning is impossible — state transitions can't panic —
+        // but dispatch_slot recovers it anyway)
         return false;
     };
     match *st {
-        SlotState::Busy => false,
+        SlotState::Busy | SlotState::Dead => false,
         // a Free slot has no work while another slot of its stage is
         // forming a sub-batch (the former's FormCheck covers it) — else
         // idle workers would busy-spin on the swap-guarded transition
@@ -1236,15 +1594,26 @@ fn dispatch_slot(
     let slot = &pool.slots[slot_idx];
     let stage = &pool.stages[slot.stage];
     let max_batch = stage.alloc.batch.max(1) as usize;
-    let Ok(mut st) = slot.state.try_lock() else {
+    let Some(mut st) =
+        try_lock_counted(&slot.state, Some(&env.counters.poisoned))
+    else {
         return false;
     };
+    if slot.doomed.load(Ordering::SeqCst)
+        && !matches!(*st, SlotState::Busy)
+    {
+        if matches!(*st, SlotState::Forming { .. }) {
+            stage.forming.store(false, Ordering::SeqCst);
+        }
+        *st = SlotState::Dead;
+        return false;
+    }
     let now = Instant::now();
     let qlen = stage.queue.len();
     let closing = pool.shutdown.load(Ordering::SeqCst);
     let was_forming = matches!(*st, SlotState::Forming { .. });
     let fire = match *st {
-        SlotState::Busy => return false,
+        SlotState::Busy | SlotState::Dead => return false,
         SlotState::Free => {
             if qlen == 0 {
                 return false;
@@ -1318,11 +1687,27 @@ fn run_pool_batch(
     let stage = &pool.stages[slot.stage];
     let live = slo_filter(env, stage, batch);
     if live.is_empty() {
-        free_slot(pool, slot_idx);
+        free_slot(pool, env, slot_idx);
         return;
     }
     let t0 = Instant::now();
-    let (out, exec_ms) = execute_batch(env, stage, slot.gpu, &live);
+    let (out, exec_ms, kill) = execute_batch(env, stage, slot.gpu, &live);
+    if kill {
+        // injected/real worker death: retire the instance (closing its
+        // shard reroutes the backlog), doom the slot, deliver the
+        // error-path notices for this batch immediately
+        retire_instance(
+            env.stages,
+            env.health,
+            env.counters,
+            slot.stage,
+            slot.shard,
+            slot.gpu,
+        );
+        slot.doomed.store(true, Ordering::SeqCst);
+        finish_batch(pool, env, slot_idx, DoneBatch { live, out, exec_ms });
+        return;
+    }
     if env.opts.time_scale > 0.0 {
         let target = t0
             + Duration::from_secs_f64(exec_ms * env.opts.time_scale / 1e3);
@@ -1347,13 +1732,22 @@ fn finish_batch(
     slot_idx: usize,
     done: DoneBatch,
 ) {
-    let stage = &pool.stages[pool.slots[slot_idx].stage];
+    let slot = &pool.slots[slot_idx];
+    let stage = &pool.stages[slot.stage];
     deliver(env, stage, done.live, done.out, done.exec_ms);
-    free_slot(pool, slot_idx);
+    env.health.beat(slot.stage, slot.shard);
+    free_slot(pool, env, slot_idx);
 }
 
-fn free_slot(pool: &PoolShared, slot_idx: usize) {
-    *pool.slots[slot_idx].state.lock().unwrap() = SlotState::Free;
+fn free_slot(pool: &PoolShared, env: &ExecEnv<'_>, slot_idx: usize) {
+    let slot = &pool.slots[slot_idx];
+    let mut st = lock_counted(&slot.state, Some(&env.counters.poisoned));
+    *st = if slot.doomed.load(Ordering::SeqCst) {
+        SlotState::Dead
+    } else {
+        SlotState::Free
+    };
+    drop(st);
     pool.inflight.fetch_sub(1, Ordering::SeqCst);
     pool.notifier.notify();
 }

@@ -1,17 +1,47 @@
 //! TCP front-end: clients send framed [`Request`]s over a socket (the
 //! paper's data path uses network sockets from the mobile devices) and
 //! receive framed [`Response`]s on the same connection.
+//!
+//! Failure handling: the reader enforces an idle read deadline (a
+//! connection that stops sending mid-frame — the slow-loris pattern —
+//! is evicted and counted via [`RequestSink::on_conn_evicted`]), the
+//! writer enforces a write timeout, and a [`FaultPlan`] can drop or
+//! stall connections at chosen frame ticks for reproducible chaos runs.
+//! [`TcpClient`] carries a bounded-retry policy (exponential backoff
+//! with full jitter) for both connect and send.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
+use super::faults::{FaultDomain, FaultKind, FaultPlan};
 use super::messages::{read_frame, write_frame, Request, Response};
 use super::server::RequestSink;
+use crate::util::rng::Rng;
+
+/// Deadlines for one server-side connection.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontOptions {
+    /// Reader deadline: a connection idle (or stalled mid-frame) this
+    /// long is evicted — the slow-loris guard.  `None` = wait forever.
+    pub idle_deadline: Option<Duration>,
+    /// Writer deadline per response burst.  `None` = block forever.
+    pub write_timeout: Option<Duration>,
+}
+
+impl Default for FrontOptions {
+    fn default() -> Self {
+        Self {
+            idle_deadline: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(10)),
+        }
+    }
+}
 
 /// A running TCP acceptor in front of any [`RequestSink`] — a plain
 /// [`crate::serving::Server`] or the live-reconfigurable
@@ -24,10 +54,23 @@ pub struct TcpFront {
 }
 
 impl TcpFront {
-    /// Bind `addr` (use port 0 for ephemeral) and serve until stopped.
+    /// Bind `addr` (use port 0 for ephemeral) and serve until stopped,
+    /// with the default deadlines and no fault injection.
     pub fn start<S: RequestSink + ?Sized + 'static>(
         addr: &str,
         server: Arc<S>,
+    ) -> Result<TcpFront> {
+        Self::start_with(addr, server, FrontOptions::default(), None)
+    }
+
+    /// [`TcpFront::start`] with explicit deadlines and an optional
+    /// fault plan (connection-domain events tick once per received
+    /// frame).
+    pub fn start_with<S: RequestSink + ?Sized + 'static>(
+        addr: &str,
+        server: Arc<S>,
+        opts: FrontOptions,
+        faults: Option<Arc<FaultPlan>>,
     ) -> Result<TcpFront> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -43,11 +86,14 @@ impl TcpFront {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let server = server.clone();
+                            let faults = faults.clone();
                             conn_id += 1;
                             let h = std::thread::Builder::new()
                                 .name(format!("graft-conn-{conn_id}"))
                                 .spawn(move || {
-                                    let _ = handle_conn(stream, server);
+                                    let _ = handle_conn(
+                                        stream, server, opts, faults,
+                                    );
                                 })
                                 .expect("spawn connection thread");
                             conn_handles.push(h);
@@ -85,9 +131,13 @@ impl TcpFront {
 fn handle_conn<S: RequestSink + ?Sized>(
     stream: TcpStream,
     server: Arc<S>,
+    opts: FrontOptions,
+    faults: Option<Arc<FaultPlan>>,
 ) -> Result<()> {
     let mut reader = stream.try_clone()?;
+    reader.set_read_timeout(opts.idle_deadline)?;
     let writer = stream;
+    writer.set_write_timeout(opts.write_timeout)?;
     let (tx, rx) = mpsc::channel::<Response>();
 
     let wh = std::thread::Builder::new()
@@ -101,6 +151,9 @@ fn handle_conn<S: RequestSink + ?Sized>(
                 while let Ok(more) = rx.try_recv() {
                     write_frame(&mut w, &more.encode())?;
                 }
+                // a write-timeout (stalled peer) errors out of the
+                // loop here, dropping `rx` senders' counterpart and
+                // letting the reader tear the connection down
                 w.flush()?;
             }
             Ok(())
@@ -110,8 +163,38 @@ fn handle_conn<S: RequestSink + ?Sized>(
     loop {
         let frame = match read_frame(&mut reader) {
             Ok(f) => f,
-            Err(_) => break, // client closed
+            Err(e) => {
+                // a deadline expiry surfaces as WouldBlock/TimedOut:
+                // that is an eviction (slow-loris guard), not a close
+                if let Some(ioe) =
+                    e.downcast_ref::<std::io::Error>()
+                {
+                    if matches!(
+                        ioe.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) {
+                        server.on_conn_evicted();
+                    }
+                }
+                break; // client closed, stalled out, or errored
+            }
         };
+        if let Some(plan) = &faults {
+            let mut dropped = false;
+            for kind in plan.tick(FaultDomain::Conn) {
+                match kind {
+                    FaultKind::ConnDrop => dropped = true,
+                    FaultKind::ConnDelay { ms } => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    _ => {}
+                }
+            }
+            if dropped {
+                break; // injected connection drop
+            }
+        }
         let req = Request::decode(&frame)?;
         server.submit(req, tx.clone());
     }
@@ -120,20 +203,88 @@ fn handle_conn<S: RequestSink + ?Sized>(
     Ok(())
 }
 
-/// Blocking client helper: send requests, collect responses.
+/// Bounded-retry policy: exponential backoff with full jitter
+/// (`sleep ∈ [0, min(cap, base·2^attempt)]`, seeded and deterministic).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts (≥ 1); the last failure is returned.
+    pub max_attempts: u32,
+    /// First backoff ceiling; doubles per attempt.
+    pub base: Duration,
+    /// Hard ceiling on any single backoff.
+    pub cap: Duration,
+    /// Jitter seed, so tests replay identically.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(500),
+            seed: 0x9e3779b97f4a7c15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): full jitter in
+    /// `[0, min(cap, base·2^attempt)]`.
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let ceil = self
+            .base
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.cap);
+        ceil.mul_f64(rng.f64())
+    }
+
+    /// Run `op` up to `max_attempts` times, sleeping a jittered backoff
+    /// between failures.
+    pub fn retry<T, F: FnMut() -> Result<T>>(&self, mut op: F) -> Result<T> {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut attempt = 0u32;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) if attempt + 1 >= self.max_attempts.max(1) => {
+                    return Err(e);
+                }
+                Err(_) => {
+                    std::thread::sleep(self.backoff(attempt, &mut rng));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Blocking client helper: send requests, collect responses.  Keeps
+/// its server address so a dead connection can be re-established by
+/// [`TcpClient::send_with_retry`].
 pub struct TcpClient {
     stream: TcpStream,
+    addr: std::net::SocketAddr,
 }
 
 impl TcpClient {
     pub fn connect(addr: std::net::SocketAddr) -> Result<TcpClient> {
-        Ok(TcpClient { stream: TcpStream::connect(addr)? })
+        Ok(TcpClient { stream: TcpStream::connect(addr)?, addr })
+    }
+
+    /// [`TcpClient::connect`] under a retry policy: transient refusals
+    /// (the server mid-restart) are retried with jittered backoff.
+    pub fn connect_with_retry(
+        addr: std::net::SocketAddr,
+        policy: &RetryPolicy,
+    ) -> Result<TcpClient> {
+        policy.retry(|| Self::connect(addr))
     }
 
     /// A second handle on the same connection (e.g. a dedicated reader
     /// thread while the original sends).
     pub fn try_clone(&self) -> Result<TcpClient> {
-        Ok(TcpClient { stream: self.stream.try_clone()? })
+        Ok(TcpClient { stream: self.stream.try_clone()?, addr: self.addr })
     }
 
     /// Hard-close both directions (unblocks any reader clone).
@@ -148,7 +299,94 @@ impl TcpClient {
         Ok(())
     }
 
+    /// [`TcpClient::send`] under a retry policy: on failure the
+    /// connection is re-established (same address) before the next
+    /// attempt.  NOTE: retried sends are at-least-once from the
+    /// server's point of view; callers that need exactly-once must
+    /// deduplicate by request id.
+    pub fn send_with_retry(
+        &mut self,
+        req: &Request,
+        policy: &RetryPolicy,
+    ) -> Result<()> {
+        let per_req =
+            ((req.client_id as u64) << 32) | req.seq as u64;
+        let mut rng = Rng::seed_from_u64(policy.seed ^ per_req);
+        let mut attempt = 0u32;
+        loop {
+            match self.send(req) {
+                Ok(()) => return Ok(()),
+                Err(e) if attempt + 1 >= policy.max_attempts.max(1) => {
+                    return Err(e);
+                }
+                Err(_) => {
+                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    if let Ok(fresh) = TcpClient::connect(self.addr) {
+                        *self = fresh;
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
     pub fn recv(&mut self) -> Result<Response> {
         Response::decode(&read_frame(&mut self.stream)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_and_jittered() {
+        let p = RetryPolicy {
+            max_attempts: 5,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(40),
+            seed: 7,
+        };
+        let mut rng = Rng::seed_from_u64(p.seed);
+        for attempt in 0..10 {
+            let ceil = Duration::from_millis(10)
+                .saturating_mul(1 << attempt.min(16))
+                .min(p.cap);
+            let b = p.backoff(attempt, &mut rng);
+            assert!(b <= ceil, "attempt {attempt}: {b:?} > {ceil:?}");
+        }
+        // deterministic per seed
+        let mut r1 = Rng::seed_from_u64(3);
+        let mut r2 = Rng::seed_from_u64(3);
+        assert_eq!(p.backoff(2, &mut r1), p.backoff(2, &mut r2));
+    }
+
+    #[test]
+    fn retry_returns_first_success_and_last_failure() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(2),
+            seed: 1,
+        };
+        let mut calls = 0;
+        let out: Result<u32> = p.retry(|| {
+            calls += 1;
+            if calls < 3 {
+                Err(anyhow::anyhow!("transient"))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(calls, 3);
+
+        let mut calls = 0;
+        let out: Result<u32> = p.retry(|| {
+            calls += 1;
+            Err(anyhow::anyhow!("permanent #{calls}"))
+        });
+        assert_eq!(calls, 3, "bounded attempts");
+        assert!(out.unwrap_err().to_string().contains("#3"));
     }
 }

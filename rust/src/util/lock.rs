@@ -1,0 +1,171 @@
+//! Poison-recovering lock acquisition.
+//!
+//! A panicking thread poisons every `Mutex`/`RwLock` it holds; the
+//! default `.lock().unwrap()` then cascades that single panic through
+//! every other thread touching the lock — one dead worker wedges the
+//! whole serving core.  The protected state in this crate is always
+//! valid at the poison point (queues push/pop whole items under the
+//! lock; slot states are single enum writes), so recovery is safe:
+//! take the guard out of the `PoisonError` and carry on.
+//!
+//! Every recovery is counted in a process-global counter (and
+//! optionally a caller-supplied counter, e.g.
+//! `ServerCounters::poisoned`) so chaos tests and benches can assert
+//! how far an injected panic actually spread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Process-global count of poisoned-lock recoveries.
+static POISONED: AtomicU64 = AtomicU64::new(0);
+
+/// Total poisoned-lock recoveries since process start.
+pub fn poisoned_total() -> u64 {
+    POISONED.load(Ordering::Relaxed)
+}
+
+#[cold]
+fn note_poison(extra: Option<&AtomicU64>) {
+    POISONED.fetch_add(1, Ordering::Relaxed);
+    if let Some(c) = extra {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// `mutex.lock()` that recovers a poisoned lock instead of panicking.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock_counted(m, None)
+}
+
+/// [`lock_recover`] that additionally bumps `counter` on recovery.
+pub fn lock_counted<'a, T>(
+    m: &'a Mutex<T>,
+    counter: Option<&AtomicU64>,
+) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| {
+        note_poison(counter);
+        e.into_inner()
+    })
+}
+
+/// `mutex.try_lock()` that recovers a poisoned lock: `None` only means
+/// *contended*, never *poisoned*.
+pub fn try_lock_counted<'a, T>(
+    m: &'a Mutex<T>,
+    counter: Option<&AtomicU64>,
+) -> Option<MutexGuard<'a, T>> {
+    match m.try_lock() {
+        Ok(g) => Some(g),
+        Err(std::sync::TryLockError::Poisoned(e)) => {
+            note_poison(counter);
+            Some(e.into_inner())
+        }
+        Err(std::sync::TryLockError::WouldBlock) => None,
+    }
+}
+
+/// `cv.wait(guard)` that recovers poisoning instead of panicking.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| {
+        note_poison(None);
+        e.into_inner()
+    })
+}
+
+/// `cv.wait_timeout(guard, dur)` that recovers poisoning; the timed-out
+/// flag is preserved.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            note_poison(None);
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+/// `rw.read()` that recovers a poisoned lock instead of panicking.
+pub fn read_recover<T>(rw: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    rw.read().unwrap_or_else(|e| {
+        note_poison(None);
+        e.into_inner()
+    })
+}
+
+/// `rw.write()` that recovers a poisoned lock instead of panicking.
+pub fn write_recover<T>(rw: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    rw.write().unwrap_or_else(|e| {
+        note_poison(None);
+        e.into_inner()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m2 = m.clone();
+        std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison injector");
+        })
+        .join()
+        .unwrap_err();
+    }
+
+    #[test]
+    fn recovers_poisoned_mutex_and_counts() {
+        let m = Arc::new(Mutex::new(7u32));
+        poison(&m);
+        assert!(m.is_poisoned());
+        let before = poisoned_total();
+        let extra = AtomicU64::new(0);
+        {
+            let g = lock_counted(&m, Some(&extra));
+            assert_eq!(*g, 7);
+        }
+        assert!(poisoned_total() > before);
+        assert_eq!(extra.load(Ordering::Relaxed), 1);
+        // Data stays reachable on later plain recoveries too.
+        *lock_recover(&m) = 9;
+        assert_eq!(*lock_recover(&m), 9);
+    }
+
+    #[test]
+    fn wait_timeout_recovers_and_reports_timeout() {
+        let m = Arc::new(Mutex::new(0u32));
+        let cv = Condvar::new();
+        poison(&m);
+        let g = lock_recover(&m);
+        let (g, timed_out) =
+            wait_timeout_recover(&cv, g, Duration::from_millis(5));
+        assert!(timed_out);
+        drop(g);
+    }
+
+    #[test]
+    fn rwlock_recovery() {
+        let rw = Arc::new(RwLock::new(3u32));
+        let rw2 = rw.clone();
+        std::thread::spawn(move || {
+            let _g = rw2.write().unwrap();
+            panic!("poison injector");
+        })
+        .join()
+        .unwrap_err();
+        assert_eq!(*read_recover(&rw), 3);
+        *write_recover(&rw) = 4;
+        assert_eq!(*read_recover(&rw), 4);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod lock;
 pub mod pool;
 pub mod rng;
 

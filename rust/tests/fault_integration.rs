@@ -1,0 +1,304 @@
+//! Integration: failure domains.  Injected worker kills, GPU failures,
+//! and poisoned queue shards must all drain cleanly — every submitted
+//! request gets exactly one response (served or an explicit drop
+//! notice), the health ledger records the damage, and `drain()` never
+//! hangs on a dead stage's backlog.  Everything runs over both executor
+//! cores ([`ExecutorMode::Threads`] and [`ExecutorMode::Pool`]).
+
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use graft::profiler::CostModel;
+use graft::serving::{
+    ExecutorMode, FaultEvent, FaultKind, FaultPlan, FaultyExecutor, Request,
+    Server, ServerOptions,
+};
+
+use common::{cm, mock_executor, plan_for, watchdog};
+
+const MODES: [ExecutorMode; 2] = [ExecutorMode::Threads, ExecutorMode::Pool];
+
+fn opts(mode: ExecutorMode) -> ServerOptions {
+    ServerOptions {
+        time_scale: 0.0,
+        drop_on_slo: false,
+        mode,
+        ..Default::default()
+    }
+}
+
+/// Submit `n` requests for `client` at partition `p` onto `tx`.
+fn submit_n(
+    server: &Server,
+    cm: &CostModel,
+    model: &str,
+    client: u32,
+    p: usize,
+    n: u32,
+    tx: &mpsc::Sender<graft::serving::Response>,
+) {
+    let mi = cm.model_index(model).unwrap();
+    let dims = &cm.config().models[mi].dims;
+    for seq in 0..n {
+        server.submit(
+            Request {
+                client_id: client,
+                model: mi as u16,
+                p: p as u16,
+                seq,
+                t_capture_ms: 0.0,
+                upstream_ms: 0.0,
+                budget_ms: 1e9,
+                payload: vec![0.5; dims[p]],
+            },
+            tx.clone(),
+        );
+    }
+}
+
+/// A worker killed mid-batch (injected [`FaultKind::WorkerKill`] on the
+/// first executed batch): the doomed batch gets drop notices, the
+/// instance retires into the health ledger, and the drain still
+/// accounts for every request — zero silent losses.
+#[test]
+fn worker_kill_mid_batch_drains_with_notices() {
+    let _wd = watchdog("worker_kill_mid_batch", Duration::from_secs(120));
+    for mode in MODES {
+        let cm = cm();
+        let plan = plan_for(
+            &cm,
+            "inc",
+            &[(0, 2, 150.0, 30.0), (1, 3, 150.0, 30.0), (2, 3, 150.0, 30.0)],
+        );
+        let faults = Arc::new(FaultPlan::new(
+            0,
+            vec![FaultEvent { at_tick: 1, kind: FaultKind::WorkerKill }],
+        ));
+        let server = Server::start(
+            Arc::new(FaultyExecutor::new(mock_executor(&cm), faults.clone())),
+            &cm,
+            &plan,
+            opts(mode),
+        );
+        let (tx, rx) = mpsc::channel();
+        let per_client = 20u32;
+        for c in 0..3u32 {
+            let p = if c == 0 { 2 } else { 3 };
+            submit_n(&server, &cm, "inc", c, p, per_client, &tx);
+        }
+        drop(tx);
+        // the drain flushes whatever a dead stage stranded, so after it
+        // returns every request has reached a final outcome
+        server.drain();
+        let responses: Vec<_> = rx.iter().collect();
+        assert_eq!(responses.len(), 60, "{mode:?}: silent loss");
+        let dropped = responses.iter().filter(|r| r.dropped).count();
+        assert!(dropped >= 1, "{mode:?}: the killed batch must drop");
+        assert!(
+            server.counters.exec_panics.load(Ordering::Relaxed) >= 1,
+            "{mode:?}"
+        );
+        assert_eq!(server.health().dead_instance_count(), 1, "{mode:?}");
+        assert!(server.health().degraded(), "{mode:?}");
+        assert_eq!(faults.injected().len(), 1, "{mode:?}");
+    }
+}
+
+/// Total failure mid-stream: a backlog is queued, then every instance
+/// dies at once (`fail_gpu` on the unplaced sentinel).  Requests
+/// submitted before *and* after the failure all get explicit drop
+/// notices — never a hang, never a silent loss.
+#[test]
+fn gpu_failure_mid_stream_yields_notices_not_hangs() {
+    let _wd = watchdog("gpu_failure_mid_stream", Duration::from_secs(120));
+    for mode in MODES {
+        let cm = cm();
+        let plan = plan_for(&cm, "vgg", &[(0, 2, 120.0, 30.0)]);
+        let server =
+            Server::start(mock_executor(&cm), &cm, &plan, opts(mode));
+        let total_instances: usize = server.stage_instances().iter().sum();
+        let (tx, rx) = mpsc::channel();
+        submit_n(&server, &cm, "vgg", 0, 2, 15, &tx);
+        // unplaced plans put every instance on the NO_GPU sentinel, so
+        // failing it is the whole-cluster failure domain
+        let killed = server.fail_gpu(u32::MAX);
+        assert_eq!(killed, total_instances, "{mode:?}");
+        // post-failure submits hit the dead-stage fast path
+        let mi = cm.model_index("vgg").unwrap();
+        let dims = &cm.config().models[mi].dims;
+        for seq in 100..115u32 {
+            server.submit(
+                Request {
+                    client_id: 0,
+                    model: mi as u16,
+                    p: 2,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: vec![0.5; dims[2]],
+                },
+                tx.clone(),
+            );
+        }
+        drop(tx);
+        server.drain();
+        let responses: Vec<_> = rx.iter().collect();
+        assert_eq!(responses.len(), 30, "{mode:?}: silent loss");
+        // pre-failure items may have been served before the kill landed;
+        // everything after it must be an explicit notice
+        assert!(
+            responses.iter().filter(|r| r.dropped).count() >= 15,
+            "{mode:?}"
+        );
+        let health = server.health();
+        assert_eq!(health.dead_instance_count(), total_instances, "{mode:?}");
+        assert_eq!(health.failed_gpus(), vec![u32::MAX], "{mode:?}");
+    }
+}
+
+/// A queue shard poisoned mid-drain (the way a panicking consumer would
+/// leave it): the next acquisition recovers the lock, counts it, and
+/// serving continues — every request still served.
+#[test]
+fn poisoned_shard_recovers_mid_drain() {
+    let _wd = watchdog("poisoned_shard", Duration::from_secs(120));
+    for mode in MODES {
+        let cm = cm();
+        let plan = plan_for(
+            &cm,
+            "inc",
+            &[(0, 2, 150.0, 30.0), (1, 3, 150.0, 30.0), (2, 3, 150.0, 30.0)],
+        );
+        let server =
+            Server::start(mock_executor(&cm), &cm, &plan, opts(mode));
+        let (tx, rx) = mpsc::channel();
+        for c in 0..3u32 {
+            let p = if c == 0 { 2 } else { 3 };
+            submit_n(&server, &cm, "inc", c, p, 10, &tx);
+        }
+        // poison every stage's first shard while the backlog drains
+        for stage in 0..server.stage_instances().len() {
+            server.poison_stage_queue(stage, 0);
+        }
+        for c in 0..3u32 {
+            let p = if c == 0 { 2 } else { 3 };
+            let mi = cm.model_index("inc").unwrap();
+            let dims = &cm.config().models[mi].dims;
+            for seq in 50..60u32 {
+                server.submit(
+                    Request {
+                        client_id: c,
+                        model: mi as u16,
+                        p: p as u16,
+                        seq,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dims[p]],
+                    },
+                    tx.clone(),
+                );
+            }
+        }
+        drop(tx);
+        server.drain();
+        let responses: Vec<_> = rx.iter().collect();
+        assert_eq!(responses.len(), 60, "{mode:?}: silent loss");
+        assert!(
+            responses.iter().all(|r| !r.dropped),
+            "{mode:?}: poisoning must not drop requests"
+        );
+        assert!(
+            server.poison_recoveries() >= 1,
+            "{mode:?}: no recovery counted"
+        );
+        assert!(server.health().degraded(), "{mode:?}");
+    }
+}
+
+/// `kill_instance` is idempotent and the second call reports it.
+#[test]
+fn kill_instance_is_idempotent() {
+    let _wd = watchdog("kill_idempotent", Duration::from_secs(60));
+    for mode in MODES {
+        let cm = cm();
+        let plan = plan_for(&cm, "vgg", &[(0, 2, 120.0, 30.0)]);
+        let server =
+            Server::start(mock_executor(&cm), &cm, &plan, opts(mode));
+        assert!(server.kill_instance(0, 0));
+        assert!(!server.kill_instance(0, 0), "{mode:?}: double-kill");
+        assert!(!server.kill_instance(0, 999), "{mode:?}: unknown instance");
+        assert_eq!(server.health().dead_instance_count(), 1, "{mode:?}");
+        server.drain();
+    }
+}
+
+/// After an instance death the health ledger's failure epoch moves, and
+/// `note_recovery` (what the replan controller calls after the swap)
+/// moves the recovery epoch past it.
+#[test]
+fn health_epochs_order_failure_then_recovery() {
+    let _wd = watchdog("health_epochs", Duration::from_secs(60));
+    let cm = cm();
+    let plan = plan_for(&cm, "vgg", &[(0, 2, 120.0, 30.0)]);
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        opts(ExecutorMode::Pool),
+    );
+    let health = server.health();
+    assert!(!health.degraded());
+    server.fail_gpu(u32::MAX);
+    // one epoch bump for the GPU plus one per instance death
+    let fe = health.failure_epoch();
+    assert!(fe > 1);
+    assert!(health.degraded());
+    for _ in 0..fe {
+        health.note_recovery();
+    }
+    assert!(health.recovery_epoch() >= fe);
+    assert!(!health.degraded());
+    // the ledger keeps the failure before the recovery
+    let events = health.events();
+    let down = events
+        .iter()
+        .find(|e| e.kind == graft::serving::HealthEventKind::GpuDown)
+        .expect("GpuDown recorded");
+    let rec = events
+        .iter()
+        .find(|e| e.kind == graft::serving::HealthEventKind::Recovered)
+        .expect("Recovered recorded");
+    assert!(down.seq < rec.seq);
+    server.drain();
+}
+
+/// A rejected push (closed queue — e.g. a submit racing shutdown) never
+/// loses the request silently: the client still gets an explicit drop
+/// notice and the rejection is counted.
+#[test]
+fn rejected_push_still_notices_client() {
+    let _wd = watchdog("rejected_push_notice", Duration::from_secs(60));
+    for mode in MODES {
+        let cm = cm();
+        let plan = plan_for(&cm, "vgg", &[(0, 2, 120.0, 30.0)]);
+        let server =
+            Server::start(mock_executor(&cm), &cm, &plan, opts(mode));
+        // drain closes every stage queue but leaves the server callable
+        server.drain();
+        let (tx, rx) = mpsc::channel();
+        submit_n(&server, &cm, "vgg", 0, 2, 5, &tx);
+        drop(tx);
+        let responses: Vec<_> = rx.iter().collect();
+        assert_eq!(responses.len(), 5, "{mode:?}: silent loss");
+        assert!(responses.iter().all(|r| r.dropped), "{mode:?}");
+        assert!(
+            server.counters.rejected.load(Ordering::Relaxed) >= 5,
+            "{mode:?}"
+        );
+    }
+}

@@ -840,7 +840,7 @@ fn prop_delta_replacement_never_exceeds_repack_and_respects_caps() {
             }
         }
         let (new_plan, _) = sched.plan(&specs);
-        let d = place_delta(&cm, &old, &new_plan, None)
+        let d = place_delta(&cm, &old, &new_plan, None, &[])
             .expect("scheduler-placed demand stays placeable");
         let total: usize = new_plan
             .stages()
@@ -873,7 +873,7 @@ fn prop_delta_replacement_never_exceeds_repack_and_respects_caps() {
         stamp(&mut stamped, &d.placement);
         assert!(stamped.placed_gpus().is_some(), "case {case}");
         // an unperturbed replay pins everything and migrates nothing
-        let d0 = place_delta(&cm, &old, &old, None).unwrap();
+        let d0 = place_delta(&cm, &old, &old, None, &[]).unwrap();
         assert_eq!(d0.migrated, 0, "case {case}");
     }
 }
@@ -930,5 +930,183 @@ fn prop_shard_close_reroute_preserves_every_item() {
         got.sort_unstable();
         let want: Vec<u32> = (0..(n + accepted) as u32).collect();
         assert_eq!(got, want, "case {case}");
+    }
+}
+
+/// Robustness property (ISSUE acceptance): an injected worker panic is
+/// contained at the execution boundary — it lands in the
+/// `HealthRegistry` as one dead instance but never poisons serving
+/// state past it.  Submits on the surviving shards afterwards complete
+/// *exactly once*, with a response multiset identical to a fault-free
+/// server running the same surviving demand.
+#[test]
+fn prop_worker_kill_contained_survivors_serve_exactly_once() {
+    use std::sync::{mpsc, Arc};
+    use std::time::{Duration, Instant};
+
+    use graft::serving::{
+        ExecutorMode, FaultEvent, FaultKind, FaultPlan, FaultyExecutor,
+        Server, ServerOptions,
+    };
+
+    let _wd = common::watchdog(
+        "prop_worker_kill_contained",
+        Duration::from_secs(240),
+    );
+    let cm = cm();
+    let mi = cm.model_index("inc").unwrap();
+    let dims = cm.config().models[mi].dims.clone();
+    let opts = |mode| ServerOptions {
+        time_scale: 0.0,
+        drop_on_slo: false,
+        mode,
+        ..Default::default()
+    };
+    // client 0 routes through an alignment stage (p=2 below the
+    // repartition point); clients 1 and 2 feed the shared stage directly
+    let specs: [(u32, usize, f64, f64); 3] =
+        [(0, 2, 150.0, 30.0), (1, 3, 150.0, 30.0), (2, 3, 150.0, 30.0)];
+
+    for case in 0..4u64 {
+        for mode in [ExecutorMode::Threads, ExecutorMode::Pool] {
+            let mut rng = Rng::seed_from_u64(9500 + case);
+            // the surviving demand: random payloads for clients 1 and 2
+            let mut demand: Vec<(u32, u32, Vec<f32>)> = Vec::new();
+            for c in [1u32, 2u32] {
+                let m = 5 + rng.below(20) as u32;
+                for seq in 0..m {
+                    let payload: Vec<f32> = (0..dims[3])
+                        .map(|_| rng.normal() as f32)
+                        .collect();
+                    demand.push((c, seq, payload));
+                }
+            }
+            let submit_demand = |server: &Server,
+                                 tx: &mpsc::Sender<
+                graft::serving::Response,
+            >| {
+                for (c, seq, payload) in &demand {
+                    server.submit(
+                        Request {
+                            client_id: *c,
+                            model: mi as u16,
+                            p: 3,
+                            seq: *seq,
+                            t_capture_ms: 0.0,
+                            upstream_ms: 0.0,
+                            budget_ms: 1e9,
+                            payload: payload.clone(),
+                        },
+                        tx.clone(),
+                    );
+                }
+            };
+            let collect = |rx: mpsc::Receiver<graft::serving::Response>| {
+                let mut got: Vec<(u32, u32, Vec<u32>)> = rx
+                    .iter()
+                    .map(|r| {
+                        assert!(!r.dropped, "case {case} {mode:?}");
+                        (
+                            r.client_id,
+                            r.seq,
+                            r.output.iter().map(|x| x.to_bits()).collect(),
+                        )
+                    })
+                    .collect();
+                got.sort();
+                got
+            };
+
+            // --- faulty run: the first executed batch kills its worker.
+            // Only client 0 has submitted by then, so the kill lands on
+            // the alignment stage — the shared stage survives.
+            let plan = common::plan_for(&cm, "inc", &specs);
+            let faults = Arc::new(FaultPlan::new(
+                case,
+                vec![FaultEvent { at_tick: 1, kind: FaultKind::WorkerKill }],
+            ));
+            let server = Server::start(
+                Arc::new(FaultyExecutor::new(
+                    common::mock_executor(&cm),
+                    faults,
+                )),
+                &cm,
+                &plan,
+                opts(mode),
+            );
+            let (tx1, rx1) = mpsc::channel();
+            let k = 6u32;
+            for seq in 0..k {
+                server.submit(
+                    Request {
+                        client_id: 0,
+                        model: mi as u16,
+                        p: 2,
+                        seq,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dims[2]],
+                    },
+                    tx1.clone(),
+                );
+            }
+            drop(tx1);
+            // the kill is observed through the health ledger, not a
+            // poisoned lock
+            let deadline = Instant::now() + Duration::from_secs(20);
+            while server.health().dead_instance_count() == 0 {
+                assert!(
+                    Instant::now() < deadline,
+                    "case {case} {mode:?}: kill never landed"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert_eq!(
+                server.health().dead_instance_count(),
+                1,
+                "case {case} {mode:?}"
+            );
+            assert_eq!(
+                server.poison_recoveries(),
+                0,
+                "case {case} {mode:?}: panic leaked into a lock"
+            );
+            // --- surviving shards: same demand as the baseline below
+            let (tx2, rx2) = mpsc::channel();
+            submit_demand(&server, &tx2);
+            drop(tx2);
+            let survivors = collect(rx2);
+            assert_eq!(
+                survivors.len(),
+                demand.len(),
+                "case {case} {mode:?}: not exactly-once"
+            );
+            server.drain();
+            // every phase-1 request reached exactly one outcome too
+            assert_eq!(
+                rx1.iter().count(),
+                k as usize,
+                "case {case} {mode:?}: silent loss on the dead stage"
+            );
+
+            // --- fault-free baseline of the surviving demand
+            let plan = common::plan_for(&cm, "inc", &specs);
+            let baseline_server = Server::start(
+                common::mock_executor(&cm),
+                &cm,
+                &plan,
+                opts(mode),
+            );
+            let (tx3, rx3) = mpsc::channel();
+            submit_demand(&baseline_server, &tx3);
+            drop(tx3);
+            let baseline = collect(rx3);
+            baseline_server.drain();
+            assert_eq!(
+                survivors, baseline,
+                "case {case} {mode:?}: multiset diverged"
+            );
+        }
     }
 }

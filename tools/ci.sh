@@ -3,8 +3,9 @@
 # planner (n=200, re-validates cached==uncached plan identity plus the
 # replan scenario's warm<=cold and plan-identity self-checks), serving
 # (n=100, both executors), placement (n=200, integrated-vs-oracle GPU
-# counts + cap checks) and transition (n=200, live hot-swap: zero-drop
-# + delta-vs-repack migration bounds).
+# counts + cap checks), transition (n=200, live hot-swap: zero-drop
+# + delta-vs-repack migration bounds) and faults (n=200, single-GPU
+# failure: zero silent losses + emergency replan avoids the dead GPU).
 #
 #   tools/ci.sh            full pipeline
 #   tools/ci.sh --fast     build + test only
@@ -39,7 +40,7 @@ timeout 1800 cargo test -q
 echo "== serving concurrency suite (release, cap 600s) =="
 timeout 600 cargo test --release -q \
     --test serving_integration --test transition_integration \
-    --test proptests
+    --test fault_integration --test proptests
 
 if [[ "$FAST" == "1" ]]; then
     echo "ci: fast mode, skipping style gates and bench smoke"
@@ -89,5 +90,16 @@ timeout 600 cargo run --release -p graft -- bench-transition \
     --sizes 200 --requests 3000 --out target/BENCH_transition_smoke.json
 test -s target/BENCH_transition_smoke.json
 grep -q '"transition"' target/BENCH_transition_smoke.json
+
+echo "== fault bench smoke (n=200, single-GPU failure + emergency replan) =="
+# self-checking inside the bench: the GPU failure fires the emergency
+# replan trigger, every request is answered exactly once across the
+# failure + hot swap (zero silent losses), and the replacement plan
+# places zero instances on the failed GPU (it bails hard otherwise);
+# the grep asserts the faults section actually landed in the JSON
+timeout 600 cargo run --release -p graft -- bench-faults \
+    --sizes 200 --requests 400 --out target/BENCH_faults_smoke.json
+test -s target/BENCH_faults_smoke.json
+grep -q '"faults"' target/BENCH_faults_smoke.json
 
 echo "ci: OK"
