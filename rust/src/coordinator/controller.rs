@@ -51,6 +51,14 @@ pub struct ControllerOptions {
     /// Clamp on the per-model demand rescale factor per trigger, so a
     /// measurement artifact cannot blow the demand model up (or to 0).
     pub rate_clamp: (f64, f64),
+    /// Observed RPS above which traffic on a model whose *planned* rate
+    /// is zero counts as threshold-exceeding drift.  Zero-rate models
+    /// have no meaningful relative drift (`|o − p| / p` divides by 0),
+    /// and were previously skipped outright — so a surge on a
+    /// newly-popular model could never trigger a replan.  The observed
+    /// rate is distributed across the model's demand specs directly
+    /// (no rescale factor exists), so `rate_clamp` does not apply.
+    pub unplanned_rate_floor: f64,
     /// Persist the scheduler's replan context here after every replan
     /// ([`Scheduler::save_replan_context`]), so a restarted scheduler
     /// warm-starts its first live replan.
@@ -64,6 +72,7 @@ impl Default for ControllerOptions {
             min_requests: 50,
             interval: Duration::from_secs(1),
             rate_clamp: (0.2, 5.0),
+            unplanned_rate_floor: 1.0,
             context_path: None,
         }
     }
@@ -239,11 +248,28 @@ impl ReplanController {
         }
         let mut max_drift = 0.0f64;
         let mut factors: HashMap<usize, f64> = HashMap::new();
+        // models with zero planned but real observed rate: (model idx,
+        // observed RPS) — handled by direct rate assignment, not factors
+        let mut surges: HashMap<usize, f64> = HashMap::new();
         for (mi, m) in cm.config().models.iter().enumerate() {
             let p = *planned.get(m.name.as_str()).unwrap_or(&0.0);
             let o = *observed.get(m.name.as_str()).unwrap_or(&0.0);
             if p <= 0.0 {
-                continue; // nothing deployed for this model
+                // no planned traffic.  A model with demand specs (just
+                // zero-rated) that is now seeing real arrivals is
+                // unplanned drift — above the floor it must fire like
+                // any threshold-exceeding model.  Models with no specs
+                // at all are skipped: the controller can only rescale
+                // demand it knows about, not invent clients.
+                if planned.contains_key(m.name.as_str())
+                    && o > self.opts.unplanned_rate_floor
+                {
+                    let floor = self.opts.unplanned_rate_floor.max(1e-9);
+                    max_drift =
+                        max_drift.max((o / floor).max(self.opts.drift_threshold));
+                    surges.insert(mi, o);
+                }
+                continue;
             }
             let drift = (o - p).abs() / p;
             max_drift = max_drift.max(drift);
@@ -255,7 +281,7 @@ impl ReplanController {
         // window consumed either way: re-baseline on the fresh counters
         st.baseline = Some((arrivals, now));
         st.swap_gen = gen;
-        if factors.is_empty() {
+        if factors.is_empty() && surges.is_empty() {
             return TickOutcome::Stable { max_drift };
         }
 
@@ -265,6 +291,19 @@ impl ReplanController {
         for s in &mut demands {
             if let Some(f) = factors.get(&s.model) {
                 s.rate_rps *= f;
+            }
+        }
+        // surged models: split the observed rate evenly across the
+        // model's demand specs (they were all zero-rated; max keeps any
+        // spec that already carried rate intact)
+        for (&mi, &o) in &surges {
+            let k = demands.iter().filter(|s| s.model == mi).count();
+            if k == 0 {
+                continue;
+            }
+            let share = o / k as f64;
+            for s in demands.iter_mut().filter(|s| s.model == mi) {
+                s.rate_rps = s.rate_rps.max(share);
             }
         }
         let (new_plan, _stats) = self.sched.plan(&demands);
@@ -277,7 +316,7 @@ impl ReplanController {
         let report = self.replan_and_swap(&mut st, demands, new_plan);
         TickOutcome::Replanned {
             max_drift,
-            scaled_models: factors.len(),
+            scaled_models: factors.len() + surges.len(),
             report,
         }
     }

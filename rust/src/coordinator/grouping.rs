@@ -9,9 +9,19 @@
 //! seed `K` groups with random fragments, then assign each remaining
 //! fragment to the group with the least objective increase subject to
 //! the balance cap.
+//!
+//! Across replan triggers the scheduler uses the delta-aware variant
+//! ([`group_fragments_incremental`]): unchanged demands replay the
+//! previous trigger's groups byte-identically, and only new/changed
+//! fragments go through the greedy — with the from-scratch path kept as
+//! the fallback and audit oracle.
 
-use super::fragment::FragmentSpec;
-use crate::util::Rng;
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::Result;
+
+use super::fragment::{ClientId, FragmentSpec};
+use crate::util::{Json, Rng};
 
 /// Factor weights for the distance on `⟨p, t, q⟩` (§5.6 explores these;
 /// equal weights are within ~4% of optimal).
@@ -34,11 +44,50 @@ pub struct GroupOptions {
     pub group_size: usize,
     pub weights: FactorWeights,
     pub seed: u64,
+    /// Delta-aware grouping across triggers: replay the previous
+    /// trigger's groups where members are unchanged and greedily place
+    /// only the new/changed fragments ([`group_fragments_incremental`],
+    /// used by the scheduler when its own `incremental` flag is on).
+    /// Unlike the merge/DP/placement reuse this is a *heuristic* —
+    /// replayed groups are byte-identical for unchanged demands, but a
+    /// perturbed trigger's groups may differ from the from-scratch
+    /// greedy (bounded by `churn_threshold`/`epsilon` below).  `false`
+    /// pins the scheduler to the scratch greedy every trigger.
+    pub incremental: bool,
+    /// Fraction of a model's fragments that may change (arrive, depart
+    /// or move their property vector) per trigger before the
+    /// incremental path falls back to the from-scratch greedy.
+    pub churn_threshold: f64,
+    /// Allowed relative Eq.-(1) objective drift of the incremental
+    /// grouping vs the from-scratch oracle when the audit runs (slices
+    /// of ≤ `audit_limit` fragments); past it the slice falls back.
+    pub epsilon: f64,
+    /// Slice size up to which every perturbed incremental grouping is
+    /// audited against the scratch greedy (cheap insurance at small n);
+    /// above it the audit would cost exactly what the delta path saves,
+    /// so large slices rely on the churn threshold alone.  Test hook:
+    /// `usize::MAX` forces the audit, `0` disables it.
+    pub audit_limit: usize,
+    /// Largest n for which the dense similarity matrix is built
+    /// ([`SimTable`]); above it pairwise similarities are evaluated on
+    /// the fly.  Groups are identical either side — only the lookup's
+    /// build cost changes.  Injectable for tests (`0` forces the lazy
+    /// path).
+    pub dense_limit: usize,
 }
 
 impl Default for GroupOptions {
     fn default() -> Self {
-        Self { group_size: 5, weights: FactorWeights::default(), seed: 0xF3A7 }
+        Self {
+            group_size: 5,
+            weights: FactorWeights::default(),
+            seed: 0xF3A7,
+            incremental: true,
+            churn_threshold: 0.5,
+            epsilon: 0.05,
+            audit_limit: 256,
+            dense_limit: DENSE_SIM_LIMIT,
+        }
     }
 }
 
@@ -133,9 +182,10 @@ impl<'a> SimTable<'a> {
         props: &'a [[f64; 3]],
         w: FactorWeights,
         sc: [f64; 3],
+        dense_limit: usize,
     ) -> SimTable<'a> {
         let n = props.len();
-        if n > DENSE_SIM_LIMIT {
+        if n > dense_limit {
             return SimTable::Lazy { props, w, sc };
         }
         let mut m = vec![0.0; n * n];
@@ -161,12 +211,14 @@ impl<'a> SimTable<'a> {
 }
 
 /// Running moments of a group's internal edge weights; variance in O(1)
-/// from (Σe, Σe², count) instead of rebuilding the edge list.
-#[derive(Clone, Copy, Default)]
-struct GroupStats {
-    sum: f64,
-    sumsq: f64,
-    count: usize,
+/// from (Σe, Σe², count) instead of rebuilding the edge list.  Public so
+/// the incremental grouping state ([`GroupState`]) can persist them
+/// across triggers and the scheduler can serialize them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GroupStats {
+    pub sum: f64,
+    pub sumsq: f64,
+    pub count: usize,
 }
 
 impl GroupStats {
@@ -206,7 +258,7 @@ pub fn group_fragments(
     let props: Vec<[f64; 3]> =
         specs.iter().map(FragmentSpec::property_vector).collect();
     let sc = scales(&props);
-    let sim = SimTable::new(&props, opts.weights, sc);
+    let sim = SimTable::new(&props, opts.weights, sc, opts.dense_limit);
 
     // (a) seed K groups with random fragments
     let mut order: Vec<usize> = (0..n).collect();
@@ -255,6 +307,415 @@ pub fn group_fragments(
         groups[gk].push(i);
     }
     groups
+}
+
+// -- incremental grouping (trigger-to-trigger, §4.2 delta-aware) -----------
+
+/// One persisted member of a group: its identity across triggers (the
+/// merged fragment's *sorted* client set — stable no matter how merging
+/// ordered the clients) and the property vector it was grouped under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupMember {
+    pub key: Vec<ClientId>,
+    pub props: [f64; 3],
+}
+
+/// Per-model grouping state carried across triggers in `ReplanContext`:
+/// the previous trigger's groups (member identities + property vectors,
+/// in assignment order), the normalisation scales they were grouped
+/// under, and each group's running edge moments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupState {
+    pub scales: [f64; 3],
+    pub groups: Vec<Vec<GroupMember>>,
+    pub stats: Vec<GroupStats>,
+}
+
+/// What [`group_fragments_incremental`] did for one model slice.
+#[derive(Debug, Clone, Default)]
+pub struct GroupDelta {
+    /// Index groups over the input specs (same shape as
+    /// [`group_fragments`]).
+    pub groups: Vec<Vec<usize>>,
+    /// Groups replayed byte-identically from the previous trigger.
+    pub replayed: usize,
+    /// Fragments that went through the greedy (new, moved, or — on
+    /// fallback — all of them).
+    pub regrouped: usize,
+    /// The from-scratch greedy ran instead of the delta path (churn
+    /// over threshold, ε-audit breach, or degenerate identities).
+    pub fell_back: bool,
+}
+
+#[inline]
+fn props_eq(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    (0..3).all(|i| a[i].to_bits() == b[i].to_bits())
+}
+
+/// Internal-edge moments of one group, rebuilt pairwise.
+fn rebuild_stats(
+    members: &[usize],
+    props: &[[f64; 3]],
+    w: &FactorWeights,
+    sc: &[f64; 3],
+) -> GroupStats {
+    let mut st = GroupStats::default();
+    for (ai, &i) in members.iter().enumerate() {
+        for &j in &members[ai + 1..] {
+            let e = similarity(&props[i], &props[j], w, sc);
+            st.sum += e;
+            st.sumsq += e * e;
+            st.count += 1;
+        }
+    }
+    st
+}
+
+fn sorted_key(spec: &FragmentSpec) -> Vec<ClientId> {
+    let mut k = spec.clients.clone();
+    k.sort_unstable();
+    k
+}
+
+impl GroupState {
+    /// Snapshot an index grouping of `specs` (used after a from-scratch
+    /// run so the *next* trigger can go delta-aware).
+    pub fn from_groups(
+        specs: &[FragmentSpec],
+        groups: &[Vec<usize>],
+        opts: &GroupOptions,
+    ) -> GroupState {
+        let props: Vec<[f64; 3]> =
+            specs.iter().map(FragmentSpec::property_vector).collect();
+        let sc = scales(&props);
+        GroupState {
+            scales: sc,
+            stats: groups
+                .iter()
+                .map(|g| rebuild_stats(g, &props, &opts.weights, &sc))
+                .collect(),
+            groups: groups
+                .iter()
+                .map(|g| {
+                    g.iter()
+                        .map(|&i| GroupMember {
+                            key: sorted_key(&specs[i]),
+                            props: props[i],
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// JSON form for replan-context persistence (exact float round-trip
+    /// through the shortest-repr printer, like `FragmentSpec::to_json`).
+    pub fn to_json(&self) -> Json {
+        let num3 = |a: &[f64; 3]| {
+            Json::Arr(a.iter().map(|&x| Json::Num(x)).collect())
+        };
+        let mut o = BTreeMap::new();
+        o.insert("scales".into(), num3(&self.scales));
+        o.insert(
+            "groups".into(),
+            Json::Arr(
+                self.groups
+                    .iter()
+                    .map(|g| {
+                        Json::Arr(
+                            g.iter()
+                                .map(|m| {
+                                    let mut mo = BTreeMap::new();
+                                    mo.insert(
+                                        "key".into(),
+                                        Json::Arr(
+                                            m.key
+                                                .iter()
+                                                .map(|c| Json::Num(c.0 as f64))
+                                                .collect(),
+                                        ),
+                                    );
+                                    mo.insert("props".into(), num3(&m.props));
+                                    Json::Obj(mo)
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "stats".into(),
+            Json::Arr(
+                self.stats
+                    .iter()
+                    .map(|s| {
+                        let mut so = BTreeMap::new();
+                        so.insert("sum".into(), Json::Num(s.sum));
+                        so.insert("sumsq".into(), Json::Num(s.sumsq));
+                        so.insert("count".into(), Json::Num(s.count as f64));
+                        Json::Obj(so)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(v: &Json) -> Result<GroupState> {
+        let arr3 = |v: &Json| -> Result<[f64; 3]> {
+            let f = v.as_f64_vec()?;
+            anyhow::ensure!(f.len() == 3, "expected 3 floats, got {}", f.len());
+            Ok([f[0], f[1], f[2]])
+        };
+        Ok(GroupState {
+            scales: arr3(v.get("scales")?)?,
+            groups: v
+                .get("groups")?
+                .as_arr()?
+                .iter()
+                .map(|g| {
+                    g.as_arr()?
+                        .iter()
+                        .map(|m| {
+                            Ok(GroupMember {
+                                key: m
+                                    .get("key")?
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|c| {
+                                        Ok(ClientId(c.as_usize()? as u32))
+                                    })
+                                    .collect::<Result<_>>()?,
+                                props: arr3(m.get("props")?)?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?,
+            stats: v
+                .get("stats")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(GroupStats {
+                        sum: s.get("sum")?.as_f64()?,
+                        sumsq: s.get("sumsq")?.as_f64()?,
+                        count: s.get("count")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// Delta-aware §4.2 grouping across triggers.
+///
+/// Diffs `specs` against `prev` by member identity (sorted client set)
+/// and bitwise property vector:
+///
+/// 1. **Pure replay** — nothing changed: the previous groups are
+///    returned byte-identically (`regrouped == 0`), no audit.
+/// 2. **Delta path** — vacate departed/changed members (rebuilding the
+///    affected groups' running moments; all moments rebuild if the
+///    normalisation scales moved), then greedily insert the new/changed
+///    fragments — in identity-key order, so insertion is independent of
+///    `n` — into residual capacity under the same Δ-objective rule as
+///    the scratch greedy, opening a fresh group only when none has
+///    room.
+/// 3. **Fallback** — churn above `opts.churn_threshold`, or (for slices
+///    of ≤ `opts.audit_limit`) the Eq.-(1) objective drifting more than
+///    `opts.epsilon` past the from-scratch greedy, reruns
+///    [`group_fragments`] from scratch.
+///
+/// Returns the delta plus the state to persist for the next trigger.
+/// `prev: None` (cold trigger) is the scratch path without counting as
+/// a fallback.
+pub fn group_fragments_incremental(
+    specs: &[FragmentSpec],
+    opts: &GroupOptions,
+    prev: Option<&GroupState>,
+) -> (GroupDelta, GroupState) {
+    let n = specs.len();
+    if n == 0 {
+        return (
+            GroupDelta::default(),
+            GroupState { scales: [0.0; 3], groups: Vec::new(), stats: Vec::new() },
+        );
+    }
+    let scratch = |fell_back: bool| {
+        let groups = group_fragments(specs, opts);
+        let state = GroupState::from_groups(specs, &groups, opts);
+        let delta = GroupDelta {
+            replayed: 0,
+            regrouped: n,
+            fell_back,
+            groups,
+        };
+        (delta, state)
+    };
+    let Some(prev) = prev else {
+        return scratch(false);
+    };
+
+    let props: Vec<[f64; 3]> =
+        specs.iter().map(FragmentSpec::property_vector).collect();
+    let keys: Vec<Vec<ClientId>> = specs.iter().map(sorted_key).collect();
+    let mut by_key: HashMap<&[ClientId], usize> = HashMap::with_capacity(n);
+    for (i, k) in keys.iter().enumerate() {
+        if by_key.insert(k.as_slice(), i).is_some() {
+            // duplicate identities can't be diffed — degenerate input
+            return scratch(true);
+        }
+    }
+
+    // diff: per previous group, the surviving members (prev order) and
+    // whether the group is intact; count departures (gone or moved)
+    let mut matched = vec![false; n];
+    let mut departed = 0usize;
+    // (index into prev.groups/prev.stats, surviving members, intact)
+    let mut survivors: Vec<(usize, Vec<usize>, bool)> = Vec::new();
+    for (gi, g) in prev.groups.iter().enumerate() {
+        let mut cur = Vec::with_capacity(g.len());
+        let mut intact = true;
+        for m in g {
+            match by_key.get(m.key.as_slice()) {
+                Some(&i) if props_eq(&props[i], &m.props) => {
+                    cur.push(i);
+                    matched[i] = true;
+                }
+                _ => {
+                    intact = false;
+                    departed += 1;
+                }
+            }
+        }
+        if !cur.is_empty() {
+            survivors.push((gi, cur, intact));
+        }
+    }
+    let mut changed: Vec<usize> = (0..n).filter(|&i| !matched[i]).collect();
+
+    if changed.is_empty() && departed == 0 {
+        // pure replay: groups (and therefore every downstream
+        // `group_signature`) are byte-identical to the previous trigger
+        let groups: Vec<Vec<usize>> =
+            survivors.into_iter().map(|(_, g, _)| g).collect();
+        let delta = GroupDelta {
+            replayed: groups.len(),
+            regrouped: 0,
+            fell_back: false,
+            groups,
+        };
+        return (delta, prev.clone());
+    }
+
+    if (changed.len() + departed) as f64 > opts.churn_threshold * n as f64 {
+        return scratch(true);
+    }
+
+    let sc = scales(&props);
+    let scales_same = props_eq(&sc, &prev.scales);
+    let mut groups: Vec<Vec<usize>> = Vec::with_capacity(survivors.len());
+    let mut stats: Vec<GroupStats> = Vec::with_capacity(survivors.len());
+    let mut pristine: Vec<bool> = Vec::with_capacity(survivors.len());
+    for (gi, g, intact) in survivors {
+        stats.push(if intact && scales_same {
+            prev.stats[gi]
+        } else {
+            rebuild_stats(&g, &props, &opts.weights, &sc)
+        });
+        pristine.push(intact);
+        groups.push(g);
+    }
+
+    // greedy insertion in identity-key order (n-independent, unlike the
+    // scratch seeding shuffle); direct similarity calls — no O(n²)
+    // table, which is where the delta path's speedup comes from
+    changed.sort_unstable_by(|&a, &b| keys[a].cmp(&keys[b]));
+    let gs = opts.group_size.max(1);
+    let cap = n.div_ceil(n.div_ceil(gs));
+    for &i in &changed {
+        let mut best: Option<(usize, f64, f64, f64)> = None;
+        for (gk, g) in groups.iter().enumerate() {
+            if g.len() >= cap {
+                continue;
+            }
+            let mut esum = 0.0;
+            let mut esumsq = 0.0;
+            for &j in g {
+                let e = similarity(&props[i], &props[j], &opts.weights, &sc);
+                esum += e;
+                esumsq += e * e;
+            }
+            let st = stats[gk];
+            let var_before = GroupStats::var(st.sum, st.sumsq, st.count);
+            let var_after = GroupStats::var(
+                st.sum + esum,
+                st.sumsq + esumsq,
+                st.count + g.len(),
+            );
+            let delta = var_after - var_before - esum;
+            if best.map_or(true, |(_, b, _, _)| delta < b) {
+                best = Some((gk, delta, esum, esumsq));
+            }
+        }
+        match best {
+            Some((gk, _, esum, esumsq)) => {
+                stats[gk].sum += esum;
+                stats[gk].sumsq += esumsq;
+                stats[gk].count += groups[gk].len();
+                groups[gk].push(i);
+                pristine[gk] = false;
+            }
+            None => {
+                groups.push(vec![i]);
+                stats.push(GroupStats::default());
+                pristine.push(false);
+            }
+        }
+    }
+
+    // ε-audit against the scratch oracle where it's cheap enough
+    if opts.audit_limit > 0 && n <= opts.audit_limit {
+        let oracle = group_fragments(specs, opts);
+        let inc_obj = objective(specs, &groups, &opts.weights);
+        let scr_obj = objective(specs, &oracle, &opts.weights);
+        if inc_obj > scr_obj * (1.0 + opts.epsilon) + 1e-9 {
+            let state = GroupState::from_groups(specs, &oracle, opts);
+            let delta = GroupDelta {
+                replayed: 0,
+                regrouped: n,
+                fell_back: true,
+                groups: oracle,
+            };
+            return (delta, state);
+        }
+    }
+
+    let state = GroupState {
+        scales: sc,
+        groups: groups
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .map(|&i| GroupMember {
+                        key: keys[i].clone(),
+                        props: props[i],
+                    })
+                    .collect()
+            })
+            .collect(),
+        stats,
+    };
+    let delta = GroupDelta {
+        replayed: pristine.iter().filter(|&&p| p).count(),
+        regrouped: changed.len(),
+        fell_back: false,
+        groups,
+    };
+    (delta, state)
 }
 
 #[cfg(test)]
@@ -452,5 +913,178 @@ mod tests {
                 "seed {seed}: rewrite {new} vs reference {old}"
             );
         }
+    }
+
+    fn random_specs(n: usize, seed: u64) -> Vec<FragmentSpec> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                spec(
+                    i as u32,
+                    rng.below(16),
+                    rng.range(30.0, 200.0),
+                    rng.range(1.0, 90.0),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_and_lazy_tables_group_identically() {
+        // dense_limit 0 forces the lazy path at any n; groups must not
+        // depend on which lookup backs the greedy
+        for seed in 0..5u64 {
+            let specs = random_specs(60, 900 + seed);
+            let dense = GroupOptions { seed, ..Default::default() };
+            let lazy = GroupOptions { dense_limit: 0, ..dense };
+            assert_eq!(
+                group_fragments(&specs, &dense),
+                group_fragments(&specs, &lazy),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_replays_unchanged_demands_byte_identically() {
+        let specs = random_specs(50, 42);
+        let opts = GroupOptions::default();
+        let (cold, state) = group_fragments_incremental(&specs, &opts, None);
+        assert!(!cold.fell_back);
+        assert_eq!(cold.regrouped, 50);
+        assert_eq!(cold.groups, group_fragments(&specs, &opts));
+        let (warm, state2) =
+            group_fragments_incremental(&specs, &opts, Some(&state));
+        assert_eq!(warm.groups, cold.groups, "replay must be byte-identical");
+        assert_eq!(warm.regrouped, 0);
+        assert_eq!(warm.replayed, cold.groups.len());
+        assert!(!warm.fell_back);
+        assert_eq!(state2, state);
+    }
+
+    /// Satellite regression: the scratch greedy reshuffles everything
+    /// when `n` changes; the incremental path must keep group churn
+    /// bounded by 2x the perturbed-fragment count (each change touches
+    /// at most its old group and its new group).
+    #[test]
+    fn incremental_bounds_group_churn_at_one_percent() {
+        let mut specs = random_specs(200, 7);
+        let opts = GroupOptions::default();
+        let (_, state) = group_fragments_incremental(&specs, &opts, None);
+        // perturb 1% = 2 fragments (budget moves, like a drifting SLO)
+        for i in [30usize, 140] {
+            specs[i].budget_ms += 1.0;
+        }
+        let (delta, state2) =
+            group_fragments_incremental(&specs, &opts, Some(&state));
+        assert!(!delta.fell_back, "1% churn must stay on the delta path");
+        assert_eq!(delta.regrouped, 2);
+        // groups that differ from the previous trigger, by member keys
+        let key_sets = |st: &GroupState| -> Vec<Vec<Vec<ClientId>>> {
+            st.groups
+                .iter()
+                .map(|g| {
+                    let mut ks: Vec<Vec<ClientId>> =
+                        g.iter().map(|m| m.key.clone()).collect();
+                    ks.sort();
+                    ks
+                })
+                .collect()
+        };
+        let before = key_sets(&state);
+        let after = key_sets(&state2);
+        let churned = after
+            .iter()
+            .filter(|g| !before.contains(g))
+            .count()
+            .max(before.iter().filter(|g| !after.contains(g)).count());
+        assert!(churned <= 2 * 2, "churned {churned} groups for 2 changes");
+        // partition stays valid
+        let mut all: Vec<usize> = delta.groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
+        let cap = 200usize.div_ceil(200usize.div_ceil(opts.group_size));
+        assert!(delta.groups.iter().all(|g| g.len() <= cap));
+    }
+
+    #[test]
+    fn incremental_falls_back_on_heavy_churn() {
+        let mut specs = random_specs(40, 11);
+        let opts = GroupOptions::default();
+        let (_, state) = group_fragments_incremental(&specs, &opts, None);
+        for s in specs.iter_mut().take(30) {
+            s.budget_ms += 5.0; // 75% of members move: over the threshold
+        }
+        let (delta, _) =
+            group_fragments_incremental(&specs, &opts, Some(&state));
+        assert!(delta.fell_back);
+        assert_eq!(delta.regrouped, 40);
+        assert_eq!(delta.groups, group_fragments(&specs, &opts));
+    }
+
+    #[test]
+    fn incremental_objective_within_epsilon_of_scratch_when_audited() {
+        // audit forced at every n: the returned grouping can never
+        // drift past ε of the scratch oracle (by construction — the
+        // audit falls back when it would)
+        let opts =
+            GroupOptions { audit_limit: usize::MAX, ..Default::default() };
+        let w = opts.weights;
+        for seed in 0..8u64 {
+            let mut rng = Rng::seed_from_u64(3000 + seed);
+            let mut specs = random_specs(60 + rng.below(60), 50 + seed);
+            let (_, mut state) =
+                group_fragments_incremental(&specs, &opts, None);
+            for _step in 0..3 {
+                let n = specs.len();
+                for _ in 0..(n / 20).max(1) {
+                    let i = rng.below(n);
+                    specs[i].budget_ms += rng.range(-2.0, 2.0);
+                    specs[i].rate_rps =
+                        (specs[i].rate_rps + rng.range(-1.0, 1.0)).max(0.5);
+                }
+                let (delta, next) =
+                    group_fragments_incremental(&specs, &opts, Some(&state));
+                let inc = objective(&specs, &delta.groups, &w);
+                let scr =
+                    objective(&specs, &group_fragments(&specs, &opts), &w);
+                assert!(
+                    inc <= scr * (1.0 + opts.epsilon) + 1e-9,
+                    "seed {seed}: incremental {inc} vs scratch {scr}"
+                );
+                state = next;
+            }
+        }
+    }
+
+    #[test]
+    fn group_state_json_roundtrip_is_exact() {
+        let specs = random_specs(30, 99);
+        let opts = GroupOptions::default();
+        let (_, state) = group_fragments_incremental(&specs, &opts, None);
+        let doc = state.to_json().to_string();
+        let back = GroupState::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back, state);
+    }
+
+    #[test]
+    fn incremental_absorbs_arrivals_and_departures() {
+        let mut specs = random_specs(80, 21);
+        let opts = GroupOptions::default();
+        let (_, state) = group_fragments_incremental(&specs, &opts, None);
+        specs.remove(17); // one client departs...
+        specs.push(spec(500, 4, 77.0, 12.0)); // ...and a new one arrives
+        let (delta, state2) =
+            group_fragments_incremental(&specs, &opts, Some(&state));
+        assert!(!delta.fell_back);
+        assert_eq!(delta.regrouped, 1, "only the arrival is regrouped");
+        let mut all: Vec<usize> = delta.groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..80).collect::<Vec<_>>());
+        assert_eq!(
+            state2.groups.iter().map(Vec::len).sum::<usize>(),
+            80,
+            "state tracks the new population"
+        );
     }
 }

@@ -69,6 +69,28 @@ pub fn warm_signature(specs: &[FragmentSpec], opts_sig: u64) -> u64 {
     h.finish()
 }
 
+/// Signature of the grouping options that shape the incremental
+/// grouping state ([`crate::coordinator::grouping::GroupState`]): a
+/// persisted or cached state built under different knobs must miss, so
+/// an options change falls back to the from-scratch greedy instead of
+/// replaying groups the current settings would never have formed.
+/// `dense_limit` is deliberately excluded — it changes the similarity
+/// lookup's build cost, never the resulting groups.
+pub fn group_options_signature(
+    opts: &crate::coordinator::grouping::GroupOptions,
+) -> u64 {
+    let mut h = DefaultHasher::new();
+    opts.group_size.hash(&mut h);
+    opts.weights.p.to_bits().hash(&mut h);
+    opts.weights.t.to_bits().hash(&mut h);
+    opts.weights.q.to_bits().hash(&mut h);
+    opts.seed.hash(&mut h);
+    opts.churn_threshold.to_bits().hash(&mut h);
+    opts.epsilon.to_bits().hash(&mut h);
+    opts.audit_limit.hash(&mut h);
+    h.finish()
+}
+
 /// Fold an [`AllocConstraints`] into a signature hasher (shared by the
 /// re-partition and merge option signatures so a new constraint field
 /// is added in exactly one place).

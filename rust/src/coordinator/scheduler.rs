@@ -6,13 +6,22 @@
 //! re-aligned in parallel on a configurable thread pool (the paper's
 //! "process pool", §5.9/Fig 19b).  The scheduler is cheap enough to be
 //! re-invoked on every partition-point change (trigger-based
-//! re-planning), and the whole pipeline is delta-aware across triggers
-//! (all reuse is exact — plans are byte-identical to from-scratch
-//! planning, property-tested):
+//! re-planning), and the whole pipeline is delta-aware across triggers.
+//! Merging, re-partitioning and placement reuse are exact (unchanged
+//! inputs replay byte-identical outputs, property-tested); grouping
+//! reuse is heuristic with an audited quality bound (below):
 //!
 //! * **merging** re-runs only the uniform classes whose membership
 //!   changed, splicing cached outputs for the clean ones
 //!   ([`crate::coordinator::merging::merge_fragments_incremental`]);
+//! * **grouping** diffs each model's merged fragments against the
+//!   previous trigger by member identity: unchanged demands replay the
+//!   previous groups byte-identically, and only new/changed fragments
+//!   go through the greedy — falling back to the from-scratch greedy
+//!   on heavy churn or Eq.-(1) objective drift past ε
+//!   ([`crate::coordinator::grouping::group_fragments_incremental`]);
+//!   stable groups keep `group_signature`s stable, so the exact caches
+//!   below stop churning under small perturbations;
 //! * **re-partitioning** replays cached per-group plans for groups
 //!   whose exact fragment signature is unchanged, and warm-starts the
 //!   suffix DP of the groups that did move from the previous trigger's
@@ -48,7 +57,9 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use super::fragment::FragmentSpec;
-use super::grouping::{group_fragments, GroupOptions};
+use super::grouping::{
+    group_fragments, group_fragments_incremental, GroupOptions, GroupState,
+};
 use super::merging::{
     merge_fragments, merge_fragments_incremental, MergeCache, MergeOptions,
 };
@@ -71,10 +82,14 @@ pub struct SchedulerOptions {
     pub placement: PlacementOptions,
     /// Thread-pool size for parallel per-group re-alignment (Fig 19b).
     pub pool_size: usize,
-    /// Reuse per-group plans across triggers when a group's fragment
-    /// signature is unchanged.  Exact: cache hits are verified by full
-    /// spec equality, so incremental plans are identical to from-scratch
-    /// plans (the proptests assert this).
+    /// Reuse state across triggers: per-group plans (exact — cache hits
+    /// are verified by full spec equality), the dirty-class merge cache,
+    /// DP warm hints, and — when `group.incremental` is also set — the
+    /// delta-aware grouping state.  With grouping reuse off the whole
+    /// incremental pipeline is exact (plans identical to from-scratch
+    /// planning, property-tested); with it on, unchanged demands still
+    /// replay byte-identical plans while perturbed triggers trade exact
+    /// group identity for an ε-audited objective bound.
     pub incremental: bool,
 }
 
@@ -122,6 +137,16 @@ pub struct ScheduleStats {
     /// Classes whose membership changed since the previous trigger and
     /// were re-merged (the rest spliced cached results).
     pub classes_remerged: usize,
+    /// Groups replayed byte-identically from the previous trigger by
+    /// the delta-aware grouping (incremental grouping only; 0 when off).
+    pub groups_replayed: usize,
+    /// Fragments the delta-aware grouping actually pushed through the
+    /// greedy this trigger (new, moved, or — on fallback — the whole
+    /// model slice).  0 on an unchanged trigger.
+    pub fragments_regrouped: usize,
+    /// Model slices where the delta path fell back to the from-scratch
+    /// greedy (churn over threshold or ε-audit breach).
+    pub group_fallbacks: usize,
     /// Suffix-DP states whose winning choice was seeded from the
     /// previous trigger's re-partition points (warm-started DP).
     pub dp_warm_hits: u64,
@@ -174,6 +199,10 @@ struct DpHintEntry {
 struct ReplanContext {
     merge: MergeCache,
     dp: HashMap<u64, DpHintEntry>,
+    /// Previous trigger's grouping state, keyed by model index (one
+    /// entry per model ever planned — bounded by the model count, so no
+    /// generational eviction is needed).
+    groups: HashMap<usize, GroupState>,
     generation: u64,
 }
 
@@ -197,6 +226,7 @@ impl Scheduler {
             replan: Mutex::new(ReplanContext {
                 merge: MergeCache::default(),
                 dp: HashMap::new(),
+                groups: HashMap::new(),
                 generation: 0,
             }),
         }
@@ -206,13 +236,14 @@ impl Scheduler {
         &self.cm
     }
 
-    /// Persist the cross-trigger replan context (merge-class cache +
-    /// DP choice tables) as JSON, so a restarted scheduler's first live
-    /// replan is still warm.  The exact group-plan cache is *not*
-    /// persisted: it stores whole plans (orders of magnitude bigger)
-    /// and a cold group recompute is precisely what the warm DP hints
-    /// accelerate.  Written atomically (tmp + rename), so a crash
-    /// mid-save never leaves a truncated context.
+    /// Persist the cross-trigger replan context (merge-class cache, DP
+    /// choice tables, per-model grouping state) as JSON, so a restarted
+    /// scheduler's first live replan is still warm.  The exact
+    /// group-plan cache is *not* persisted: it stores whole plans
+    /// (orders of magnitude bigger) and a cold group recompute is
+    /// precisely what the warm DP hints accelerate.  Written atomically
+    /// (tmp + rename), so a crash mid-save never leaves a truncated
+    /// context.
     pub fn save_replan_context(
         &self,
         path: &std::path::Path,
@@ -231,11 +262,24 @@ impl Scheduler {
             );
             dp.push(Json::Obj(o));
         }
+        // models sorted so the file is deterministic for a given state
+        let mut models: Vec<usize> = ctx.groups.keys().copied().collect();
+        models.sort_unstable();
+        let groups: Vec<Json> = models
+            .iter()
+            .map(|&m| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("model".into(), Json::Num(m as f64));
+                o.insert("state".into(), ctx.groups[&m].to_json());
+                Json::Obj(o)
+            })
+            .collect();
         let mut doc = std::collections::BTreeMap::new();
         doc.insert("context".into(), Json::Str("replan".into()));
-        doc.insert("schema_version".into(), Json::Num(1.0));
+        doc.insert("schema_version".into(), Json::Num(2.0));
         doc.insert("merge".into(), ctx.merge.to_json());
         doc.insert("dp".into(), Json::Arr(dp));
+        doc.insert("groups".into(), Json::Arr(groups));
         drop(ctx);
         let tmp = path.with_extension("tmp");
         std::fs::write(&tmp, format!("{}\n", Json::Obj(doc)))?;
@@ -245,10 +289,12 @@ impl Scheduler {
 
     /// Reload a context saved by [`Self::save_replan_context`] into
     /// this scheduler, replacing its current replan state.  Returns
-    /// `(merge classes, dp hints)` loaded.  Safe against stale or
-    /// mismatched files: merge entries are verified by full spec
-    /// equality on every lookup and DP hints are advisory, so the
-    /// worst a wrong context can do is miss.
+    /// `(merge classes, dp hints)` loaded.  Accepts schema v1 (pre
+    /// incremental grouping — no `groups` section) and v2.  Safe
+    /// against stale or mismatched files: merge entries are verified by
+    /// full spec equality on every lookup, DP hints are advisory, and
+    /// grouping state is diffed by member identity (a stale state just
+    /// shows up as churn), so the worst a wrong context can do is miss.
     pub fn load_replan_context(
         &self,
         path: &std::path::Path,
@@ -260,7 +306,7 @@ impl Scheduler {
             anyhow::bail!("not a replan context file");
         }
         let version = doc.get("schema_version")?.as_usize()?;
-        if version != 1 {
+        if !(1..=2).contains(&version) {
             anyhow::bail!("unsupported replan-context schema v{version}");
         }
         let merge = MergeCache::from_json(doc.get("merge")?)?;
@@ -270,10 +316,20 @@ impl Scheduler {
             let points = e.get("points")?.as_usize_vec()?;
             dp.insert(sig, DpHintEntry { points, generation: 0 });
         }
+        let mut groups = HashMap::new();
+        if version >= 2 {
+            for e in doc.get("groups")?.as_arr()? {
+                groups.insert(
+                    e.get("model")?.as_usize()?,
+                    GroupState::from_json(e.get("state")?)?,
+                );
+            }
+        }
         let counts = (merge.len(), dp.len());
         let mut ctx = lock_recover(&self.replan);
         ctx.merge = merge;
         ctx.dp = dp;
+        ctx.groups = groups;
         ctx.generation = 0;
         Ok(counts)
     }
@@ -290,6 +346,7 @@ impl Scheduler {
         let mut ctx = lock_recover(&self.replan);
         ctx.merge.clear();
         ctx.dp.clear();
+        ctx.groups.clear();
     }
 
     /// Produce the execution plan for the given demands.
@@ -339,11 +396,36 @@ impl Scheduler {
             }
         }
         let mut idx_groups: Vec<Vec<usize>> = Vec::new();
-        for &(a, b) in &ranges {
-            for idx_group in
-                group_fragments(&merged[a..b], &self.opts.group)
-            {
-                idx_groups.push(idx_group.into_iter().map(|i| a + i).collect());
+        if self.opts.incremental && self.opts.group.incremental {
+            // delta-aware grouping: diff each model slice against the
+            // previous trigger's persisted state
+            let mut ctx = lock_recover(&self.replan);
+            for &(a, b) in &ranges {
+                let model = merged[a].model;
+                let (delta, state) = group_fragments_incremental(
+                    &merged[a..b],
+                    &self.opts.group,
+                    ctx.groups.get(&model),
+                );
+                stats.groups_replayed += delta.replayed;
+                stats.fragments_regrouped += delta.regrouped;
+                if delta.fell_back {
+                    stats.group_fallbacks += 1;
+                }
+                for ig in delta.groups {
+                    idx_groups
+                        .push(ig.into_iter().map(|i| a + i).collect());
+                }
+                ctx.groups.insert(model, state);
+            }
+        } else {
+            for &(a, b) in &ranges {
+                for idx_group in
+                    group_fragments(&merged[a..b], &self.opts.group)
+                {
+                    idx_groups
+                        .push(idx_group.into_iter().map(|i| a + i).collect());
+                }
             }
         }
         let mut slots: Vec<Option<FragmentSpec>> =
@@ -755,16 +837,36 @@ mod tests {
         let d = demands(s.cost_model());
         let (first, st1) = s.plan(&d);
         assert_eq!(st1.n_groups_reused, 0);
+        assert_eq!(st1.fragments_regrouped, st1.n_after_merge);
         // identical demands: every group replays from the cache …
         let (second, st2) = s.plan(&d);
         assert_eq!(st2.n_groups_reused, st2.n_groups);
+        // … the delta-aware grouping regroups nothing …
+        assert_eq!(st2.fragments_regrouped, 0);
+        assert_eq!(st2.groups_replayed, st2.n_groups);
+        assert_eq!(st2.group_fallbacks, 0);
         // … with a byte-identical plan
         assert_eq!(first, second);
     }
 
+    /// Grouping reuse pinned off: the rest of the incremental pipeline
+    /// (merge, DP, placement) stays exact — plans byte-identical to a
+    /// fresh scheduler after a perturbation.
     #[test]
     fn incremental_matches_from_scratch_after_change() {
-        let s = scheduler();
+        let exact = || {
+            Scheduler::new(
+                CostModel::new(Config::embedded()),
+                SchedulerOptions {
+                    group: GroupOptions {
+                        incremental: false,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            )
+        };
+        let s = exact();
         let mut d = demands(s.cost_model());
         let _ = s.plan(&d);
         // a partition-point change (the re-planning trigger)
@@ -773,8 +875,35 @@ mod tests {
         let (incremental, st) = s.plan(&d);
         // changed groups must not silently replay
         assert!(st.n_groups_reused < st.n_groups || st.n_groups == 0);
-        let fresh = scheduler().plan(&d).0;
+        assert_eq!(st.groups_replayed, 0, "grouping reuse is off");
+        let fresh = exact().plan(&d).0;
         assert_eq!(incremental, fresh);
+    }
+
+    /// Default pipeline (incremental grouping on): a perturbed trigger
+    /// no longer promises byte-identity with a fresh plan, but it must
+    /// stay a *valid* plan of comparable quality, touching only the
+    /// changed fragments.
+    #[test]
+    fn incremental_grouping_keeps_plan_quality_after_change() {
+        let s = scheduler();
+        let mut d = demands(s.cost_model());
+        let _ = s.plan(&d);
+        d[0].p = 5;
+        d[3].budget_ms += 11.0;
+        let (plan, st) = s.plan(&d);
+        assert!(st.fragments_regrouped > 0, "change must be regrouped");
+        assert!(st.fragments_regrouped < st.n_after_merge || st.group_fallbacks > 0);
+        assert!(plan.infeasible.is_empty());
+        assert!(plan_is_slo_safe(&plan));
+        assert!(plan_covers_demand(&plan));
+        let fresh = scheduler().plan(&d).0;
+        assert!(
+            plan.total_share() as f64 <= fresh.total_share() as f64 * 1.2,
+            "incremental share {} vs fresh {}",
+            plan.total_share(),
+            fresh.total_share()
+        );
     }
 
     #[test]
@@ -856,7 +985,8 @@ mod tests {
     #[test]
     fn reuse_counters_track_replan_work() {
         // placement off isolates the merge/repartition counters from
-        // feedback-round recomputation
+        // feedback-round recomputation; grouping reuse off keeps the
+        // final fresh-plan identity assertion exact
         let cm = CostModel::new(Config::embedded());
         let s = Scheduler::new(
             cm,
@@ -865,6 +995,7 @@ mod tests {
                     enabled: false,
                     ..Default::default()
                 },
+                group: GroupOptions { incremental: false, ..Default::default() },
                 ..Default::default()
             },
         );
@@ -890,6 +1021,7 @@ mod tests {
                     enabled: false,
                     ..Default::default()
                 },
+                group: GroupOptions { incremental: false, ..Default::default() },
                 ..Default::default()
             },
         );
@@ -917,6 +1049,9 @@ mod tests {
         // the reloaded hints — with a byte-identical plan
         let (replanned, st) = s2.plan(&d);
         assert_eq!(st.classes_remerged, 0, "merge cache not warm");
+        // the persisted grouping state replays every group untouched
+        assert_eq!(st.fragments_regrouped, 0, "grouping state not warm");
+        assert_eq!(st.groups_replayed, st.n_groups);
         // a winning standalone fallback is rank-0 (never "hinted"), so
         // warm hits are only guaranteed where the plan truly realigned
         let realigned = first.sets.iter().any(|s| {
@@ -928,6 +1063,38 @@ mod tests {
         assert_eq!(replanned, first);
         // garbage or missing files fail cleanly
         assert!(s2.load_replan_context(&path.with_extension("nope")).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_replan_context_still_loads() {
+        // a pre-incremental-grouping context (schema v1, no "groups"
+        // section) must load cleanly; the first replan is merge/DP-warm
+        // but grouping-cold
+        let path = std::env::temp_dir().join(format!(
+            "graft_replan_ctx_v1_{}.json",
+            std::process::id()
+        ));
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let _ = s.plan(&d);
+        s.save_replan_context(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut doc = crate::util::Json::parse(text.trim()).unwrap();
+        if let crate::util::Json::Obj(m) = &mut doc {
+            m.insert("schema_version".into(), crate::util::Json::Num(1.0));
+            m.remove("groups");
+        }
+        std::fs::write(&path, format!("{doc}\n")).unwrap();
+        let s2 = scheduler();
+        let (merge_classes, _) = s2.load_replan_context(&path).unwrap();
+        assert!(merge_classes > 0);
+        let (_, st) = s2.plan(&d);
+        assert_eq!(st.classes_remerged, 0, "merge cache not warm");
+        assert_eq!(
+            st.fragments_regrouped, st.n_after_merge,
+            "v1 context carries no grouping state: cold regroup"
+        );
         std::fs::remove_file(&path).ok();
     }
 
@@ -945,5 +1112,8 @@ mod tests {
         let (_, st2) = s.plan(&d);
         assert_eq!(st2.dp_warm_hits, 0);
         assert_eq!(st2.n_groups_reused, 0);
+        assert_eq!(st2.groups_replayed, 0);
+        assert_eq!(st2.fragments_regrouped, 0);
+        assert_eq!(st2.group_fallbacks, 0);
     }
 }

@@ -19,7 +19,9 @@ use crate::coordinator::baselines::{gslice, gslice_plus};
 use crate::coordinator::merging::MergeOptions;
 use crate::coordinator::optimal::optimal_plan;
 use crate::coordinator::placement::{place, PlacementOptions};
-use crate::coordinator::repartition::RepartitionOptions;
+use crate::coordinator::repartition::{
+    plan_covers_demand, plan_is_slo_safe, RepartitionOptions,
+};
 use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use crate::coordinator::{ExecutionPlan, FragmentSpec};
 use crate::sim::pack;
@@ -677,8 +679,21 @@ pub struct ReplanPoint {
     pub grid_points_replan: u64,
     pub total_share: u32,
     pub gpus: usize,
-    /// Replanned plan is byte-identical to the fresh cold plan.
-    pub identical: bool,
+    /// Grouping time of the fresh cold plan (scratch greedy at this n).
+    pub group_cold_ms: f64,
+    /// Grouping time of the warm replan (delta-aware path).
+    pub group_replan_ms: f64,
+    /// Groups the warm replan replayed byte-identically.
+    pub groups_replayed: usize,
+    /// Fragments the warm replan pushed through the greedy.
+    pub fragments_regrouped: usize,
+    /// Replanned plan covers every input client exactly once.
+    pub covers: bool,
+    /// Every replanned set meets its tightest member budget.
+    pub slo_safe: bool,
+    /// Replan share / fresh-cold share (quality vs the scratch
+    /// pipeline; 1.0 means no share was given up for incrementality).
+    pub share_ratio: f64,
 }
 
 /// Move `pct`% of the clients' partition points and budgets — the
@@ -702,7 +717,11 @@ pub fn perturb_fragments(
 
 /// Cold-plan a mixed fleet of `n` clients, perturb `pct`% of them,
 /// re-plan incrementally on the same scheduler and compare against a
-/// fresh cold plan of the perturbed demands (time *and* plan identity).
+/// fresh cold plan of the perturbed demands: replan time (and grouping
+/// time specifically) must beat the cold pipeline, and the replanned
+/// plan must match its quality (coverage, SLO safety, share ratio) —
+/// exact plan identity is no longer promised now that grouping reuse is
+/// heuristic.
 pub fn replan_scenario(n: usize, pct: usize, seed: u64) -> ReplanPoint {
     use crate::util::bench::time_ms;
     let cfg = Config::embedded();
@@ -714,12 +733,13 @@ pub fn replan_scenario(n: usize, pct: usize, seed: u64) -> ReplanPoint {
     perturb_fragments(&cm, &mut specs, pct);
     let (replan_ms, (replan_plan, replan_stats)) =
         time_ms(|| sched.plan(&specs));
-    // identity reference: a fresh scheduler, cold, on the same demands
+    // quality reference: a fresh scheduler, cold, on the same demands
     let fresh = Scheduler::new(
         CostModel::new(cfg),
         SchedulerOptions::default(),
     );
-    let (cold_fresh_ms, (fresh_plan, _)) = time_ms(|| fresh.plan(&specs));
+    let (cold_fresh_ms, (fresh_plan, fresh_stats)) =
+        time_ms(|| fresh.plan(&specs));
 
     ReplanPoint {
         n_clients: n,
@@ -737,7 +757,14 @@ pub fn replan_scenario(n: usize, pct: usize, seed: u64) -> ReplanPoint {
         grid_points_replan: replan_stats.grid_points_evaluated,
         total_share: replan_plan.total_share(),
         gpus: replan_stats.gpus,
-        identical: replan_plan == fresh_plan,
+        group_cold_ms: fresh_stats.group_ms,
+        group_replan_ms: replan_stats.group_ms,
+        groups_replayed: replan_stats.groups_replayed,
+        fragments_regrouped: replan_stats.fragments_regrouped,
+        covers: plan_covers_demand(&replan_plan),
+        slo_safe: plan_is_slo_safe(&replan_plan),
+        share_ratio: replan_plan.total_share() as f64
+            / (fresh_plan.total_share() as f64).max(1e-9),
     }
 }
 
@@ -755,7 +782,9 @@ pub fn replan_scale(_cm: &CostModel) -> Table {
         "classes_remerged",
         "merge_classes",
         "dp_warm_hits",
-        "identical",
+        "groups_replayed",
+        "fragments_regrouped",
+        "share_ratio",
     ]);
     for &n in &[256usize, 1024] {
         for &pct in &[1usize, 5, 20] {
@@ -771,7 +800,9 @@ pub fn replan_scale(_cm: &CostModel) -> Table {
                 r.classes_remerged.to_string(),
                 r.merge_classes.to_string(),
                 r.dp_warm_hits.to_string(),
-                r.identical.to_string(),
+                r.groups_replayed.to_string(),
+                r.fragments_regrouped.to_string(),
+                f(r.share_ratio, 3),
             ]);
         }
     }
@@ -1355,14 +1386,24 @@ mod tests {
     }
 
     #[test]
-    fn replan_scenario_is_exact_and_reuses() {
+    fn replan_scenario_reuses_and_keeps_quality() {
         let r = replan_scenario(48, 20, 7);
-        assert!(r.identical, "incremental replan diverged from cold");
+        // the replanned plan is a valid plan of cold-pipeline quality
+        // (grouping reuse is heuristic, so byte-identity is no longer
+        // the contract — coverage, SLO safety and share are)
+        assert!(r.covers, "replanned plan lost clients");
+        assert!(r.slo_safe, "replanned plan violates budgets");
+        assert!(
+            r.share_ratio <= 1.2,
+            "replanned share {} too far above fresh cold",
+            r.share_ratio
+        );
         assert!(r.groups_reused <= r.n_groups);
         assert!(r.classes_remerged <= r.merge_classes);
         assert!(r.cold_ms > 0.0 && r.replan_ms > 0.0);
         // 20% of 48 clients moved: something must actually be dirty …
         assert!(r.classes_remerged > 0);
+        assert!(r.fragments_regrouped > 0, "perturbation must regroup");
         // … and something must replay (same-model clean classes exist)
         assert!(r.merge_classes > r.classes_remerged);
     }

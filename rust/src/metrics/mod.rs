@@ -31,15 +31,21 @@ impl LatencyStats {
         self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
     }
 
-    /// Percentile in [0, 100] by nearest-rank on the sorted samples.
+    /// Percentile in [0, 100] by the nearest-rank definition: the
+    /// smallest sample such that at least `p`% of the samples are ≤ it
+    /// — `rank = ⌈p/100 · n⌉` (1-indexed, clamped to [1, n]).  Exact
+    /// midpoints take the *lower* of the two middle samples (p50 of
+    /// 200 samples is the 100th, not the 101st); p = 0 returns the
+    /// minimum.  Always an actual sample, never an interpolation.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples_ms.is_empty() {
             return f64::NAN;
         }
         let mut v = self.samples_ms.clone();
         v.sort_by(f64::total_cmp);
-        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-        v[rank.min(v.len() - 1)]
+        let n = v.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        v[rank.clamp(1, n) - 1]
     }
 
     /// Fraction of samples ≤ `slo_ms`.
@@ -51,19 +57,25 @@ impl LatencyStats {
             / self.samples_ms.len() as f64
     }
 
-    /// CDF points (x sorted latency, y cumulative fraction) for figures.
+    /// CDF points (x sorted latency, y cumulative fraction) for
+    /// figures.  The last point is always `(max, 1.0)` — in particular
+    /// `cdf(1)` summarizes the whole distribution as its maximum, not
+    /// (as it used to) the minimum with cumulative fraction 1/n.
     pub fn cdf(&self, points: usize) -> Vec<(f64, f64)> {
-        if self.samples_ms.is_empty() {
+        if self.samples_ms.is_empty() || points == 0 {
             return Vec::new();
         }
         let mut v = self.samples_ms.clone();
         v.sort_by(f64::total_cmp);
+        let n = v.len();
+        if points == 1 {
+            return vec![(v[n - 1], 1.0)];
+        }
         (0..points)
             .map(|i| {
-                let f = i as f64 / (points - 1).max(1) as f64;
-                let idx =
-                    ((v.len() - 1) as f64 * f).round() as usize;
-                (v[idx], (idx + 1) as f64 / v.len() as f64)
+                let f = i as f64 / (points - 1) as f64;
+                let idx = ((n - 1) as f64 * f).round() as usize;
+                (v[idx], (idx + 1) as f64 / n as f64)
             })
             .collect()
     }
@@ -112,6 +124,31 @@ mod tests {
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
         assert!(s.cdf(5).is_empty());
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_at_exact_midpoints() {
+        // p50 of an even count: nearest-rank takes the lower middle
+        // sample (the round-half-away indexing it replaced took the
+        // upper one)
+        let s = stats(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.percentile(50.0), 2.0);
+        assert_eq!(s.percentile(25.0), 1.0);
+        assert_eq!(s.percentile(75.0), 3.0);
+        // 200 samples 1..=200: p50 is the 100th sample, p99 the 198th
+        let v: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let s = stats(&v);
+        assert_eq!(s.percentile(50.0), 100.0);
+        assert_eq!(s.percentile(99.0), 198.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 200.0);
+    }
+
+    #[test]
+    fn single_point_cdf_covers_the_distribution() {
+        let s = stats(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.cdf(1), vec![(5.0, 1.0)]);
+        assert!(s.cdf(0).is_empty());
     }
 
     #[test]

@@ -7,7 +7,9 @@ mod common;
 use std::time::Duration;
 
 use graft::config::Config;
-use graft::coordinator::grouping::{group_fragments, GroupOptions};
+use graft::coordinator::grouping::{
+    group_fragments, group_fragments_incremental, GroupOptions, GroupState,
+};
 use graft::coordinator::merging::{
     merge_fragments, merge_fragments_incremental, MergeCache, MergeOptions,
 };
@@ -134,6 +136,129 @@ fn prop_grouping_is_balanced_disjoint_cover() {
 }
 
 #[test]
+fn prop_incremental_grouping_replays_and_bounds_drift() {
+    // The heuristic delta-aware grouping's contracts across evolving
+    // same-model demand sets:
+    //  (a) every trigger's output is a balanced disjoint cover;
+    //  (b) a perturbed trigger regroups exactly the perturbed fragments
+    //      and churns at most two groups per perturbed fragment (its old
+    //      group and its new one) — unless it fell back to scratch;
+    //  (c) with the ε-audit forced (`audit_limit: usize::MAX`), any
+    //      surviving (non-fallback) grouping is within ε of the scratch
+    //      oracle by construction — breaches fall back, so the output is
+    //      ε-bounded either way;
+    //  (d) replaying the identical demand replays every group
+    //      byte-identically and leaves the persisted state untouched.
+    // a grouping as the set of its groups' sorted member identities
+    fn key_sets(
+        specs: &[FragmentSpec],
+        groups: &[Vec<usize>],
+    ) -> std::collections::HashSet<Vec<Vec<u32>>> {
+        groups
+            .iter()
+            .map(|g| {
+                let mut ks: Vec<Vec<u32>> = g
+                    .iter()
+                    .map(|&i| {
+                        let mut c: Vec<u32> = specs[i]
+                            .clients
+                            .iter()
+                            .map(|c| c.0)
+                            .collect();
+                        c.sort_unstable();
+                        c
+                    })
+                    .collect();
+                ks.sort();
+                ks
+            })
+            .collect()
+    }
+    let cm = cm();
+    for case in 0..20u64 {
+        let mut rng = Rng::seed_from_u64(17_000 + case);
+        let model = rng.below(cm.config().models.len());
+        let n = 20 + rng.below(120);
+        let mut specs = random_specs(&mut rng, &cm, model, n);
+        let opts = GroupOptions {
+            audit_limit: usize::MAX, // force the ε-audit at every n
+            seed: case,
+            ..Default::default()
+        };
+        let mut state: Option<GroupState> = None;
+        let mut prev_sets: Option<std::collections::HashSet<Vec<Vec<u32>>>> =
+            None;
+        for step in 0..4 {
+            let mut perturbed = Vec::new();
+            if step > 0 {
+                // move a few budgets (identities — client sets — stay)
+                for _ in 0..1 + rng.below(3) {
+                    perturbed.push(rng.below(n));
+                }
+                perturbed.sort_unstable();
+                perturbed.dedup();
+                for &i in &perturbed {
+                    specs[i].budget_ms += rng.range(0.5, 2.0);
+                }
+            }
+            let (delta, next) =
+                group_fragments_incremental(&specs, &opts, state.as_ref());
+            // (a) balanced disjoint cover, same cap as the scratch greedy
+            let mut all: Vec<usize> = delta.groups.concat();
+            all.sort_unstable();
+            assert_eq!(
+                all,
+                (0..n).collect::<Vec<_>>(),
+                "case {case} step {step}"
+            );
+            let cap = n.div_ceil(n.div_ceil(opts.group_size));
+            for g in &delta.groups {
+                assert!(
+                    !g.is_empty() && g.len() <= cap,
+                    "case {case} step {step}: group sizes {:?}",
+                    delta.groups.iter().map(Vec::len).collect::<Vec<_>>()
+                );
+            }
+            if step > 0 && !delta.fell_back {
+                // (b) only the perturbed fragments went back through
+                // the greedy, and the group churn is bounded by them
+                assert_eq!(
+                    delta.regrouped,
+                    perturbed.len(),
+                    "case {case} step {step}"
+                );
+                let next_sets = key_sets(&specs, &delta.groups);
+                let churned = next_sets
+                    .iter()
+                    .filter(|s| !prev_sets.as_ref().unwrap().contains(*s))
+                    .count();
+                assert!(
+                    churned <= 2 * perturbed.len(),
+                    "case {case} step {step}: {churned} groups churned \
+                     for {} perturbed fragments",
+                    perturbed.len()
+                );
+            }
+            prev_sets = Some(key_sets(&specs, &delta.groups));
+            state = Some(next);
+        }
+        // (d) unchanged replay: nothing regrouped, state bit-stable
+        let before = state.clone().unwrap();
+        let (replay, after) =
+            group_fragments_incremental(&specs, &opts, state.as_ref());
+        assert_eq!(replay.regrouped, 0, "case {case}");
+        assert_eq!(replay.replayed, before.groups.len(), "case {case}");
+        assert!(!replay.fell_back, "case {case}");
+        assert_eq!(after, before, "case {case}: replay state drifted");
+        assert_eq!(
+            key_sets(&specs, &replay.groups),
+            prev_sets.unwrap(),
+            "case {case}: replayed groups differ"
+        );
+    }
+}
+
+#[test]
 fn prop_realign_plans_are_safe_and_cover_all_clients() {
     let cm = cm();
     for case in 0..40u64 {
@@ -231,6 +356,17 @@ fn prop_cached_planner_identical_to_uncached() {
     }
 }
 
+/// Scheduler options with the heuristic delta-aware grouping pinned off:
+/// the exact lane, where incremental replanning is byte-identical to a
+/// from-scratch plan (the default lane's grouping is ε-bounded instead —
+/// `prop_incremental_grouping_replays_and_bounds_drift`).
+fn exact_opts() -> SchedulerOptions {
+    SchedulerOptions {
+        group: GroupOptions { incremental: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
 #[test]
 fn prop_incremental_replanning_identical_to_from_scratch() {
     // Trigger-based re-planning: a long-lived scheduler re-planning an
@@ -241,7 +377,7 @@ fn prop_incremental_replanning_identical_to_from_scratch() {
         let cm = CostModel::new(cfg.clone());
         let n = 10 + rng.below(50);
         let mut specs = random_mixed_specs(&mut rng, &cm, n);
-        let live = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let live = Scheduler::new(cm.clone(), exact_opts());
         for step in 0..4 {
             if step > 0 {
                 // perturb a random subset (partition points and budgets
@@ -400,17 +536,18 @@ fn prop_incremental_merge_identical_to_scratch() {
 
 #[test]
 fn prop_warm_replan_never_worse_than_cold() {
-    // The delta-aware pipeline (dirty-class merge + group replay +
-    // warm-started DP + adaptive grid) must track a fresh cold planner
-    // exactly across perturbation triggers: same total share, same GPU
-    // count — in fact byte-identical plans.
+    // The exact-lane delta-aware pipeline (dirty-class merge + group
+    // replay + warm-started DP + adaptive grid, heuristic incremental
+    // grouping pinned off) must track a fresh cold planner exactly
+    // across perturbation triggers: same total share, same GPU count —
+    // in fact byte-identical plans.
     for case in 0..5u64 {
         let mut rng = Rng::seed_from_u64(16_000 + case);
         let cfg = Config::embedded();
         let cm = CostModel::new(cfg.clone());
         let n = 10 + rng.below(50);
         let mut specs = random_mixed_specs(&mut rng, &cm, n);
-        let live = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let live = Scheduler::new(cm.clone(), exact_opts());
         for step in 0..4 {
             if step > 0 {
                 for s in specs.iter_mut() {
@@ -422,10 +559,8 @@ fn prop_warm_replan_never_worse_than_cold() {
                 }
             }
             let (warm, _) = live.plan(&specs);
-            let cold = Scheduler::new(
-                CostModel::new(cfg.clone()),
-                SchedulerOptions::default(),
-            );
+            let cold =
+                Scheduler::new(CostModel::new(cfg.clone()), exact_opts());
             let (cold_plan, _) = cold.plan(&specs);
             // the stated bound: no worse on share or GPUs …
             assert!(

@@ -3,6 +3,7 @@
 
 use graft::config::Config;
 use graft::coordinator::baselines::{gslice, gslice_plus};
+use graft::coordinator::grouping::{group_fragments, GroupOptions};
 use graft::coordinator::repartition::{plan_covers_demand, plan_is_slo_safe};
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::experiments::common::{
@@ -121,6 +122,34 @@ fn replanning_tracks_bandwidth_changes() {
         shares.iter().any(|&s| s != shares[0]),
         "resource demand never changed across the trace: {shares:?}"
     );
+}
+
+#[test]
+#[ignore] // stress tier: ~2500² dense similarity matrix (tools/ci.sh --stress)
+fn lazy_similarity_table_matches_dense_at_scale() {
+    // Above GroupOptions::dense_limit (default 2048) the greedy switches
+    // from the precomputed dense similarity matrix to on-the-fly
+    // evaluation.  The two lookups must be bit-equal, so the grouping
+    // must be identical — here at a size where the default options
+    // actually take the lazy path and the dense side is forced.
+    let cm = cm();
+    let mi = cm.model_index("res").unwrap();
+    let n = 2500;
+    let specs = random_fragments(&cm, mi, n, 7);
+    assert_eq!(specs.len(), n);
+    let lazy_opts = GroupOptions::default();
+    assert!(n > lazy_opts.dense_limit, "stress size must force Lazy");
+    let dense_opts =
+        GroupOptions { dense_limit: usize::MAX, ..Default::default() };
+    let lazy = group_fragments(&specs, &lazy_opts);
+    let dense = group_fragments(&specs, &dense_opts);
+    assert_eq!(lazy, dense, "lazy SimTable diverged from dense");
+    // and the output is a balanced disjoint cover at this scale
+    let mut all: Vec<usize> = lazy.concat();
+    all.sort_unstable();
+    assert_eq!(all, (0..n).collect::<Vec<_>>());
+    let cap = n.div_ceil(n.div_ceil(lazy_opts.group_size));
+    assert!(lazy.iter().all(|g| !g.is_empty() && g.len() <= cap));
 }
 
 #[test]

@@ -275,6 +275,111 @@ fn controller_replans_on_observed_drift() {
 }
 
 #[test]
+fn controller_replans_on_unplanned_model_surge() {
+    let _wd = watchdog("controller_surge", Duration::from_secs(180));
+    // the zero-planned-rate regression: a model whose demand specs are
+    // all zero-rated has no meaningful relative drift, and the
+    // controller used to skip it outright — real traffic on it could
+    // never fire a replan.  Above `unplanned_rate_floor` it must now
+    // walk the same surge to TickOutcome::Replanned.
+    let cm = cm();
+    let mi = cm.model_index("inc").unwrap();
+    let mk = |rate: f64| -> Vec<FragmentSpec> {
+        (0..4)
+            .map(|i| {
+                FragmentSpec::single(
+                    ClientId(i),
+                    mi,
+                    3,
+                    130.0 + i as f64,
+                    rate,
+                )
+            })
+            .collect()
+    };
+    let sched =
+        Arc::new(Scheduler::new(cm.clone(), SchedulerOptions::default()));
+    // deploy a real plan for these clients, but hand the controller a
+    // demand model that expects *no* traffic on them
+    let (plan, _) = sched.plan(&mk(1.0));
+    let live = Arc::new(LiveServer::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    ));
+    let ctrl = ReplanController::new(
+        sched,
+        live.clone(),
+        mk(0.0),
+        ControllerOptions {
+            drift_threshold: 0.5,
+            min_requests: 10,
+            rate_clamp: (0.2, 1e9),
+            unplanned_rate_floor: 0.5,
+            ..Default::default()
+        },
+    );
+    assert!(matches!(ctrl.tick(), TickOutcome::Baseline));
+    assert!(matches!(ctrl.tick(), TickOutcome::TooFewRequests { .. }));
+
+    // a burst on the supposedly-idle model
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let total = 4 * 300;
+    for seq in 0..300u32 {
+        for c in 0..4u32 {
+            live.submit(
+                Request {
+                    client_id: c,
+                    model: mi as u16,
+                    p: 3,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: vec![0.25; dims[3]],
+                },
+                tx.clone(),
+            );
+        }
+    }
+    drop(tx);
+    assert_eq!(rx.iter().take(total).count(), total);
+
+    match ctrl.tick() {
+        TickOutcome::Replanned { max_drift, scaled_models, report } => {
+            // pseudo-drift o/floor is at least threshold-exceeding
+            assert!(max_drift >= 0.5, "drift {max_drift}");
+            assert_eq!(scaled_models, 1);
+            assert_eq!(report.old_rejected, 0);
+            assert_eq!(report.old_dropped, 0);
+            assert_eq!(live.swap_count(), 1);
+            // the observed rate was distributed across the zero-rated
+            // specs, and the deployed plan moved with it
+            let scaled = ctrl.demands();
+            assert!(scaled.iter().all(|s| s.rate_rps > 0.0));
+            let t = diff_plans(&plan, &live.plan());
+            assert!(
+                t.updated_sets + t.added_sets + t.removed_sets > 0,
+                "deployed plan did not change"
+            );
+        }
+        other => panic!("expected a surge replan, got {other:?}"),
+    }
+    drop(ctrl);
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(_) => panic!("live server still shared"),
+    }
+}
+
+#[test]
 fn adaptive_batch_window_serves_the_same_workload() {
     let _wd = watchdog("adaptive_window", Duration::from_secs(120));
     // adaptive windows are a pacing heuristic: with a live arrival-rate

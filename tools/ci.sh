@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI pipeline: build, test, style gates, and fast bench smoke runs:
 # planner (n=200, re-validates cached==uncached plan identity plus the
-# replan scenario's warm<=cold and plan-identity self-checks), serving
+# replan scenario's warm<=cold, incremental-grouping and plan-quality
+# self-checks), serving
 # (n=100, both executors), placement (n=200, integrated-vs-oracle GPU
 # counts + cap checks), transition (n=200, live hot-swap: zero-drop
 # + delta-vs-repack migration bounds) and faults (n=200, single-GPU
@@ -9,8 +10,10 @@
 #
 #   tools/ci.sh            full pipeline
 #   tools/ci.sh --fast     build + test only
-#   tools/ci.sh --stress   build + the #[ignore]d serving stress test
+#   tools/ci.sh --stress   build + the #[ignore]d stress tests: serving
 #                          (64 instances x 10k requests, pooled executor)
+#                          and scheduler (lazy-vs-dense similarity table
+#                          at n=2500)
 #
 # Concurrency tests carry in-test watchdogs that abort on deadlock; the
 # `timeout` wrappers here are the outer belt-and-braces so a wedged
@@ -29,6 +32,9 @@ cargo build --release
 if [[ "$STRESS" == "1" ]]; then
     echo "== serving stress (64 instances x 10k requests, cap 900s) =="
     timeout 900 cargo test --release --test serving_stress -- \
+        --ignored --nocapture
+    echo "== scheduler stress (lazy-vs-dense grouping at n=2500, cap 900s) =="
+    timeout 900 cargo test --release --test scheduler_integration -- \
         --ignored --nocapture
     echo "ci: stress OK"
     exit 0
@@ -62,13 +68,19 @@ else
 fi
 
 echo "== bench smoke (n=200, incl. trigger-to-trigger replan scenario) =="
-# the replan scenario self-checks warm replan <= cold plan time and
-# incremental-vs-cold plan identity inside the bench (it bails hard);
-# the grep asserts the section actually landed in the JSON
+# the replan scenario self-checks warm replan <= cold plan time,
+# incremental grouping <= scratch grouping time at small perturbations,
+# and replanned-plan quality (coverage/SLO-safety/share slack vs a
+# fresh cold plan) inside the bench (it bails hard); the greps assert
+# the section, the grouping counters and the per-row grouping_ok flag
+# actually landed in the JSON
 timeout 600 cargo run --release -p graft -- bench-scheduler \
     --sizes 200 --reps 1 --out target/BENCH_scheduler_smoke.json
 test -s target/BENCH_scheduler_smoke.json
 grep -q '"replan"' target/BENCH_scheduler_smoke.json
+grep -q '"groups_replayed"' target/BENCH_scheduler_smoke.json
+grep -q '"fragments_regrouped"' target/BENCH_scheduler_smoke.json
+grep -q '"grouping_ok":true' target/BENCH_scheduler_smoke.json
 
 echo "== serving bench smoke (n=100, both executors) =="
 timeout 600 cargo run --release -p graft -- bench-serving \
