@@ -61,7 +61,13 @@ pub struct ControllerOptions {
     pub unplanned_rate_floor: f64,
     /// Persist the scheduler's replan context here after every replan
     /// ([`Scheduler::save_replan_context`]), so a restarted scheduler
-    /// warm-starts its first live replan.
+    /// warm-starts its first live replan.  The save is dirty-flagged:
+    /// a replan that changed no persisted state (the steady-state loop)
+    /// skips the atomic rewrite entirely, so pointing this at disk
+    /// costs no I/O per tick unless the plan actually moved.  Replans
+    /// themselves run on the scheduler's sharded planner — set
+    /// `SchedulerOptions::planner_threads` > 1 to parallelise the
+    /// per-model shards with byte-identical plans.
     pub context_path: Option<PathBuf>,
 }
 

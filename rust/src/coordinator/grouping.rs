@@ -15,6 +15,12 @@
 //! previous trigger's groups byte-identically, and only new/changed
 //! fragments go through the greedy — with the from-scratch path kept as
 //! the fallback and audit oracle.
+//!
+//! Grouping never crosses models (each call sees one model's merged
+//! slice), so each [`GroupState`] is owned by exactly one per-model
+//! planner shard: sharded planning replays grouping state inside each
+//! shard worker with no cross-shard locking, and the per-shard results
+//! are byte-identical to a sequential pass over the same slices.
 
 use std::collections::{BTreeMap, HashMap};
 

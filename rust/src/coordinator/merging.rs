@@ -268,6 +268,27 @@ impl MergeCache {
         }
         Ok(cache)
     }
+
+    /// Partition the cached classes into per-model caches.  A uniform
+    /// class never spans models ([`class_ranges`] splits on the model
+    /// key), so this is an exact re-keying — used by the scheduler to
+    /// route a persisted (globally keyed) cache to its per-model
+    /// planner shards.
+    pub fn split_by_model(
+        self,
+    ) -> std::collections::HashMap<usize, MergeCache> {
+        let mut out: std::collections::HashMap<usize, MergeCache> =
+            std::collections::HashMap::new();
+        for (sig, bucket) in self.map {
+            for e in bucket {
+                let model = e.specs.first().map_or(0, |s| s.model);
+                let shard = out.entry(model).or_default();
+                shard.map.entry(sig).or_default().push(e);
+                shard.entries += 1;
+            }
+        }
+        out
+    }
 }
 
 /// Outcome of one incremental merge pass.

@@ -60,6 +60,26 @@ impl Default for PlacementOptions {
     }
 }
 
+/// Stream-merge entry point for the sharded planner: concatenate
+/// per-shard instance streams — already in ascending shard (model)
+/// order — into the single plan the global placement pass packs.
+/// Placement deliberately stays global: FFD bin-packing is a
+/// cross-model optimisation (instances of different models share
+/// GPUs), so packing shards independently would change GPU counts;
+/// only the stages *before* placement are per-model independent.
+/// Pure concatenation ([`ExecutionPlan::merge_with`] preserves set
+/// order), so the merged stream is byte-identical to what the
+/// sequential pipeline would have emitted.
+pub fn merge_shard_streams(
+    shards: impl IntoIterator<Item = ExecutionPlan>,
+) -> ExecutionPlan {
+    let mut plan = ExecutionPlan::default();
+    for p in shards {
+        plan.merge_with(p);
+    }
+    plan
+}
+
 /// Unused share fraction of a packing: `1 − used / (gpus · max_share)`
 /// (0 for an empty packing).  The single definition shared by the
 /// planner-integrated [`Placement`] and the offline `sim::cluster`

@@ -76,8 +76,11 @@ impl Default for RepartitionOptions {
 }
 
 /// Search-effort counters of one (or many) re-partitioning passes.
-/// Atomic because groups re-align on the parallel pool; the scheduler
-/// folds them into [`crate::coordinator::ScheduleStats`].
+/// Atomic because groups re-align on the parallel pool — and because
+/// one instance is shared across all planner-shard workers of a
+/// sharded trigger, each realigning its own groups concurrently; the
+/// scheduler folds the totals into
+/// [`crate::coordinator::ScheduleStats`].
 #[derive(Debug, Default)]
 pub struct RepartitionTelemetry {
     /// d_shared grid points whose member sweep ran (fully or until the

@@ -30,6 +30,18 @@ use super::plan::{ExecutionPlan, MemberPlan};
 use super::repartition::{standalone_set, RepartitionOptions};
 use crate::profiler::{AllocConstraints, CostModel};
 
+/// The planner-shard key of one fragment demand: the model index.
+/// Every pre-placement stage is per-model by construction — uniform
+/// merge classes never span models, groups are formed within a model
+/// slice, and re-alignment operates per group — and both cache
+/// signatures below hash the model, so the scheduler's cross-trigger
+/// state partitions exactly along this key.  Planning the shards
+/// independently and concatenating their instance streams in ascending
+/// key order reproduces the sequential pipeline byte-for-byte.
+pub fn shard_key(spec: &FragmentSpec) -> usize {
+    spec.model
+}
+
 /// Deterministic signature of one group's exact fragment demands (plus
 /// the re-partition options that shape its plan).  Keys the scheduler's
 /// exact group-plan cache.

@@ -33,11 +33,28 @@
 //!   (coarse sweep + bound-screened refinement at the same effective
 //!   resolution).
 //!
-//! The cross-trigger state (merge-class cache, DP choice tables) lives
-//! in a [`ReplanContext`] next to the exact group-plan cache;
-//! [`ScheduleStats`] reports per-phase reuse counters so replan cost is
-//! observable (`graft plan`, `graft bench-scheduler`'s replan
-//! scenario).
+//! **Sharded parallel planning.**  Every stage before placement is
+//! per-model by construction ([`crate::coordinator::reuse::shard_key`]),
+//! so the incremental pipeline partitions the demand into per-model
+//! planner shards and runs merge → group → re-partition for each shard
+//! on a `planner_threads`-wide worker pool.  Each shard owns its slice
+//! of the cross-trigger state (a [`ShardState`]: merge-class cache, DP
+//! choice tables, grouping state, exact group-plan cache), checked out
+//! of the [`ReplanContext`] for the duration of the trigger — shard
+//! workers never contend on a lock.  The per-shard instance streams are
+//! concatenated in ascending shard order
+//! ([`crate::coordinator::placement::merge_shard_streams`]) and the
+//! global FFD placement + feedback loop runs once over the merged
+//! stream: bin-packing is a cross-model optimisation, so placement is
+//! the one stage that must stay global.  The parallel plan is
+//! byte-identical to the `planner_threads = 1` (default) sequential
+//! plan — per-model independence makes this exact, property-tested by
+//! `prop_sharded_plan_identical_to_sequential`.
+//!
+//! [`ScheduleStats`] reports per-phase reuse counters plus per-shard
+//! wall times so replan cost and shard skew are observable
+//! (`graft plan`, `graft bench-scheduler`'s replan + sharded
+//! scenarios).
 //!
 //! Placement (§5.1/§5.3) is part of planning, not an afterthought: the
 //! assembled plan is packed onto GPUs first-fit-decreasing under the
@@ -51,9 +68,9 @@
 //! unpackable plan packable), so the integrated planner never does
 //! worse than post-hoc FFD packing of the same demand.
 
-use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::fragment::FragmentSpec;
@@ -63,12 +80,16 @@ use super::grouping::{
 use super::merging::{
     merge_fragments, merge_fragments_incremental, MergeCache, MergeOptions,
 };
-use super::placement::{place, stamp, Placement, PlacementOptions};
+use super::placement::{
+    merge_shard_streams, place, stamp, Placement, PlacementOptions,
+};
 use super::plan::ExecutionPlan;
 use super::repartition::{
     realign_group_warm, RepartitionOptions, RepartitionTelemetry,
 };
-use super::reuse::{group_signature, repartition_signature, warm_signature};
+use super::reuse::{
+    group_signature, repartition_signature, shard_key, warm_signature,
+};
 use crate::profiler::CostModel;
 use crate::util::lock::lock_recover;
 use crate::util::parallel_map;
@@ -80,8 +101,18 @@ pub struct SchedulerOptions {
     pub repartition: RepartitionOptions,
     /// Planner-integrated GPU placement + feedback loop.
     pub placement: PlacementOptions,
-    /// Thread-pool size for parallel per-group re-alignment (Fig 19b).
+    /// Thread-pool size for parallel per-group re-alignment (Fig 19b)
+    /// *within* one shard; ignored inside shard workers when
+    /// `planner_threads > 1` (parallelism then comes from the shards).
     pub pool_size: usize,
+    /// Worker threads for per-model planner shards.  `1` (default) runs
+    /// the shards sequentially in shard order — the oracle the parallel
+    /// path is property-tested against; any value produces the same
+    /// plan byte-for-byte, so this is a latency knob, never a quality
+    /// knob.  Sensible values: min(model count, cores) — threads beyond
+    /// the shard count idle, and shard wall times are skew-bound (see
+    /// [`ScheduleStats::shard_imbalance`]).
+    pub planner_threads: usize,
     /// Reuse state across triggers: per-group plans (exact — cache hits
     /// are verified by full spec equality), the dirty-class merge cache,
     /// DP warm hints, and — when `group.incremental` is also set — the
@@ -101,9 +132,25 @@ impl Default for SchedulerOptions {
             repartition: RepartitionOptions::default(),
             placement: PlacementOptions::default(),
             pool_size: 2, // paper default (§5.9)
+            planner_threads: 1,
             incremental: true,
         }
     }
+}
+
+/// Wall time and sizes of one planner shard within a trigger.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStat {
+    /// Shard key ([`shard_key`]): the model index.
+    pub model: usize,
+    /// Input demands routed to this shard.
+    pub n_specs: usize,
+    /// Fragments after the shard's merge pass.
+    pub n_merged: usize,
+    /// Groups the shard emitted.
+    pub n_groups: usize,
+    /// Shard wall time (merge + group + re-partition), ms.
+    pub ms: f64,
 }
 
 /// Timing / size statistics of one scheduling run (Figs 14, 19).
@@ -114,6 +161,9 @@ pub struct ScheduleStats {
     pub n_groups: usize,
     /// Groups served from the incremental cache this trigger.
     pub n_groups_reused: usize,
+    /// Per-phase times.  In the sharded pipeline these are summed
+    /// across shards (CPU time, not wall time — shards overlap when
+    /// `planner_threads > 1`); `total_ms` is always wall time.
     pub merge_ms: f64,
     pub group_ms: f64,
     pub repartition_ms: f64,
@@ -156,6 +206,18 @@ pub struct ScheduleStats {
     /// Grid points the adaptive search dismissed after the shared-stage
     /// allocation alone.
     pub grid_points_pruned: u64,
+    /// Planner shards this trigger ran (one per model with demand; 0 in
+    /// non-incremental mode, which plans globally from scratch).
+    pub planner_shards: usize,
+    /// Wall time of the slowest shard, ms — the lower bound on the
+    /// pre-placement wall time at infinite threads.
+    pub shard_max_ms: f64,
+    /// Shard skew: max / mean shard wall time (1.0 = perfectly
+    /// balanced; 0.0 when no shards ran).  High skew means extra
+    /// planner threads cannot help — one model dominates the demand.
+    pub shard_imbalance: f64,
+    /// Per-shard breakdown in ascending shard (model) order.
+    pub shards: Vec<ShardStat>,
     pub total_ms: f64,
 }
 
@@ -168,15 +230,15 @@ struct CachedGroupPlan {
     generation: u64,
 }
 
-/// Generational group-plan cache.  Each `plan()` call bumps the
+/// Generational group-plan cache (per shard).  Each trigger syncs the
 /// generation and refreshes the entries it hits; when the entry count
 /// exceeds the capacity, eviction drops only entries *not* touched
 /// within the last trigger — the live working set always survives, so
 /// steady-state replay never falls off a clear-everything cliff.
+#[derive(Default)]
 struct GroupCache {
     map: HashMap<u64, Vec<CachedGroupPlan>>,
     entries: usize,
-    generation: u64,
 }
 
 const GROUP_CACHE_CAPACITY: usize = 1 << 16;
@@ -189,28 +251,100 @@ struct DpHintEntry {
     generation: u64,
 }
 
-/// Cross-trigger replan state: the dirty-class merge cache and the DP
-/// choice tables, keyed by the perturbation-stable
-/// [`warm_signature`] (model + client ids — budgets, rates and split
-/// points excluded, so a group whose members merely moved still finds
-/// its previous choices).  Hints only seed the DP incumbent, so stale
-/// or colliding entries can never change a plan — unlike the exact
-/// group cache, no equality verification is needed.
-struct ReplanContext {
+/// One planner shard's slice of the cross-trigger replan state: the
+/// dirty-class merge cache, the DP choice tables (keyed by the
+/// perturbation-stable [`warm_signature`] — the signature hashes the
+/// model, so the global table partitions exactly along the shard key),
+/// the previous trigger's grouping state and the exact group-plan
+/// cache.  Checked out of the [`ReplanContext`] by `plan()` for the
+/// duration of a trigger, so shard workers mutate their state without
+/// any cross-shard locking.
+#[derive(Default)]
+struct ShardState {
     merge: MergeCache,
     dp: HashMap<u64, DpHintEntry>,
-    /// Previous trigger's grouping state, keyed by model index (one
-    /// entry per model ever planned — bounded by the model count, so no
-    /// generational eviction is needed).
-    groups: HashMap<usize, GroupState>,
+    group: Option<GroupState>,
+    cache: GroupCache,
+    /// Trigger generation of the last checkout (drives eviction).
     generation: u64,
+}
+
+impl ShardState {
+    /// Open a new trigger generation on this shard's caches: sync the
+    /// generation and evict stale entries when over capacity.  Called
+    /// once per checkout — the placement feedback rounds within a
+    /// trigger share the generation, so the "previous trigger's working
+    /// set survives eviction" invariant holds regardless of how many
+    /// re-partitioning passes a trigger runs.  (The merge cache bumps
+    /// its own generation inside `merge_fragments_incremental`.)
+    fn open_generation(&mut self, gen: u64, persist_dirty: &AtomicBool) {
+        self.generation = gen;
+        if self.cache.entries > GROUP_CACHE_CAPACITY {
+            for bucket in self.cache.map.values_mut() {
+                bucket.retain(|e| e.generation + 1 >= gen);
+            }
+            self.cache.map.retain(|_, b| !b.is_empty());
+            self.cache.entries =
+                self.cache.map.values().map(Vec::len).sum();
+        }
+        if self.dp.len() > DP_HINT_CAPACITY {
+            self.dp.retain(|_, e| e.generation + 1 >= gen);
+            // dp tables are persisted — eviction changes the on-disk
+            // image (the group-plan cache above is not persisted)
+            persist_dirty.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Cross-trigger replan state: one [`ShardState`] per model ever
+/// planned (bounded by the model count), plus the read-only DP hints
+/// reloaded from a pre-sharding context file that could not be routed
+/// to a shard (warm signatures are opaque hashes — consulted on miss,
+/// superseded as soon as each shard refreshes its own table).
+struct ReplanContext {
+    shards: HashMap<usize, ShardState>,
+    dp_fallback: Arc<HashMap<u64, Vec<usize>>>,
+    generation: u64,
+}
+
+/// A shard's trigger input: its demand slice plus the checked-out
+/// state (taken exactly once by the worker that plans the shard).
+struct ShardJob {
+    model: usize,
+    specs: Vec<FragmentSpec>,
+    state: Mutex<Option<ShardState>>,
+}
+
+/// Everything one shard worker hands back for deterministic
+/// concatenation in shard order.
+struct ShardOutcome {
+    model: usize,
+    state: ShardState,
+    plan: ExecutionPlan,
+    groups: Vec<Vec<FragmentSpec>>,
+    n_specs: usize,
+    n_merged: usize,
+    merge_classes: usize,
+    classes_remerged: usize,
+    groups_replayed: usize,
+    fragments_regrouped: usize,
+    group_fallbacks: usize,
+    n_groups_reused: usize,
+    merge_ms: f64,
+    group_ms: f64,
+    repartition_ms: f64,
+    ms: f64,
 }
 
 pub struct Scheduler {
     cm: CostModel,
     pub opts: SchedulerOptions,
-    group_cache: Mutex<GroupCache>,
     replan: Mutex<ReplanContext>,
+    /// Set when a trigger changes any persisted replan state (merge
+    /// classes, DP points, grouping state); cleared by a successful
+    /// save/load.  Lets `save_replan_context` skip the atomic rewrite
+    /// on unchanged triggers — steady-state replans persist nothing.
+    persist_dirty: AtomicBool,
 }
 
 impl Scheduler {
@@ -218,17 +352,12 @@ impl Scheduler {
         Self {
             cm,
             opts,
-            group_cache: Mutex::new(GroupCache {
-                map: HashMap::new(),
-                entries: 0,
-                generation: 0,
-            }),
             replan: Mutex::new(ReplanContext {
-                merge: MergeCache::default(),
-                dp: HashMap::new(),
-                groups: HashMap::new(),
+                shards: HashMap::new(),
+                dp_fallback: Arc::new(HashMap::new()),
                 generation: 0,
             }),
+            persist_dirty: AtomicBool::new(true),
         }
     }
 
@@ -243,58 +372,102 @@ impl Scheduler {
     /// (orders of magnitude bigger) and a cold group recompute is
     /// precisely what the warm DP hints accelerate.  Written atomically
     /// (tmp + rename), so a crash mid-save never leaves a truncated
-    /// context.
+    /// context.  Returns `false` (skipping the rewrite entirely) when
+    /// no trigger changed the persisted state since the last save or
+    /// load — the dirty flag makes steady-state replan loops I/O-free.
+    /// The per-shard states are serialised into the same globally-keyed
+    /// schema v2 layout as before sharding, so contexts round-trip
+    /// across planner versions in both directions.
     pub fn save_replan_context(
         &self,
         path: &std::path::Path,
-    ) -> anyhow::Result<()> {
+    ) -> anyhow::Result<bool> {
         use crate::util::Json;
-        let ctx = lock_recover(&self.replan);
-        let mut dp = Vec::new();
-        for (sig, e) in &ctx.dp {
-            let mut o = std::collections::BTreeMap::new();
-            o.insert("sig".into(), Json::Str(format!("{sig:016x}")));
-            o.insert(
-                "points".into(),
-                Json::Arr(
-                    e.points.iter().map(|&p| Json::Num(p as f64)).collect(),
-                ),
-            );
-            dp.push(Json::Obj(o));
+        if !self.persist_dirty.load(Ordering::SeqCst) {
+            return Ok(false);
         }
+        let ctx = lock_recover(&self.replan);
         // models sorted so the file is deterministic for a given state
-        let mut models: Vec<usize> = ctx.groups.keys().copied().collect();
+        let mut models: Vec<usize> = ctx.shards.keys().copied().collect();
         models.sort_unstable();
+        let mut merge_classes = Vec::new();
+        for &m in &models {
+            if let Json::Arr(v) = ctx.shards[&m].merge.to_json() {
+                merge_classes.extend(v);
+            }
+        }
+        // dp: the per-shard tables are disjoint (warm signatures hash
+        // the model); sorted by signature for determinism
+        let mut dp_entries: Vec<(u64, &Vec<usize>)> = models
+            .iter()
+            .flat_map(|m| {
+                ctx.shards[m].dp.iter().map(|(sig, e)| (*sig, &e.points))
+            })
+            .collect();
+        dp_entries.sort_unstable_by_key(|e| e.0);
+        let dp: Vec<Json> = dp_entries
+            .into_iter()
+            .map(|(sig, points)| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("sig".into(), Json::Str(format!("{sig:016x}")));
+                o.insert(
+                    "points".into(),
+                    Json::Arr(
+                        points.iter().map(|&p| Json::Num(p as f64)).collect(),
+                    ),
+                );
+                Json::Obj(o)
+            })
+            .collect();
         let groups: Vec<Json> = models
             .iter()
-            .map(|&m| {
-                let mut o = std::collections::BTreeMap::new();
-                o.insert("model".into(), Json::Num(m as f64));
-                o.insert("state".into(), ctx.groups[&m].to_json());
-                Json::Obj(o)
+            .filter_map(|&m| {
+                ctx.shards[&m].group.as_ref().map(|state| {
+                    let mut o = std::collections::BTreeMap::new();
+                    o.insert("model".into(), Json::Num(m as f64));
+                    o.insert("state".into(), state.to_json());
+                    Json::Obj(o)
+                })
             })
             .collect();
         let mut doc = std::collections::BTreeMap::new();
         doc.insert("context".into(), Json::Str("replan".into()));
         doc.insert("schema_version".into(), Json::Num(2.0));
-        doc.insert("merge".into(), ctx.merge.to_json());
+        doc.insert("merge".into(), Json::Arr(merge_classes));
         doc.insert("dp".into(), Json::Arr(dp));
         doc.insert("groups".into(), Json::Arr(groups));
+        // clear under the lock: a racing trigger that mutates state
+        // after this snapshot re-dirties the flag for the next save
+        self.persist_dirty.store(false, Ordering::SeqCst);
         drop(ctx);
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, format!("{}\n", Json::Obj(doc)))?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        let write = || -> anyhow::Result<()> {
+            let tmp = path.with_extension("tmp");
+            std::fs::write(&tmp, format!("{}\n", Json::Obj(doc)))?;
+            std::fs::rename(&tmp, path)?;
+            Ok(())
+        };
+        match write() {
+            Ok(()) => Ok(true),
+            Err(e) => {
+                self.persist_dirty.store(true, Ordering::SeqCst);
+                Err(e)
+            }
+        }
     }
 
     /// Reload a context saved by [`Self::save_replan_context`] into
     /// this scheduler, replacing its current replan state.  Returns
     /// `(merge classes, dp hints)` loaded.  Accepts schema v1 (pre
-    /// incremental grouping — no `groups` section) and v2.  Safe
-    /// against stale or mismatched files: merge entries are verified by
-    /// full spec equality on every lookup, DP hints are advisory, and
-    /// grouping state is diffed by member identity (a stale state just
-    /// shows up as churn), so the worst a wrong context can do is miss.
+    /// incremental grouping — no `groups` section) and v2.  The
+    /// globally keyed merge cache is split per model onto the planner
+    /// shards (classes never span models, so the re-keying is exact);
+    /// DP hints cannot be routed from their opaque signatures alone and
+    /// load into a read-only fallback table every shard consults on
+    /// miss.  Safe against stale or mismatched files: merge entries are
+    /// verified by full spec equality on every lookup, DP hints are
+    /// advisory, and grouping state is diffed by member identity (a
+    /// stale state just shows up as churn), so the worst a wrong
+    /// context can do is miss.
     pub fn load_replan_context(
         &self,
         path: &std::path::Path,
@@ -310,27 +483,31 @@ impl Scheduler {
             anyhow::bail!("unsupported replan-context schema v{version}");
         }
         let merge = MergeCache::from_json(doc.get("merge")?)?;
-        let mut dp = HashMap::new();
+        let mut dp_fallback = HashMap::new();
         for e in doc.get("dp")?.as_arr()? {
             let sig = u64::from_str_radix(e.get("sig")?.as_str()?, 16)?;
-            let points = e.get("points")?.as_usize_vec()?;
-            dp.insert(sig, DpHintEntry { points, generation: 0 });
+            dp_fallback.insert(sig, e.get("points")?.as_usize_vec()?);
         }
-        let mut groups = HashMap::new();
+        let counts = (merge.len(), dp_fallback.len());
+        let mut shards: HashMap<usize, ShardState> = HashMap::new();
+        for (model, mc) in merge.split_by_model() {
+            shards.entry(model).or_default().merge = mc;
+        }
         if version >= 2 {
             for e in doc.get("groups")?.as_arr()? {
-                groups.insert(
-                    e.get("model")?.as_usize()?,
-                    GroupState::from_json(e.get("state")?)?,
-                );
+                shards
+                    .entry(e.get("model")?.as_usize()?)
+                    .or_default()
+                    .group = Some(GroupState::from_json(e.get("state")?)?);
             }
         }
-        let counts = (merge.len(), dp.len());
         let mut ctx = lock_recover(&self.replan);
-        ctx.merge = merge;
-        ctx.dp = dp;
-        ctx.groups = groups;
+        ctx.shards = shards;
+        ctx.dp_fallback = Arc::new(dp_fallback);
         ctx.generation = 0;
+        drop(ctx);
+        // in-memory state now mirrors the file: nothing to rewrite
+        self.persist_dirty.store(false, Ordering::SeqCst);
         Ok(counts)
     }
 
@@ -339,53 +516,433 @@ impl Scheduler {
     /// signatures also cover the options, so this is belt-and-braces,
     /// not correctness).
     pub fn clear_plan_cache(&self) {
-        let mut cache = lock_recover(&self.group_cache);
-        cache.map.clear();
-        cache.entries = 0;
-        drop(cache);
         let mut ctx = lock_recover(&self.replan);
-        ctx.merge.clear();
-        ctx.dp.clear();
-        ctx.groups.clear();
+        ctx.shards.clear();
+        ctx.dp_fallback = Arc::new(HashMap::new());
+        drop(ctx);
+        self.persist_dirty.store(true, Ordering::SeqCst);
     }
 
-    /// Produce the execution plan for the given demands.
+    /// Produce the execution plan for the given demands.  Incremental
+    /// mode (the default) plans per-model shards on
+    /// `opts.planner_threads` workers and merges the streams — plans
+    /// are byte-identical at every thread count.
     pub fn plan(&self, demands: &[FragmentSpec]) -> (ExecutionPlan, ScheduleStats) {
+        if !self.opts.incremental {
+            return self.plan_from_scratch(demands);
+        }
         let t0 = Instant::now();
         let mut stats = ScheduleStats {
             n_input: demands.len(),
             ..Default::default()
         };
-        if self.opts.incremental {
-            self.begin_trigger();
+
+        // Partition the demand into per-model planner shards.  The
+        // BTreeMap fixes ascending shard order; within a shard the
+        // input order is preserved, and the per-shard merge sort is
+        // stable, so shard-local sorting concatenated in shard order
+        // equals the global sort — the root of byte-identity.
+        let mut by_model: BTreeMap<usize, Vec<FragmentSpec>> = BTreeMap::new();
+        for d in demands {
+            by_model.entry(shard_key(d)).or_default().push(d.clone());
+        }
+        // One trigger generation shared by every shard and by the
+        // placement feedback rounds within the trigger; shard states
+        // are checked out here and returned after placement.
+        let (gen, fallback, jobs) = {
+            let mut ctx = lock_recover(&self.replan);
+            ctx.generation += 1;
+            let jobs: Vec<ShardJob> = by_model
+                .into_iter()
+                .map(|(model, specs)| ShardJob {
+                    model,
+                    specs,
+                    state: Mutex::new(Some(
+                        ctx.shards.remove(&model).unwrap_or_default(),
+                    )),
+                })
+                .collect();
+            (ctx.generation, ctx.dp_fallback.clone(), jobs)
+        };
+        // with shard-level parallelism the per-group pool inside each
+        // worker stays serial; at planner_threads = 1 the single
+        // sequential shard pass keeps the per-group pool (Fig 19b)
+        let inner = if self.opts.planner_threads > 1 {
+            1
+        } else {
+            self.opts.pool_size
+        };
+        let telemetry = RepartitionTelemetry::default();
+        let outcomes: Vec<ShardOutcome> =
+            parallel_map(&jobs, self.opts.planner_threads, |job| {
+                self.plan_shard(job, gen, &fallback, inner, &telemetry)
+            });
+
+        // Deterministic concatenation: parallel_map preserves input
+        // (ascending shard) order regardless of completion order.
+        let mut shard_plans: Vec<ExecutionPlan> = Vec::new();
+        let mut groups: Vec<Vec<FragmentSpec>> = Vec::new();
+        let mut shard_states: Vec<(usize, ShardState)> = Vec::new();
+        for o in outcomes {
+            stats.n_after_merge += o.n_merged;
+            stats.merge_classes += o.merge_classes;
+            stats.classes_remerged += o.classes_remerged;
+            stats.groups_replayed += o.groups_replayed;
+            stats.fragments_regrouped += o.fragments_regrouped;
+            stats.group_fallbacks += o.group_fallbacks;
+            stats.n_groups += o.groups.len();
+            stats.n_groups_reused += o.n_groups_reused;
+            stats.merge_ms += o.merge_ms;
+            stats.group_ms += o.group_ms;
+            stats.repartition_ms += o.repartition_ms;
+            stats.shards.push(ShardStat {
+                model: o.model,
+                n_specs: o.n_specs,
+                n_merged: o.n_merged,
+                n_groups: o.groups.len(),
+                ms: o.ms,
+            });
+            shard_plans.push(o.plan);
+            groups.extend(o.groups);
+            shard_states.push((o.model, o.state));
+        }
+        stats.planner_shards = stats.shards.len();
+        stats.shard_max_ms =
+            stats.shards.iter().map(|s| s.ms).fold(0.0, f64::max);
+        let mean = if stats.shards.is_empty() {
+            0.0
+        } else {
+            stats.shards.iter().map(|s| s.ms).sum::<f64>()
+                / stats.shards.len() as f64
+        };
+        stats.shard_imbalance = if stats.shards.is_empty() {
+            0.0
+        } else if mean > 0.0 {
+            stats.shard_max_ms / mean
+        } else {
+            1.0
+        };
+        let mut plan = merge_shard_streams(shard_plans);
+
+        // Step 4 — placement (§5.1/§5.3): the one global stage.  Pack
+        // the merged stream onto GPUs and feed fragmentation /
+        // unplaceability back into (per-shard) re-partitioning.
+        if self.opts.placement.enabled {
+            let t = Instant::now();
+            self.place_with_feedback(
+                &mut plan,
+                &groups,
+                &mut shard_states,
+                &fallback,
+                &mut stats,
+                &telemetry,
+            );
+            stats.placement_ms = t.elapsed().as_secs_f64() * 1e3;
         }
 
-        // Step 1 — merging (§4.1), per model implicitly via uniformity;
-        // incremental mode re-merges only the dirty uniform classes.
-        let t = Instant::now();
-        let merged = if self.opts.incremental {
+        // return the shard states for the next trigger
+        {
             let mut ctx = lock_recover(&self.replan);
-            let out = merge_fragments_incremental(
-                &self.cm,
-                demands,
-                &self.opts.merge,
-                &mut ctx.merge,
+            for (model, state) in shard_states {
+                ctx.shards.insert(model, state);
+            }
+        }
+
+        stats.dp_warm_hits = telemetry.dp_warm_hits.load(Ordering::Relaxed);
+        stats.grid_points_evaluated =
+            telemetry.grid_points_evaluated.load(Ordering::Relaxed);
+        stats.grid_points_pruned =
+            telemetry.grid_points_pruned.load(Ordering::Relaxed);
+        stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        (plan, stats)
+    }
+
+    /// One shard's trigger: merge → group → re-partition over its
+    /// demand slice, against its own checked-out state.  Runs on a
+    /// shard worker — everything it touches is shard-local (the
+    /// repartition telemetry is atomic), so no locks are taken.
+    fn plan_shard(
+        &self,
+        job: &ShardJob,
+        gen: u64,
+        fallback: &HashMap<u64, Vec<usize>>,
+        inner_threads: usize,
+        telemetry: &RepartitionTelemetry,
+    ) -> ShardOutcome {
+        let t_shard = Instant::now();
+        let mut state = lock_recover(&job.state)
+            .take()
+            .expect("shard state checked out exactly once");
+        state.open_generation(gen, &self.persist_dirty);
+
+        // Step 1 — merging (§4.1): re-merge only the dirty uniform
+        // classes of this model.
+        let t = Instant::now();
+        let out = merge_fragments_incremental(
+            &self.cm,
+            &job.specs,
+            &self.opts.merge,
+            &mut state.merge,
+        );
+        let merge_ms = t.elapsed().as_secs_f64() * 1e3;
+        if out.classes_remerged > 0 {
+            self.persist_dirty.store(true, Ordering::Relaxed);
+        }
+        let merged = out.merged;
+
+        // Step 2 — grouping (§4.2).  The shard is one model, so the
+        // whole merged slice groups in one pass; specs are then *moved*
+        // into their groups.
+        let t = Instant::now();
+        let mut groups_replayed = 0;
+        let mut fragments_regrouped = 0;
+        let mut group_fallbacks = 0;
+        let idx_groups: Vec<Vec<usize>> = if self.opts.group.incremental {
+            let (delta, gstate) = group_fragments_incremental(
+                &merged,
+                &self.opts.group,
+                state.group.as_ref(),
             );
-            stats.merge_classes = out.classes;
-            stats.classes_remerged = out.classes_remerged;
-            out.merged
+            groups_replayed = delta.replayed;
+            fragments_regrouped = delta.regrouped;
+            if delta.fell_back {
+                group_fallbacks = 1;
+            }
+            if delta.regrouped > 0 || delta.fell_back || state.group.is_none()
+            {
+                self.persist_dirty.store(true, Ordering::Relaxed);
+            }
+            state.group = Some(gstate);
+            delta.groups
         } else {
-            merge_fragments(&self.cm, demands, &self.opts.merge)
+            group_fragments(&merged, &self.opts.group)
         };
+        let n_merged = merged.len();
+        let mut slots: Vec<Option<FragmentSpec>> =
+            merged.into_iter().map(Some).collect();
+        let groups: Vec<Vec<FragmentSpec>> = idx_groups
+            .into_iter()
+            .map(|ig| {
+                ig.into_iter()
+                    .map(|i| {
+                        slots[i].take().expect("fragment in exactly one group")
+                    })
+                    .collect()
+            })
+            .collect();
+        let group_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        // Step 3 — re-partitioning (§4.3): unchanged groups replay
+        // their cached sets, the rest re-align with the previous
+        // trigger's DP choices as warm hints.
+        let t = Instant::now();
+        let (plan, n_groups_reused) = self.repartition_shard(
+            &groups,
+            &self.opts.repartition,
+            telemetry,
+            &mut state,
+            fallback,
+            inner_threads,
+        );
+        let repartition_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        ShardOutcome {
+            model: job.model,
+            state,
+            plan,
+            groups,
+            n_specs: job.specs.len(),
+            n_merged,
+            merge_classes: out.classes,
+            classes_remerged: out.classes_remerged,
+            groups_replayed,
+            fragments_regrouped,
+            group_fallbacks,
+            n_groups_reused,
+            merge_ms,
+            group_ms,
+            repartition_ms,
+            ms: t_shard.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+
+    /// One re-partitioning pass over one shard's groups with the given
+    /// options (the feedback loop calls this again with tightened
+    /// constraints — each options signature keeps its own cache
+    /// entries).  Returns the assembled plan and the reused-group
+    /// count.  Lock-free: the shard state is owned by the caller.
+    fn repartition_shard(
+        &self,
+        groups: &[Vec<FragmentSpec>],
+        rep_opts: &RepartitionOptions,
+        telemetry: &RepartitionTelemetry,
+        state: &mut ShardState,
+        fallback: &HashMap<u64, Vec<usize>>,
+        threads: usize,
+    ) -> (ExecutionPlan, usize) {
+        let opts_sig = repartition_signature(rep_opts);
+        // one warm-signature hash per group, shared by the hint lookup
+        // and the end-of-pass DP table refresh
+        let warm_sigs: Vec<u64> =
+            groups.iter().map(|g| warm_signature(g, opts_sig)).collect();
+        let mut reused: Vec<Option<ExecutionPlan>> = vec![None; groups.len()];
+        let mut hints: Vec<Option<Vec<usize>>> = vec![None; groups.len()];
+        let gen = state.generation;
+        for (gi, g) in groups.iter().enumerate() {
+            if let Some(bucket) =
+                state.cache.map.get_mut(&group_signature(g, opts_sig))
+            {
+                if let Some(e) = bucket.iter_mut().find(|e| &e.specs == g) {
+                    e.generation = gen;
+                    reused[gi] = Some(e.plan.clone());
+                }
+            }
+            // warm DP hints for the groups that must recompute
+            if reused[gi].is_none() {
+                if let Some(e) = state.dp.get(&warm_sigs[gi]) {
+                    hints[gi] = Some(e.points.clone());
+                } else if let Some(p) = fallback.get(&warm_sigs[gi]) {
+                    hints[gi] = Some(p.clone());
+                }
+            }
+        }
+        let todo: Vec<(usize, &Vec<FragmentSpec>)> = groups
+            .iter()
+            .enumerate()
+            .filter(|(gi, _)| reused[*gi].is_none())
+            .collect();
+        let computed: Vec<ExecutionPlan> =
+            parallel_map(&todo, threads, |(gi, g)| {
+                realign_group_warm(
+                    &self.cm,
+                    g.as_slice(),
+                    rep_opts,
+                    hints[*gi].as_deref(),
+                    Some(telemetry),
+                )
+            });
+        let mut computed = computed.into_iter();
+        let mut plan = ExecutionPlan::default();
+        let mut n_reused = 0;
+        for (gi, cached) in reused.into_iter().enumerate() {
+            let p = match cached {
+                Some(p) => {
+                    n_reused += 1;
+                    p
+                }
+                None => {
+                    let p = computed
+                        .next()
+                        .expect("one computed plan per uncached group");
+                    // fresh plans enter the exact group cache (not
+                    // persisted — no dirty marking needed here)
+                    state
+                        .cache
+                        .map
+                        .entry(group_signature(&groups[gi], opts_sig))
+                        .or_default()
+                        .push(CachedGroupPlan {
+                            specs: groups[gi].clone(),
+                            plan: p.clone(),
+                            generation: gen,
+                        });
+                    state.cache.entries += 1;
+                    p
+                }
+            };
+            // every group (fresh or replayed) refreshes its DP choice
+            // table for the next trigger; latest trigger wins — hints
+            // are advisory, one entry per warm key is enough.  Only an
+            // actual point change dirties the persisted image.
+            let points = p.realign_points();
+            if state.dp.get(&warm_sigs[gi]).map(|e| &e.points)
+                != Some(&points)
+            {
+                self.persist_dirty.store(true, Ordering::Relaxed);
+            }
+            state
+                .dp
+                .insert(warm_sigs[gi], DpHintEntry { points, generation: gen });
+            plan.merge_with(p);
+        }
+        (plan, n_reused)
+    }
+
+    /// Re-partition every group with the given options.  Incremental
+    /// mode routes each shard's contiguous group run to its own state
+    /// (sequentially — this only runs on the main thread inside the
+    /// placement feedback loop, where the per-group pool provides the
+    /// parallelism); non-incremental mode realigns everything from
+    /// scratch.
+    fn repartition_all(
+        &self,
+        groups: &[Vec<FragmentSpec>],
+        rep_opts: &RepartitionOptions,
+        telemetry: &RepartitionTelemetry,
+        shards: &mut [(usize, ShardState)],
+        fallback: &HashMap<u64, Vec<usize>>,
+    ) -> (ExecutionPlan, usize) {
+        if !self.opts.incremental {
+            let todo: Vec<&Vec<FragmentSpec>> = groups.iter().collect();
+            let computed: Vec<ExecutionPlan> =
+                parallel_map(&todo, self.opts.pool_size, |g| {
+                    realign_group_warm(
+                        &self.cm,
+                        g.as_slice(),
+                        rep_opts,
+                        None,
+                        Some(telemetry),
+                    )
+                });
+            return (merge_shard_streams(computed), 0);
+        }
+        let mut shard_plans = Vec::with_capacity(shards.len());
+        let mut n_reused = 0;
+        let mut gi = 0;
+        for (model, state) in shards.iter_mut() {
+            let start = gi;
+            while gi < groups.len() && shard_key(&groups[gi][0]) == *model {
+                gi += 1;
+            }
+            let (p, r) = self.repartition_shard(
+                &groups[start..gi],
+                rep_opts,
+                telemetry,
+                state,
+                fallback,
+                self.opts.pool_size,
+            );
+            shard_plans.push(p);
+            n_reused += r;
+        }
+        debug_assert_eq!(gi, groups.len(), "groups must partition by shard");
+        (merge_shard_streams(shard_plans), n_reused)
+    }
+
+    /// The non-incremental reference pipeline: global merge, from-
+    /// scratch grouping, stateless re-partitioning — single-threaded
+    /// apart from the per-group pool.  This is the oracle the
+    /// incremental sharded path is property-tested against.
+    fn plan_from_scratch(
+        &self,
+        demands: &[FragmentSpec],
+    ) -> (ExecutionPlan, ScheduleStats) {
+        let t0 = Instant::now();
+        let mut stats = ScheduleStats {
+            n_input: demands.len(),
+            ..Default::default()
+        };
+
+        // Step 1 — merging (§4.1), per model implicitly via uniformity.
+        let t = Instant::now();
+        let merged = merge_fragments(&self.cm, demands, &self.opts.merge);
         stats.merge_ms = t.elapsed().as_secs_f64() * 1e3;
         stats.n_after_merge = merged.len();
 
         // Step 2 — grouping (§4.2), per model (§6: heterogeneous models
         // are separated by type before grouping).  `merged` is sorted by
         // model, so each model is a contiguous slice — grouped in place,
-        // then the specs are *moved* into their groups.  (The seed built
-        // a cloned per-model Vec via filter().cloned() for every model,
-        // then cloned again per group member.)
+        // then the specs are *moved* into their groups.
         let t = Instant::now();
         let mut ranges: Vec<(usize, usize)> = Vec::new();
         let mut start = 0;
@@ -396,36 +953,11 @@ impl Scheduler {
             }
         }
         let mut idx_groups: Vec<Vec<usize>> = Vec::new();
-        if self.opts.incremental && self.opts.group.incremental {
-            // delta-aware grouping: diff each model slice against the
-            // previous trigger's persisted state
-            let mut ctx = lock_recover(&self.replan);
-            for &(a, b) in &ranges {
-                let model = merged[a].model;
-                let (delta, state) = group_fragments_incremental(
-                    &merged[a..b],
-                    &self.opts.group,
-                    ctx.groups.get(&model),
-                );
-                stats.groups_replayed += delta.replayed;
-                stats.fragments_regrouped += delta.regrouped;
-                if delta.fell_back {
-                    stats.group_fallbacks += 1;
-                }
-                for ig in delta.groups {
-                    idx_groups
-                        .push(ig.into_iter().map(|i| a + i).collect());
-                }
-                ctx.groups.insert(model, state);
-            }
-        } else {
-            for &(a, b) in &ranges {
-                for idx_group in
-                    group_fragments(&merged[a..b], &self.opts.group)
-                {
-                    idx_groups
-                        .push(idx_group.into_iter().map(|i| a + i).collect());
-                }
+        for &(a, b) in &ranges {
+            for idx_group in group_fragments(&merged[a..b], &self.opts.group)
+            {
+                idx_groups
+                    .push(idx_group.into_iter().map(|i| a + i).collect());
             }
         }
         let mut slots: Vec<Option<FragmentSpec>> =
@@ -443,21 +975,30 @@ impl Scheduler {
         stats.group_ms = t.elapsed().as_secs_f64() * 1e3;
         stats.n_groups = groups.len();
 
-        // Step 3 — re-partitioning (§4.3): unchanged groups replay their
-        // cached sets, the rest re-align in parallel with the previous
-        // trigger's DP choices as warm hints.
+        // Step 3 — re-partitioning (§4.3), from scratch.
         let t = Instant::now();
         let telemetry = RepartitionTelemetry::default();
-        let (mut plan, reused_count) =
-            self.repartition_pass(&groups, &self.opts.repartition, &telemetry);
-        stats.n_groups_reused = reused_count;
+        let no_fallback = HashMap::new();
+        let (mut plan, _) = self.repartition_all(
+            &groups,
+            &self.opts.repartition,
+            &telemetry,
+            &mut [],
+            &no_fallback,
+        );
         stats.repartition_ms = t.elapsed().as_secs_f64() * 1e3;
 
-        // Step 4 — placement (§5.1/§5.3): pack onto GPUs, and feed
-        // fragmentation/unplaceability back into re-partitioning.
+        // Step 4 — placement (§5.1/§5.3).
         if self.opts.placement.enabled {
             let t = Instant::now();
-            self.place_with_feedback(&mut plan, &groups, &mut stats, &telemetry);
+            self.place_with_feedback(
+                &mut plan,
+                &groups,
+                &mut [],
+                &no_fallback,
+                &mut stats,
+                &telemetry,
+            );
             stats.placement_ms = t.elapsed().as_secs_f64() * 1e3;
         }
 
@@ -468,155 +1009,6 @@ impl Scheduler {
             telemetry.grid_points_pruned.load(Ordering::Relaxed);
         stats.total_ms = t0.elapsed().as_secs_f64() * 1e3;
         (plan, stats)
-    }
-
-    /// Open a new trigger generation on every cross-trigger cache: bump
-    /// the generations once and evict stale entries when over capacity.
-    /// Called once per `plan()` — the placement feedback rounds within a
-    /// trigger share the generation, so the "previous trigger's working
-    /// set survives eviction" invariant holds regardless of how many
-    /// re-partitioning passes a trigger runs.  (The merge cache bumps
-    /// its own generation inside `merge_fragments_incremental`.)
-    fn begin_trigger(&self) {
-        let mut cache = lock_recover(&self.group_cache);
-        cache.generation += 1;
-        let gen = cache.generation;
-        if cache.entries > GROUP_CACHE_CAPACITY {
-            // evict everything not touched by the previous trigger;
-            // the live working set always survives
-            for bucket in cache.map.values_mut() {
-                bucket.retain(|e| e.generation + 1 >= gen);
-            }
-            cache.map.retain(|_, b| !b.is_empty());
-            let remaining: usize = cache.map.values().map(Vec::len).sum();
-            cache.entries = remaining;
-        }
-        drop(cache);
-        let mut ctx = lock_recover(&self.replan);
-        ctx.generation += 1;
-        let gen = ctx.generation;
-        if ctx.dp.len() > DP_HINT_CAPACITY {
-            ctx.dp.retain(|_, e| e.generation + 1 >= gen);
-        }
-    }
-
-    /// One re-partitioning pass over the grouped demands with the given
-    /// options (the feedback loop calls this again with tightened
-    /// constraints — each options signature keeps its own cache
-    /// entries).  Returns the assembled plan and the reused-group count.
-    fn repartition_pass(
-        &self,
-        groups: &[Vec<FragmentSpec>],
-        rep_opts: &RepartitionOptions,
-        telemetry: &RepartitionTelemetry,
-    ) -> (ExecutionPlan, usize) {
-        let opts_sig = repartition_signature(rep_opts);
-        let mut reused: Vec<Option<ExecutionPlan>> = vec![None; groups.len()];
-        let mut hints: Vec<Option<Vec<usize>>> = vec![None; groups.len()];
-        // one warm-signature hash per group, shared by the hint lookup
-        // and the end-of-pass DP table refresh
-        let mut warm_sigs: Vec<u64> = Vec::new();
-        if self.opts.incremental {
-            warm_sigs = groups
-                .iter()
-                .map(|g| warm_signature(g, opts_sig))
-                .collect();
-            {
-                let mut cache = lock_recover(&self.group_cache);
-                let gen = cache.generation;
-                for (gi, g) in groups.iter().enumerate() {
-                    if let Some(bucket) =
-                        cache.map.get_mut(&group_signature(g, opts_sig))
-                    {
-                        if let Some(e) =
-                            bucket.iter_mut().find(|e| &e.specs == g)
-                        {
-                            e.generation = gen;
-                            reused[gi] = Some(e.plan.clone());
-                        }
-                    }
-                }
-            }
-            // warm DP hints for the groups that must recompute
-            let ctx = lock_recover(&self.replan);
-            for gi in 0..groups.len() {
-                if reused[gi].is_none() {
-                    if let Some(e) = ctx.dp.get(&warm_sigs[gi]) {
-                        hints[gi] = Some(e.points.clone());
-                    }
-                }
-            }
-        }
-        let todo: Vec<(usize, &Vec<FragmentSpec>)> = groups
-            .iter()
-            .enumerate()
-            .filter(|(gi, _)| reused[*gi].is_none())
-            .collect();
-        let computed: Vec<ExecutionPlan> =
-            parallel_map(&todo, self.opts.pool_size, |(gi, g)| {
-                realign_group_warm(
-                    &self.cm,
-                    g.as_slice(),
-                    rep_opts,
-                    hints[*gi].as_deref(),
-                    Some(telemetry),
-                )
-            });
-        let mut computed = computed.into_iter();
-        let mut plan = ExecutionPlan::default();
-        let mut n_reused = 0;
-        // fresh plans enter the exact group cache; every group (fresh
-        // or replayed) refreshes its DP choice table for the next
-        // trigger — both inserted in one batch under each lock
-        let mut fresh: Vec<(usize, ExecutionPlan)> = Vec::new();
-        let mut dp_updates: Vec<(u64, Vec<usize>)> = Vec::new();
-        for (gi, cached) in reused.into_iter().enumerate() {
-            let p = match cached {
-                Some(p) => {
-                    n_reused += 1;
-                    p
-                }
-                None => {
-                    let p = computed
-                        .next()
-                        .expect("one computed plan per uncached group");
-                    if self.opts.incremental {
-                        fresh.push((gi, p.clone()));
-                    }
-                    p
-                }
-            };
-            if self.opts.incremental {
-                dp_updates.push((warm_sigs[gi], p.realign_points()));
-            }
-            plan.merge_with(p);
-        }
-        if self.opts.incremental {
-            if !fresh.is_empty() {
-                let mut cache = lock_recover(&self.group_cache);
-                let generation = cache.generation;
-                for (gi, p) in fresh {
-                    cache
-                        .map
-                        .entry(group_signature(&groups[gi], opts_sig))
-                        .or_default()
-                        .push(CachedGroupPlan {
-                            specs: groups[gi].clone(),
-                            plan: p,
-                            generation,
-                        });
-                    cache.entries += 1;
-                }
-            }
-            let mut ctx = lock_recover(&self.replan);
-            let generation = ctx.generation;
-            for (sig, points) in dp_updates {
-                // latest trigger wins: hints are advisory, one entry
-                // per warm key is enough
-                ctx.dp.insert(sig, DpHintEntry { points, generation });
-            }
-        }
-        (plan, n_reused)
     }
 
     /// The placement feedback loop.  Round 0 places the plan as
@@ -633,6 +1025,8 @@ impl Scheduler {
         &self,
         plan: &mut ExecutionPlan,
         groups: &[Vec<FragmentSpec>],
+        shards: &mut [(usize, ShardState)],
+        fallback: &HashMap<u64, Vec<usize>>,
         stats: &mut ScheduleStats,
         telemetry: &RepartitionTelemetry,
     ) {
@@ -679,8 +1073,9 @@ impl Scheduler {
                     constraints: cons,
                     ..self.opts.repartition.clone()
                 };
-                let (cand, _) =
-                    self.repartition_pass(groups, &rep_opts, telemetry);
+                let (cand, _) = self.repartition_all(
+                    groups, &rep_opts, telemetry, shards, fallback,
+                );
                 let Ok(cand_placed) =
                     place(&self.cm, &cand, popts.max_gpus)
                 else {
@@ -825,10 +1220,65 @@ mod tests {
     }
 
     #[test]
+    fn planner_threads_do_not_change_result() {
+        // the sharded-planning determinism contract, cold and warm —
+        // plans are byte-identical at every thread count
+        let cm = CostModel::new(Config::embedded());
+        let mut d = demands(&cm);
+        let mk = |threads| {
+            Scheduler::new(
+                cm.clone(),
+                SchedulerOptions {
+                    planner_threads: threads,
+                    ..Default::default()
+                },
+            )
+        };
+        let seq = mk(1);
+        let par = mk(4);
+        let (a, sa) = seq.plan(&d);
+        let (b, sb) = par.plan(&d);
+        assert_eq!(a, b, "cold plans diverged");
+        assert_eq!(sa.planner_shards, 2, "two models -> two shards");
+        assert_eq!(sa.planner_shards, sb.planner_shards);
+        // a perturbed (warm) trigger stays identical too
+        d[0].p = 5;
+        d[3].budget_ms += 11.0;
+        let (wa, _) = seq.plan(&d);
+        let (wb, _) = par.plan(&d);
+        assert_eq!(wa, wb, "warm plans diverged");
+    }
+
+    #[test]
+    fn shard_stats_surface_skew() {
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let (_, st) = s.plan(&d);
+        assert_eq!(st.planner_shards, 2);
+        assert_eq!(st.shards.len(), 2);
+        assert!(
+            st.shards[0].model < st.shards[1].model,
+            "shards must be in ascending (deterministic) order"
+        );
+        assert_eq!(
+            st.shards.iter().map(|s| s.n_specs).sum::<usize>(),
+            st.n_input
+        );
+        assert_eq!(
+            st.shards.iter().map(|s| s.n_groups).sum::<usize>(),
+            st.n_groups
+        );
+        let max = st.shards.iter().map(|s| s.ms).fold(0.0, f64::max);
+        assert_eq!(st.shard_max_ms, max);
+        assert!(st.shard_imbalance >= 1.0 - 1e-9);
+    }
+
+    #[test]
     fn empty_demands_empty_plan() {
         let (plan, stats) = scheduler().plan(&[]);
         assert!(plan.sets.is_empty());
         assert_eq!(stats.n_groups, 0);
+        assert_eq!(stats.planner_shards, 0);
     }
 
     #[test]
@@ -1067,6 +1517,40 @@ mod tests {
     }
 
     #[test]
+    fn save_skips_rewrite_when_state_unchanged() {
+        // the dirty flag: unchanged replan state skips the atomic
+        // rewrite entirely
+        let path = std::env::temp_dir().join(format!(
+            "graft_replan_ctx_dirty_{}.json",
+            std::process::id()
+        ));
+        let s = scheduler();
+        let d = demands(s.cost_model());
+        let _ = s.plan(&d);
+        assert!(s.save_replan_context(&path).unwrap(), "first save writes");
+        assert!(
+            !s.save_replan_context(&path).unwrap(),
+            "clean state must skip the rewrite"
+        );
+        // an unchanged replay leaves the context clean
+        let _ = s.plan(&d);
+        assert!(
+            !s.save_replan_context(&path).unwrap(),
+            "steady-state replay dirtied the context"
+        );
+        // a real change dirties it again
+        let mut d2 = d.clone();
+        d2[0].p = 5;
+        let _ = s.plan(&d2);
+        assert!(s.save_replan_context(&path).unwrap(), "change must persist");
+        // a freshly loaded context mirrors the file: nothing to rewrite
+        let s2 = scheduler();
+        s2.load_replan_context(&path).unwrap();
+        assert!(!s2.save_replan_context(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn v1_replan_context_still_loads() {
         // a pre-incremental-grouping context (schema v1, no "groups"
         // section) must load cleanly; the first replan is merge/DP-warm
@@ -1109,6 +1593,7 @@ mod tests {
         let (_, st) = s.plan(&d);
         assert_eq!(st.merge_classes, 0);
         assert_eq!(st.classes_remerged, 0);
+        assert_eq!(st.planner_shards, 0, "scratch mode plans globally");
         let (_, st2) = s.plan(&d);
         assert_eq!(st2.dp_warm_hits, 0);
         assert_eq!(st2.n_groups_reused, 0);

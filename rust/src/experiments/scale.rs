@@ -694,6 +694,16 @@ pub struct ReplanPoint {
     /// Replan share / fresh-cold share (quality vs the scratch
     /// pipeline; 1.0 means no share was given up for incrementality).
     pub share_ratio: f64,
+    /// First `save_replan_context` after the warm replan (dirty state:
+    /// full atomic rewrite).
+    pub ctx_save_ms: f64,
+    /// Immediate re-save with nothing changed — the dirty flag must
+    /// skip the rewrite, so this is the fixed-cost floor of a
+    /// steady-state replan loop's persistence step.
+    pub ctx_resave_ms: f64,
+    /// The re-save was skipped (dirty flag clean).  Self-checked by
+    /// `graft bench-scheduler`.
+    pub ctx_resave_skipped: bool,
 }
 
 /// Move `pct`% of the clients' partition points and budgets — the
@@ -741,6 +751,18 @@ pub fn replan_scenario(n: usize, pct: usize, seed: u64) -> ReplanPoint {
     let (cold_fresh_ms, (fresh_plan, fresh_stats)) =
         time_ms(|| fresh.plan(&specs));
 
+    // persistence cost of the replan loop: one dirty save (full atomic
+    // rewrite), then an immediate re-save that the dirty flag must skip
+    let ctx_path = std::env::temp_dir().join(format!(
+        "graft_bench_replan_ctx_{}_{n}_{pct}.json",
+        std::process::id()
+    ));
+    let (ctx_save_ms, _) =
+        time_ms(|| sched.save_replan_context(&ctx_path).unwrap_or(false));
+    let (ctx_resave_ms, wrote_again) =
+        time_ms(|| sched.save_replan_context(&ctx_path).unwrap_or(true));
+    std::fs::remove_file(&ctx_path).ok();
+
     ReplanPoint {
         n_clients: n,
         perturb_pct: pct,
@@ -765,6 +787,73 @@ pub fn replan_scenario(n: usize, pct: usize, seed: u64) -> ReplanPoint {
         slo_safe: plan_is_slo_safe(&replan_plan),
         share_ratio: replan_plan.total_share() as f64
             / (fresh_plan.total_share() as f64).max(1e-9),
+        ctx_save_ms,
+        ctx_resave_ms,
+        ctx_resave_skipped: !wrote_again,
+    }
+}
+
+/// One measured sharded-planning run (`graft bench-scheduler`'s
+/// "sharded" scenario): the same cold mixed-fleet demand planned twice
+/// on fresh schedulers — sequential (`planner_threads = 1`, the oracle)
+/// vs parallel — with the byte-identity contract checked directly.
+#[derive(Debug, Clone)]
+pub struct ShardedPlanPoint {
+    pub n_clients: usize,
+    /// `planner_threads` of the parallel run.
+    pub threads: usize,
+    /// Cold plan wall time at `planner_threads = 1`.
+    pub seq_ms: f64,
+    /// Cold plan wall time at `planner_threads = threads`.
+    pub par_ms: f64,
+    /// `seq_ms / par_ms` (< 1.0 on a single-core box: shard workers
+    /// only add coordination there).
+    pub speedup: f64,
+    /// Shards the parallel run planned (one per model with demand).
+    pub planner_shards: usize,
+    /// Slowest shard's wall time in the parallel run, ms.
+    pub shard_max_ms: f64,
+    /// Max/mean shard wall time in the parallel run.
+    pub shard_imbalance: f64,
+    /// The parallel plan equals the sequential plan byte-for-byte —
+    /// the determinism contract, self-checked at every n.
+    pub identical: bool,
+    pub total_share: u32,
+    pub gpus: usize,
+}
+
+/// Plan `n` mixed clients cold, sequentially and with `threads` planner
+/// shards, and compare.  Fresh schedulers on both sides so neither lane
+/// warms the other's caches.
+pub fn sharded_plan_scenario(
+    n: usize,
+    threads: usize,
+    seed: u64,
+) -> ShardedPlanPoint {
+    use crate::util::bench::time_ms;
+    let cm = CostModel::new(Config::embedded());
+    let specs = random_mixed_fragments(&cm, n, seed);
+    let mk = |t: usize| {
+        Scheduler::new(
+            cm.clone(),
+            SchedulerOptions { planner_threads: t, ..Default::default() },
+        )
+    };
+    let (seq_ms, (seq_plan, _)) = time_ms(|| mk(1).plan(&specs));
+    let (par_ms, (par_plan, par_stats)) =
+        time_ms(|| mk(threads).plan(&specs));
+    ShardedPlanPoint {
+        n_clients: n,
+        threads,
+        seq_ms,
+        par_ms,
+        speedup: seq_ms / par_ms.max(1e-9),
+        planner_shards: par_stats.planner_shards,
+        shard_max_ms: par_stats.shard_max_ms,
+        shard_imbalance: par_stats.shard_imbalance,
+        identical: par_plan == seq_plan,
+        total_share: par_plan.total_share(),
+        gpus: par_stats.gpus,
     }
 }
 
@@ -1406,6 +1495,19 @@ mod tests {
         assert!(r.fragments_regrouped > 0, "perturbation must regroup");
         // … and something must replay (same-model clean classes exist)
         assert!(r.merge_classes > r.classes_remerged);
+        // the dirty flag must skip the no-op re-save
+        assert!(r.ctx_resave_skipped, "clean re-save was not skipped");
+    }
+
+    #[test]
+    fn sharded_scenario_is_identical_and_counts_shards() {
+        let r = sharded_plan_scenario(64, 4, 13);
+        assert!(r.identical, "parallel plan diverged from sequential");
+        assert!(r.planner_shards >= 2, "mixed fleet must shard");
+        assert!(r.shard_imbalance >= 1.0 - 1e-9);
+        // a shard runs inside the parallel plan call
+        assert!(r.shard_max_ms <= r.par_ms);
+        assert!(r.seq_ms > 0.0 && r.par_ms > 0.0);
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   experiment <id|all> [--out DIR]   regenerate paper tables/figures
 //!   plan --model M --scale S [--t T]  print an execution plan
+//!        [--planner-threads T]        (per-model planner shards; the
+//!                                     plan is identical at any T)
 //!   serve [--model M] [--clients N] [--duration S] [--addr A]
 //!         [--reconfigure]             run the real serving data path
 //!                                     (--reconfigure: replan controller
@@ -10,8 +12,12 @@
 //!   trace [--seed N] [--len S]        print a synthetic 5G trace
 //!   models                            list model specs (Table 2)
 //!   bench-scheduler [--sizes N,N,..] [--reps R] [--out FILE]
-//!                                     time Scheduler::plan at scale and
-//!                                     emit BENCH_scheduler.json
+//!                   [--planner-threads T] [--shard-sizes N,N,..]
+//!                                     time Scheduler::plan at scale
+//!                                     (incl. sharded parallel planning
+//!                                     vs the sequential oracle, up to
+//!                                     n=100k) and emit
+//!                                     BENCH_scheduler.json
 //!   bench-serving [--sizes N,N,..] [--requests R] [--out FILE]
 //!                                     drive the serving data path under
 //!                                     both executor modes and emit
@@ -124,11 +130,11 @@ fn print_usage() {
         "graft — inference serving for hybrid DL via DNN re-alignment\n\n\
          usage:\n\
          \x20 graft experiment <id|all> [--out results]\n\
-         \x20 graft plan --model inc --scale small-homo [--t 5] [--deploy FILE]\n\
-         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0] [--reconfigure]\n\
+         \x20 graft plan --model inc --scale small-homo [--t 5] [--deploy FILE] [--planner-threads 1]\n\
+         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0] [--reconfigure] [--planner-threads 1]\n\
          \x20 graft trace [--seed 7] [--len 60]\n\
          \x20 graft models\n\
-         \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--out BENCH_scheduler.json]\n\
+         \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--planner-threads 4] [--shard-sizes 1000,10000,100000] [--out BENCH_scheduler.json]\n\
          \x20 graft bench-serving [--sizes 1000,5000,10000] [--requests 40000] [--out BENCH_serving.json]\n\
          \x20 graft bench-placement [--sizes 1000,5000,10000] [--out BENCH_placement.json]\n\
          \x20 graft bench-transition [--sizes 1000,5000,10000] [--requests 8000] [--out BENCH_transition.json]\n\
@@ -198,8 +204,18 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
         cm.config().slo_ratio_default,
         42,
     );
+    let planner_threads: usize = args
+        .flags
+        .get("planner-threads")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --planner-threads")?
+        .unwrap_or(1);
     let specs = experiments::common::snapshot(cm, &clients, t_s);
-    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let sched = Scheduler::new(
+        cm.clone(),
+        SchedulerOptions { planner_threads, ..Default::default() },
+    );
     let (plan, stats) = sched.plan(&specs);
     println!(
         "{} clients -> {} specs -> {} merged -> {} sets, total share {}%, \
@@ -231,6 +247,28 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
         stats.fragments_regrouped,
         stats.group_fallbacks,
     );
+    if stats.planner_shards > 0 {
+        println!(
+            "  shards: {} on {} thread(s), slowest {:.2} ms, imbalance \
+             {:.2}x (max/mean)",
+            stats.planner_shards,
+            planner_threads,
+            stats.shard_max_ms,
+            stats.shard_imbalance,
+        );
+        for sh in &stats.shards {
+            println!(
+                "    shard model {} ({}): {} specs -> {} merged -> {} \
+                 groups in {:.2} ms",
+                cm.config().models[sh.model].name,
+                sh.model,
+                sh.n_specs,
+                sh.n_merged,
+                sh.n_groups,
+                sh.ms,
+            );
+        }
+    }
     if stats.gpus > 0 {
         println!(
             "  placed on {} GPUs (share lower bound {}, fragmentation \
@@ -300,14 +338,29 @@ fn cmd_plan(cm: &CostModel, args: &Args) -> Result<()> {
 /// at CI smoke sizes — at bench sizes the margins are orders of
 /// magnitude).  Each replan row carries the grouping counters
 /// (`groups_replayed`, `fragments_regrouped`) and a `grouping_ok` flag
-/// CI greps for.
+/// CI greps for, plus the context-persistence cost (`ctx_save_ms` /
+/// `ctx_resave_ms`) with a self-check that the dirty flag skipped the
+/// clean re-save (`ctx_resave_skipped`).
+///
+/// A third `sharded` section (schema v4) measures sharded parallel
+/// planning over `--shard-sizes` (default up to n=100k) at
+/// `--planner-threads` workers (default 4): per point it cold-plans the
+/// same mixed demand sequentially (`planner_threads = 1`, the oracle)
+/// and sharded, self-checks byte-identity at every n (hard bail — the
+/// determinism contract), and at n ≥ 100k with ≥ 4 threads additionally
+/// requires the sharded wall time to beat the sequential one — gated on
+/// the machine actually having ≥ 4 cores (`available_parallelism`), so
+/// a 1-core CI smoke box checks identity but not speedup.  Each row
+/// carries a `shards_ok` flag CI greps for.
 fn cmd_bench_scheduler(args: &Args) -> Result<()> {
     use graft::coordinator::repartition::{
         plan_covers_demand, plan_is_slo_safe,
     };
     use graft::coordinator::FragmentSpec;
     use graft::experiments::common::random_mixed_fragments;
-    use graft::experiments::scale::{perturb_fragments, replan_scenario};
+    use graft::experiments::scale::{
+        perturb_fragments, replan_scenario, sharded_plan_scenario,
+    };
     use graft::util::bench::time_ms;
     use graft::util::Json;
     use std::collections::BTreeMap;
@@ -326,6 +379,21 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(3);
+    let planner_threads: usize = args
+        .flags
+        .get("planner-threads")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --planner-threads")?
+        .unwrap_or(4);
+    let shard_sizes: Vec<usize> = args
+        .flags
+        .get("shard-sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,10000,100000")
+        .split(',')
+        .map(|s| s.trim().parse().context("parsing --shard-sizes"))
+        .collect::<Result<_>>()?;
     let out = PathBuf::from(
         args.flags
             .get("out")
@@ -544,6 +612,13 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
                     r.group_cold_ms
                 );
             }
+            // the dirty flag must skip the clean re-save entirely
+            if !r.ctx_resave_skipped {
+                bail!(
+                    "unchanged replan context was rewritten at n={n} \
+                     k={pct}% (dirty flag failed)"
+                );
+            }
             println!(
                 "{:>8} {:>5} {:>10} {:>10} {:>8} {:>9} {:>9} {:>9} {:>8}",
                 n,
@@ -601,14 +676,92 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
                 num((r.share_ratio * 1e3).round() / 1e3),
             );
             row.insert("grouping_ok".into(), Json::Bool(true));
+            row.insert("ctx_save_ms".into(), ms3(r.ctx_save_ms));
+            row.insert("ctx_resave_ms".into(), ms3(r.ctx_resave_ms));
+            row.insert(
+                "ctx_resave_skipped".into(),
+                Json::Bool(r.ctx_resave_skipped),
+            );
             replans.push(Json::Obj(row));
         }
+    }
+
+    // `sharded` scenario: per-model planner shards vs the sequential
+    // oracle.  Byte-identity is a hard bail at every size; the speedup
+    // self-check fires at n >= 100k with >= 4 threads on machines that
+    // actually have >= 4 cores.
+    let cores = std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1);
+    let mut sharded = Vec::new();
+    println!(
+        "\n{:>8} {:>8} {:>10} {:>10} {:>8} {:>7} {:>10} {:>10}",
+        "n", "threads", "seq_ms", "par_ms", "speedup", "shards", "max_ms",
+        "imbalance"
+    );
+    for &n in &shard_sizes {
+        let r = sharded_plan_scenario(n, planner_threads, 0xB15C);
+        if !r.identical {
+            bail!(
+                "sharded plan diverged from the sequential oracle at n={n} \
+                 (threads={planner_threads})"
+            );
+        }
+        if n >= 100_000
+            && planner_threads >= 4
+            && cores >= 4
+            && r.par_ms >= r.seq_ms
+        {
+            bail!(
+                "sharded planning not faster than sequential at n={n}: \
+                 {:.1} ms vs {:.1} ms ({planner_threads} threads, \
+                 {cores} cores)",
+                r.par_ms,
+                r.seq_ms
+            );
+        }
+        println!(
+            "{:>8} {:>8} {:>10} {:>10} {:>8} {:>7} {:>10} {:>10}",
+            n,
+            planner_threads,
+            format!("{:.1}", r.seq_ms),
+            format!("{:.1}", r.par_ms),
+            format!("{:.2}x", r.speedup),
+            r.planner_shards,
+            format!("{:.1}", r.shard_max_ms),
+            format!("{:.2}x", r.shard_imbalance),
+        );
+        let mut row = BTreeMap::new();
+        row.insert("n_clients".into(), num(r.n_clients as f64));
+        row.insert("threads".into(), num(r.threads as f64));
+        row.insert("seq_ms".into(), ms3(r.seq_ms));
+        row.insert("par_ms".into(), ms3(r.par_ms));
+        row.insert("speedup".into(), num((r.speedup * 1e3).round() / 1e3));
+        row.insert(
+            "planner_shards".into(),
+            num(r.planner_shards as f64),
+        );
+        row.insert("shard_max_ms".into(), ms3(r.shard_max_ms));
+        row.insert(
+            "shard_imbalance".into(),
+            num((r.shard_imbalance * 1e3).round() / 1e3),
+        );
+        row.insert("identical".into(), Json::Bool(r.identical));
+        row.insert("cores".into(), num(cores as f64));
+        row.insert("total_share".into(), num(r.total_share as f64));
+        row.insert("gpus".into(), num(r.gpus as f64));
+        row.insert("shards_ok".into(), Json::Bool(true));
+        sharded.push(Json::Obj(row));
     }
 
     // record the options the benchmark actually ran with, not literals
     let defaults = SchedulerOptions::default();
     let mut config = BTreeMap::new();
     config.insert("pool_size".into(), num(defaults.pool_size as f64));
+    config.insert(
+        "planner_threads".into(),
+        num(planner_threads as f64),
+    );
     config.insert("d_grid".into(), num(defaults.repartition.d_grid as f64));
     config.insert(
         "coarse_grid".into(),
@@ -623,10 +776,11 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
     config.insert("reps".into(), num(reps as f64));
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("scheduler".into()));
-    doc.insert("schema_version".into(), num(3.0));
+    doc.insert("schema_version".into(), num(4.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("runs".into(), Json::Arr(runs));
     doc.insert("replan".into(), Json::Arr(replans));
+    doc.insert("sharded".into(), Json::Arr(sharded));
     let json = Json::Obj(doc);
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {
@@ -1303,6 +1457,15 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
         .unwrap_or(10.0);
     let addr =
         args.flags.get("addr").cloned().unwrap_or("127.0.0.1:0".to_string());
+    // every replan the controller runs (--reconfigure) plans on the
+    // sharded path; >1 parallelises per-model shards, identical plans
+    let planner_threads: usize = args
+        .flags
+        .get("planner-threads")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --planner-threads")?
+        .unwrap_or(1);
 
     let mi = cm.model_index(model).context("unknown model")?;
     let engine = Arc::new(
@@ -1331,6 +1494,7 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
                 constraints: AllocConstraints::default(),
                 ..Default::default()
             },
+            planner_threads,
             ..Default::default()
         },
     );

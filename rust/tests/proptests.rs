@@ -356,6 +356,89 @@ fn prop_cached_planner_identical_to_uncached() {
     }
 }
 
+#[test]
+fn prop_sharded_plan_identical_to_sequential() {
+    // The sharded-planning determinism contract: every stage before
+    // placement is per-model, so planning with any `planner_threads`
+    // count must yield a plan byte-identical to the sequential oracle
+    // (`planner_threads = 1`) — on cold triggers and on warm (perturbed)
+    // triggers where each shard replays its own MergeCache / GroupState
+    // / DP hints.  Long-lived schedulers on every lane, so the warm
+    // state evolves independently per thread count and must still agree.
+    for case in 0..5u64 {
+        let mut rng = Rng::seed_from_u64(15_000 + case);
+        let cfg = Config::embedded();
+        let cm = CostModel::new(cfg.clone());
+        let n_models = cfg.models.len();
+        // draw demand from a random 2..=n_models model prefix so the
+        // shard count varies across cases
+        let use_models = (2 + rng.below(n_models.max(2) - 1)).min(n_models);
+        let n = 12 + rng.below(48);
+        let mut specs = Vec::with_capacity(n);
+        for i in 0..n {
+            let model = rng.below(use_models);
+            let m = &cfg.models[model];
+            let p = rng.below(m.layers);
+            let tail_ms = m.server_ms_ref * m.rel_cost_range(p, m.layers);
+            let budget = tail_ms * rng.range(2.5, 8.0);
+            let rate =
+                *[1.0, 10.0, 30.0, 60.0][..].get(rng.below(4)).unwrap();
+            specs.push(FragmentSpec::single(
+                ClientId(i as u32),
+                model,
+                p,
+                budget,
+                rate,
+            ));
+        }
+        let mk = |threads: usize| {
+            Scheduler::new(
+                cm.clone(),
+                SchedulerOptions {
+                    planner_threads: threads,
+                    ..Default::default()
+                },
+            )
+        };
+        let seq = mk(1);
+        let pars: Vec<(usize, Scheduler)> =
+            [2usize, 4, 8].iter().map(|&t| (t, mk(t))).collect();
+        for step in 0..3 {
+            if step > 0 {
+                // warm trigger: move some split points / budgets
+                for s in specs.iter_mut() {
+                    if rng.f64() < 0.3 {
+                        let m = &cfg.models[s.model];
+                        s.p = rng.below(m.layers);
+                        let tail =
+                            m.server_ms_ref * m.rel_cost_range(s.p, m.layers);
+                        s.budget_ms = tail * rng.range(2.5, 8.0);
+                    }
+                }
+            }
+            let (oracle, ostats) = seq.plan(&specs);
+            for (t, sched) in &pars {
+                let (plan, stats) = sched.plan(&specs);
+                assert_eq!(
+                    plan, oracle,
+                    "case {case} step {step}: threads={t} diverged"
+                );
+                assert_eq!(
+                    stats.planner_shards, ostats.planner_shards,
+                    "case {case} step {step}: shard count differs at \
+                     threads={t}"
+                );
+            }
+            assert!(
+                ostats.planner_shards >= 1
+                    && ostats.planner_shards <= use_models,
+                "case {case} step {step}: {} shards from {use_models} models",
+                ostats.planner_shards
+            );
+        }
+    }
+}
+
 /// Scheduler options with the heuristic delta-aware grouping pinned off:
 /// the exact lane, where incremental replanning is byte-identical to a
 /// from-scratch plan (the default lane's grouping is ε-bounded instead —

@@ -7,8 +7,9 @@ use graft::coordinator::grouping::{group_fragments, GroupOptions};
 use graft::coordinator::repartition::{plan_covers_demand, plan_is_slo_safe};
 use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::experiments::common::{
-    fleet, random_fragments, snapshot, Scale,
+    fleet, random_fragments, random_mixed_fragments, snapshot, Scale,
 };
+use graft::experiments::scale::sharded_plan_scenario;
 use graft::profiler::{AllocConstraints, CostModel};
 use graft::sim::{plan_energy_j, simulate, SimClient, SimOptions};
 
@@ -167,5 +168,81 @@ fn energy_accounting_is_consistent_across_systems() {
     assert!(
         e_graft <= e_gslice * 1.1,
         "graft {e_graft} energy way above gslice {e_gslice}"
+    );
+}
+
+#[test]
+fn sharded_warm_replay_matches_sequential_counters() {
+    // A warm sharded replan replays each shard's own MergeCache /
+    // GroupState / DP hints.  It must not only reproduce the
+    // sequential plan byte-for-byte but take the same incremental
+    // path: the merge / group / reuse counters agree with a
+    // `planner_threads = 1` scheduler warmed on the same triggers.
+    let cm = cm();
+    let n = 96;
+    let mut specs = random_mixed_fragments(&cm, n, 0x5EED);
+    let mk = |t: usize| {
+        Scheduler::new(
+            cm.clone(),
+            SchedulerOptions { planner_threads: t, ..Default::default() },
+        )
+    };
+    let seq = mk(1);
+    let par = mk(4);
+    let (p0, _) = seq.plan(&specs);
+    let (q0, t0) = par.plan(&specs);
+    assert_eq!(p0, q0, "cold sharded plan diverged");
+    assert!(t0.planner_shards >= 2, "mixed fleet made one shard");
+    // move ~10% of split points, then warm-replan on both lanes
+    for (i, s) in specs.iter_mut().enumerate() {
+        if i % 10 == 0 {
+            let m = &cm.config().models[s.model];
+            s.p = (s.p + 1) % m.layers;
+            let tail = m.server_ms_ref * m.rel_cost_range(s.p, m.layers);
+            s.budget_ms = tail * 4.0;
+        }
+    }
+    let (p1, a) = seq.plan(&specs);
+    let (q1, b) = par.plan(&specs);
+    assert_eq!(p1, q1, "warm sharded replan diverged from sequential");
+    assert_eq!(a.merge_classes, b.merge_classes, "merge_classes");
+    assert_eq!(a.classes_remerged, b.classes_remerged, "classes_remerged");
+    assert_eq!(a.groups_replayed, b.groups_replayed, "groups_replayed");
+    assert_eq!(
+        a.fragments_regrouped, b.fragments_regrouped,
+        "fragments_regrouped"
+    );
+    assert_eq!(a.n_groups_reused, b.n_groups_reused, "n_groups_reused");
+    assert_eq!(a.n_groups, b.n_groups, "n_groups");
+    assert!(
+        a.groups_replayed > 0 || a.n_groups_reused > 0,
+        "warm replan never replayed anything: {a:?}"
+    );
+}
+
+#[test]
+#[ignore] // stress tier: 100k-client sharded planning point (tools/ci.sh --stress)
+fn sharded_plan_100k_identical_and_profiled() {
+    // The `bench-scheduler` n=100k point as a self-checked test: at
+    // scale the parallel plan must still be byte-identical to the
+    // sequential oracle, with sane shard accounting.  The speedup
+    // itself is only asserted by `graft bench-scheduler`, and only on
+    // multi-core runners.
+    let r = sharded_plan_scenario(100_000, 4, 0xB15C);
+    assert!(r.identical, "100k sharded plan diverged from sequential");
+    assert!(r.planner_shards >= 2, "100k mixed fleet made one shard");
+    assert!(r.shard_max_ms <= r.par_ms, "shard wall time exceeds plan");
+    assert!(r.shard_imbalance >= 1.0 - 1e-9, "imbalance below 1.0");
+    assert!(r.total_share > 0 && r.gpus > 0, "placement missing");
+    println!(
+        "n=100000 threads={}: seq {:.0} ms, par {:.0} ms ({:.2}x), \
+         {} shards, slowest {:.0} ms, imbalance {:.2}x",
+        r.threads,
+        r.seq_ms,
+        r.par_ms,
+        r.speedup,
+        r.planner_shards,
+        r.shard_max_ms,
+        r.shard_imbalance
     );
 }

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI pipeline: build, test, style gates, and fast bench smoke runs:
-# planner (n=200, re-validates cached==uncached plan identity plus the
-# replan scenario's warm<=cold, incremental-grouping and plan-quality
+# planner (n=200 on 2 planner shards, re-validates cached==uncached and
+# sharded==sequential plan identity plus the replan scenario's
+# warm<=cold, incremental-grouping, plan-quality and dirty-flag
 # self-checks), serving
 # (n=100, both executors), placement (n=200, integrated-vs-oracle GPU
 # counts + cap checks), transition (n=200, live hot-swap: zero-drop
@@ -13,7 +14,8 @@
 #   tools/ci.sh --stress   build + the #[ignore]d stress tests: serving
 #                          (64 instances x 10k requests, pooled executor)
 #                          and scheduler (lazy-vs-dense similarity table
-#                          at n=2500)
+#                          at n=2500, 100k-client sharded-vs-sequential
+#                          plan identity)
 #
 # Concurrency tests carry in-test watchdogs that abort on deadlock; the
 # `timeout` wrappers here are the outer belt-and-braces so a wedged
@@ -33,8 +35,8 @@ if [[ "$STRESS" == "1" ]]; then
     echo "== serving stress (64 instances x 10k requests, cap 900s) =="
     timeout 900 cargo test --release --test serving_stress -- \
         --ignored --nocapture
-    echo "== scheduler stress (lazy-vs-dense grouping at n=2500, cap 900s) =="
-    timeout 900 cargo test --release --test scheduler_integration -- \
+    echo "== scheduler stress (n=2500 grouping, n=100k sharded plan, cap 1800s) =="
+    timeout 1800 cargo test --release --test scheduler_integration -- \
         --ignored --nocapture
     echo "ci: stress OK"
     exit 0
@@ -70,17 +72,23 @@ fi
 echo "== bench smoke (n=200, incl. trigger-to-trigger replan scenario) =="
 # the replan scenario self-checks warm replan <= cold plan time,
 # incremental grouping <= scratch grouping time at small perturbations,
-# and replanned-plan quality (coverage/SLO-safety/share slack vs a
-# fresh cold plan) inside the bench (it bails hard); the greps assert
-# the section, the grouping counters and the per-row grouping_ok flag
-# actually landed in the JSON
+# replanned-plan quality (coverage/SLO-safety/share slack vs a fresh
+# cold plan) and clean context re-saves being skipped (dirty flag)
+# inside the bench (it bails hard); --planner-threads 2 routes the
+# plans through the sharded lane, whose byte-identity to the
+# sequential oracle is also a hard bail; the greps assert the
+# sections, the grouping counters and the per-row grouping_ok /
+# shards_ok flags actually landed in the JSON
 timeout 600 cargo run --release -p graft -- bench-scheduler \
-    --sizes 200 --reps 1 --out target/BENCH_scheduler_smoke.json
+    --sizes 200 --reps 1 --planner-threads 2 --shard-sizes 200 \
+    --out target/BENCH_scheduler_smoke.json
 test -s target/BENCH_scheduler_smoke.json
 grep -q '"replan"' target/BENCH_scheduler_smoke.json
 grep -q '"groups_replayed"' target/BENCH_scheduler_smoke.json
 grep -q '"fragments_regrouped"' target/BENCH_scheduler_smoke.json
 grep -q '"grouping_ok":true' target/BENCH_scheduler_smoke.json
+grep -q '"planner_shards"' target/BENCH_scheduler_smoke.json
+grep -q '"shards_ok":true' target/BENCH_scheduler_smoke.json
 
 echo "== serving bench smoke (n=100, both executors) =="
 timeout 600 cargo run --release -p graft -- bench-serving \
