@@ -25,7 +25,7 @@
 //! tests drive it directly; [`ReplanController::run`] wraps it in a
 //! background watcher thread for `graft serve --reconfigure`.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,9 +33,12 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::fragment::FragmentSpec;
-use super::placement::{place_delta, stamp};
+use super::placement::{
+    place_constrained, place_delta_constrained, stamp, PlacementConstraints,
+};
 use super::scheduler::Scheduler;
 use crate::runtime::transition::{diff_plans, LiveServer, TransitionReport};
+use crate::serving::GpuDegradation;
 use crate::util::lock::lock_recover;
 
 #[derive(Debug, Clone)]
@@ -69,6 +72,22 @@ pub struct ControllerOptions {
     /// `SchedulerOptions::planner_threads` > 1 to parallelise the
     /// per-model shards with byte-identical plans.
     pub context_path: Option<PathBuf>,
+    /// Predictive failure avoidance: a GPU whose health score
+    /// ([`crate::serving::HealthRegistry::gpu_scores`]) reaches this
+    /// threshold joins the *soft* avoid-set — the next replan migrates
+    /// its instances to healthy GPUs (a [`TickOutcome::ProactiveMigration`]
+    /// fires immediately when it hosts any).  Suspects stay suspect
+    /// until explicitly recovered
+    /// ([`crate::serving::HealthRegistry::mark_gpu_recovered`]) —
+    /// hysteresis, so a vacated GPU (whose score freezes without
+    /// beats) cannot flap back in.  `None` disables the predictive
+    /// path (the reactive baseline).
+    pub suspect_threshold: Option<f64>,
+    /// Correlated-failure domains (rack/host groups): when any member
+    /// GPU fails, the emergency replan excludes the *whole* domain —
+    /// hardware that shares a failure domain with dead hardware is
+    /// assumed next.
+    pub failure_domains: Vec<Vec<u32>>,
 }
 
 impl Default for ControllerOptions {
@@ -80,6 +99,8 @@ impl Default for ControllerOptions {
             rate_clamp: (0.2, 5.0),
             unplanned_rate_floor: 1.0,
             context_path: None,
+            suspect_threshold: Some(0.6),
+            failure_domains: Vec::new(),
         }
     }
 }
@@ -105,8 +126,34 @@ pub enum TickOutcome {
     /// The live core reported GPU failures: re-planned immediately with
     /// the dead GPUs excluded from placement and hot-swapped the
     /// surviving capacity in (bypasses the drift/min-requests gates).
+    /// `domain_excluded` lists still-alive GPUs pre-emptively excluded
+    /// because they share a configured failure domain with a dead one.
     EmergencyReplanned {
         failed_gpus: Vec<u32>,
+        domain_excluded: Vec<u32>,
+        report: TransitionReport,
+    },
+    /// Previously dead/degraded/suspect GPUs were marked recovered:
+    /// re-planned with a full repack so the restored capacity is
+    /// actually reused (a delta placement would pin everything in
+    /// place and never migrate back).
+    RecoveryReplanned {
+        recovered_gpus: Vec<u32>,
+        report: TransitionReport,
+    },
+    /// The live core reported partial-GPU degradations: re-planned with
+    /// the affected GPUs' residual capacities folded into placement,
+    /// shedding only the instances that no longer fit.
+    DegradeRebalanced {
+        degraded_gpus: Vec<u32>,
+        report: TransitionReport,
+    },
+    /// Predictive path: health scores crossed the suspect threshold on
+    /// GPUs still hosting instances — migrated them off *before* a
+    /// failure, while the hardware can still drain cleanly.
+    ProactiveMigration {
+        suspect_gpus: Vec<u32>,
+        migrated_instances: usize,
         report: TransitionReport,
     },
 }
@@ -121,8 +168,20 @@ struct CtrlState {
     /// swaps (each new core starts a fresh
     /// [`crate::serving::HealthRegistry`]) and excluded from every
     /// subsequent placement — a replanned fleet never lands back on
-    /// hardware that already failed.
+    /// hardware that already failed.  Shrinks only through the explicit
+    /// recovery path ([`crate::serving::HealthRegistry::mark_gpu_recovered`]).
     dead_gpus: BTreeSet<u32>,
+    /// Soft avoid-set: GPUs whose health score crossed
+    /// [`ControllerOptions::suspect_threshold`].  Placement treats them
+    /// as last-resort bins (prefer-not, never exclude) — capacity is
+    /// never sacrificed on a hunch.
+    suspect_gpus: BTreeSet<u32>,
+    /// Suspects a proactive migration has already been attempted for,
+    /// so a frozen above-threshold score doesn't re-fire every tick.
+    handled_suspects: BTreeSet<u32>,
+    /// Partial-GPU degradations seen so far: placement offers only the
+    /// residual capacity of these GPUs.
+    degraded: BTreeMap<u32, GpuDegradation>,
 }
 
 pub struct ReplanController {
@@ -148,6 +207,9 @@ impl ReplanController {
                 baseline: None,
                 swap_gen: 0,
                 dead_gpus: BTreeSet::new(),
+                suspect_gpus: BTreeSet::new(),
+                handled_suspects: BTreeSet::new(),
+                degraded: BTreeMap::new(),
             }),
         }
     }
@@ -163,24 +225,78 @@ impl ReplanController {
         lock_recover(&self.state).dead_gpus.iter().copied().collect()
     }
 
-    /// Re-plan with the accumulated dead GPUs excluded, re-place
-    /// against the deployed plan and hot-swap.  Shared by the drift
-    /// path and the emergency (failure-triggered) path.
+    /// The current soft avoid-set (suspect but not dead GPUs).
+    pub fn suspect_gpus(&self) -> Vec<u32> {
+        lock_recover(&self.state)
+            .suspect_gpus
+            .iter()
+            .copied()
+            .collect()
+    }
+
+    /// Partially-degraded GPUs and their cumulative capacity losses.
+    pub fn degraded_gpus(&self) -> Vec<(u32, GpuDegradation)> {
+        lock_recover(&self.state)
+            .degraded
+            .iter()
+            .map(|(g, d)| (*g, *d))
+            .collect()
+    }
+
+    /// The full placement constraint set implied by the controller's
+    /// accumulated failure knowledge: dead GPUs are hard-avoided,
+    /// suspects are soft-avoided, degradations cap residual capacity.
+    fn constraints(&self, st: &CtrlState) -> PlacementConstraints {
+        let mut cons = PlacementConstraints {
+            hard_avoid: st.dead_gpus.iter().copied().collect(),
+            ..Default::default()
+        };
+        cons.soft_avoid = st
+            .suspect_gpus
+            .iter()
+            .filter(|g| !st.dead_gpus.contains(g))
+            .copied()
+            .collect();
+        for (gpu, d) in &st.degraded {
+            if st.dead_gpus.contains(gpu) {
+                continue;
+            }
+            cons.share_loss.insert(*gpu, d.share_loss);
+            cons.mem_loss_mb.insert(*gpu, d.mem_loss_mb);
+        }
+        cons
+    }
+
+    /// Re-plan with the accumulated failure constraints applied,
+    /// re-place and hot-swap.  Shared by the drift path and the
+    /// failure/recovery/degrade/suspect paths.  `rebalance` picks the
+    /// placement strategy: `false` → migration-minimizing delta
+    /// against the deployed plan; `true` → full constrained repack
+    /// (used after a recovery, where the delta would pin every
+    /// instance in place and never reuse the restored GPU).
     fn replan_and_swap(
         &self,
         st: &mut CtrlState,
         demands: Vec<FragmentSpec>,
         mut new_plan: crate::coordinator::plan::ExecutionPlan,
+        rebalance: bool,
     ) -> TransitionReport {
         let cm = self.sched.cost_model();
-        let old_plan = self.live.plan();
-        let avoid: Vec<u32> = st.dead_gpus.iter().copied().collect();
-        // migration-minimizing re-placement against the deployed plan
-        // (falls back to the scheduler's own FFD stamps on failure —
-        // only reachable with an empty avoid set, where the stamps are
-        // equivalent)
-        if let Ok(d) = place_delta(cm, &old_plan, &new_plan, None, &avoid) {
-            stamp(&mut new_plan, &d.placement);
+        let cons = self.constraints(st);
+        // re-placement under the constraint set (falls back to the
+        // scheduler's own FFD stamps on failure — only reachable with
+        // an empty constraint set, where the stamps are equivalent)
+        if rebalance {
+            if let Ok(p) = place_constrained(cm, &new_plan, None, &cons) {
+                stamp(&mut new_plan, &p);
+            }
+        } else {
+            let old_plan = self.live.plan();
+            if let Ok(d) =
+                place_delta_constrained(cm, &old_plan, &new_plan, None, &cons)
+            {
+                stamp(&mut new_plan, &d.placement);
+            }
         }
         let report = self.live.reconfigure(&new_plan);
         st.demands = demands;
@@ -203,16 +319,127 @@ impl ReplanController {
         let failed = server.health().take_unacked_gpu_failures();
         if !failed.is_empty() {
             st.dead_gpus.extend(failed.iter().copied());
+            // correlated-failure domains: hardware sharing a domain
+            // with a dead GPU is excluded wholesale before it fails too
+            let mut domain_excluded: Vec<u32> = Vec::new();
+            for domain in &self.opts.failure_domains {
+                if domain.iter().any(|g| failed.contains(g)) {
+                    for &g in domain {
+                        if st.dead_gpus.insert(g) {
+                            domain_excluded.push(g);
+                        }
+                    }
+                }
+            }
+            domain_excluded.sort_unstable();
+            // hard-dead supersedes every softer mark
+            let dead = st.dead_gpus.clone();
+            st.suspect_gpus.retain(|g| !dead.contains(g));
+            st.handled_suspects.retain(|g| !dead.contains(g));
+            st.degraded.retain(|g, _| !dead.contains(g));
             let demands = st.demands.clone();
             let (new_plan, _stats) = self.sched.plan(&demands);
-            let report = self.replan_and_swap(&mut st, demands, new_plan);
+            let report = self.replan_and_swap(&mut st, demands, new_plan, false);
             // the swap installed a fresh core whose registry starts
             // clean; close the epoch so `degraded()` reads false
             self.live.server().health().note_recovery();
             return TickOutcome::EmergencyReplanned {
                 failed_gpus: failed,
+                domain_excluded,
                 report,
             };
+        }
+
+        // recovery: GPUs explicitly marked healthy again are lifted out
+        // of every avoid/degrade set, and a *full repack* replan pulls
+        // capacity back onto them (a delta placement would pin the
+        // deployed plan and never migrate back)
+        let recovered: Vec<u32> = server
+            .health()
+            .take_unacked_gpu_recoveries()
+            .into_iter()
+            .filter(|g| {
+                st.dead_gpus.contains(g)
+                    || st.degraded.contains_key(g)
+                    || st.suspect_gpus.contains(g)
+            })
+            .collect();
+        if !recovered.is_empty() {
+            for g in &recovered {
+                st.dead_gpus.remove(g);
+                st.degraded.remove(g);
+                st.suspect_gpus.remove(g);
+                st.handled_suspects.remove(g);
+            }
+            let demands = st.demands.clone();
+            let (new_plan, _stats) = self.sched.plan(&demands);
+            let report = self.replan_and_swap(&mut st, demands, new_plan, true);
+            return TickOutcome::RecoveryReplanned {
+                recovered_gpus: recovered,
+                report,
+            };
+        }
+
+        // partial degradation: fold the reported residual capacities
+        // into placement and shed only what no longer fits
+        let degrades: Vec<(u32, GpuDegradation)> = server
+            .health()
+            .take_unacked_degrades()
+            .into_iter()
+            .filter(|(g, _)| !st.dead_gpus.contains(g))
+            .collect();
+        if !degrades.is_empty() {
+            for (g, d) in &degrades {
+                st.degraded.insert(*g, *d);
+            }
+            let demands = st.demands.clone();
+            let (new_plan, _stats) = self.sched.plan(&demands);
+            let report = self.replan_and_swap(&mut st, demands, new_plan, false);
+            // the degrade bumped the failure epoch; the swap routed
+            // around the lost capacity, so close the epoch
+            self.live.server().health().note_recovery();
+            return TickOutcome::DegradeRebalanced {
+                degraded_gpus: degrades.iter().map(|(g, _)| *g).collect(),
+                report,
+            };
+        }
+
+        // predictive avoidance: fold health scores into the soft
+        // avoid-set, and migrate off newly-suspect GPUs that still
+        // host instances — before the hardware actually fails
+        if let Some(threshold) = self.opts.suspect_threshold {
+            for (gpu, score) in server.gpu_health_scores() {
+                if score >= threshold && !st.dead_gpus.contains(&gpu) {
+                    st.suspect_gpus.insert(gpu);
+                }
+            }
+            let pending: Vec<u32> = st
+                .suspect_gpus
+                .difference(&st.handled_suspects)
+                .copied()
+                .collect();
+            if !pending.is_empty() {
+                st.handled_suspects.extend(pending.iter().copied());
+                let hosted: usize = self
+                    .live
+                    .plan()
+                    .stages()
+                    .map(|s| {
+                        s.gpus.iter().filter(|g| pending.contains(*g)).count()
+                    })
+                    .sum();
+                if hosted > 0 {
+                    let demands = st.demands.clone();
+                    let (new_plan, _stats) = self.sched.plan(&demands);
+                    let report =
+                        self.replan_and_swap(&mut st, demands, new_plan, false);
+                    return TickOutcome::ProactiveMigration {
+                        suspect_gpus: pending,
+                        migrated_instances: hosted,
+                        report,
+                    };
+                }
+            }
         }
 
         let gen = self.live.swap_count();
@@ -319,7 +546,7 @@ impl ReplanController {
             st.demands = demands;
             return TickOutcome::PlanUnchanged { max_drift };
         }
-        let report = self.replan_and_swap(&mut st, demands, new_plan);
+        let report = self.replan_and_swap(&mut st, demands, new_plan, false);
         TickOutcome::Replanned {
             max_drift,
             scaled_models: factors.len() + surges.len(),
@@ -338,14 +565,54 @@ impl ReplanController {
                     let outcome = self.tick();
                     if let TickOutcome::EmergencyReplanned {
                         failed_gpus,
+                        domain_excluded,
                         report,
                     } = &outcome
                     {
                         eprintln!(
-                            "[controller] EMERGENCY: gpu(s) {:?} failed -> \
-                             replanned around them, swap {:.1} ms (drain \
-                             {:.1} ms)",
-                            failed_gpus, report.total_ms, report.drain_ms,
+                            "[controller] EMERGENCY: gpu(s) {:?} failed \
+                             (domain-excluded {:?}) -> replanned around them, \
+                             swap {:.1} ms (drain {:.1} ms)",
+                            failed_gpus,
+                            domain_excluded,
+                            report.total_ms,
+                            report.drain_ms,
+                        );
+                    }
+                    if let TickOutcome::ProactiveMigration {
+                        suspect_gpus,
+                        migrated_instances,
+                        report,
+                    } = &outcome
+                    {
+                        eprintln!(
+                            "[controller] PREDICTIVE: gpu(s) {:?} suspect -> \
+                             migrated {} instance(s) off pre-failure, swap \
+                             {:.1} ms",
+                            suspect_gpus, migrated_instances, report.total_ms,
+                        );
+                    }
+                    if let TickOutcome::RecoveryReplanned {
+                        recovered_gpus,
+                        report,
+                    } = &outcome
+                    {
+                        eprintln!(
+                            "[controller] RECOVERY: gpu(s) {:?} healthy again \
+                             -> repacked onto restored capacity, swap {:.1} ms",
+                            recovered_gpus, report.total_ms,
+                        );
+                    }
+                    if let TickOutcome::DegradeRebalanced {
+                        degraded_gpus,
+                        report,
+                    } = &outcome
+                    {
+                        eprintln!(
+                            "[controller] DEGRADE: gpu(s) {:?} lost partial \
+                             capacity -> rebalanced onto residuals, swap \
+                             {:.1} ms",
+                            degraded_gpus, report.total_ms,
                         );
                     }
                     if let TickOutcome::Replanned {

@@ -17,7 +17,8 @@ pub mod scheduler;
 pub use controller::{ControllerOptions, ReplanController, TickOutcome};
 pub use fragment::{ClientId, FragmentSpec};
 pub use placement::{
-    place, place_delta, DeltaPlacement, GpuUsage, Placement,
+    place, place_constrained, place_delta, place_delta_constrained,
+    DeltaPlacement, GpuUsage, Placement, PlacementConstraints,
     PlacementOptions,
 };
 pub use plan::{ExecutionPlan, MemberPlan, RealignedSet, StagePlan};

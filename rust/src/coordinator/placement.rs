@@ -18,6 +18,8 @@
 //! planner never uses more GPUs than FFD-packing the same demand after
 //! the fact, and never violates a cap.
 
+use std::collections::BTreeMap;
+
 use super::plan::ExecutionPlan;
 use crate::profiler::{Alloc, CostModel};
 
@@ -166,6 +168,65 @@ pub struct Unplaceable {
     pub cluster_full: bool,
 }
 
+/// Per-GPU placement constraints beyond the base caps: hard avoidance
+/// (dead hardware — never placed on), *soft* avoidance (suspect
+/// hardware — last-resort bins: the packing first tries to succeed
+/// without them and only spills onto them when the cluster cap leaves
+/// no alternative), and per-GPU residual capacity losses (degraded
+/// hardware that keeps serving at reduced share/memory).
+///
+/// An empty constraint set makes every constrained entry point
+/// byte-identical to its unconstrained counterpart — soft avoidance is
+/// *advisory only*, property-tested in `tests/proptests.rs`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlacementConstraints {
+    /// Never place here (failed hardware).
+    pub hard_avoid: Vec<u32>,
+    /// Prefer not to place here (suspect hardware).
+    pub soft_avoid: Vec<u32>,
+    /// Compute share lost per GPU (subtracted from `max_share`).
+    pub share_loss: BTreeMap<u32, u32>,
+    /// Memory lost per GPU in MB (subtracted from `gpu_mem_mb`).
+    pub mem_loss_mb: BTreeMap<u32, f64>,
+}
+
+impl PlacementConstraints {
+    /// The emergency-replan shape: dead GPUs only.
+    pub fn hard_only(avoid: &[u32]) -> Self {
+        Self { hard_avoid: avoid.to_vec(), ..Default::default() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hard_avoid.is_empty()
+            && self.soft_avoid.is_empty()
+            && self.share_loss.is_empty()
+            && self.mem_loss_mb.is_empty()
+    }
+
+    pub fn is_hard(&self, gpu: u32) -> bool {
+        self.hard_avoid.contains(&gpu)
+    }
+
+    pub fn is_soft(&self, gpu: u32) -> bool {
+        self.soft_avoid.contains(&gpu)
+    }
+
+    /// Hard or soft avoided (the pin filter for delta replacement).
+    pub fn is_avoided(&self, gpu: u32) -> bool {
+        self.is_hard(gpu) || self.is_soft(gpu)
+    }
+
+    /// Residual share capacity of `gpu` given the base cap.
+    pub fn share_cap(&self, gpu: u32, base: u32) -> u32 {
+        base.saturating_sub(self.share_loss.get(&gpu).copied().unwrap_or(0))
+    }
+
+    /// Residual memory capacity of `gpu` given the base cap.
+    pub fn mem_cap(&self, gpu: u32, base: f64) -> f64 {
+        (base - self.mem_loss_mb.get(&gpu).copied().unwrap_or(0.0)).max(0.0)
+    }
+}
+
 /// First-fit-decreasing placement of every instance of `plan` under the
 /// configured per-GPU share cap and memory capacity.  Deterministic:
 /// items are ordered by (share desc, memory desc) with stable
@@ -191,6 +252,58 @@ pub fn place_avoiding(
     max_gpus: Option<usize>,
     avoid: &[u32],
 ) -> Result<Placement, Unplaceable> {
+    place_items(
+        cm,
+        plan,
+        max_gpus,
+        &PlacementConstraints::hard_only(avoid),
+        false,
+    )
+}
+
+/// [`place`] under full [`PlacementConstraints`]: hard-avoided GPUs are
+/// excluded, degraded GPUs offer only their residual capacity, and
+/// soft-avoided (suspect) GPUs are last-resort bins — a *strict* pass
+/// first treats them as excluded, and only when that pass dies on the
+/// cluster cap does a second pass let items spill onto suspects.  With
+/// no cap the strict pass always succeeds (fresh GPUs absorb the
+/// displaced load), so suspects end up fully vacated.  An empty
+/// constraint set is byte-identical to [`place`].
+pub fn place_constrained(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    max_gpus: Option<usize>,
+    cons: &PlacementConstraints,
+) -> Result<Placement, Unplaceable> {
+    if cons.soft_avoid.is_empty() {
+        return place_items(cm, plan, max_gpus, cons, false);
+    }
+    let mut strict = cons.clone();
+    strict.hard_avoid.extend(strict.soft_avoid.iter().copied());
+    strict.soft_avoid.clear();
+    match place_items(cm, plan, max_gpus, &strict, false) {
+        Ok(p) => Ok(p),
+        // only a cap failure justifies touching suspects; a too-big
+        // single instance fails either way
+        Err(e) if e.cluster_full => place_items(cm, plan, max_gpus, cons, true),
+        Err(e) => Err(e),
+    }
+}
+
+/// The FFD core shared by every placement entry point.  `soft_last`
+/// arms the two-tier bin ordering: the first-fit pass skips soft
+/// bins, and only when the cluster cap blocks opening a fresh bin does
+/// a second pass consider them (suspect GPUs are live hardware inside
+/// the provisioned cluster, so the cap counts healthy bins).  With
+/// `soft_last == false` and no capacity losses this is exactly the
+/// historical `place_avoiding` body.
+fn place_items(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    max_gpus: Option<usize>,
+    cons: &PlacementConstraints,
+    soft_last: bool,
+) -> Result<Placement, Unplaceable> {
     let g = &cm.config().gpu;
     // expand stages into placeable items
     let mut items: Vec<(usize, usize, u32, f64)> = Vec::new();
@@ -212,40 +325,68 @@ pub fn place_avoiding(
     }
     items.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.total_cmp(&a.3)));
 
-    let blocked = |gpu: usize| avoid.contains(&(gpu as u32));
+    let hard = |gpu: usize| cons.is_hard(gpu as u32);
+    let soft = |gpu: usize| soft_last && cons.is_soft(gpu as u32);
+    let share_cap = |gpu: usize| cons.share_cap(gpu as u32, g.max_share);
+    let mem_cap = |gpu: usize| cons.mem_cap(gpu as u32, g.gpu_mem_mb);
     let mut usage: Vec<GpuUsage> = Vec::new();
     for (si, inst, share, mem) in items {
-        let slot = usage.iter().enumerate().position(|(i, u)| {
-            !blocked(i)
-                && u.share + share <= g.max_share
-                && u.mem_mb + mem <= g.gpu_mem_mb
-        });
-        let gpu = match slot {
-            Some(i) => i,
-            None => {
-                if let Some(cap) = max_gpus {
-                    let usable = usage
+        let fits = |i: usize, u: &GpuUsage| {
+            u.share + share <= share_cap(i) && u.mem_mb + mem <= mem_cap(i)
+        };
+        // first fit over healthy bins
+        let mut slot = usage
+            .iter()
+            .enumerate()
+            .position(|(i, u)| !hard(i) && !soft(i) && fits(i, u));
+        if slot.is_none() {
+            // idle soft placeholders (skipped below) do not count as
+            // occupied cluster capacity
+            let used = usage
+                .iter()
+                .enumerate()
+                .filter(|(i, u)| {
+                    !hard(*i)
+                        && (!soft(*i) || u.share > 0 || u.mem_mb > 0.0)
+                })
+                .count();
+            if max_gpus.is_some_and(|cap| used >= cap) {
+                if soft_last {
+                    // last resort: spill onto a suspect bin with room
+                    slot = usage
                         .iter()
                         .enumerate()
-                        .filter(|(i, _)| !blocked(*i))
-                        .count();
-                    if usable >= cap {
-                        return Err(Unplaceable {
-                            stage: si,
-                            share,
-                            mem_mb: mem,
-                            cluster_full: true,
-                        });
+                        .position(|(i, u)| soft(i) && !hard(i) && fits(i, u));
+                }
+                if slot.is_none() {
+                    return Err(Unplaceable {
+                        stage: si,
+                        share,
+                        mem_mb: mem,
+                        cluster_full: true,
+                    });
+                }
+            } else {
+                // open a fresh bin, skipping over avoided / suspect /
+                // too-degraded ids so they are never handed out here
+                // (the loss maps are finite, so this terminates)
+                loop {
+                    let id = usage.len();
+                    if hard(id)
+                        || soft(id)
+                        || share > share_cap(id)
+                        || mem > mem_cap(id)
+                    {
+                        usage.push(GpuUsage::default());
+                        continue;
                     }
-                }
-                // skip over avoided ids so they are never handed out
-                while blocked(usage.len()) {
                     usage.push(GpuUsage::default());
+                    slot = Some(id);
+                    break;
                 }
-                usage.push(GpuUsage::default());
-                usage.len() - 1
             }
-        };
+        }
+        let gpu = slot.expect("slot resolved above");
         usage[gpu].share += share;
         usage[gpu].mem_mb += mem;
         by_stage[si][inst] = gpu as u32;
@@ -396,8 +537,34 @@ pub fn place_delta(
     max_gpus: Option<usize>,
     avoid: &[u32],
 ) -> Result<DeltaPlacement, Unplaceable> {
+    place_delta_constrained(
+        cm,
+        old,
+        new,
+        max_gpus,
+        &PlacementConstraints::hard_only(avoid),
+    )
+}
+
+/// [`place_delta`] under full [`PlacementConstraints`]: stages stamped
+/// onto hard- *or* soft-avoided GPUs are unpinned (their instances
+/// proactively migrate off dead and suspect hardware alike), pinned
+/// stages must fit their GPUs' residual capacity (a degraded GPU sheds
+/// whatever no longer fits), and the diff packs under the same
+/// soft-last bin ordering as [`place_constrained`] — whose result is
+/// also the repack oracle, so `migrated ≤ repack_migrated` and
+/// `gpus_used ≤ repack_gpus` keep holding with constraints active.
+/// Empty constraints are byte-identical to [`place_delta`] with an
+/// empty avoid set.
+pub fn place_delta_constrained(
+    cm: &CostModel,
+    old: &ExecutionPlan,
+    new: &ExecutionPlan,
+    max_gpus: Option<usize>,
+    cons: &PlacementConstraints,
+) -> Result<DeltaPlacement, Unplaceable> {
     let g = &cm.config().gpu;
-    let repack = place_avoiding(cm, new, max_gpus, avoid)?;
+    let repack = place_constrained(cm, new, max_gpus, cons)?;
 
     // index the old plan's stamped stages by identity (an unstamped old
     // plan pins nothing and the repack wins trivially)
@@ -436,9 +603,27 @@ pub fn place_delta(
                     })
                     .map(|i| bucket.swap_remove(i).2)
             })
-            // a stage stamped onto failed hardware cannot stay: unpin
-            // it so every instance restarts on surviving GPUs
-            .filter(|gpus| !gpus.iter().any(|gpu| avoid.contains(gpu)));
+            // a stage stamped onto failed or suspect hardware cannot
+            // stay: unpin it so every instance restarts elsewhere
+            .filter(|gpus| !gpus.iter().any(|gpu| cons.is_avoided(*gpu)))
+            // degraded hardware: the pins must fit the residual caps
+            // on top of what is already pinned there, else the stage
+            // sheds off the shrunken GPU
+            .filter(|gpus| {
+                let mem = cm.instance_mem_mb(s.frag, s.alloc.batch);
+                let mut add: std::collections::HashMap<u32, u32> =
+                    std::collections::HashMap::new();
+                for &gpu in gpus.iter() {
+                    *add.entry(gpu).or_insert(0) += 1;
+                }
+                add.iter().all(|(&gpu, &cnt)| {
+                    let u = &usage[gpu as usize];
+                    u.share + s.alloc.share * cnt
+                        <= cons.share_cap(gpu, g.max_share)
+                        && u.mem_mb + mem * cnt as f64
+                            <= cons.mem_cap(gpu, g.gpu_mem_mb)
+                })
+            });
         match matched {
             Some(gpus) => {
                 // unchanged stage: pin every instance to its current GPU
@@ -478,34 +663,58 @@ pub fn place_delta(
     }
     let migrated = items.len();
     items.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.total_cmp(&a.3)));
-    let blocked = |gpu: usize| avoid.contains(&(gpu as u32));
+    let hard = |gpu: usize| cons.is_hard(gpu as u32);
+    let soft = |gpu: usize| cons.is_soft(gpu as u32);
+    let share_cap = |gpu: usize| cons.share_cap(gpu as u32, g.max_share);
+    let mem_cap = |gpu: usize| cons.mem_cap(gpu as u32, g.gpu_mem_mb);
     let mut delta_ok = true;
     for (si, inst, share, mem) in items {
-        let slot = usage.iter().enumerate().position(|(i, u)| {
-            !blocked(i)
-                && u.share + share <= g.max_share
-                && u.mem_mb + mem <= g.gpu_mem_mb
-        });
-        let gpu = match slot {
-            Some(i) => i,
-            None => {
-                let usable = usage
+        let fits = |i: usize, u: &GpuUsage| {
+            u.share + share <= share_cap(i) && u.mem_mb + mem <= mem_cap(i)
+        };
+        // first fit over healthy bins (soft bins are last resort, same
+        // discipline as `place_items`)
+        let mut slot = usage
+            .iter()
+            .enumerate()
+            .position(|(i, u)| !hard(i) && !soft(i) && fits(i, u));
+        if slot.is_none() {
+            let used = usage
+                .iter()
+                .enumerate()
+                .filter(|(i, u)| {
+                    !hard(*i)
+                        && (!soft(*i) || u.share > 0 || u.mem_mb > 0.0)
+                })
+                .count();
+            if max_gpus.is_some_and(|cap| used >= cap) {
+                slot = usage
                     .iter()
                     .enumerate()
-                    .filter(|(i, _)| !blocked(*i))
-                    .count();
-                if max_gpus.is_some_and(|cap| usable >= cap) {
+                    .position(|(i, u)| soft(i) && !hard(i) && fits(i, u));
+                if slot.is_none() {
                     // the repack fit under the cap, so fall back to it
                     delta_ok = false;
                     break;
                 }
-                while blocked(usage.len()) {
+            } else {
+                loop {
+                    let id = usage.len();
+                    if hard(id)
+                        || soft(id)
+                        || share > share_cap(id)
+                        || mem > mem_cap(id)
+                    {
+                        usage.push(GpuUsage::default());
+                        continue;
+                    }
                     usage.push(GpuUsage::default());
+                    slot = Some(id);
+                    break;
                 }
-                usage.push(GpuUsage::default());
-                usage.len() - 1
             }
-        };
+        }
+        let gpu = slot.expect("slot resolved above");
         usage[gpu].share += share;
         usage[gpu].mem_mb += mem;
         by_stage[si][inst] = gpu as u32;
@@ -768,6 +977,118 @@ mod tests {
             assert!(u.share <= g.max_share);
             assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
         }
+    }
+
+    #[test]
+    fn empty_constraints_are_byte_identical() {
+        let cm = cm();
+        let mut old = plan(&cm, 24);
+        let base = place(&cm, &old, None).unwrap();
+        let cons = PlacementConstraints::default();
+        assert!(cons.is_empty());
+        let constrained = place_constrained(&cm, &old, None, &cons).unwrap();
+        assert_eq!(base.usage, constrained.usage);
+        assert_eq!(base.by_stage, constrained.by_stage);
+        stamp(&mut old, &base);
+        let new = plan(&cm, 30);
+        let d0 = place_delta(&cm, &old, &new, None, &[]).unwrap();
+        let d1 =
+            place_delta_constrained(&cm, &old, &new, None, &cons).unwrap();
+        assert_eq!(d0.placement.usage, d1.placement.usage);
+        assert_eq!(d0.placement.by_stage, d1.placement.by_stage);
+        assert_eq!(d0.pinned, d1.pinned);
+        assert_eq!(d0.migrated, d1.migrated);
+        assert_eq!(d0.fell_back, d1.fell_back);
+    }
+
+    #[test]
+    fn soft_avoided_gpus_are_vacated_when_capacity_allows() {
+        let cm = cm();
+        let g = cm.config().gpu.clone();
+        let mut old = plan(&cm, 24);
+        let base = place(&cm, &old, None).unwrap();
+        stamp(&mut old, &base);
+        assert!(base.gpus() >= 2, "need a multi-GPU packing");
+        let cons = PlacementConstraints {
+            soft_avoid: vec![0],
+            ..Default::default()
+        };
+        // uncapped: the strict pass wins, the suspect ends up empty
+        let p = place_constrained(&cm, &old, None, &cons).unwrap();
+        for gpus in &p.by_stage {
+            assert!(!gpus.contains(&0), "suspect GPU received an instance");
+        }
+        // delta against the stamped old plan: everything on the suspect
+        // migrates off, bounded by the repack oracle
+        let new = old.clone();
+        let d =
+            place_delta_constrained(&cm, &old, &new, None, &cons).unwrap();
+        for gpus in &d.placement.by_stage {
+            assert!(!gpus.contains(&0), "suspect GPU kept an instance");
+        }
+        let evicted: usize = old
+            .stages()
+            .map(|s| s.gpus.iter().filter(|&&gp| gp == 0).count())
+            .sum();
+        assert!(evicted > 0, "seed packing left GPU 0 empty");
+        assert!(d.migrated >= evicted);
+        assert!(d.migrated <= d.repack_migrated);
+        assert!(d.gpus_used <= d.repack_gpus);
+        for u in &d.placement.usage {
+            assert!(u.share <= g.max_share);
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
+        }
+    }
+
+    #[test]
+    fn soft_avoided_gpu_is_last_resort_under_the_cap() {
+        let cm = cm();
+        let p = plan(&cm, 24);
+        let base = place(&cm, &p, None).unwrap();
+        let k = base.gpus();
+        assert!(k >= 2, "need a multi-GPU packing");
+        // one healthy bin short of the demand: both the plain packing
+        // and the strict (suspect-excluded) pass die on the cap...
+        assert!(place(&cm, &p, Some(k - 1)).unwrap_err().cluster_full);
+        let cons = PlacementConstraints {
+            soft_avoid: vec![0],
+            ..Default::default()
+        };
+        // ...so the lenient pass spills the overflow onto the suspect
+        let placed = place_constrained(&cm, &p, Some(k - 1), &cons).unwrap();
+        let on_suspect: usize = placed
+            .by_stage
+            .iter()
+            .map(|gpus| gpus.iter().filter(|&&gp| gp == 0).count())
+            .sum();
+        assert!(on_suspect > 0, "last-resort spill never happened");
+    }
+
+    #[test]
+    fn degraded_gpus_offer_only_residual_capacity() {
+        let cm = cm();
+        let g = cm.config().gpu.clone();
+        let p = plan(&cm, 24);
+        let loss = g.max_share / 2;
+        let cons = PlacementConstraints {
+            share_loss: [(0u32, loss)].into_iter().collect(),
+            mem_loss_mb: [(0u32, g.gpu_mem_mb / 2.0)].into_iter().collect(),
+            ..Default::default()
+        };
+        let placed = place_constrained(&cm, &p, None, &cons).unwrap();
+        assert!(placed.usage[0].share <= g.max_share - loss);
+        assert!(placed.usage[0].mem_mb <= g.gpu_mem_mb / 2.0 + 1e-6);
+        for u in &placed.usage {
+            assert!(u.share <= g.max_share);
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6);
+        }
+        // a fully degraded GPU behaves like a hard avoid
+        let dead = PlacementConstraints {
+            share_loss: [(0u32, g.max_share)].into_iter().collect(),
+            ..Default::default()
+        };
+        let placed = place_constrained(&cm, &p, None, &dead).unwrap();
+        assert_eq!(placed.usage[0].share, 0, "no share fits a dead cap");
     }
 
     #[test]

@@ -358,6 +358,16 @@ fn apply_control_faults(server: &Server, plan: &FaultPlan) {
             FaultKind::PoisonShard { stage, shard } => {
                 server.poison_stage_queue(stage, shard);
             }
+            FaultKind::GpuDegrade {
+                gpu,
+                share_loss,
+                mem_loss_mb,
+            } => {
+                server.degrade_gpu(gpu, share_loss, mem_loss_mb as f64);
+            }
+            FaultKind::GpuWarn { gpu } => {
+                server.warn_gpu(gpu);
+            }
             _ => {}
         }
     }
@@ -1387,6 +1397,334 @@ pub fn fault_scenario(
         }
     }
     point
+}
+
+/// One leg of the predictive-vs-reactive failure comparison
+/// ([`fault_compare_scenario`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultLegStats {
+    /// Requests submitted (steady load + degraded-window burst).
+    pub requests: usize,
+    /// Responses collected — must equal `requests` (no silent loss).
+    pub responses: usize,
+    /// Drop notices issued between the GPU death and the completed
+    /// emergency swap (the degraded-window damage being compared).
+    pub degraded_window_drops: u64,
+    /// Instances the GPU death killed.  The predictive leg must have
+    /// vacated the victim by then, so this must be 0 there.
+    pub killed_at_death: usize,
+    pub emergency_fired: bool,
+    /// The controller proactively migrated off the suspect GPU before
+    /// the failure (predictive leg only).
+    pub proactive_fired: bool,
+    /// Instances the proactive migration moved off the victim.
+    pub migrated_before_death: usize,
+    /// Instances the final plan stamped onto the dead GPU — must be 0.
+    pub new_plan_on_failed_gpu: usize,
+    /// Total drop notices across the whole leg.
+    pub dropped: u64,
+    pub rejected: u64,
+}
+
+/// Reactive-vs-predictive failure handling on the same seeded story:
+/// same plan, same victim GPU, same load, same death tick — the only
+/// difference is whether health warnings feed a suspect threshold that
+/// migrates off the victim *before* it dies.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultComparePoint {
+    pub n_clients: usize,
+    pub victim_gpu: u32,
+    /// Degraded-window probe size (requests aimed at the victim's own
+    /// clients right after the death).
+    pub burst: usize,
+    pub reactive: FaultLegStats,
+    pub predictive: FaultLegStats,
+}
+
+impl FaultComparePoint {
+    /// The predictive leg must strictly beat the reactive one: fewer
+    /// degraded-window drops, zero instances killed at death (the
+    /// victim was already vacated), no silent loss in either leg, and
+    /// neither final plan lands on the dead GPU.
+    pub fn predictive_ok(&self) -> bool {
+        let r = &self.reactive;
+        let p = &self.predictive;
+        r.emergency_fired
+            && r.killed_at_death > 0
+            && p.proactive_fired
+            && p.migrated_before_death > 0
+            && p.killed_at_death == 0
+            && p.degraded_window_drops < r.degraded_window_drops
+            && r.responses == r.requests
+            && p.responses == p.requests
+            && r.new_plan_on_failed_gpu == 0
+            && p.new_plan_on_failed_gpu == 0
+    }
+}
+
+/// One leg: plan → serve → (predictive only: warn the victim, tick →
+/// proactive migration) → kill the victim GPU → burst at the victim's
+/// clients → emergency tick, with full response accounting.
+fn fault_compare_leg(
+    n: usize,
+    total_reqs: usize,
+    seed: u64,
+    burst: usize,
+    predictive: bool,
+) -> (u32, FaultLegStats) {
+    use crate::coordinator::controller::{
+        ControllerOptions, ReplanController, TickOutcome,
+    };
+    use crate::runtime::transition::LiveServer;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicUsize;
+
+    let cm = CostModel::new(Config::embedded());
+    let sched =
+        Arc::new(Scheduler::new(cm.clone(), SchedulerOptions::default()));
+    let specs = random_mixed_fragments(&cm, n, seed);
+    let (plan_a, _) = sched.plan(&specs);
+
+    // victim: a GPU hosting a member's *entry* stage whose instances
+    // all live on that one GPU, with real clients — so the
+    // post-death burst deterministically hits dead queues in the
+    // reactive leg.  Both legs derive the identical candidate list
+    // from the identical (deterministic) plan, so the seeded pick
+    // agrees across legs.
+    let mut candidates: Vec<(u32, Vec<(u32, u16, u16, usize)>)> = Vec::new();
+    for set in &plan_a.sets {
+        for m in &set.members {
+            if m.spec.clients.is_empty() {
+                continue;
+            }
+            let entry = m.align.as_ref().unwrap_or(&set.shared);
+            let Some(&g0) = entry.gpus.first() else {
+                continue;
+            };
+            if entry.gpus.iter().any(|&g| g != g0) {
+                continue;
+            }
+            let dim = cm.config().models[set.model].dims[m.spec.p];
+            let burst_targets: Vec<(u32, u16, u16, usize)> = m
+                .spec
+                .clients
+                .iter()
+                .map(|c| (c.0, set.model as u16, m.spec.p as u16, dim))
+                .collect();
+            candidates.push((g0, burst_targets));
+        }
+    }
+    let mut stats = FaultLegStats::default();
+    if candidates.is_empty() || total_reqs == 0 {
+        return (u32::MAX, stats);
+    }
+    let mut rng = Rng::seed_from_u64(seed ^ 0x9E1F);
+    let (victim, burst_targets) =
+        candidates.swap_remove(rng.below(candidates.len()));
+
+    let dims: HashMap<String, Vec<usize>> = cm
+        .config()
+        .models
+        .iter()
+        .map(|m| (m.name.clone(), m.dims.clone()))
+        .collect();
+    let live = Arc::new(LiveServer::start(
+        Arc::new(MockExecutor { dims }),
+        &cm,
+        &plan_a,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            ..Default::default()
+        },
+    ));
+    let controller = ReplanController::new(
+        sched.clone(),
+        live.clone(),
+        specs.clone(),
+        ControllerOptions {
+            // isolate the failure path: drift replans can never fire
+            drift_threshold: 1e12,
+            min_requests: u64::MAX,
+            suspect_threshold: if predictive { Some(0.6) } else { None },
+            ..Default::default()
+        },
+    );
+
+    let mut targets: Vec<(u32, u16, u16, usize)> = Vec::new();
+    for set in &plan_a.sets {
+        for m in &set.members {
+            let dim = cm.config().models[set.model].dims[m.spec.p];
+            for c in &m.spec.clients {
+                targets.push((c.0, set.model as u16, m.spec.p as u16, dim));
+            }
+        }
+    }
+    if targets.is_empty() {
+        return (victim, stats);
+    }
+
+    let expected = total_reqs + burst;
+    let producers = 2usize.min(total_reqs).max(1);
+    let submitted = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<Response>();
+    std::thread::scope(|scope| {
+        let collector = scope.spawn(move || {
+            let mut got = 0usize;
+            let mut dropped_resp = 0u64;
+            while got < expected {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(r) => {
+                        got += 1;
+                        if r.dropped {
+                            dropped_resp += 1;
+                        }
+                    }
+                    Err(_) => break, // lost responses: report the gap
+                }
+            }
+            (got, dropped_resp)
+        });
+        let mut prods = Vec::new();
+        for pidx in 0..producers {
+            let tx = tx.clone();
+            let live = &live;
+            let targets = &targets;
+            let submitted = submitted.clone();
+            prods.push(scope.spawn(move || {
+                let mut i = pidx;
+                while i < total_reqs {
+                    let (cid, model, p, dim) = targets[i % targets.len()];
+                    crate::serving::RequestSink::submit(
+                        live.as_ref(),
+                        Request {
+                            client_id: cid,
+                            model,
+                            p,
+                            seq: i as u32,
+                            t_capture_ms: 0.0,
+                            upstream_ms: 0.0,
+                            budget_ms: 1e9,
+                            payload: vec![0.5; dim],
+                        },
+                        tx.clone(),
+                    );
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    i += producers;
+                }
+            }));
+        }
+
+        // early-warning window: the predictive leg raises health
+        // warnings against the victim, then one tick migrates off it
+        let warn_at = (total_reqs / 6).max(1);
+        while submitted.load(Ordering::Relaxed) < warn_at {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        if predictive {
+            // warnings decay as healthy beats flow, so at mock speed
+            // the warn → tick gap alone can decay the score back under
+            // the threshold; retry the warn+tick pair until the suspect
+            // tick lands (guaranteed once the steady load drains, since
+            // idle instances stop beating)
+            for _ in 0..500 {
+                for _ in 0..3 {
+                    live.server().warn_gpu(victim);
+                }
+                if let TickOutcome::ProactiveMigration {
+                    migrated_instances, ..
+                } = controller.tick()
+                {
+                    stats.proactive_fired = true;
+                    stats.migrated_before_death = migrated_instances;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        } else {
+            let _ = controller.tick();
+        }
+
+        // the failure proper
+        let fail_at = (total_reqs / 3).max(2);
+        while submitted.load(Ordering::Relaxed) < fail_at {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let drops_before = live.totals().dropped;
+        stats.killed_at_death = live.server().fail_gpu(victim);
+        // degraded-window probe: a burst at the victim's own clients
+        // lands on dead queues in the reactive leg (visible drop
+        // notices) and on relocated instances in the predictive one
+        for (j, &(cid, model, p, dim)) in
+            burst_targets.iter().cycle().take(burst).enumerate()
+        {
+            crate::serving::RequestSink::submit(
+                live.as_ref(),
+                Request {
+                    client_id: cid,
+                    model,
+                    p,
+                    seq: (total_reqs + j) as u32,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: vec![0.5; dim],
+                },
+                tx.clone(),
+            );
+        }
+        drop(tx);
+        if let TickOutcome::EmergencyReplanned { .. } = controller.tick() {
+            stats.emergency_fired = true;
+        }
+        stats.degraded_window_drops =
+            live.totals().dropped.saturating_sub(drops_before);
+        for pr in prods {
+            pr.join().expect("producer");
+        }
+        let (got, dropped_resp) = collector.join().expect("collector");
+        stats.requests = expected;
+        stats.responses = got;
+        stats.dropped = dropped_resp;
+    });
+    let totals = live.totals();
+    stats.dropped = stats.dropped.max(totals.dropped);
+    stats.rejected = totals.rejected;
+    let new_plan = live.plan();
+    stats.new_plan_on_failed_gpu = new_plan
+        .stages()
+        .map(|s| s.gpus.iter().filter(|&&g| g == victim).count())
+        .sum();
+    drop(controller); // releases its Arc so the unwrap below succeeds
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(l) => {
+            l.server().drain();
+        }
+    }
+    (victim, stats)
+}
+
+/// Run the reactive (suspect scoring disabled) and predictive legs of
+/// the same seeded failure story and compare the degraded-window
+/// damage.  [`FaultComparePoint::predictive_ok`] is the self-check.
+pub fn fault_compare_scenario(
+    n: usize,
+    total_reqs: usize,
+    seed: u64,
+) -> FaultComparePoint {
+    let burst = 32usize;
+    let (victim, reactive) =
+        fault_compare_leg(n, total_reqs, seed, burst, false);
+    let (_, predictive) = fault_compare_leg(n, total_reqs, seed, burst, true);
+    FaultComparePoint {
+        n_clients: n,
+        victim_gpu: victim,
+        burst,
+        reactive,
+        predictive,
+    }
 }
 
 #[cfg(test)]

@@ -1302,8 +1302,15 @@ fn cmd_bench_transition(args: &Args) -> Result<()> {
 ///     before the fault — got exactly one response (a result or an
 ///     explicit drop notice): nothing is ever silently lost;
 ///   * the emergency plan placed zero instances on the failed GPU.
+///
+/// Schema v2 adds the predictive-vs-reactive comparison (`predictive`
+/// array + `predictive_ok`): the same seeded failure story runs twice —
+/// once purely reactive, once with health-score-driven proactive
+/// migration — and the run aborts unless the predictive leg strictly
+/// reduces degraded-window drops at the largest size, vacated the
+/// victim before death, and neither leg silently lost a response.
 fn cmd_bench_faults(args: &Args) -> Result<()> {
-    use graft::experiments::scale::fault_scenario;
+    use graft::experiments::scale::{fault_compare_scenario, fault_scenario};
     use graft::util::Json;
     use std::collections::BTreeMap;
 
@@ -1418,17 +1425,112 @@ fn cmd_bench_faults(args: &Args) -> Result<()> {
         rows.push(Json::Obj(row));
     }
 
+    // predictive-vs-reactive comparison: same seeded story, the only
+    // difference is whether health warnings feed proactive migration
+    let leg_json = |l: &graft::experiments::scale::FaultLegStats| {
+        let mut o = BTreeMap::new();
+        o.insert("requests".into(), num(l.requests as f64));
+        o.insert("responses".into(), num(l.responses as f64));
+        o.insert(
+            "degraded_window_drops".into(),
+            num(l.degraded_window_drops as f64),
+        );
+        o.insert("killed_at_death".into(), num(l.killed_at_death as f64));
+        o.insert("emergency_fired".into(), Json::Bool(l.emergency_fired));
+        o.insert("proactive_fired".into(), Json::Bool(l.proactive_fired));
+        o.insert(
+            "migrated_before_death".into(),
+            num(l.migrated_before_death as f64),
+        );
+        o.insert(
+            "new_plan_on_failed_gpu".into(),
+            num(l.new_plan_on_failed_gpu as f64),
+        );
+        o.insert("dropped".into(), num(l.dropped as f64));
+        o.insert("rejected".into(), num(l.rejected as f64));
+        Json::Obj(o)
+    };
+    let strict_n = sizes.iter().copied().max().unwrap_or(0);
+    let mut predictive_rows = Vec::new();
+    let mut predictive_ok = true;
+    println!(
+        "\n{:>8} {:>7} {:>16} {:>16} {:>12} {:>12} {:>6}",
+        "n",
+        "victim",
+        "reactive_drops",
+        "predictive_drops",
+        "killed_react",
+        "killed_pred",
+        "ok"
+    );
+    for &n in &sizes {
+        let total_reqs = requests_flag.unwrap_or_else(|| (2 * n).max(4000));
+        let c = fault_compare_scenario(n, total_reqs, 0x9E1F + n as u64);
+        for (leg, l) in
+            [("reactive", &c.reactive), ("predictive", &c.predictive)]
+        {
+            if l.responses != l.requests {
+                bail!(
+                    "{leg} leg lost responses at n={n}: {}/{} — a request \
+                     vanished without a drop notice",
+                    l.responses,
+                    l.requests
+                );
+            }
+        }
+        let ok = c.predictive_ok();
+        println!(
+            "{:>8} {:>7} {:>16} {:>16} {:>12} {:>12} {:>6}",
+            n,
+            c.victim_gpu,
+            c.reactive.degraded_window_drops,
+            c.predictive.degraded_window_drops,
+            c.reactive.killed_at_death,
+            c.predictive.killed_at_death,
+            ok,
+        );
+        if n == strict_n && !ok {
+            bail!(
+                "predictive leg failed to strictly beat the reactive one \
+                 at n={n}: reactive degraded-window drops {} (killed {}), \
+                 predictive {} (killed {}, proactive_fired={})",
+                c.reactive.degraded_window_drops,
+                c.reactive.killed_at_death,
+                c.predictive.degraded_window_drops,
+                c.predictive.killed_at_death,
+                c.predictive.proactive_fired,
+            );
+        }
+        // the gate is the largest size; smaller sizes are advisory
+        // (tiny runs can see zero reactive drops, making strict
+        // reduction meaningless there)
+        if n == strict_n {
+            predictive_ok &= ok;
+        }
+        let mut row = BTreeMap::new();
+        row.insert("n_clients".into(), num(c.n_clients as f64));
+        row.insert("victim_gpu".into(), num(c.victim_gpu as f64));
+        row.insert("burst".into(), num(c.burst as f64));
+        row.insert("reactive".into(), leg_json(&c.reactive));
+        row.insert("predictive".into(), leg_json(&c.predictive));
+        row.insert("predictive_ok".into(), Json::Bool(ok));
+        predictive_rows.push(Json::Obj(row));
+    }
+
     let mut config = BTreeMap::new();
     config.insert("time_scale".into(), num(0.0));
     config.insert("drop_on_slo".into(), Json::Bool(false));
     config.insert("producers".into(), num(2.0));
     config.insert("fault".into(), Json::Str("single_gpu_failure".into()));
     config.insert("fail_at_fraction".into(), Json::Num(1.0 / 3.0));
+    config.insert("suspect_threshold".into(), num(0.6));
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("faults".into()));
-    doc.insert("schema_version".into(), num(1.0));
+    doc.insert("schema_version".into(), num(2.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("faults".into(), Json::Arr(rows));
+    doc.insert("predictive".into(), Json::Arr(predictive_rows));
+    doc.insert("predictive_ok".into(), Json::Bool(predictive_ok));
     let json = Json::Obj(doc);
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {
@@ -1522,7 +1624,8 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
         front.addr,
         if reconfigure { " (live reconfiguration on)" } else { "" }
     );
-    if reconfigure {
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let (ctrl, watcher) = if reconfigure {
         let sched = Arc::new(sched);
         let ctrl = Arc::new(ReplanController::new(
             sched,
@@ -1530,14 +1633,45 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
             specs,
             ControllerOptions::default(),
         ));
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let watcher = ctrl.run(stop.clone());
-        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
-        stop.store(true, std::sync::atomic::Ordering::SeqCst);
-        let _ = watcher.join();
+        let watcher = ctrl.clone().run(stop.clone());
+        (Some(ctrl), Some(watcher))
     } else {
-        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+        (None, None)
+    };
+    // periodic operator heartbeat: serving totals plus the health
+    // ledger (poisoned-lock recoveries, failure/recovery epochs,
+    // degradation flag) and the controller's avoid-sets
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs_f64(duration);
+    loop {
+        let now = std::time::Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_secs(2).min(deadline - now));
+        let totals = live.totals();
+        let server = live.server();
+        println!(
+            "[serve] served={} dropped={} batches={} swaps={} \
+             poison_recoveries={} failure_epoch={} recovery_epoch={} \
+             degraded={} dead_gpus={:?} suspect_gpus={:?}",
+            totals.served,
+            totals.dropped,
+            totals.batches,
+            live.swap_count(),
+            server.poison_recoveries(),
+            server.health().failure_epoch(),
+            server.health().recovery_epoch(),
+            server.health().degraded(),
+            ctrl.as_ref().map(|c| c.dead_gpus()).unwrap_or_default(),
+            ctrl.as_ref().map(|c| c.suspect_gpus()).unwrap_or_default(),
+        );
     }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    if let Some(w) = watcher {
+        let _ = w.join();
+    }
+    drop(ctrl);
     front.stop();
     let totals = live.totals();
     println!(

@@ -38,6 +38,21 @@ pub enum FaultKind {
     ConnDrop,
     /// Stall the TCP connection for `ms` before the next submit.
     ConnDelay { ms: u64 },
+    /// Partial capacity loss: the GPU keeps serving but loses
+    /// `share_loss` compute share and `mem_loss_mb` MB of memory
+    /// (integral MB so the kind stays `Copy + Eq`).
+    GpuDegrade { gpu: u32, share_loss: u32, mem_loss_mb: u32 },
+    /// Out-of-band health warning against a GPU — bumps its predictive
+    /// fault level without touching capacity.
+    GpuWarn { gpu: u32 },
+}
+
+/// A correlated-failure group (rack / host): when chaos picks the
+/// domain, *every* member GPU fails at the same tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailureDomain {
+    pub name: String,
+    pub gpus: Vec<u32>,
 }
 
 /// Which tick counter an event is consumed against.
@@ -55,9 +70,10 @@ impl FaultKind {
     pub fn domain(&self) -> FaultDomain {
         match self {
             FaultKind::WorkerKill | FaultKind::ExecPanic => FaultDomain::Exec,
-            FaultKind::GpuFail { .. } | FaultKind::PoisonShard { .. } => {
-                FaultDomain::Control
-            }
+            FaultKind::GpuFail { .. }
+            | FaultKind::PoisonShard { .. }
+            | FaultKind::GpuDegrade { .. }
+            | FaultKind::GpuWarn { .. } => FaultDomain::Control,
             FaultKind::ConnDrop | FaultKind::ConnDelay { .. } => {
                 FaultDomain::Conn
             }
@@ -112,6 +128,27 @@ impl FaultPlan {
         shards: &[(usize, usize)],
         n_each: usize,
     ) -> Self {
+        // singleton domains draw the identical rng stream, so per-GPU
+        // chaos is the degenerate case of correlated chaos
+        let domains: Vec<FailureDomain> = gpus
+            .iter()
+            .map(|g| FailureDomain { name: format!("gpu{g}"), gpus: vec![*g] })
+            .collect();
+        Self::chaos_with_domains(seed, ticks, &domains, shards, n_each)
+    }
+
+    /// Correlated chaos: like [`Self::chaos`], but GPU failures pick a
+    /// whole [`FailureDomain`] — every member fails at the same tick,
+    /// the way a rack power loss or host crash takes out co-located
+    /// GPUs together.  Deterministic per seed; with singleton domains
+    /// this is exactly [`Self::chaos`].
+    pub fn chaos_with_domains(
+        seed: u64,
+        ticks: u64,
+        domains: &[FailureDomain],
+        shards: &[(usize, usize)],
+        n_each: usize,
+    ) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
         let mut tick = |rng: &mut Rng| rng.below(ticks.max(1) as usize) as u64 + 1;
         let mut events = Vec::new();
@@ -120,13 +157,15 @@ impl FaultPlan {
             events.push(FaultEvent { at_tick: at, kind: FaultKind::WorkerKill });
             let at = tick(&mut rng);
             events.push(FaultEvent { at_tick: at, kind: FaultKind::ExecPanic });
-            if !gpus.is_empty() {
-                let gpu = gpus[rng.below(gpus.len())];
+            if !domains.is_empty() {
+                let domain = &domains[rng.below(domains.len())];
                 let at = tick(&mut rng);
-                events.push(FaultEvent {
-                    at_tick: at,
-                    kind: FaultKind::GpuFail { gpu },
-                });
+                for gpu in &domain.gpus {
+                    events.push(FaultEvent {
+                        at_tick: at,
+                        kind: FaultKind::GpuFail { gpu: *gpu },
+                    });
+                }
             }
             if !shards.is_empty() {
                 let (stage, shard) = shards[rng.below(shards.len())];
@@ -268,5 +307,87 @@ mod tests {
         }
         let c = FaultPlan::chaos(10, 100, &[0, 1], &[(0, 0)], 3);
         assert_eq!(c.len(), 12);
+    }
+
+    /// A picked domain fails every member at the same tick — the
+    /// correlated (rack/host) failure shape.
+    #[test]
+    fn domain_members_fail_together() {
+        let domains = vec![
+            FailureDomain { name: "rack0".into(), gpus: vec![0, 1, 2] },
+            FailureDomain { name: "rack1".into(), gpus: vec![3, 4] },
+        ];
+        let plan = FaultPlan::chaos_with_domains(7, 50, &domains, &[], 4);
+        let events: Vec<_> =
+            lock_recover(&plan.events).iter().map(|(e, _)| *e).collect();
+        let fails: Vec<_> = events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::GpuFail { gpu } => Some((e.at_tick, gpu)),
+                _ => None,
+            })
+            .collect();
+        assert!(!fails.is_empty());
+        // every GpuFail tick carries a complete domain, nothing partial
+        let mut by_tick: std::collections::BTreeMap<u64, Vec<u32>> =
+            std::collections::BTreeMap::new();
+        for (t, g) in &fails {
+            by_tick.entry(*t).or_default().push(*g);
+        }
+        for gpus in by_tick.values_mut() {
+            gpus.sort_unstable();
+            gpus.dedup();
+            // a tick's failure set is a union of complete domains:
+            // no domain appears partially
+            for d in &domains {
+                let present =
+                    d.gpus.iter().filter(|g| gpus.contains(g)).count();
+                assert!(
+                    present == 0 || present == d.gpus.len(),
+                    "partial domain failure at tick: {gpus:?}"
+                );
+            }
+        }
+    }
+
+    /// Singleton domains replay the exact per-GPU chaos stream.
+    #[test]
+    fn singleton_domains_match_plain_chaos() {
+        let plain = FaultPlan::chaos(21, 80, &[2, 5], &[(1, 0)], 3);
+        let domains = vec![
+            FailureDomain { name: "gpu2".into(), gpus: vec![2] },
+            FailureDomain { name: "gpu5".into(), gpus: vec![5] },
+        ];
+        let correlated =
+            FaultPlan::chaos_with_domains(21, 80, &domains, &[(1, 0)], 3);
+        let ea: Vec<_> =
+            lock_recover(&plain.events).iter().map(|(e, _)| *e).collect();
+        let eb: Vec<_> = lock_recover(&correlated.events)
+            .iter()
+            .map(|(e, _)| *e)
+            .collect();
+        assert_eq!(ea.len(), eb.len());
+        for (x, y) in ea.iter().zip(&eb) {
+            assert_eq!(x.at_tick, y.at_tick);
+            assert_eq!(x.kind, y.kind);
+        }
+    }
+
+    /// The new capacity-loss kinds ride the control domain.
+    #[test]
+    fn degrade_and_warn_are_control_domain() {
+        let degrade =
+            FaultKind::GpuDegrade { gpu: 1, share_loss: 20, mem_loss_mb: 512 };
+        assert_eq!(degrade.domain(), FaultDomain::Control);
+        assert_eq!(FaultKind::GpuWarn { gpu: 1 }.domain(), FaultDomain::Control);
+        let plan = FaultPlan::new(
+            0,
+            vec![
+                FaultEvent { at_tick: 1, kind: degrade },
+                FaultEvent { at_tick: 1, kind: FaultKind::GpuWarn { gpu: 1 } },
+            ],
+        );
+        assert_eq!(plan.tick(FaultDomain::Control).len(), 2);
+        assert!(plan.tick(FaultDomain::Control).is_empty(), "fired once");
     }
 }

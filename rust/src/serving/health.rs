@@ -13,10 +13,28 @@
 //! emergency replan.  `failure_epoch > recovery_epoch` therefore means
 //! "degraded: running around a failure the planner has not yet routed
 //! around".
+//!
+//! On top of the binary ledger sits *predictive* health scoring: every
+//! beat carries a timestamp, and per-instance / per-GPU
+//! [`ScoreState`]s track the inter-arrival EWMA + variance (the same
+//! estimator the batcher uses for arrival rates) plus a decaying
+//! fault level fed by exec panics and explicit warnings.  The blended
+//! score is deterministic given the event sequence (timestamps are
+//! injectable via [`HealthRegistry::beat_at`]), rises toward 1.0 as a
+//! GPU looks sicker, and decays toward 0.0 as clean beats come in.
+//! The controller folds GPUs whose score crosses its
+//! `suspect_threshold` into a *soft* avoid-set — prefer-not bins for
+//! placement, unlike the hard `dead_gpus` exclusion.
+//!
+//! Capacity is not binary either: [`HealthRegistry::mark_gpu_degraded`]
+//! records partial share/memory loss ([`GpuDegradation`]) that the
+//! controller folds into placement as residual capacity, so a sick GPU
+//! keeps serving at reduced load instead of being declared dead.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::util::lock::lock_recover;
 
@@ -32,6 +50,17 @@ pub enum HealthEventKind {
     /// An emergency replan completed; the plan no longer depends on the
     /// failed capacity.
     Recovered,
+    /// An executor panicked mid-batch (the instance survived or was
+    /// retired separately) — feeds the predictive fault level.
+    ExecPanic,
+    /// An out-of-band health warning against a GPU (e.g. thermal / ECC
+    /// telemetry) — feeds the predictive fault level.
+    GpuWarning,
+    /// A GPU lost part of its capacity without dying; the amounts live
+    /// in [`HealthRegistry::gpu_degradations`].
+    GpuDegraded,
+    /// A previously failed/degraded GPU came back at full capacity.
+    GpuRecovered,
 }
 
 /// One entry in the failure ledger.
@@ -48,12 +77,115 @@ pub struct HealthEvent {
     pub gpu: u32,
 }
 
+/// Knobs for the predictive health score.  Defaults are tuned so that
+/// heartbeat jitter alone can never cross the controller's default
+/// suspect threshold (0.6): the variance term is capped at
+/// `var_weight` (0.4), so only fault history (panics / warnings) can
+/// push a healthy-looking GPU over the line, while jitter *amplifies*
+/// an already suspicious one.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthScoreOptions {
+    /// EWMA smoothing factor for heartbeat inter-arrival mean/variance.
+    pub ewma_alpha: f64,
+    /// Per-beat multiplicative decay of the fault level (clean beats
+    /// forgive history).
+    pub fault_decay: f64,
+    /// Fault-level bump per executor panic.
+    pub panic_weight: f64,
+    /// Fault-level bump per explicit GPU warning.
+    pub warn_weight: f64,
+    /// Weight of the normalized inter-arrival variance in the blended
+    /// score (also its cap).
+    pub var_weight: f64,
+    /// Coefficient-of-variation at which the variance term saturates.
+    pub cv_saturation: f64,
+    /// Beats required before the variance term is trusted at all.
+    pub min_beats: u64,
+}
+
+impl Default for HealthScoreOptions {
+    fn default() -> Self {
+        Self {
+            ewma_alpha: 0.2,
+            fault_decay: 0.9,
+            panic_weight: 0.5,
+            warn_weight: 0.35,
+            var_weight: 0.4,
+            cv_saturation: 2.0,
+            min_beats: 8,
+        }
+    }
+}
+
+/// Partial capacity loss on a live GPU (cumulative).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GpuDegradation {
+    /// Compute share lost (same units as `PlacementOptions::gpu_share`).
+    pub share_loss: u32,
+    /// Memory lost in MB.
+    pub mem_loss_mb: f64,
+}
+
+/// Streaming health estimator for one instance or one GPU.
+#[derive(Debug, Clone, Copy, Default)]
+struct ScoreState {
+    last_beat_ms: Option<f64>,
+    gap_ewma_ms: f64,
+    gap_var_ewma: f64,
+    beats: u64,
+    /// Decaying fault history in [0, 1).
+    fault_level: f64,
+}
+
+impl ScoreState {
+    fn on_beat(&mut self, t_ms: f64, opts: &HealthScoreOptions) {
+        if let Some(last) = self.last_beat_ms {
+            let gap = (t_ms - last).max(0.0);
+            if self.beats <= 1 {
+                // first observed gap seeds the EWMA
+                self.gap_ewma_ms = gap;
+                self.gap_var_ewma = 0.0;
+            } else {
+                let dev = gap - self.gap_ewma_ms;
+                self.gap_ewma_ms += opts.ewma_alpha * dev;
+                self.gap_var_ewma = (1.0 - opts.ewma_alpha) * self.gap_var_ewma
+                    + opts.ewma_alpha * dev * dev;
+            }
+        }
+        self.last_beat_ms = Some(t_ms);
+        self.beats += 1;
+        self.fault_level *= opts.fault_decay;
+    }
+
+    fn on_fault(&mut self, weight: f64) {
+        self.fault_level += (1.0 - self.fault_level) * weight.clamp(0.0, 1.0);
+    }
+
+    /// Blended score in [0, 1]: `1 - (1 - fault) * (1 - w_v * var_norm)`
+    /// where `var_norm` is the saturated coefficient of variation of
+    /// beat gaps.  Monotone in both signals; equals `fault_level` until
+    /// enough beats have landed to trust the variance.
+    fn score(&self, opts: &HealthScoreOptions) -> f64 {
+        let var_norm = if self.beats >= opts.min_beats
+            && self.gap_ewma_ms > 1e-9
+        {
+            let cv = self.gap_var_ewma.max(0.0).sqrt() / self.gap_ewma_ms;
+            (cv / opts.cv_saturation).min(1.0)
+        } else {
+            0.0
+        };
+        1.0 - (1.0 - self.fault_level) * (1.0 - opts.var_weight * var_norm)
+    }
+}
+
 /// Per-server failure ledger; see the module docs.
-#[derive(Default)]
 pub struct HealthRegistry {
     seq: AtomicU64,
     failure_epoch: AtomicU64,
     recovery_epoch: AtomicU64,
+    /// Wall-clock origin for self-timestamped beats.
+    t0: Instant,
+    opts: HealthScoreOptions,
     /// Batches delivered per (stage, instance) — the liveness signal.
     beats: Mutex<HashMap<(usize, usize), u64>>,
     dead_gpus: Mutex<BTreeSet<u32>>,
@@ -61,9 +193,53 @@ pub struct HealthRegistry {
     unacked_gpus: Mutex<BTreeSet<u32>>,
     dead_instances: Mutex<BTreeSet<(usize, usize)>>,
     events: Mutex<Vec<HealthEvent>>,
+    /// Predictive score state per (stage, instance).
+    inst_scores: Mutex<HashMap<(usize, usize), ScoreState>>,
+    /// Predictive score state per GPU.
+    gpu_score_states: Mutex<HashMap<u32, ScoreState>>,
+    /// Cumulative partial capacity loss per live GPU.
+    degradations: Mutex<BTreeMap<u32, GpuDegradation>>,
+    /// Degradations not yet consumed by the controller.
+    unacked_degrades: Mutex<BTreeMap<u32, GpuDegradation>>,
+    /// GPU recoveries not yet consumed by the controller.
+    unacked_recoveries: Mutex<BTreeSet<u32>>,
+}
+
+impl Default for HealthRegistry {
+    fn default() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            failure_epoch: AtomicU64::new(0),
+            recovery_epoch: AtomicU64::new(0),
+            t0: Instant::now(),
+            opts: HealthScoreOptions::default(),
+            beats: Mutex::new(HashMap::new()),
+            dead_gpus: Mutex::new(BTreeSet::new()),
+            unacked_gpus: Mutex::new(BTreeSet::new()),
+            dead_instances: Mutex::new(BTreeSet::new()),
+            events: Mutex::new(Vec::new()),
+            inst_scores: Mutex::new(HashMap::new()),
+            gpu_score_states: Mutex::new(HashMap::new()),
+            degradations: Mutex::new(BTreeMap::new()),
+            unacked_degrades: Mutex::new(BTreeMap::new()),
+            unacked_recoveries: Mutex::new(BTreeSet::new()),
+        }
+    }
 }
 
 impl HealthRegistry {
+    pub fn with_score_options(opts: HealthScoreOptions) -> Self {
+        Self { opts, ..Default::default() }
+    }
+
+    pub fn score_options(&self) -> HealthScoreOptions {
+        self.opts
+    }
+
+    /// Every ledger mutation allocates its seq *inside* the events
+    /// lock, so the vec is dense and ordered even when writers race or
+    /// a panicking holder poisoned the lock (`lock_recover` hands the
+    /// next writer the recovered guard and the numbering continues).
     fn push_event(
         &self,
         kind: HealthEventKind,
@@ -71,14 +247,9 @@ impl HealthRegistry {
         instance: usize,
         gpu: u32,
     ) -> u64 {
+        let mut events = lock_recover(&self.events);
         let seq = self.seq.fetch_add(1, Ordering::SeqCst);
-        lock_recover(&self.events).push(HealthEvent {
-            seq,
-            kind,
-            stage,
-            instance,
-            gpu,
-        });
+        events.push(HealthEvent { seq, kind, stage, instance, gpu });
         seq
     }
 
@@ -87,12 +258,82 @@ impl HealthRegistry {
         *lock_recover(&self.beats).entry((stage, instance)).or_insert(0) += 1;
     }
 
-    /// Batches delivered by `(stage, instance)` so far.
-    pub fn beats(&self, stage: usize, instance: usize) -> u64 {
-        lock_recover(&self.beats)
+    /// Milliseconds since this registry was created (the timestamp
+    /// [`Self::beat_live`] stamps onto beats).
+    pub fn now_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Heartbeat with scoring, self-timestamped off the registry clock.
+    pub fn beat_live(&self, stage: usize, instance: usize, gpu: u32) {
+        self.beat_at(stage, instance, gpu, self.now_ms());
+    }
+
+    /// Heartbeat with scoring at an explicit timestamp — the
+    /// deterministic entry point: replaying the same `(t_ms, fault)`
+    /// sequence reproduces the same scores bit-for-bit.
+    pub fn beat_at(&self, stage: usize, instance: usize, gpu: u32, t_ms: f64) {
+        self.beat(stage, instance);
+        lock_recover(&self.inst_scores)
+            .entry((stage, instance))
+            .or_default()
+            .on_beat(t_ms, &self.opts);
+        if gpu != u32::MAX {
+            lock_recover(&self.gpu_score_states)
+                .entry(gpu)
+                .or_default()
+                .on_beat(t_ms, &self.opts);
+        }
+    }
+
+    /// An executor panicked running a batch on `(stage, instance)`;
+    /// bumps both the instance's and the hosting GPU's fault level.
+    pub fn record_exec_panic(&self, stage: usize, instance: usize, gpu: u32) {
+        lock_recover(&self.inst_scores)
+            .entry((stage, instance))
+            .or_default()
+            .on_fault(self.opts.panic_weight);
+        if gpu != u32::MAX {
+            lock_recover(&self.gpu_score_states)
+                .entry(gpu)
+                .or_default()
+                .on_fault(self.opts.panic_weight);
+        }
+        self.push_event(HealthEventKind::ExecPanic, stage, instance, gpu);
+    }
+
+    /// Out-of-band warning against a GPU (telemetry, operator signal).
+    pub fn record_gpu_warning(&self, gpu: u32) {
+        lock_recover(&self.gpu_score_states)
+            .entry(gpu)
+            .or_default()
+            .on_fault(self.opts.warn_weight);
+        self.push_event(HealthEventKind::GpuWarning, 0, 0, gpu);
+    }
+
+    /// Predictive score for one instance (0 = healthy, 1 = certain
+    /// failure); 0 when never observed.
+    pub fn instance_score(&self, stage: usize, instance: usize) -> f64 {
+        lock_recover(&self.inst_scores)
             .get(&(stage, instance))
-            .copied()
-            .unwrap_or(0)
+            .map(|s| s.score(&self.opts))
+            .unwrap_or(0.0)
+    }
+
+    /// Predictive score for one GPU; 0 when never observed.
+    pub fn gpu_score(&self, gpu: u32) -> f64 {
+        lock_recover(&self.gpu_score_states)
+            .get(&gpu)
+            .map(|s| s.score(&self.opts))
+            .unwrap_or(0.0)
+    }
+
+    /// Snapshot of every observed GPU's predictive score (sorted).
+    pub fn gpu_scores(&self) -> BTreeMap<u32, f64> {
+        lock_recover(&self.gpu_score_states)
+            .iter()
+            .map(|(g, s)| (*g, s.score(&self.opts)))
+            .collect()
     }
 
     /// Mark one instance dead.  Returns `false` if it was already dead
@@ -123,6 +364,70 @@ impl HealthRegistry {
         true
     }
 
+    /// A GPU lost part of its capacity without dying.  Losses
+    /// accumulate across calls; each call re-queues the cumulative
+    /// total for the controller and bumps the failure epoch (the
+    /// cluster is degraded until the planner folds the loss in).
+    pub fn mark_gpu_degraded(
+        &self,
+        gpu: u32,
+        share_loss: u32,
+        mem_loss_mb: f64,
+    ) {
+        {
+            let mut all = lock_recover(&self.degradations);
+            let entry = all.entry(gpu).or_default();
+            entry.share_loss = entry.share_loss.saturating_add(share_loss);
+            entry.mem_loss_mb += mem_loss_mb.max(0.0);
+            lock_recover(&self.unacked_degrades).insert(gpu, *entry);
+        }
+        self.failure_epoch.fetch_add(1, Ordering::SeqCst);
+        self.push_event(HealthEventKind::GpuDegraded, 0, 0, gpu);
+    }
+
+    /// Cumulative capacity loss per GPU (sorted snapshot).
+    pub fn gpu_degradations(&self) -> BTreeMap<u32, GpuDegradation> {
+        lock_recover(&self.degradations).clone()
+    }
+
+    /// Drain the degradations the controller has not yet folded into
+    /// placement — each handed out exactly once.
+    pub fn take_unacked_degrades(&self) -> Vec<(u32, GpuDegradation)> {
+        let mut d = lock_recover(&self.unacked_degrades);
+        let out: Vec<(u32, GpuDegradation)> =
+            d.iter().map(|(g, x)| (*g, *x)).collect();
+        d.clear();
+        out
+    }
+
+    /// A failed or degraded GPU came back at full capacity: clear its
+    /// dead/degraded/suspect state and queue the recovery for the
+    /// controller (which lifts it from `dead_gpus` and replans onto
+    /// it).  Always enqueues — after a hot swap the server carries a
+    /// fresh registry, so the recovery must reach the controller even
+    /// when this ledger never saw the original failure.  Returns
+    /// whether any local state was actually cleared.
+    pub fn mark_gpu_recovered(&self, gpu: u32) -> bool {
+        let was_dead = lock_recover(&self.dead_gpus).remove(&gpu);
+        let was_degraded =
+            lock_recover(&self.degradations).remove(&gpu).is_some();
+        lock_recover(&self.unacked_gpus).remove(&gpu);
+        lock_recover(&self.unacked_degrades).remove(&gpu);
+        lock_recover(&self.gpu_score_states).remove(&gpu);
+        if lock_recover(&self.unacked_recoveries).insert(gpu) {
+            self.push_event(HealthEventKind::GpuRecovered, 0, 0, gpu);
+        }
+        was_dead || was_degraded
+    }
+
+    /// Drain the GPU recoveries the controller has not yet seen.
+    pub fn take_unacked_gpu_recoveries(&self) -> Vec<u32> {
+        let mut g = lock_recover(&self.unacked_recoveries);
+        let out: Vec<u32> = g.iter().copied().collect();
+        g.clear();
+        out
+    }
+
     /// Record a recovered shard poisoning (detection only — the queue
     /// already recovered the lock).
     pub fn mark_shard_poisoned(&self, stage: usize, shard: usize) {
@@ -133,6 +438,14 @@ impl HealthRegistry {
     pub fn note_recovery(&self) {
         self.recovery_epoch.fetch_add(1, Ordering::SeqCst);
         self.push_event(HealthEventKind::Recovered, 0, 0, u32::MAX);
+    }
+
+    /// Batches delivered by `(stage, instance)` so far.
+    pub fn beats(&self, stage: usize, instance: usize) -> u64 {
+        lock_recover(&self.beats)
+            .get(&(stage, instance))
+            .copied()
+            .unwrap_or(0)
     }
 
     /// GPUs marked dead so far (sorted).
@@ -218,5 +531,113 @@ mod tests {
         h.beat(1, 0);
         assert_eq!(h.beats(1, 0), 2);
         assert!(!h.is_instance_dead(1, 0));
+    }
+
+    /// The same `(t_ms, fault)` sequence replayed into two registries
+    /// produces bit-identical scores — chaos runs replay.
+    #[test]
+    fn scores_replay_deterministically() {
+        let run = || {
+            let h = HealthRegistry::default();
+            for i in 0..20u64 {
+                // jittered gaps: 10ms, 14ms, 10ms, 14ms, ...
+                let t = (i * 10 + (i % 2) * 4) as f64;
+                h.beat_at(0, 0, 7, t);
+                if i == 5 || i == 11 {
+                    h.record_exec_panic(0, 0, 7);
+                }
+            }
+            h.record_gpu_warning(7);
+            (h.gpu_score(7), h.instance_score(0, 0))
+        };
+        let (a_gpu, a_inst) = run();
+        let (b_gpu, b_inst) = run();
+        assert_eq!(a_gpu.to_bits(), b_gpu.to_bits());
+        assert_eq!(a_inst.to_bits(), b_inst.to_bits());
+        assert!(a_gpu > 0.0 && a_gpu <= 1.0);
+    }
+
+    /// Jitter alone stays under the default suspect threshold (0.6);
+    /// fault history crosses it; clean beats decay it back.
+    #[test]
+    fn fault_history_crosses_threshold_and_decays() {
+        let h = HealthRegistry::default();
+        // pure jitter: wildly varying gaps, no faults
+        let mut t = 0.0;
+        for gap in [5.0, 50.0, 2.0, 80.0, 1.0, 60.0, 3.0, 90.0, 4.0] {
+            t += gap;
+            h.beat_at(0, 0, 2, t);
+        }
+        let jitter_only = h.gpu_score(2);
+        assert!(
+            jitter_only < 0.6,
+            "variance term is capped below the suspect threshold: {jitter_only}"
+        );
+        // three warnings push it over
+        for _ in 0..3 {
+            h.record_gpu_warning(2);
+        }
+        assert!(h.gpu_score(2) >= 0.6, "warnings must cross the threshold");
+        // a long run of clean, regular beats forgives the history
+        let mut t = 1000.0;
+        for _ in 0..60 {
+            t += 10.0;
+            h.beat_at(0, 0, 2, t);
+        }
+        assert!(h.gpu_score(2) < 0.6, "clean beats must decay the score");
+    }
+
+    #[test]
+    fn degradation_accumulates_and_recovery_clears() {
+        let h = HealthRegistry::default();
+        h.mark_gpu_degraded(4, 20, 512.0);
+        h.mark_gpu_degraded(4, 10, 256.0);
+        let d = h.gpu_degradations();
+        assert_eq!(d[&4], GpuDegradation { share_loss: 30, mem_loss_mb: 768.0 });
+        assert_eq!(h.failure_epoch(), 2);
+        // cumulative total handed out, exactly once
+        let taken = h.take_unacked_degrades();
+        assert_eq!(taken.len(), 1);
+        assert_eq!(taken[0].0, 4);
+        assert_eq!(taken[0].1.share_loss, 30);
+        assert!(h.take_unacked_degrades().is_empty());
+        // recovery clears everything and queues itself for the
+        // controller exactly once
+        assert!(h.mark_gpu_recovered(4));
+        assert!(h.gpu_degradations().is_empty());
+        assert_eq!(h.take_unacked_gpu_recoveries(), vec![4]);
+        assert!(h.take_unacked_gpu_recoveries().is_empty());
+        // recovering a GPU this ledger never saw still enqueues (the
+        // post-swap server carries a fresh registry) but reports no
+        // local state change
+        assert!(!h.mark_gpu_recovered(9));
+        assert_eq!(h.take_unacked_gpu_recoveries(), vec![9]);
+    }
+
+    /// Racing writers never skip or reorder ledger seqs: the vec is
+    /// dense 0..n in order because the seq is allocated inside the
+    /// events lock.
+    #[test]
+    fn ledger_seq_dense_and_ordered_under_races() {
+        let h = HealthRegistry::default();
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..50usize {
+                        match i % 3 {
+                            0 => h.record_exec_panic(t, i, t as u32),
+                            1 => h.record_gpu_warning(t as u32),
+                            _ => h.mark_shard_poisoned(t, i),
+                        }
+                    }
+                });
+            }
+        });
+        let events = h.events();
+        assert_eq!(events.len(), 200);
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "ledger seq must be dense and ordered");
+        }
     }
 }

@@ -13,9 +13,13 @@ pub mod tcp;
 
 pub use batcher::{BatchQueue, QueueMetrics, ShardedBatchQueue, WorkItem};
 pub use faults::{
-    FaultDomain, FaultEvent, FaultKind, FaultPlan, FaultyExecutor,
+    FailureDomain, FaultDomain, FaultEvent, FaultKind, FaultPlan,
+    FaultyExecutor,
 };
-pub use health::{HealthEvent, HealthEventKind, HealthRegistry};
+pub use health::{
+    GpuDegradation, HealthEvent, HealthEventKind, HealthRegistry,
+    HealthScoreOptions,
+};
 pub use messages::{read_frame, write_frame, Request, Response};
 pub use server::{
     ExecutorMode, FragmentExecutor, KillWorker, MockExecutor, RequestSink,

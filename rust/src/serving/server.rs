@@ -31,7 +31,7 @@
 //! Both modes produce the same response multiset for the same workload;
 //! the concurrency test suite asserts it.
 
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -754,6 +754,32 @@ impl Server {
         killed
     }
 
+    /// Out-of-band health warning against a GPU (telemetry / operator /
+    /// injected fault): bumps the GPU's predictive fault level so the
+    /// controller can proactively migrate off it before it dies.
+    pub fn warn_gpu(&self, gpu: u32) {
+        self.health.record_gpu_warning(gpu);
+    }
+
+    /// Partial-GPU failure: the GPU loses `share_loss` compute share and
+    /// `mem_loss_mb` MB of memory but keeps serving.  The controller
+    /// folds the residual capacity into the next placement.
+    pub fn degrade_gpu(&self, gpu: u32, share_loss: u32, mem_loss_mb: f64) {
+        self.health.mark_gpu_degraded(gpu, share_loss, mem_loss_mb);
+    }
+
+    /// A failed or degraded GPU came back at full capacity; the
+    /// controller drains the recovery and lifts the GPU from its hard
+    /// avoid-set.  Returns whether any ledger state was cleared.
+    pub fn recover_gpu(&self, gpu: u32) -> bool {
+        self.health.mark_gpu_recovered(gpu)
+    }
+
+    /// Predictive health score per observed GPU (0 healthy → 1 dying).
+    pub fn gpu_health_scores(&self) -> BTreeMap<u32, f64> {
+        self.health.gpu_scores()
+    }
+
     /// Chaos hook: poison one stage queue's lock (shard `shard` in Pool
     /// mode; the single queue in Threads mode) the way a panicking
     /// consumer would.  The queue recovers on the next acquisition and
@@ -1052,6 +1078,8 @@ fn slo_filter(
 fn execute_batch(
     env: &ExecEnv<'_>,
     stage: &Stage,
+    stage_idx: usize,
+    inst: usize,
     gpu: u32,
     live: &[WorkItem<Ctx>],
 ) -> (Result<ExecOutput>, f64, bool) {
@@ -1073,6 +1101,9 @@ fn execute_batch(
         Ok(res) => (res, false),
         Err(payload) => {
             env.counters.exec_panics.fetch_add(1, Ordering::Relaxed);
+            // feed the predictive fault level: panics against the same
+            // instance/GPU accumulate faster than clean beats forgive
+            env.health.record_exec_panic(stage_idx, inst, gpu);
             let kill = payload.is::<KillWorker>();
             (
                 Err(anyhow!(
@@ -1246,7 +1277,8 @@ fn instance_loop(stage_idx: usize, inst: usize, gpu: u32, env: &ExecEnv<'_>) {
             continue;
         }
         let t0 = Instant::now();
-        let (out, exec_ms, kill) = execute_batch(env, stage, gpu, &live);
+        let (out, exec_ms, kill) =
+            execute_batch(env, stage, stage_idx, inst, gpu, &live);
         // pace to the modeled MPS latency
         if env.opts.time_scale > 0.0 {
             let target = exec_ms * env.opts.time_scale / 1e3;
@@ -1266,7 +1298,7 @@ fn instance_loop(stage_idx: usize, inst: usize, gpu: u32, env: &ExecEnv<'_>) {
             }
         }
         deliver(env, stage, live, out, exec_ms);
-        env.health.beat(stage_idx, inst);
+        env.health.beat_live(stage_idx, inst, gpu);
         if kill {
             // the batch got its drop notices above; now the thread dies
             retire_instance(
@@ -1691,7 +1723,8 @@ fn run_pool_batch(
         return;
     }
     let t0 = Instant::now();
-    let (out, exec_ms, kill) = execute_batch(env, stage, slot.gpu, &live);
+    let (out, exec_ms, kill) =
+        execute_batch(env, stage, slot.stage, slot.shard, slot.gpu, &live);
     if kill {
         // injected/real worker death: retire the instance (closing its
         // shard reroutes the backlog), doom the slot, deliver the
@@ -1735,7 +1768,7 @@ fn finish_batch(
     let slot = &pool.slots[slot_idx];
     let stage = &pool.stages[slot.stage];
     deliver(env, stage, done.live, done.out, done.exec_ms);
-    env.health.beat(slot.stage, slot.shard);
+    env.health.beat_live(slot.stage, slot.shard, slot.gpu);
     free_slot(pool, env, slot_idx);
 }
 

@@ -11,10 +11,16 @@ use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+use graft::coordinator::placement::{place, stamp};
+use graft::coordinator::{
+    ClientId, ControllerOptions, ExecutionPlan, FragmentSpec,
+    ReplanController, Scheduler, SchedulerOptions, TickOutcome,
+};
 use graft::profiler::CostModel;
+use graft::runtime::transition::LiveServer;
 use graft::serving::{
-    ExecutorMode, FaultEvent, FaultKind, FaultPlan, FaultyExecutor, Request,
-    Server, ServerOptions,
+    ExecutorMode, FailureDomain, FaultDomain, FaultEvent, FaultKind,
+    FaultPlan, FaultyExecutor, Request, Server, ServerOptions,
 };
 
 use common::{cm, mock_executor, plan_for, watchdog};
@@ -275,6 +281,280 @@ fn health_epochs_order_failure_then_recovery() {
         .expect("Recovered recorded");
     assert!(down.seq < rec.seq);
     server.drain();
+}
+
+/// Correlated-failure domain under chaos: every stamped GPU shares one
+/// failure domain, so when the seeded chaos plan fires a GPU failure
+/// the *whole* rack dies at once mid-load.  Every submitted request —
+/// before and after the domain death — still gets exactly one response
+/// (multiset equality over (client, seq)), in both executor modes.
+#[test]
+fn correlated_domain_failure_never_silently_loses() {
+    let _wd = watchdog("correlated_domain_chaos", Duration::from_secs(180));
+    for mode in MODES {
+        let cm = cm();
+        let mut plan = plan_for(
+            &cm,
+            "inc",
+            &[(0, 2, 150.0, 30.0), (1, 3, 150.0, 30.0), (2, 3, 150.0, 30.0)],
+        );
+        let placement = place(&cm, &plan, None).expect("placeable plan");
+        stamp(&mut plan, &placement);
+        let mut gpus: Vec<u32> =
+            plan.stages().flat_map(|s| s.gpus.iter().copied()).collect();
+        gpus.sort_unstable();
+        gpus.dedup();
+        assert!(!gpus.is_empty(), "{mode:?}: plan must be stamped");
+        // one domain holding every stamped GPU: any GpuFail chaos event
+        // takes the whole fleet down together
+        let domains = vec![FailureDomain {
+            name: "rack0".into(),
+            gpus: gpus.clone(),
+        }];
+        let faults = Arc::new(FaultPlan::chaos_with_domains(
+            7,
+            40,
+            &domains,
+            &[],
+            4,
+        ));
+        let server = Server::start(
+            Arc::new(FaultyExecutor::new(mock_executor(&cm), faults.clone())),
+            &cm,
+            &plan,
+            opts(mode),
+        );
+        let (tx, rx) = mpsc::channel();
+        let mi = cm.model_index("inc").unwrap();
+        let dims = &cm.config().models[mi].dims;
+        let per_client = 40u32;
+        for seq in 0..per_client {
+            for c in 0..3u32 {
+                let p = if c == 0 { 2usize } else { 3 };
+                server.submit(
+                    Request {
+                        client_id: c,
+                        model: mi as u16,
+                        p: p as u16,
+                        seq,
+                        t_capture_ms: 0.0,
+                        upstream_ms: 0.0,
+                        budget_ms: 1e9,
+                        payload: vec![0.5; dims[p]],
+                    },
+                    tx.clone(),
+                );
+                // control-domain chaos ticks once per submit; a GPU
+                // failure event arrives as the complete domain
+                for kind in faults.tick(FaultDomain::Control) {
+                    if let FaultKind::GpuFail { gpu } = kind {
+                        server.fail_gpu(gpu);
+                    }
+                }
+            }
+        }
+        drop(tx);
+        server.drain();
+        let responses: Vec<_> = rx.iter().collect();
+        assert_eq!(
+            responses.len(),
+            3 * per_client as usize,
+            "{mode:?}: silent loss"
+        );
+        // multiset equality: every (client, seq) answered exactly once
+        let mut want: Vec<(u32, u32)> = (0..3u32)
+            .flat_map(|c| (0..per_client).map(move |s| (c, s)))
+            .collect();
+        let mut got: Vec<(u32, u32)> =
+            responses.iter().map(|r| (r.client_id, r.seq)).collect();
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(got, want, "{mode:?}: response multiset mismatch");
+        // the domain fired as a unit: every member GPU is down
+        let failed = server.health().failed_gpus();
+        assert_eq!(failed, gpus, "{mode:?}: partial domain failure");
+    }
+}
+
+/// Counts how many instances `plan` stamps onto `gpu`.
+fn instances_on(plan: &ExecutionPlan, gpu: u32) -> usize {
+    plan.stages()
+        .map(|s| s.gpus.iter().filter(|&&g| g == gpu).count())
+        .sum()
+}
+
+/// Shared setup for the controller-path tests: a scheduler-planned
+/// (and FFD-stamped) fleet behind a [`LiveServer`], with the drift
+/// trigger disabled so only the failure paths can fire.
+fn controlled_fleet(
+    cm: &CostModel,
+) -> (Arc<LiveServer>, ReplanController, u32) {
+    let mi = cm.model_index("inc").unwrap();
+    let specs: Vec<FragmentSpec> = (0..6)
+        .map(|i| {
+            FragmentSpec::single(ClientId(i), mi, 3, 130.0 + i as f64, 1.0)
+        })
+        .collect();
+    let sched =
+        Arc::new(Scheduler::new(cm.clone(), SchedulerOptions::default()));
+    let (plan, _) = sched.plan(&specs);
+    let live = Arc::new(LiveServer::start(
+        mock_executor(cm),
+        cm,
+        &plan,
+        opts(ExecutorMode::Pool),
+    ));
+    let ctrl = ReplanController::new(
+        sched,
+        live.clone(),
+        specs,
+        ControllerOptions {
+            drift_threshold: 1e12,
+            min_requests: u64::MAX,
+            ..Default::default()
+        },
+    );
+    let victim = live
+        .plan()
+        .stages()
+        .flat_map(|s| s.gpus.iter().copied())
+        .min()
+        .expect("scheduler stamps its plans");
+    (live, ctrl, victim)
+}
+
+/// Regression: `dead_gpus` used to only ever grow.  A GPU that fails
+/// and later recovers must leave the controller's hard avoid-set, and
+/// the recovery replan (a full repack) must actually place instances
+/// back on the restored GPU.
+#[test]
+fn gpu_recovery_lifts_dead_set_and_replan_reuses_gpu() {
+    let _wd = watchdog("gpu_recovery_replan", Duration::from_secs(180));
+    let cm = cm();
+    let (live, ctrl, victim) = controlled_fleet(&cm);
+    assert!(instances_on(&live.plan(), victim) > 0);
+
+    live.server().fail_gpu(victim);
+    match ctrl.tick() {
+        TickOutcome::EmergencyReplanned {
+            failed_gpus,
+            domain_excluded,
+            ..
+        } => {
+            assert_eq!(failed_gpus, vec![victim]);
+            assert!(domain_excluded.is_empty(), "no domains configured");
+        }
+        other => panic!("expected emergency replan, got {other:?}"),
+    }
+    assert_eq!(ctrl.dead_gpus(), vec![victim]);
+    assert_eq!(
+        instances_on(&live.plan(), victim),
+        0,
+        "emergency plan landed on the dead GPU"
+    );
+
+    // the GPU comes back; the controller drains the recovery, lifts
+    // the hard avoid-set and repacks onto the restored capacity
+    live.server().recover_gpu(victim);
+    match ctrl.tick() {
+        TickOutcome::RecoveryReplanned { recovered_gpus, .. } => {
+            assert_eq!(recovered_gpus, vec![victim]);
+        }
+        other => panic!("expected recovery replan, got {other:?}"),
+    }
+    assert!(ctrl.dead_gpus().is_empty(), "dead set must shrink");
+    assert!(
+        instances_on(&live.plan(), victim) > 0,
+        "recovery repack must reuse the restored GPU"
+    );
+
+    drop(ctrl);
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(l) => {
+            l.server().drain();
+        }
+    }
+}
+
+/// Partial-GPU degradation: a full-share loss on a live GPU fires a
+/// [`TickOutcome::DegradeRebalanced`] that folds the residual (zero)
+/// capacity into placement — the degraded GPU is vacated, the fleet
+/// keeps serving, and a recovery later restores it.
+#[test]
+fn partial_degradation_rebalances_to_residual_capacity() {
+    let _wd = watchdog("partial_degradation", Duration::from_secs(180));
+    let cm = cm();
+    let (live, ctrl, victim) = controlled_fleet(&cm);
+    assert!(instances_on(&live.plan(), victim) > 0);
+
+    let full_share = cm.config().gpu.max_share;
+    live.server().degrade_gpu(victim, full_share, 0.0);
+    match ctrl.tick() {
+        TickOutcome::DegradeRebalanced { degraded_gpus, .. } => {
+            assert_eq!(degraded_gpus, vec![victim]);
+        }
+        other => panic!("expected degrade rebalance, got {other:?}"),
+    }
+    assert_eq!(
+        ctrl.degraded_gpus(),
+        vec![(
+            victim,
+            graft::serving::GpuDegradation {
+                share_loss: full_share,
+                mem_loss_mb: 0.0,
+            }
+        )]
+    );
+    assert_eq!(
+        instances_on(&live.plan(), victim),
+        0,
+        "a zero-residual GPU must be vacated"
+    );
+    // the rebalanced fleet still serves
+    let mi = cm.model_index("inc").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    for seq in 0..30u32 {
+        for c in 0..6u32 {
+            live.submit(
+                Request {
+                    client_id: c,
+                    model: mi as u16,
+                    p: 3,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: vec![0.5; dims[3]],
+                },
+                tx.clone(),
+            );
+        }
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().collect();
+    assert_eq!(responses.len(), 180, "silent loss after rebalance");
+    assert!(responses.iter().all(|r| !r.dropped));
+
+    // recovery lifts the degradation and the repack may use it again
+    live.server().recover_gpu(victim);
+    match ctrl.tick() {
+        TickOutcome::RecoveryReplanned { recovered_gpus, .. } => {
+            assert_eq!(recovered_gpus, vec![victim]);
+        }
+        other => panic!("expected recovery replan, got {other:?}"),
+    }
+    assert!(ctrl.degraded_gpus().is_empty());
+    assert!(instances_on(&live.plan(), victim) > 0);
+
+    drop(ctrl);
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(l) => {
+            l.server().drain();
+        }
+    }
 }
 
 /// A rejected push (closed queue — e.g. a submit racing shutdown) never

@@ -1096,6 +1096,127 @@ fn prop_delta_replacement_never_exceeds_repack_and_respects_caps() {
     }
 }
 
+/// Soft avoidance is *advisory only* (ISSUE acceptance): with an empty
+/// constraint set the constrained entry points are byte-identical to
+/// their historical unconstrained counterparts, and with suspect GPUs
+/// active the uncapped packing vacates them entirely while the delta
+/// path keeps its oracle bounds (coverage, caps, `migrated ≤
+/// repack_migrated`, `gpus_used ≤ repack_gpus`).
+#[test]
+fn prop_soft_avoidance_advisory_and_bounded() {
+    use graft::coordinator::placement::{
+        place, place_constrained, place_delta, place_delta_constrained,
+        PlacementConstraints,
+    };
+    let cm = cm();
+    let g = &cm.config().gpu;
+    for case in 0..20u64 {
+        let mut rng = Rng::seed_from_u64(9700 + case);
+        let n = 10 + rng.below(40);
+        let mut specs = random_mixed_specs(&mut rng, &cm, n);
+        let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+        let (old, _) = sched.plan(&specs);
+        if old.placed_gpus().is_none() {
+            continue; // degenerate draw: nothing deployed
+        }
+        // (a) empty constraints: bit-for-bit the unconstrained paths
+        let p0 = place(&cm, &old, None).expect("placeable");
+        let p1 = place_constrained(
+            &cm,
+            &old,
+            None,
+            &PlacementConstraints::default(),
+        )
+        .expect("placeable");
+        assert_eq!(p0.usage, p1.usage, "case {case}");
+        assert_eq!(p0.by_stage, p1.by_stage, "case {case}");
+        for s in specs.iter_mut() {
+            if rng.below(4) == 0 {
+                s.rate_rps *= rng.range(1.2, 2.0);
+                s.budget_ms += rng.range(0.5, 3.0);
+            }
+        }
+        let (new_plan, _) = sched.plan(&specs);
+        let d0 = place_delta(&cm, &old, &new_plan, None, &[]).expect("delta");
+        let d1 = place_delta_constrained(
+            &cm,
+            &old,
+            &new_plan,
+            None,
+            &PlacementConstraints::default(),
+        )
+        .expect("delta");
+        assert_eq!(d0.pinned, d1.pinned, "case {case}");
+        assert_eq!(d0.migrated, d1.migrated, "case {case}");
+        assert_eq!(d0.fell_back, d1.fell_back, "case {case}");
+        assert_eq!(d0.placement.usage, d1.placement.usage, "case {case}");
+        assert_eq!(
+            d0.placement.by_stage, d1.placement.by_stage,
+            "case {case}"
+        );
+        // (b) suspects drawn from the deployed range: the uncapped
+        // strict pass always succeeds, so suspects are fully vacated
+        let deployed = p0.gpus().max(1);
+        let mut soft: Vec<u32> =
+            (0..1 + rng.below(2)).map(|_| rng.below(deployed) as u32).collect();
+        soft.sort_unstable();
+        soft.dedup();
+        let cons = PlacementConstraints {
+            soft_avoid: soft.clone(),
+            ..Default::default()
+        };
+        let pc = place_constrained(&cm, &new_plan, None, &cons)
+            .expect("uncapped constrained placement");
+        for &s in &soft {
+            let u = pc.usage.get(s as usize);
+            assert!(
+                u.map_or(true, |u| u.share == 0 && u.mem_mb == 0.0),
+                "case {case}: suspect {s} used uncapped: {u:?}"
+            );
+        }
+        // coverage + caps under constraints
+        let want: Vec<usize> = new_plan
+            .stages()
+            .map(|s| s.alloc.instances as usize)
+            .collect();
+        let got: Vec<usize> = pc.by_stage.iter().map(|v| v.len()).collect();
+        assert_eq!(got, want, "case {case}");
+        for u in &pc.usage {
+            assert!(u.share <= g.max_share, "case {case}");
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6, "case {case}");
+        }
+        // (c) delta under soft constraints keeps the oracle bounds and
+        // proactively unpins everything stamped onto a suspect
+        let dc = place_delta_constrained(&cm, &old, &new_plan, None, &cons)
+            .expect("delta under soft constraints");
+        let total: usize = want.iter().sum();
+        assert_eq!(dc.pinned + dc.migrated, total, "case {case}");
+        assert!(
+            dc.migrated <= dc.repack_migrated,
+            "case {case}: delta migrated {} > repack {}",
+            dc.migrated,
+            dc.repack_migrated
+        );
+        assert!(
+            dc.gpus_used <= dc.repack_gpus,
+            "case {case}: delta {} GPUs > repack {}",
+            dc.gpus_used,
+            dc.repack_gpus
+        );
+        for u in &dc.placement.usage {
+            assert!(u.share <= g.max_share, "case {case}");
+            assert!(u.mem_mb <= g.gpu_mem_mb + 1e-6, "case {case}");
+        }
+        for &s in &soft {
+            let u = dc.placement.usage.get(s as usize);
+            assert!(
+                u.map_or(true, |u| u.share == 0 && u.mem_mb == 0.0),
+                "case {case}: delta left load on suspect {s}: {u:?}"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_shard_close_reroute_preserves_every_item() {
     for case in 0..40u64 {

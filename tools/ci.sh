@@ -7,7 +7,9 @@
 # (n=100, both executors), placement (n=200, integrated-vs-oracle GPU
 # counts + cap checks), transition (n=200, live hot-swap: zero-drop
 # + delta-vs-repack migration bounds) and faults (n=200, single-GPU
-# failure: zero silent losses + emergency replan avoids the dead GPU).
+# failure: zero silent losses + emergency replan avoids the dead GPU,
+# plus the predictive-vs-reactive comparison: health-score-driven
+# proactive migration strictly reduces degraded-window drops).
 #
 #   tools/ci.sh            full pipeline
 #   tools/ci.sh --fast     build + test only
@@ -116,10 +118,16 @@ echo "== fault bench smoke (n=200, single-GPU failure + emergency replan) =="
 # replan trigger, every request is answered exactly once across the
 # failure + hot swap (zero silent losses), and the replacement plan
 # places zero instances on the failed GPU (it bails hard otherwise);
-# the grep asserts the faults section actually landed in the JSON
+# schema v2 also runs the predictive-vs-reactive comparison and bails
+# unless the predictive leg vacated the victim before death and
+# strictly reduced degraded-window drops; the greps assert the faults
+# + predictive sections and the self-check verdict landed in the JSON
 timeout 600 cargo run --release -p graft -- bench-faults \
     --sizes 200 --requests 400 --out target/BENCH_faults_smoke.json
 test -s target/BENCH_faults_smoke.json
 grep -q '"faults"' target/BENCH_faults_smoke.json
+grep -q '"predictive"' target/BENCH_faults_smoke.json
+grep -q '"degraded_window_drops"' target/BENCH_faults_smoke.json
+grep -q '"predictive_ok":true' target/BENCH_faults_smoke.json
 
 echo "ci: OK"
