@@ -88,6 +88,19 @@ pub struct ControllerOptions {
     /// hardware that shares a failure domain with dead hardware is
     /// assumed next.
     pub failure_domains: Vec<Vec<u32>>,
+    /// Observed-latency drift: when a model's traced e2e p99 exceeds
+    /// its planned wall-clock envelope (§4.3 window + execution, scaled
+    /// by the core's pacing `time_scale`) by this factor, the model's
+    /// demand rate is scaled up and a replan fires — arrival counters
+    /// can look stable while queueing delay quietly eats the budget
+    /// (burstier arrivals, slower hardware), and this is the signal
+    /// that catches it.  Requires request tracing to be on
+    /// ([`crate::serving::ServerOptions::trace`]); with tracing off or
+    /// pacing off the check is inert.  `None` disables.
+    pub latency_drift_factor: Option<f64>,
+    /// Traced requests a model needs before its e2e p99 is trusted by
+    /// the latency-drift check.
+    pub latency_min_samples: u64,
 }
 
 impl Default for ControllerOptions {
@@ -101,6 +114,8 @@ impl Default for ControllerOptions {
             context_path: None,
             suspect_threshold: Some(0.6),
             failure_domains: Vec::new(),
+            latency_drift_factor: Some(1.5),
+            latency_min_samples: 50,
         }
     }
 }
@@ -156,6 +171,15 @@ pub enum TickOutcome {
         migrated_instances: usize,
         report: TransitionReport,
     },
+    /// Observed-latency drift: a model's traced e2e p99 blew past its
+    /// planned wall-clock envelope while arrival counters looked fine —
+    /// its demand was scaled up and the plan re-fit.
+    LatencyReplanned {
+        model: String,
+        e2e_p99_ms: f64,
+        envelope_ms: f64,
+        report: TransitionReport,
+    },
 }
 
 struct CtrlState {
@@ -182,6 +206,11 @@ struct CtrlState {
     /// Partial-GPU degradations seen so far: placement offers only the
     /// residual capacity of these GPUs.
     degraded: BTreeMap<u32, GpuDegradation>,
+    /// Models the latency-drift path already acted on against the
+    /// current core's histograms, so an unchanged plan (or still-warm
+    /// histogram) doesn't re-fire every tick.  A swap installs a fresh
+    /// core with fresh histograms and clears this.
+    latency_handled: BTreeSet<usize>,
 }
 
 pub struct ReplanController {
@@ -210,6 +239,7 @@ impl ReplanController {
                 suspect_gpus: BTreeSet::new(),
                 handled_suspects: BTreeSet::new(),
                 degraded: BTreeMap::new(),
+                latency_handled: BTreeSet::new(),
             }),
         }
     }
@@ -302,6 +332,7 @@ impl ReplanController {
         st.demands = demands;
         st.swap_gen = self.live.swap_count();
         st.baseline = None; // fresh counters next tick
+        st.latency_handled.clear(); // fresh core, fresh histograms
         if let Some(path) = &self.opts.context_path {
             let _ = self.sched.save_replan_context(path);
         }
@@ -438,6 +469,93 @@ impl ReplanController {
                         migrated_instances: hosted,
                         report,
                     };
+                }
+            }
+        }
+
+        // observed-latency drift: the tracing pipeline's per-model e2e
+        // p99 against the deployed plan's wall-clock envelope.  Arrival
+        // counters miss the case where the *rate* is on plan but the
+        // latency is not (burstier arrivals, slower-than-modeled
+        // hardware); the registry's observed latencies are the second
+        // drift signal.  Only meaningful under pacing (time_scale > 0),
+        // where the modeled envelope has a wall-clock interpretation.
+        if let Some(factor) = self.opts.latency_drift_factor {
+            let ts = server.time_scale();
+            if ts > 0.0 {
+                let obs = server.obs();
+                let plan = self.live.plan();
+                // planned wall-clock envelope per model: worst member
+                // path, one batch window of formation + the execution
+                let mut env: BTreeMap<usize, f64> = BTreeMap::new();
+                for set in &plan.sets {
+                    let shared = set.shared.alloc.latency_ms;
+                    let worst_align = set
+                        .members
+                        .iter()
+                        .filter_map(|m| m.align.as_ref())
+                        .map(|a| a.alloc.latency_ms)
+                        .fold(0.0, f64::max);
+                    let e = env.entry(set.model).or_insert(0.0);
+                    *e = e.max(2.0 * (worst_align + shared));
+                }
+                // worst offender by p99/envelope ratio
+                let mut hit: Option<(usize, f64, f64)> = None;
+                for (mi, _, lat) in obs.models() {
+                    let mi = mi as usize;
+                    if st.latency_handled.contains(&mi)
+                        || lat.e2e.count() < self.opts.latency_min_samples
+                    {
+                        continue;
+                    }
+                    let Some(&env_ms) = env.get(&mi) else { continue };
+                    let wall = env_ms * ts;
+                    let p99 = lat.e2e.percentile(99.0);
+                    if wall <= 0.0 || !p99.is_finite() || p99 <= wall * factor
+                    {
+                        continue;
+                    }
+                    let better = match &hit {
+                        Some((_, hp, hw)) => p99 / wall > hp / hw,
+                        None => true,
+                    };
+                    if better {
+                        hit = Some((mi, p99, wall));
+                    }
+                }
+                if let Some((mi, p99, wall)) = hit {
+                    st.latency_handled.insert(mi);
+                    // scale the model's demand by the envelope excess,
+                    // clamped like the arrival-drift rescale (never
+                    // below 1: observed latency can only argue for
+                    // *more* capacity)
+                    let (lo, hi) = self.opts.rate_clamp;
+                    let f = (p99 / (wall * factor)).clamp(lo.max(1.0), hi);
+                    let mut demands = st.demands.clone();
+                    for s in demands.iter_mut().filter(|s| s.model == mi) {
+                        s.rate_rps *= f;
+                    }
+                    let (new_plan, _stats) = self.sched.plan(&demands);
+                    let old_plan = self.live.plan();
+                    let t = diff_plans(&old_plan, &new_plan);
+                    if t.updated_sets + t.added_sets + t.removed_sets > 0 {
+                        let model = self.sched.cost_model().config().models
+                            [mi]
+                            .name
+                            .clone();
+                        let report =
+                            self.replan_and_swap(&mut st, demands, new_plan, false);
+                        return TickOutcome::LatencyReplanned {
+                            model,
+                            e2e_p99_ms: p99,
+                            envelope_ms: wall,
+                            report,
+                        };
+                    }
+                    // discreteness absorbed the scale-up: keep the
+                    // updated demand model so the next arrival-drift
+                    // replan bakes the latency signal in anyway
+                    st.demands = demands;
                 }
             }
         }
@@ -613,6 +731,20 @@ impl ReplanController {
                              capacity -> rebalanced onto residuals, swap \
                              {:.1} ms",
                             degraded_gpus, report.total_ms,
+                        );
+                    }
+                    if let TickOutcome::LatencyReplanned {
+                        model,
+                        e2e_p99_ms,
+                        envelope_ms,
+                        report,
+                    } = &outcome
+                    {
+                        eprintln!(
+                            "[controller] LATENCY: model {} e2e p99 {:.1} ms \
+                             over its {:.1} ms envelope -> scaled demand and \
+                             replanned, swap {:.1} ms",
+                            model, e2e_p99_ms, envelope_ms, report.total_ms,
                         );
                     }
                     if let TickOutcome::Replanned {

@@ -221,6 +221,31 @@ pub struct ScheduleStats {
     pub total_ms: f64,
 }
 
+impl ScheduleStats {
+    /// Emit this run's numbers as registry gauges
+    /// (`graft_scheduler_*`), so the last trigger's cost shows up next
+    /// to the serving counters on `/metrics`.
+    pub fn collect_metrics(&self, out: &mut Vec<crate::obs::Metric>) {
+        let g = |n: &str, v: f64| {
+            crate::obs::Metric::gauge(format!("graft_scheduler_{n}"), v)
+        };
+        out.push(g("input_fragments", self.n_input as f64));
+        out.push(g("merged_fragments", self.n_after_merge as f64));
+        out.push(g("groups", self.n_groups as f64));
+        out.push(g("groups_reused", self.n_groups_reused as f64));
+        out.push(g("plan_ms", self.total_ms));
+        out.push(g("placement_rounds", self.placement_rounds as f64));
+        out.push(g("gpus", self.gpus as f64));
+        out.push(g("fragmentation", self.fragmentation));
+        out.push(g(
+            "placement_failed",
+            if self.placement_failed { 1.0 } else { 0.0 },
+        ));
+        out.push(g("planner_shards", self.planner_shards as f64));
+        out.push(g("shard_max_ms", self.shard_max_ms));
+    }
+}
+
 /// One cached group plan: the exact specs (so signature-hash collisions
 /// can never surface a wrong plan), the plan, and the last trigger
 /// generation that touched it.

@@ -27,6 +27,10 @@ use crate::coordinator::{ExecutionPlan, FragmentSpec};
 use crate::sim::pack;
 use crate::hybrid::{choose_partition, DeviceKind};
 use crate::metrics::LatencyStats;
+use crate::obs::{
+    counter_sum, counter_value, BudgetAttribution, Metric, MetricsRegistry,
+    TraceOptions,
+};
 use crate::profiler::{AllocConstraints, CostModel};
 use crate::serving::{
     ExecutorMode, FaultDomain, FaultKind, FaultPlan, FaultyExecutor,
@@ -339,6 +343,17 @@ pub struct ServingBenchPoint {
     pub rejected: u64,
 }
 
+/// A [`ServingBenchPoint`] plus the observability artifacts of the run:
+/// the registry snapshot its counters were read from (so the bench JSON
+/// and the `/metrics` endpoint can never disagree on a number) and —
+/// when tracing was on — the SLO-budget attribution.
+#[derive(Debug, Clone)]
+pub struct ServingBenchRun {
+    pub point: ServingBenchPoint,
+    pub snapshot: Vec<Metric>,
+    pub attribution: Option<BudgetAttribution>,
+}
+
 pub fn mode_name(mode: ExecutorMode) -> &'static str {
     match mode {
         ExecutorMode::Threads => "threads",
@@ -399,6 +414,28 @@ pub fn serve_synthetic_with_faults(
     total_reqs: usize,
     faults: Option<Arc<FaultPlan>>,
 ) -> ServingBenchPoint {
+    serve_synthetic_run(
+        cm,
+        plan,
+        mode,
+        total_reqs,
+        faults,
+        TraceOptions::default(),
+    )
+    .point
+}
+
+/// The full harness: [`serve_synthetic_with_faults`] with request
+/// tracing configurable, returning the registry snapshot and (tracing
+/// on) the budget attribution alongside the measured point.
+pub fn serve_synthetic_run(
+    cm: &CostModel,
+    plan: &ExecutionPlan,
+    mode: ExecutorMode,
+    total_reqs: usize,
+    faults: Option<Arc<FaultPlan>>,
+    trace: TraceOptions,
+) -> ServingBenchRun {
     // every routed client with its partition point / payload width
     let mut targets: Vec<(u32, u16, u16, usize)> = Vec::new();
     let mut instances = 0usize;
@@ -429,7 +466,11 @@ pub fn serve_synthetic_with_faults(
         rejected: 0,
     };
     if targets.is_empty() || total_reqs == 0 {
-        return point;
+        return ServingBenchRun {
+            point,
+            snapshot: Vec::new(),
+            attribution: None,
+        };
     }
     let dims: HashMap<String, Vec<usize>> = cm
         .config()
@@ -442,12 +483,18 @@ pub fn serve_synthetic_with_faults(
         Some(fp) => Arc::new(FaultyExecutor::new(mock, fp.clone())),
         None => mock,
     };
-    let server = Server::start(
+    let server = Arc::new(Server::start(
         executor,
         cm,
         plan,
-        ServerOptions { time_scale: 0.0, drop_on_slo: false, mode, ..Default::default() },
-    );
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode,
+            trace,
+            ..Default::default()
+        },
+    ));
     point.threads = server.thread_count();
 
     let producers = 4usize.min(total_reqs).max(1);
@@ -468,7 +515,7 @@ pub fn serve_synthetic_with_faults(
         let mut prod_handles = Vec::new();
         for pidx in 0..producers {
             let tx = tx.clone();
-            let server = &server;
+            let server: &Server = &server;
             let targets = &targets;
             let faults = faults.clone();
             prod_handles.push(scope.spawn(move || {
@@ -522,14 +569,39 @@ pub fn serve_synthetic_with_faults(
     point.throughput_rps = recvd.len() as f64 / wall_s;
     point.p50_ms = lat.percentile(50.0);
     point.p99_ms = lat.percentile(99.0);
-    point.batches = server.counters.batches.load(Ordering::Relaxed);
-    point.served = server.counters.served.load(Ordering::Relaxed);
-    point.dropped = server.counters.dropped.load(Ordering::Relaxed);
+    // counters come from the registry snapshot — the same numbers the
+    // `/metrics` endpoint and the `[serve]` stats line render, so the
+    // bench JSON can never disagree with the exposition
+    let registry = MetricsRegistry::new();
+    {
+        let s = server.clone();
+        registry.register("serving", move |out| s.collect_metrics(out));
+    }
+    let snap = registry.snapshot();
+    point.batches =
+        counter_value(&snap, "graft_serving_batches_total").unwrap_or(0);
+    point.served =
+        counter_value(&snap, "graft_serving_served_total").unwrap_or(0);
+    point.dropped =
+        counter_value(&snap, "graft_serving_dropped_total").unwrap_or(0);
     // queue-level count only: ServerCounters::rejected mirrors the same
     // refusals, so adding both would double-count every lost item
-    point.rejected = server.queue_rejections();
-    server.shutdown();
-    point
+    point.rejected = counter_sum(&snap, "graft_queue_rejected_total");
+    let attribution = if trace.enabled() {
+        Some(BudgetAttribution::from_obs(
+            cm,
+            plan,
+            &server.obs(),
+            server.time_scale(),
+        ))
+    } else {
+        None
+    };
+    drop(registry); // releases its Arc so the server can be torn down
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    ServingBenchRun { point, snapshot: snap, attribution }
 }
 
 /// Plan a mixed-model fleet of `n_clients` and measure the serving path

@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod hybrid;
 pub mod metrics;
+pub mod obs;
 pub mod profiler;
 pub mod runtime;
 pub mod serving;

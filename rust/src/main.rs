@@ -6,9 +6,19 @@
 //!        [--planner-threads T]        (per-model planner shards; the
 //!                                     plan is identical at any T)
 //!   serve [--model M] [--clients N] [--duration S] [--addr A]
-//!         [--reconfigure]             run the real serving data path
+//!         [--reconfigure] [--metrics-addr A] [--trace-sample N]
+//!                                     run the real serving data path
 //!                                     (--reconfigure: replan controller
-//!                                     hot-swaps plans on demand drift)
+//!                                     hot-swaps plans on demand drift;
+//!                                     --metrics-addr: /metrics endpoint;
+//!                                     --trace-sample: trace every Nth
+//!                                     request into the budget report)
+//!   obs-report [--clients N] [--requests R] [--trace-sample N]
+//!              [--format prom|json] [--out FILE]
+//!              [--metrics-addr A [--serve-for S]] | [--addr A]
+//!                                     traced synthetic run -> SLO-budget
+//!                                     attribution + metrics exposition
+//!                                     (--addr scrapes a live endpoint)
 //!   trace [--seed N] [--len S]        print a synthetic 5G trace
 //!   models                            list model specs (Table 2)
 //!   bench-scheduler [--sizes N,N,..] [--reps R] [--out FILE]
@@ -50,6 +60,9 @@ use graft::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use graft::coordinator::{ControllerOptions, ReplanController};
 use graft::experiments;
 use graft::hybrid::{BandwidthTrace, TraceParams};
+use graft::obs::{
+    render_stats_line, Metric, MetricsRegistry, MetricsServer, TraceOptions,
+};
 use graft::profiler::{AllocConstraints, CostModel};
 use graft::runtime::{default_artifacts_dir, Engine, LiveServer};
 use graft::serving::{ServerOptions, TcpFront};
@@ -111,6 +124,7 @@ fn run() -> Result<()> {
         "bench-transition" => cmd_bench_transition(&args),
         "bench-faults" => cmd_bench_faults(&args),
         "serve" => cmd_serve(&cm, &args),
+        "obs-report" => cmd_obs_report(&cm, &args),
         "trace" => cmd_trace(&args),
         "models" => {
             let t = experiments::motivation::tab2(&cm);
@@ -131,7 +145,8 @@ fn print_usage() {
          usage:\n\
          \x20 graft experiment <id|all> [--out results]\n\
          \x20 graft plan --model inc --scale small-homo [--t 5] [--deploy FILE] [--planner-threads 1]\n\
-         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0] [--reconfigure] [--planner-threads 1]\n\
+         \x20 graft serve [--model vgg] [--clients 4] [--duration 10] [--addr 127.0.0.1:0] [--reconfigure] [--planner-threads 1] [--metrics-addr 127.0.0.1:9464] [--trace-sample 8]\n\
+         \x20 graft obs-report [--clients 64] [--requests 4000] [--trace-sample 1] [--format prom] [--out FILE] [--metrics-addr 127.0.0.1:9464 --serve-for 5] [--addr HOST:PORT]\n\
          \x20 graft trace [--seed 7] [--len 60]\n\
          \x20 graft models\n\
          \x20 graft bench-scheduler [--sizes 1000,5000,10000] [--reps 3] [--planner-threads 4] [--shard-sizes 1000,10000,100000] [--out BENCH_scheduler.json]\n\
@@ -801,7 +816,8 @@ fn cmd_bench_scheduler(args: &Args) -> Result<()> {
 /// rows differ only in the executor core.
 fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
     use graft::experiments::common::random_mixed_fragments;
-    use graft::experiments::scale::{serve_synthetic, ServingBenchPoint};
+    use graft::experiments::scale::{serve_synthetic_run, ServingBenchRun};
+    use graft::obs::{counter_sum, counter_value};
     use graft::serving::ExecutorMode;
     use graft::util::Json;
     use std::collections::BTreeMap;
@@ -831,7 +847,32 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
     let ms3 = |v: f64| {
         Json::Num(if v.is_finite() { (v * 1e3).round() / 1e3 } else { -1.0 })
     };
-    let point_json = |r: &ServingBenchPoint| {
+    // the counter dump is read back out of the run's registry snapshot
+    // under the canonical metric names — the same numbers `/metrics`
+    // would have served during the run
+    let counters_json = |snap: &[graft::obs::Metric]| {
+        let mut o = BTreeMap::new();
+        for name in [
+            "graft_serving_served_total",
+            "graft_serving_dropped_total",
+            "graft_serving_batches_total",
+            "graft_serving_batched_requests_total",
+            "graft_serving_exec_panics_total",
+            "graft_trace_requests_total",
+        ] {
+            o.insert(
+                name.to_string(),
+                num(counter_value(snap, name).unwrap_or(0) as f64),
+            );
+        }
+        for name in ["graft_queue_pushed_total", "graft_queue_rejected_total"]
+        {
+            o.insert(name.to_string(), num(counter_sum(snap, name) as f64));
+        }
+        Json::Obj(o)
+    };
+    let point_json = |run: &ServingBenchRun| {
+        let r = &run.point;
         let mut o = BTreeMap::new();
         o.insert("requests".into(), num(r.requests as f64));
         o.insert("wall_ms".into(), ms3(r.wall_ms));
@@ -845,6 +886,7 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
         // rejected = balancer + closed-queue refusals; anything non-zero
         // means the run lost work items to a shutdown race
         o.insert("rejected".into(), num(r.rejected as f64));
+        o.insert("counters".into(), counters_json(&run.snapshot));
         Json::Obj(o)
     };
 
@@ -862,39 +904,48 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
         "threads",
         "speedup"
     );
+    let no_trace = graft::obs::TraceOptions::default();
+    let largest = sizes.iter().copied().max().unwrap_or(0);
+    let mut overhead: Option<Json> = None;
+    let mut attribution: Option<Json> = None;
     for &n in &sizes {
         let total_reqs = requests_flag.unwrap_or_else(|| (4 * n).max(8000));
         let specs = random_mixed_fragments(cm, n, 0x5E4D);
         let sched =
             Scheduler::new(cm.clone(), SchedulerOptions::default());
         let (plan, _) = sched.plan(&specs);
-        let rt = serve_synthetic(cm, &plan, ExecutorMode::Threads, total_reqs);
-        let rp = serve_synthetic(cm, &plan, ExecutorMode::Pool, total_reqs);
-        if rt.requests < total_reqs || rp.requests < total_reqs {
+        let rt = serve_synthetic_run(
+            cm, &plan, ExecutorMode::Threads, total_reqs, None, no_trace,
+        );
+        let rp = serve_synthetic_run(
+            cm, &plan, ExecutorMode::Pool, total_reqs, None, no_trace,
+        );
+        if rt.point.requests < total_reqs || rp.point.requests < total_reqs {
             bail!(
                 "lost responses at n={n}: threads {}/{total_reqs}, pool {}/{total_reqs}",
-                rt.requests,
-                rp.requests
+                rt.point.requests,
+                rp.point.requests
             );
         }
-        let speedup = rp.throughput_rps / rt.throughput_rps.max(1e-9);
+        let speedup =
+            rp.point.throughput_rps / rt.point.throughput_rps.max(1e-9);
         println!(
             "{:>8} {:>8} {:>10} | {:>14} {:>9} {:>8} | {:>14} {:>9} {:>8} {:>8}",
             n,
             total_reqs,
-            rt.instances,
-            format!("{:.0}", rt.throughput_rps),
-            format!("{:.2}", rt.p99_ms),
-            rt.threads,
-            format!("{:.0}", rp.throughput_rps),
-            format!("{:.2}", rp.p99_ms),
-            rp.threads,
+            rt.point.instances,
+            format!("{:.0}", rt.point.throughput_rps),
+            format!("{:.2}", rt.point.p99_ms),
+            rt.point.threads,
+            format!("{:.0}", rp.point.throughput_rps),
+            format!("{:.2}", rp.point.p99_ms),
+            rp.point.threads,
             format!("{speedup:.2}x"),
         );
         let mut row = BTreeMap::new();
         row.insert("n_clients".into(), num(n as f64));
         row.insert("requests".into(), num(total_reqs as f64));
-        row.insert("instances".into(), num(rt.instances as f64));
+        row.insert("instances".into(), num(rt.point.instances as f64));
         row.insert("stages".into(), num(plan.stages().count() as f64));
         row.insert("threads".into(), point_json(&rt));
         row.insert("pool".into(), point_json(&rp));
@@ -903,6 +954,43 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
             num((speedup * 1e3).round() / 1e3),
         );
         runs.push(Json::Obj(row));
+
+        // at the largest size: rerun the pool leg with sampled tracing
+        // on and self-check that tracing stays out of the hot path
+        if n == largest {
+            let traced = serve_synthetic_run(
+                cm,
+                &plan,
+                ExecutorMode::Pool,
+                total_reqs,
+                None,
+                graft::obs::TraceOptions { sample_every: 8 },
+            );
+            let (off, on) = (rp.point.p99_ms, traced.point.p99_ms);
+            // 5% relative + 0.5 ms absolute slack: sub-ms p99s jitter
+            // more than 5% between identical runs
+            let ok = !on.is_finite() || on <= off * 1.05 + 0.5;
+            if !ok {
+                bail!(
+                    "tracing overhead self-check failed at n={n}: \
+                     p99 {off:.3} ms off -> {on:.3} ms on (sample_every=8)"
+                );
+            }
+            println!(
+                "tracing overhead @ n={n}: p99 {off:.2} ms off -> {on:.2} ms \
+                 on (sample_every=8), traced {} requests",
+                counter_value(&traced.snapshot, "graft_trace_requests_total")
+                    .unwrap_or(0),
+            );
+            let mut o = BTreeMap::new();
+            o.insert("n_clients".into(), num(n as f64));
+            o.insert("sample_every".into(), num(8.0));
+            o.insert("p99_ms_trace_off".into(), ms3(off));
+            o.insert("p99_ms_trace_on".into(), ms3(on));
+            o.insert("trace_overhead_ok".into(), Json::Bool(ok));
+            overhead = Some(Json::Obj(o));
+            attribution = traced.attribution.as_ref().map(|a| a.to_json());
+        }
     }
 
     let mut config = BTreeMap::new();
@@ -917,10 +1005,18 @@ fn cmd_bench_serving(cm: &CostModel, args: &Args) -> Result<()> {
     );
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("serving".into()));
-    // v2: per-mode rejected counters (satellite of the live-reconfig PR)
-    doc.insert("schema_version".into(), num(2.0));
+    // v3: registry-snapshot counter dumps, SLO-budget attribution and
+    // the tracing-overhead self-check (observability PR);
+    // v2: per-mode rejected counters (live-reconfig PR)
+    doc.insert("schema_version".into(), num(3.0));
     doc.insert("config".into(), Json::Obj(config));
     doc.insert("runs".into(), Json::Arr(runs));
+    if let Some(o) = overhead {
+        doc.insert("trace_overhead".into(), o);
+    }
+    if let Some(a) = attribution {
+        doc.insert("attribution".into(), a);
+    }
     let json = Json::Obj(doc);
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {
@@ -1568,6 +1664,16 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
         .transpose()
         .context("parsing --planner-threads")?
         .unwrap_or(1);
+    // observability: --metrics-addr serves /metrics (+ .json) off the
+    // unified registry; --trace-sample N traces every Nth request
+    let metrics_addr = args.flags.get("metrics-addr").cloned();
+    let trace_sample: u32 = args
+        .flags
+        .get("trace-sample")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --trace-sample")?
+        .unwrap_or(0);
 
     let mi = cm.model_index(model).context("unknown model")?;
     let engine = Arc::new(
@@ -1616,7 +1722,10 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
         engine,
         cm,
         &plan,
-        ServerOptions::default(),
+        ServerOptions {
+            trace: TraceOptions { sample_every: trace_sample },
+            ..Default::default()
+        },
     ));
     let front = TcpFront::start(&addr, live.clone())?;
     println!(
@@ -1638,9 +1747,37 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
     } else {
         (None, None)
     };
-    // periodic operator heartbeat: serving totals plus the health
-    // ledger (poisoned-lock recoveries, failure/recovery epochs,
-    // degradation flag) and the controller's avoid-sets
+    // unified metrics registry: the live front (current + retired
+    // cores, swap counter) and the controller's avoid-sets register
+    // here; the heartbeat line, the final summary and the /metrics
+    // endpoint all render from the same snapshots
+    let registry = Arc::new(MetricsRegistry::new());
+    {
+        let live = live.clone();
+        registry.register("serving", move |out| live.collect_metrics(out));
+    }
+    if let Some(c) = &ctrl {
+        let c = c.clone();
+        registry.register("controller", move |out| {
+            out.push(Metric::gauge(
+                "graft_health_suspect_gpus",
+                c.suspect_gpus().len() as f64,
+            ));
+            out.push(Metric::gauge(
+                "graft_controller_dead_gpus",
+                c.dead_gpus().len() as f64,
+            ));
+        });
+    }
+    let metrics_srv = match &metrics_addr {
+        Some(a) => {
+            let srv = MetricsServer::start(a, registry.clone())?;
+            println!("metrics on http://{}/metrics (+ /metrics.json)", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    // periodic operator heartbeat, rendered from the registry snapshot
     let deadline = std::time::Instant::now()
         + std::time::Duration::from_secs_f64(duration);
     loop {
@@ -1649,23 +1786,7 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
             break;
         }
         std::thread::sleep(std::time::Duration::from_secs(2).min(deadline - now));
-        let totals = live.totals();
-        let server = live.server();
-        println!(
-            "[serve] served={} dropped={} batches={} swaps={} \
-             poison_recoveries={} failure_epoch={} recovery_epoch={} \
-             degraded={} dead_gpus={:?} suspect_gpus={:?}",
-            totals.served,
-            totals.dropped,
-            totals.batches,
-            live.swap_count(),
-            server.poison_recoveries(),
-            server.health().failure_epoch(),
-            server.health().recovery_epoch(),
-            server.health().degraded(),
-            ctrl.as_ref().map(|c| c.dead_gpus()).unwrap_or_default(),
-            ctrl.as_ref().map(|c| c.suspect_gpus()).unwrap_or_default(),
-        );
+        println!("[serve] {}", render_stats_line(&registry.snapshot()));
     }
     stop.store(true, std::sync::atomic::Ordering::SeqCst);
     if let Some(w) = watcher {
@@ -1673,16 +1794,120 @@ fn cmd_serve(cm: &CostModel, args: &Args) -> Result<()> {
     }
     drop(ctrl);
     front.stop();
-    let totals = live.totals();
-    println!(
-        "served={} dropped={} batches={} plan_swaps={}",
-        totals.served,
-        totals.dropped,
-        totals.batches,
-        live.swap_count(),
-    );
+    println!("{}", render_stats_line(&registry.snapshot()));
+    if trace_sample > 0 {
+        let att = graft::obs::BudgetAttribution::from_obs(
+            cm,
+            &live.plan(),
+            &live.server().obs(),
+            live.server().time_scale(),
+        );
+        print!("{}", att.render_text());
+    }
+    if let Some(srv) = metrics_srv {
+        srv.stop();
+    }
+    registry.unregister("serving");
+    registry.unregister("controller");
     if let Ok(l) = Arc::try_unwrap(live) {
         l.shutdown();
+    }
+    Ok(())
+}
+
+/// `graft obs-report`: the observability round-trip without artifacts.
+/// Default mode drives a synthetic traced serving run (mock executor),
+/// prints the SLO-budget attribution and the metrics exposition, and —
+/// with `--metrics-addr` — serves the run's snapshot over HTTP for
+/// `--serve-for` seconds (the CI smoke curls it).  `--addr` instead
+/// scrapes a live `graft serve --metrics-addr` endpoint.
+fn cmd_obs_report(cm: &CostModel, args: &Args) -> Result<()> {
+    use graft::experiments::common::random_mixed_fragments;
+    use graft::obs::{prometheus_text, scrape, snapshot_json, TraceOptions};
+    use graft::serving::ExecutorMode;
+
+    let format =
+        args.flags.get("format").map(String::as_str).unwrap_or("prom");
+    if let Some(addr) = args.flags.get("addr") {
+        // scrape mode: print a running endpoint's exposition verbatim
+        let path =
+            if format == "json" { "/metrics.json" } else { "/metrics" };
+        print!("{}", scrape(addr, path)?);
+        return Ok(());
+    }
+
+    let n: usize = args
+        .flags
+        .get("clients")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --clients")?
+        .unwrap_or(64);
+    let requests: usize = args
+        .flags
+        .get("requests")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --requests")?
+        .unwrap_or(4000);
+    let sample: u32 = args
+        .flags
+        .get("trace-sample")
+        .map(|s| s.parse())
+        .transpose()
+        .context("parsing --trace-sample")?
+        .unwrap_or(1);
+
+    let specs = random_mixed_fragments(cm, n, 0x0B5);
+    let sched = Scheduler::new(cm.clone(), SchedulerOptions::default());
+    let (plan, stats) = sched.plan(&specs);
+    let run = graft::experiments::scale::serve_synthetic_run(
+        cm,
+        &plan,
+        ExecutorMode::Pool,
+        requests,
+        None,
+        TraceOptions { sample_every: sample },
+    );
+    if let Some(att) = &run.attribution {
+        print!("{}", att.render_text());
+    }
+    // the run's registry snapshot plus the planner's gauges, under the
+    // same namespace the live endpoint serves
+    let mut snap = run.snapshot.clone();
+    stats.collect_metrics(&mut snap);
+    snap.sort_by(|a, b| a.name.cmp(&b.name));
+    let text = match format {
+        "json" => format!("{}\n", snapshot_json(&snap)),
+        _ => prometheus_text(&snap),
+    };
+    match args.flags.get("out") {
+        Some(out) => {
+            std::fs::write(out, &text)
+                .with_context(|| format!("writing {out}"))?;
+            println!("wrote {out}");
+        }
+        None => print!("{text}"),
+    }
+    if let Some(maddr) = args.flags.get("metrics-addr") {
+        let secs: f64 = args
+            .flags
+            .get("serve-for")
+            .map(|s| s.parse())
+            .transpose()
+            .context("parsing --serve-for")?
+            .unwrap_or(5.0);
+        let registry = Arc::new(MetricsRegistry::new());
+        let frozen = snap.clone();
+        registry
+            .register("report", move |out| out.extend(frozen.iter().cloned()));
+        let srv = MetricsServer::start(maddr, registry)?;
+        println!(
+            "metrics on http://{}/metrics (+ /metrics.json) for {secs}s",
+            srv.addr()
+        );
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        srv.stop();
     }
     Ok(())
 }

@@ -1,10 +1,33 @@
 //! Latency metrics: streaming histograms, percentiles, SLO accounting.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 /// A simple exact-sample latency recorder (serving runs are small enough
 /// to keep every sample; the DES uses it too).
-#[derive(Debug, Clone, Default)]
+///
+/// Quantile queries sort lazily: the first `percentile`/`cdf` call
+/// after a `record`/`merge` builds a sorted copy, subsequent calls
+/// reuse it.  The old behavior — clone + sort on *every* call — made a
+/// percentile sweep over an n-sample run O(k·n log n).
+#[derive(Debug, Default)]
 pub struct LatencyStats {
     samples_ms: Vec<f64>,
+    /// Sorted view, built on the first quantile query and invalidated
+    /// by the next mutation.
+    sorted: Mutex<Option<Vec<f64>>>,
+    /// Times the sorted view was (re)built — the regression guard.
+    sorts: AtomicU64,
+}
+
+impl Clone for LatencyStats {
+    fn clone(&self) -> Self {
+        LatencyStats {
+            samples_ms: self.samples_ms.clone(),
+            sorted: Mutex::new(None),
+            sorts: AtomicU64::new(0),
+        }
+    }
 }
 
 impl LatencyStats {
@@ -14,6 +37,26 @@ impl LatencyStats {
 
     pub fn record(&mut self, ms: f64) {
         self.samples_ms.push(ms);
+        *self.sorted.get_mut().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// Run `f` on the lazily-sorted samples (empty case handled by the
+    /// callers, which all return early on no samples).
+    fn with_sorted<R>(&self, f: impl FnOnce(&[f64]) -> R) -> R {
+        let mut guard = self.sorted.lock().unwrap_or_else(|e| e.into_inner());
+        let v = guard.get_or_insert_with(|| {
+            self.sorts.fetch_add(1, Ordering::Relaxed);
+            let mut v = self.samples_ms.clone();
+            v.sort_by(f64::total_cmp);
+            v
+        });
+        f(v)
+    }
+
+    /// How many times the sorted view has been rebuilt (test hook for
+    /// the caching contract).
+    pub fn sort_count(&self) -> u64 {
+        self.sorts.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -41,11 +84,11 @@ impl LatencyStats {
         if self.samples_ms.is_empty() {
             return f64::NAN;
         }
-        let mut v = self.samples_ms.clone();
-        v.sort_by(f64::total_cmp);
-        let n = v.len();
-        let rank = ((p / 100.0) * n as f64).ceil() as usize;
-        v[rank.clamp(1, n) - 1]
+        self.with_sorted(|v| {
+            let n = v.len();
+            let rank = ((p / 100.0) * n as f64).ceil() as usize;
+            v[rank.clamp(1, n) - 1]
+        })
     }
 
     /// Fraction of samples ≤ `slo_ms`.
@@ -65,19 +108,19 @@ impl LatencyStats {
         if self.samples_ms.is_empty() || points == 0 {
             return Vec::new();
         }
-        let mut v = self.samples_ms.clone();
-        v.sort_by(f64::total_cmp);
-        let n = v.len();
-        if points == 1 {
-            return vec![(v[n - 1], 1.0)];
-        }
-        (0..points)
-            .map(|i| {
-                let f = i as f64 / (points - 1) as f64;
-                let idx = ((n - 1) as f64 * f).round() as usize;
-                (v[idx], (idx + 1) as f64 / n as f64)
-            })
-            .collect()
+        self.with_sorted(|v| {
+            let n = v.len();
+            if points == 1 {
+                return vec![(v[n - 1], 1.0)];
+            }
+            (0..points)
+                .map(|i| {
+                    let f = i as f64 / (points - 1) as f64;
+                    let idx = ((n - 1) as f64 * f).round() as usize;
+                    (v[idx], (idx + 1) as f64 / n as f64)
+                })
+                .collect()
+        })
     }
 
     pub fn samples(&self) -> &[f64] {
@@ -86,6 +129,7 @@ impl LatencyStats {
 
     pub fn merge(&mut self, other: &LatencyStats) {
         self.samples_ms.extend_from_slice(&other.samples_ms);
+        *self.sorted.get_mut().unwrap_or_else(|e| e.into_inner()) = None;
     }
 }
 
@@ -164,5 +208,29 @@ mod tests {
         let mut a = stats(&[1.0, 2.0]);
         a.merge(&stats(&[3.0]));
         assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn quantile_queries_sort_once_until_mutated() {
+        let v: Vec<f64> = (0..500).map(|i| ((i * 7919) % 500) as f64).collect();
+        let mut s = stats(&v);
+        assert_eq!(s.sort_count(), 0);
+        // A sweep of quantile queries shares one sorted build.
+        for p in [50.0, 90.0, 95.0, 99.0, 99.9] {
+            s.percentile(p);
+        }
+        s.cdf(32);
+        assert_eq!(s.sort_count(), 1);
+        // A new sample invalidates the cache and is visible.
+        s.record(1e9);
+        assert_eq!(s.percentile(100.0), 1e9);
+        assert_eq!(s.sort_count(), 2);
+        // So does a merge.
+        s.merge(&stats(&[-1.0]));
+        assert_eq!(s.percentile(0.0), -1.0);
+        assert_eq!(s.sort_count(), 3);
+        // Queries after that still reuse the rebuilt view.
+        s.cdf(8);
+        assert_eq!(s.sort_count(), 3);
     }
 }

@@ -1,0 +1,319 @@
+//! Log-bucketed streaming histogram for hot serving paths.
+//!
+//! [`Histogram`] keeps a fixed array of geometrically-spaced buckets
+//! (growth factor [`GAMMA`]) covering `[1e-3, 1e7]` milliseconds, so a
+//! recorded value lands in the bucket whose bounds bracket it and a
+//! percentile query returns the bucket's geometric midpoint — within
+//! `√GAMMA − 1 < 1%` of the exact nearest-rank sample for any value in
+//! the covered range.  Memory is bounded (one `u64` per bucket, ~1.6k
+//! buckets) no matter how many samples stream through, and recording is
+//! a single atomic increment — unlike [`crate::metrics::LatencyStats`],
+//! which keeps every sample exactly and is the oracle the property
+//! tests compare against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket growth factor.  The representative of a bucket is its
+/// geometric midpoint, so the worst-case relative error of a percentile
+/// is `√GAMMA − 1 ≈ 0.75%` — inside the documented 1% bound.
+const GAMMA: f64 = 1.015;
+/// Smallest value resolved by its own bucket (1 µs in ms units);
+/// anything below lands in the underflow bucket and reports the exact
+/// observed minimum.
+const MIN_MS: f64 = 1e-3;
+/// Largest value resolved by its own bucket (~2.8 h in ms); anything
+/// above lands in the overflow bucket and reports the exact maximum.
+const MAX_MS: f64 = 1e7;
+
+fn n_interior() -> usize {
+    ((MAX_MS / MIN_MS).ln() / GAMMA.ln()).ceil() as usize
+}
+
+/// Streaming log-bucketed histogram (values in milliseconds).  All
+/// methods take `&self`: recording is lock-free atomic increments, so
+/// a histogram can sit on the hot serving path behind an `Arc`.
+#[derive(Debug)]
+pub struct Histogram {
+    /// `counts[0]` = underflow, `counts[1..=n]` = interior buckets
+    /// (bucket `i` covers `[MIN·Γ^(i−1), MIN·Γ^i)`), `counts[n+1]` =
+    /// overflow.
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum in nanoseconds-as-integer (ms × 1e3 → µs precision) so the
+    /// mean needs no float CAS loop.
+    sum_us: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let n = n_interior();
+        Histogram {
+            counts: (0..n + 2).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    fn index(v: f64) -> usize {
+        let n = n_interior();
+        if v < MIN_MS {
+            return 0;
+        }
+        if v >= MAX_MS {
+            return n + 1;
+        }
+        // floor(log_Γ(v / MIN)) puts v in the interior bucket whose
+        // bounds bracket it; float rounding can misplace a value sitting
+        // exactly on a boundary by one bucket, which moves the
+        // representative by at most Γ^±0.5 — still within the bound
+        let i = ((v / MIN_MS).ln() / GAMMA.ln()).floor() as usize;
+        (i + 1).min(n)
+    }
+
+    /// Lower/upper bound of interior bucket `i` (1-indexed).
+    fn bounds(i: usize) -> (f64, f64) {
+        let lo = MIN_MS * GAMMA.powi(i as i32 - 1);
+        (lo, lo * GAMMA)
+    }
+
+    /// Record one value (negative values clamp to 0 → underflow).
+    pub fn record(&self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let ms = ms.max(0.0);
+        self.counts[Self::index(ms)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((ms * 1e3) as u64, Ordering::Relaxed);
+        self.min_bits.fetch_min(ms.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(ms.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_ms() / n as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        f64::from_bits(self.min_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank percentile (same definition as
+    /// [`crate::metrics::LatencyStats::percentile`]): walk the buckets
+    /// to the one holding the `⌈p/100·n⌉`-th smallest sample and return
+    /// its geometric midpoint, clamped to the observed `[min, max]`.
+    /// `p = 0` returns the exact minimum; `p = 100` the exact maximum.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.snapshot().percentile(p)
+    }
+
+    /// Merge another histogram's counts into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.counts.iter().zip(other.counts.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_bits
+            .fetch_min(other.min_bits.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_bits
+            .fetch_max(other.max_bits.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy for rendering / percentile math
+    /// (only non-empty buckets are materialised).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let n = n_interior();
+        let mut buckets = Vec::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            let (upper, rep) = if i == 0 {
+                (MIN_MS, self.min())
+            } else if i == n + 1 {
+                (f64::INFINITY, self.max())
+            } else {
+                let (lo, hi) = Self::bounds(i);
+                (hi, (lo * hi).sqrt())
+            };
+            buckets.push(HistBucket { upper, rep, count: c });
+        }
+        HistogramSnapshot {
+            buckets,
+            count: self.count(),
+            sum_ms: self.sum_ms(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+}
+
+/// One non-empty bucket of a snapshot: exclusive upper bound, the
+/// representative value reported for samples in it, and its count.
+#[derive(Debug, Clone, Copy)]
+pub struct HistBucket {
+    pub upper: f64,
+    pub rep: f64,
+    pub count: u64,
+}
+
+/// Point-in-time view of a [`Histogram`] (see
+/// [`Histogram::snapshot`]); what the metrics registry serialises.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<HistBucket>,
+    pub count: u64,
+    pub sum_ms: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistogramSnapshot {
+    /// Nearest-rank percentile over the bucketed counts (see
+    /// [`Histogram::percentile`]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for b in &self.buckets {
+            seen += b.count;
+            if seen >= rank {
+                return b.rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum_ms / self.count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn single_value_is_exact_at_extremes() {
+        let h = Histogram::new();
+        h.record(42.0);
+        assert_eq!(h.min(), 42.0);
+        assert_eq!(h.max(), 42.0);
+        assert_eq!(h.percentile(0.0), 42.0);
+        assert_eq!(h.percentile(100.0), 42.0);
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 42.0).abs() / 42.0 <= 0.01, "{p50}");
+    }
+
+    #[test]
+    fn percentiles_track_exact_within_one_percent() {
+        let h = Histogram::new();
+        let mut exact = crate::metrics::LatencyStats::new();
+        for i in 1..=10_000u64 {
+            // log-spread values across 5 decades
+            let v = 0.05 * 1.001f64.powi(i as i32 % 4000) * (1 + i % 7) as f64;
+            h.record(v);
+            exact.record(v);
+        }
+        for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let a = h.percentile(p);
+            let b = exact.percentile(p);
+            assert!(
+                (a - b).abs() / b <= 0.01,
+                "p{p}: approx {a} vs exact {b}"
+            );
+        }
+        assert_eq!(h.count(), 10_000);
+        assert!((h.mean() - exact.mean()).abs() / exact.mean() <= 0.01);
+    }
+
+    #[test]
+    fn out_of_range_values_report_observed_extremes() {
+        let h = Histogram::new();
+        h.record(1e-9);
+        h.record(5e8);
+        assert_eq!(h.percentile(0.0), 1e-9);
+        assert_eq!(h.percentile(100.0), 5e8);
+        // p50 of two samples = the smaller (nearest-rank lower middle)
+        assert_eq!(h.percentile(50.0), 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(1.0);
+        b.record(100.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 100.0);
+    }
+
+    #[test]
+    fn snapshot_buckets_are_cumulative_consistent() {
+        let h = Histogram::new();
+        for i in 0..1000 {
+            h.record(0.5 + i as f64);
+        }
+        let s = h.snapshot();
+        let total: u64 = s.buckets.iter().map(|b| b.count).sum();
+        assert_eq!(total, s.count);
+        assert!(s.buckets.windows(2).all(|w| w[0].upper < w[1].upper));
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal HTTP/1.1 metrics endpoint (std-only, no HTTP crate).
+//!
+//! [`MetricsServer`] runs the same nonblocking accept loop shape as the
+//! serving TCP front (`serving::tcp::TcpFront`): a listener polled with
+//! a stop flag, one short-lived handler per connection.  It serves two
+//! routes off a shared [`MetricsRegistry`]:
+//!
+//! * `GET /metrics` — Prometheus text exposition
+//! * `GET /metrics.json` — JSON snapshot (same data, same names)
+//!
+//! Requests are one-shot (`Connection: close`); a scrape is a fresh
+//! snapshot, so the endpoint always reflects live counters.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::registry::{prometheus_text, snapshot_json, MetricsRegistry};
+
+/// A running metrics endpoint; dropping it without [`stop`] leaves the
+/// accept thread running until process exit.
+///
+/// [`stop`]: MetricsServer::stop
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and
+    /// serve the registry until [`stop`](Self::stop).
+    pub fn start(addr: &str, registry: Arc<MetricsRegistry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((conn, _)) => {
+                            let _ = handle_conn(conn, &registry);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(mut conn: TcpStream, registry: &MetricsRegistry) -> Result<()> {
+    conn.set_read_timeout(Some(Duration::from_secs(5)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    // read until end of headers (requests are tiny GETs)
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        let n = conn.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 16 << 10 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/");
+    let (status, ctype, body) = match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            prometheus_text(&registry.snapshot()),
+        ),
+        "/metrics.json" => (
+            "200 OK",
+            "application/json",
+            snapshot_json(&registry.snapshot()).to_string(),
+        ),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+/// One-shot HTTP GET against a metrics endpoint; returns the body.
+/// Used by `graft obs-report --addr` and the CI smoke's fallback path.
+pub fn scrape(addr: &str, path: &str) -> Result<String> {
+    let mut conn = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to metrics endpoint {addr}"))?;
+    conn.set_read_timeout(Some(Duration::from_secs(5)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp)?;
+    let Some((head, body)) = resp.split_once("\r\n\r\n") else {
+        bail!("malformed HTTP response from {addr}");
+    };
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains("200") {
+        bail!("metrics endpoint returned {status:?}");
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Metric;
+
+    #[test]
+    fn serves_prometheus_and_json() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.register("t", |out| {
+            out.push(Metric::counter("graft_test_total", 3));
+        });
+        let srv = MetricsServer::start("127.0.0.1:0", reg).unwrap();
+        let addr = srv.addr().to_string();
+        let text = scrape(&addr, "/metrics").unwrap();
+        assert!(text.contains("graft_test_total 3"), "{text}");
+        let json = scrape(&addr, "/metrics.json").unwrap();
+        let parsed = crate::util::Json::parse(&json).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        assert!(scrape(&addr, "/nope").is_err());
+        srv.stop();
+    }
+}

@@ -1,0 +1,62 @@
+//! Observability: per-request tracing, the unified metrics registry,
+//! streaming histograms, the SLO-budget attribution report, and the
+//! `/metrics` HTTP endpoint.
+//!
+//! The pieces compose bottom-up:
+//!
+//! * [`now_us`] — one process-wide monotonic microsecond clock; every
+//!   span timestamp and queue metric reads it, so timelines from
+//!   different threads are directly comparable.
+//! * [`Histogram`] — log-bucketed streaming histogram (bounded memory,
+//!   ≤1% relative error vs the exact `metrics::LatencyStats` oracle)
+//!   used on the hot serving paths.
+//! * [`Trace`]/[`ServerObs`] — deterministic sampled per-request span
+//!   logs feeding per-model component histograms.
+//! * [`MetricsRegistry`] — the single namespace every subsystem
+//!   (serving, queues, health, scheduler, controller) registers
+//!   collectors into; snapshots render as JSON, Prometheus text, or
+//!   the one-line serve heartbeat.
+//! * [`BudgetAttribution`] — observed component latencies joined with
+//!   the planner's §4.3 envelope per model.
+//! * [`MetricsServer`] — std-only HTTP endpoint serving registry
+//!   snapshots (`graft serve --metrics-addr`, `graft obs-report`).
+
+pub mod hist;
+pub mod http;
+pub mod registry;
+pub mod report;
+pub mod trace;
+
+pub use hist::{HistBucket, Histogram, HistogramSnapshot};
+pub use http::{scrape, MetricsServer};
+pub use registry::{
+    counter_sum, counter_value, gauge_value, prometheus_text, render_stats_line,
+    snapshot_json, Metric, MetricValue, MetricsRegistry,
+};
+pub use report::{BudgetAttribution, ComponentStat, ModelAttribution};
+pub use trace::{ModelLatencyObs, ServerObs, Span, SpanKind, Trace, TraceOptions};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Monotonic microseconds since the first call in this process.  One
+/// shared epoch for every subsystem so span timestamps, queue metrics
+/// and histograms sit on a single comparable timeline.
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_us_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(now_us() > a);
+    }
+}

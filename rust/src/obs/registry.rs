@@ -1,0 +1,429 @@
+//! Unified metrics registry: one namespace for every counter, gauge and
+//! histogram in the system, snapshot-able as JSON or Prometheus text.
+//!
+//! Components don't push values; they register a *collector* closure
+//! keyed by a stable source name (`"serving"`, `"health"`,
+//! `"scheduler"`, …).  A snapshot invokes every collector, so the
+//! registry always reads live state — and re-registering a key (e.g.
+//! after a hot swap installs a new serving core) atomically replaces
+//! the old collector.  Naming scheme: `graft_<subsystem>_<what>[_total]`
+//! with `_total` reserved for monotonic counters, matching Prometheus
+//! conventions; every consumer (the `graft serve` stats line, bench
+//! JSON counter dumps, the `/metrics` endpoint) renders from the same
+//! snapshot, so a counter has exactly one name everywhere.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::obs::hist::HistogramSnapshot;
+use crate::util::Json;
+
+/// A metric value at snapshot time.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    /// Monotonic count (name should end in `_total`).
+    Counter(u64),
+    /// Point-in-time scalar.
+    Gauge(f64),
+    /// Bucketed distribution (rendered as Prometheus histogram).
+    Histogram(HistogramSnapshot),
+}
+
+/// One named metric in a snapshot.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    /// Label pairs, e.g. `[("model", "resnet")]`; empty for scalars.
+    pub labels: Vec<(String, String)>,
+    pub value: MetricValue,
+}
+
+impl Metric {
+    pub fn counter(name: impl Into<String>, v: u64) -> Metric {
+        Metric { name: name.into(), labels: Vec::new(), value: MetricValue::Counter(v) }
+    }
+
+    pub fn gauge(name: impl Into<String>, v: f64) -> Metric {
+        Metric { name: name.into(), labels: Vec::new(), value: MetricValue::Gauge(v) }
+    }
+
+    pub fn histogram(name: impl Into<String>, s: HistogramSnapshot) -> Metric {
+        Metric { name: name.into(), labels: Vec::new(), value: MetricValue::Histogram(s) }
+    }
+
+    pub fn with_label(
+        mut self,
+        key: impl Into<String>,
+        value: impl Into<String>,
+    ) -> Metric {
+        self.labels.push((key.into(), value.into()));
+        self
+    }
+
+    fn label_key(&self) -> String {
+        self.labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+type Collector = Box<dyn Fn(&mut Vec<Metric>) + Send + Sync>;
+
+/// The process-wide metric namespace.  Embedding code (serve loop,
+/// bench harness, `obs-report`) creates one, registers collectors over
+/// its live components, and snapshots on demand.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    sources: Mutex<BTreeMap<String, Collector>>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let keys: Vec<String> = self
+            .sources
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect();
+        f.debug_struct("MetricsRegistry").field("sources", &keys).finish()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Register (or replace) the collector for `source`.  Collectors
+    /// run on every snapshot; keep them cheap — read counters, don't
+    /// compute.
+    pub fn register(
+        &self,
+        source: impl Into<String>,
+        collect: impl Fn(&mut Vec<Metric>) + Send + Sync + 'static,
+    ) {
+        self.sources
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(source.into(), Box::new(collect));
+    }
+
+    /// Drop a source (e.g. when its component shuts down).
+    pub fn unregister(&self, source: &str) {
+        self.sources
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(source);
+    }
+
+    /// Collect every source, sorted by (name, labels) for stable output.
+    pub fn snapshot(&self) -> Vec<Metric> {
+        let mut out = Vec::new();
+        {
+            let sources = self.sources.lock().unwrap_or_else(|e| e.into_inner());
+            for collect in sources.values() {
+                collect(&mut out);
+            }
+        }
+        out.sort_by(|a, b| {
+            a.name.cmp(&b.name).then_with(|| a.label_key().cmp(&b.label_key()))
+        });
+        out
+    }
+}
+
+/// Look up a scalar counter by name in a snapshot (first label match).
+pub fn counter_value(snap: &[Metric], name: &str) -> Option<u64> {
+    snap.iter().find_map(|m| match (&m.value, m.name == name) {
+        (MetricValue::Counter(v), true) => Some(*v),
+        _ => None,
+    })
+}
+
+/// Sum a counter across all label sets (e.g. per-stage queue counters).
+pub fn counter_sum(snap: &[Metric], name: &str) -> u64 {
+    snap.iter()
+        .filter(|m| m.name == name)
+        .filter_map(|m| match &m.value {
+            MetricValue::Counter(v) => Some(*v),
+            _ => None,
+        })
+        .sum()
+}
+
+/// Look up a gauge by name (first label match).
+pub fn gauge_value(snap: &[Metric], name: &str) -> Option<f64> {
+    snap.iter().find_map(|m| match (&m.value, m.name == name) {
+        (MetricValue::Gauge(v), true) => Some(*v),
+        _ => None,
+    })
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn prom_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render a snapshot in the Prometheus text exposition format
+/// (`# TYPE` headers, cumulative `_bucket{le=...}` histogram series
+/// with `_sum`/`_count`).
+pub fn prometheus_text(snap: &[Metric]) -> String {
+    let mut out = String::new();
+    let mut typed: BTreeMap<&str, &'static str> = BTreeMap::new();
+    for m in snap {
+        let kind = match m.value {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+        };
+        if typed.insert(m.name.as_str(), kind) != Some(kind) {
+            out.push_str(&format!("# TYPE {} {}\n", m.name, kind));
+        }
+        match &m.value {
+            MetricValue::Counter(v) => {
+                out.push_str(&format!("{}{} {}\n", m.name, prom_labels(&m.labels, None), v));
+            }
+            MetricValue::Gauge(v) => {
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    m.name,
+                    prom_labels(&m.labels, None),
+                    fmt_f64(*v)
+                ));
+            }
+            MetricValue::Histogram(h) => {
+                let mut cum = 0u64;
+                for b in &h.buckets {
+                    cum += b.count;
+                    let le = if b.upper.is_infinite() {
+                        "+Inf".to_string()
+                    } else {
+                        fmt_f64(b.upper)
+                    };
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        m.name,
+                        prom_labels(&m.labels, Some(("le", &le))),
+                        cum
+                    ));
+                }
+                if h.buckets.last().map(|b| b.upper.is_finite()).unwrap_or(true) {
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        m.name,
+                        prom_labels(&m.labels, Some(("le", "+Inf"))),
+                        h.count
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_sum{} {}\n",
+                    m.name,
+                    prom_labels(&m.labels, None),
+                    fmt_f64(h.sum_ms)
+                ));
+                out.push_str(&format!(
+                    "{}_count{} {}\n",
+                    m.name,
+                    prom_labels(&m.labels, None),
+                    h.count
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot as a JSON array of metric objects.
+pub fn snapshot_json(snap: &[Metric]) -> Json {
+    Json::Arr(
+        snap.iter()
+            .map(|m| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(m.name.clone()));
+                if !m.labels.is_empty() {
+                    let mut l = BTreeMap::new();
+                    for (k, v) in &m.labels {
+                        l.insert(k.clone(), Json::Str(v.clone()));
+                    }
+                    o.insert("labels".to_string(), Json::Obj(l));
+                }
+                match &m.value {
+                    MetricValue::Counter(v) => {
+                        o.insert("type".to_string(), Json::Str("counter".into()));
+                        o.insert("value".to_string(), Json::Num(*v as f64));
+                    }
+                    MetricValue::Gauge(v) => {
+                        o.insert("type".to_string(), Json::Str("gauge".into()));
+                        o.insert(
+                            "value".to_string(),
+                            if v.is_finite() { Json::Num(*v) } else { Json::Null },
+                        );
+                    }
+                    MetricValue::Histogram(h) => {
+                        o.insert("type".to_string(), Json::Str("histogram".into()));
+                        o.insert("count".to_string(), Json::Num(h.count as f64));
+                        o.insert(
+                            "sum_ms".to_string(),
+                            if h.sum_ms.is_finite() {
+                                Json::Num(h.sum_ms)
+                            } else {
+                                Json::Null
+                            },
+                        );
+                        for (k, p) in
+                            [("p50_ms", 50.0), ("p95_ms", 95.0), ("p99_ms", 99.0)]
+                        {
+                            let v = h.percentile(p);
+                            o.insert(
+                                k.to_string(),
+                                if v.is_finite() { Json::Num(v) } else { Json::Null },
+                            );
+                        }
+                    }
+                }
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// Render the compact one-line serving status from a snapshot — the
+/// single source for the `[serve]` heartbeat line, so its figures are
+/// the registry's figures by construction.
+pub fn render_stats_line(snap: &[Metric]) -> String {
+    let c = |n: &str| counter_value(snap, n).unwrap_or(0);
+    let g = |n: &str| gauge_value(snap, n).unwrap_or(0.0);
+    format!(
+        "served={} dropped={} batches={} rejected={} swaps={} \
+         poison_recoveries={} failure_epoch={} recovery_epoch={} \
+         degraded={} dead_gpus={} suspect_gpus={} traced={}",
+        c("graft_serving_served_total"),
+        c("graft_serving_dropped_total"),
+        c("graft_serving_batches_total"),
+        counter_sum(snap, "graft_queue_rejected_total"),
+        c("graft_transition_swaps_total"),
+        c("graft_serving_poison_recoveries_total"),
+        c("graft_health_failure_epoch_total"),
+        c("graft_health_recovery_epoch_total"),
+        g("graft_health_degraded_gpus") as u64,
+        g("graft_health_dead_gpus") as u64,
+        g("graft_health_suspect_gpus") as u64,
+        c("graft_trace_requests_total"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Histogram;
+
+    #[test]
+    fn register_snapshot_and_replace() {
+        let reg = MetricsRegistry::new();
+        reg.register("a", |out| out.push(Metric::counter("graft_a_total", 1)));
+        reg.register("b", |out| out.push(Metric::gauge("graft_b", 2.5)));
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(counter_value(&snap, "graft_a_total"), Some(1));
+        assert_eq!(gauge_value(&snap, "graft_b"), Some(2.5));
+        // replace source "a"
+        reg.register("a", |out| out.push(Metric::counter("graft_a_total", 9)));
+        assert_eq!(counter_value(&reg.snapshot(), "graft_a_total"), Some(9));
+        reg.unregister("b");
+        assert_eq!(reg.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn counter_sum_across_labels() {
+        let snap = vec![
+            Metric::counter("graft_queue_rejected_total", 3).with_label("stage", "0"),
+            Metric::counter("graft_queue_rejected_total", 4).with_label("stage", "1"),
+        ];
+        assert_eq!(counter_sum(&snap, "graft_queue_rejected_total"), 7);
+    }
+
+    #[test]
+    fn prometheus_text_renders_all_kinds() {
+        let h = Histogram::new();
+        h.record(1.0);
+        h.record(10.0);
+        let snap = vec![
+            Metric::counter("graft_served_total", 5),
+            Metric::gauge("graft_util", 0.5).with_label("gpu", "0"),
+            Metric::histogram("graft_e2e_ms", h.snapshot()).with_label("model", "m"),
+        ];
+        let text = prometheus_text(&snap);
+        assert!(text.contains("# TYPE graft_served_total counter"));
+        assert!(text.contains("graft_served_total 5"));
+        assert!(text.contains("graft_util{gpu=\"0\"} 0.5"));
+        assert!(text.contains("# TYPE graft_e2e_ms histogram"));
+        assert!(text.contains("graft_e2e_ms_bucket{model=\"m\",le=\"+Inf\"} 2"));
+        assert!(text.contains("graft_e2e_ms_count{model=\"m\"} 2"));
+        // cumulative bucket counts are nondecreasing
+        let cums: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("graft_e2e_ms_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(cums.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn snapshot_json_parses_and_carries_percentiles() {
+        let h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let snap = vec![
+            Metric::counter("graft_served_total", 100),
+            Metric::histogram("graft_e2e_ms", h.snapshot()),
+        ];
+        let text = snapshot_json(&snap).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let hist = &arr[1];
+        assert_eq!(hist.get("type").unwrap().as_str().unwrap(), "histogram");
+        let p50 = hist.get("p50_ms").unwrap().as_f64().unwrap();
+        assert!((p50 - 50.0).abs() / 50.0 <= 0.01, "{p50}");
+    }
+
+    #[test]
+    fn stats_line_reads_registry_names() {
+        let snap = vec![
+            Metric::counter("graft_serving_served_total", 12),
+            Metric::counter("graft_queue_rejected_total", 1).with_label("stage", "0"),
+            Metric::counter("graft_queue_rejected_total", 2).with_label("stage", "1"),
+            Metric::gauge("graft_health_dead_gpus", 1.0),
+        ];
+        let line = render_stats_line(&snap);
+        assert!(line.contains("served=12"));
+        assert!(line.contains("rejected=3"));
+        assert!(line.contains("dead_gpus=1"));
+    }
+}

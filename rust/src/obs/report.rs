@@ -1,0 +1,348 @@
+//! SLO-budget attribution: where each model's latency budget actually
+//! goes, compared against the planner's §4.3 envelope.
+//!
+//! The planner sizes every stage so that one batch window (one planned
+//! execution time, `Alloc::latency_ms`) of formation wait plus the
+//! execution itself fits the member budgets — that is the *envelope*.
+//! The tracing pipeline measures where the wall-clock budget was
+//! actually spent (queueing, batch formation, execution, pacing,
+//! delivery).  [`BudgetAttribution`] joins the two per model: observed
+//! p50/p99 per component, the planned envelope on the worst member
+//! path, and a flag for the dominant component — the first place to
+//! look when a model is burning budget somewhere the planner didn't
+//! allocate it.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::plan::ExecutionPlan;
+use crate::obs::trace::ServerObs;
+use crate::profiler::CostModel;
+use crate::util::Json;
+
+/// Observed latency quantiles for one pipeline component.
+#[derive(Debug, Clone)]
+pub struct ComponentStat {
+    pub name: &'static str,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// One model's budget breakdown.
+#[derive(Debug, Clone)]
+pub struct ModelAttribution {
+    pub model: u16,
+    pub name: String,
+    /// Finished traces behind these numbers.
+    pub traced: u64,
+    /// Tightest member budget across the model's planned sets (ms).
+    pub budget_ms: f64,
+    /// Planned §4.3 batch-window envelope on the worst member path
+    /// (alignment window + shared window, modeled ms).
+    pub envelope_queue_ms: f64,
+    /// Planned execution on the worst member path (modeled ms).
+    pub envelope_exec_ms: f64,
+    /// Observed per-component quantiles: queue, form, exec, pace,
+    /// deliver (wall-clock ms).
+    pub components: Vec<ComponentStat>,
+    pub e2e_p50_ms: f64,
+    pub e2e_p99_ms: f64,
+    /// Component with the largest observed p99 — where the budget goes.
+    pub dominant: &'static str,
+    /// Observed e2e p99 vs the wall-clock envelope (envelope × the
+    /// serving `time_scale`).  `None` when pacing is off
+    /// (`time_scale == 0`), where the modeled envelope has no
+    /// wall-clock meaning.
+    pub within_envelope: Option<bool>,
+}
+
+/// The full per-model report.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetAttribution {
+    pub models: Vec<ModelAttribution>,
+    /// The trace retention cap was hit; histograms are still complete.
+    pub truncated: bool,
+}
+
+impl BudgetAttribution {
+    /// Join the plan's envelope with the observed trace histograms.
+    /// `time_scale` is the serving core's pacing scale (0 = pacing
+    /// off), used to convert the modeled envelope to wall-clock for
+    /// the `within_envelope` verdict.
+    pub fn from_obs(
+        cm: &CostModel,
+        plan: &ExecutionPlan,
+        obs: &ServerObs,
+        time_scale: f64,
+    ) -> BudgetAttribution {
+        // planned worst-path envelope per model index
+        let mut env: BTreeMap<usize, (f64, f64, f64)> = BTreeMap::new();
+        for set in &plan.sets {
+            let e = env.entry(set.model).or_insert((0.0, 0.0, f64::INFINITY));
+            let shared = set.shared.alloc.latency_ms;
+            // worst member path: the largest alignment stage in front of
+            // the shared stage (members without an alignment stage ride
+            // the shared envelope alone)
+            let worst_align = set
+                .members
+                .iter()
+                .filter_map(|m| m.align.as_ref())
+                .map(|a| a.alloc.latency_ms)
+                .fold(0.0, f64::max);
+            e.0 = e.0.max(worst_align + shared); // queue/form window
+            e.1 = e.1.max(worst_align + shared); // execution
+            for m in &set.members {
+                e.2 = e.2.min(m.spec.budget_ms);
+            }
+        }
+
+        let names = cm.config().model_names();
+        let mut models = Vec::new();
+        for (idx, _, lat) in obs.models() {
+            let planned = env.get(&(idx as usize));
+            if lat.e2e.is_empty() && planned.is_none() {
+                continue;
+            }
+            let (env_q, env_x, budget) =
+                planned.copied().unwrap_or((0.0, 0.0, f64::NAN));
+            let comps: Vec<ComponentStat> = lat
+                .components()
+                .into_iter()
+                .filter(|(n, _)| *n != "e2e")
+                .map(|(n, h)| ComponentStat {
+                    name: n,
+                    p50_ms: h.percentile(50.0),
+                    p99_ms: h.percentile(99.0),
+                })
+                .collect();
+            let dominant = comps
+                .iter()
+                .filter(|c| c.p99_ms.is_finite())
+                .max_by(|a, b| a.p99_ms.total_cmp(&b.p99_ms))
+                .map(|c| c.name)
+                .unwrap_or("none");
+            let e2e_p99 = lat.e2e.percentile(99.0);
+            let within_envelope = if time_scale > 0.0 && e2e_p99.is_finite() {
+                Some(e2e_p99 <= (env_q + env_x) * time_scale)
+            } else {
+                None
+            };
+            models.push(ModelAttribution {
+                model: idx,
+                name: names
+                    .get(idx as usize)
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| format!("model{idx}")),
+                traced: lat.e2e.count(),
+                budget_ms: budget,
+                envelope_queue_ms: env_q,
+                envelope_exec_ms: env_x,
+                components: comps,
+                e2e_p50_ms: lat.e2e.percentile(50.0),
+                e2e_p99_ms: e2e_p99,
+                dominant,
+                within_envelope,
+            });
+        }
+        BudgetAttribution { models, truncated: obs.truncated() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let models = self
+            .models
+            .iter()
+            .map(|m| {
+                let mut o = BTreeMap::new();
+                o.insert("model".to_string(), Json::Str(m.name.clone()));
+                o.insert("traced".to_string(), Json::Num(m.traced as f64));
+                o.insert("budget_ms".to_string(), num(m.budget_ms));
+                o.insert("envelope_queue_ms".to_string(), num(m.envelope_queue_ms));
+                o.insert("envelope_exec_ms".to_string(), num(m.envelope_exec_ms));
+                let mut comps = BTreeMap::new();
+                for c in &m.components {
+                    let mut co = BTreeMap::new();
+                    co.insert("p50_ms".to_string(), num(c.p50_ms));
+                    co.insert("p99_ms".to_string(), num(c.p99_ms));
+                    comps.insert(c.name.to_string(), Json::Obj(co));
+                }
+                o.insert("components".to_string(), Json::Obj(comps));
+                o.insert("e2e_p50_ms".to_string(), num(m.e2e_p50_ms));
+                o.insert("e2e_p99_ms".to_string(), num(m.e2e_p99_ms));
+                o.insert("dominant".to_string(), Json::Str(m.dominant.into()));
+                o.insert(
+                    "within_envelope".to_string(),
+                    match m.within_envelope {
+                        Some(b) => Json::Bool(b),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("models".to_string(), Json::Arr(models));
+        o.insert("truncated".to_string(), Json::Bool(self.truncated));
+        Json::Obj(o)
+    }
+
+    /// Human-readable table, one block per model.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        if self.models.is_empty() {
+            out.push_str("budget attribution: no traced requests\n");
+            return out;
+        }
+        for m in &self.models {
+            out.push_str(&format!(
+                "model {} — traced {} | budget {:.1} ms | envelope queue {:.2} ms exec {:.2} ms | e2e p50 {:.3} p99 {:.3} ms{}\n",
+                m.name,
+                m.traced,
+                m.budget_ms,
+                m.envelope_queue_ms,
+                m.envelope_exec_ms,
+                m.e2e_p50_ms,
+                m.e2e_p99_ms,
+                match m.within_envelope {
+                    Some(true) => " | within envelope",
+                    Some(false) => " | OVER envelope",
+                    None => "",
+                },
+            ));
+            for c in &m.components {
+                let mark = if c.name == m.dominant { "  <- dominant" } else { "" };
+                out.push_str(&format!(
+                    "  {:>8}: p50 {:>9.3} ms  p99 {:>9.3} ms{}\n",
+                    c.name, c.p50_ms, c.p99_ms, mark
+                ));
+            }
+        }
+        if self.truncated {
+            out.push_str("(trace buffer truncated; histograms complete)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::fragment::{ClientId, FragmentSpec};
+    use crate::coordinator::plan::{MemberPlan, RealignedSet, StagePlan};
+    use crate::obs::trace::{Span, SpanKind, Trace, TraceOptions};
+    use crate::obs::now_us;
+    use crate::profiler::{Alloc, FragmentId};
+
+    fn cm() -> CostModel {
+        CostModel::new(Config::embedded())
+    }
+
+    fn stage(model: usize, latency_ms: f64) -> StagePlan {
+        StagePlan {
+            frag: FragmentId::new(model, 2, 17),
+            alloc: Alloc {
+                batch: 4,
+                share: 20,
+                instances: 1,
+                latency_ms,
+                throughput_rps: 100.0,
+            },
+            budget_ms: 50.0,
+            demand_rps: 60.0,
+            gpus: vec![0],
+        }
+    }
+
+    fn plan(model: usize) -> ExecutionPlan {
+        let set = RealignedSet {
+            model,
+            point: 2,
+            members: vec![
+                MemberPlan {
+                    spec: FragmentSpec::single(ClientId(0), model, 1, 40.0, 30.0),
+                    align: Some(stage(model, 3.0)),
+                },
+                MemberPlan {
+                    spec: FragmentSpec::single(ClientId(1), model, 2, 60.0, 30.0),
+                    align: None,
+                },
+            ],
+            shared: stage(model, 7.0),
+        };
+        ExecutionPlan { sets: vec![set], infeasible: vec![] }
+    }
+
+    fn traced_obs(model: u16) -> ServerObs {
+        let obs = ServerObs::new(
+            TraceOptions { sample_every: 1 },
+            cm().config().model_names().iter().map(|s| s.to_string()).collect(),
+        );
+        let base = now_us();
+        for i in 0..100u64 {
+            let mk = |kind, dt: u64| Span { kind, t_us: base + i * 10_000 + dt };
+            obs.record(Trace {
+                client_id: 0,
+                seq: i as u32,
+                model,
+                spans: vec![
+                    mk(SpanKind::Enqueue, 0),
+                    mk(SpanKind::ShardPop, 4_000), // queue dominates: 4 ms
+                    mk(SpanKind::BatchForm, 4_500),
+                    mk(SpanKind::Execute, 6_500),
+                    mk(SpanKind::PaceRelease, 6_600),
+                    mk(SpanKind::Deliver, 6_700),
+                ],
+            });
+        }
+        obs
+    }
+
+    #[test]
+    fn envelope_uses_worst_member_path() {
+        let att = BudgetAttribution::from_obs(&cm(), &plan(0), &traced_obs(0), 1.0);
+        assert_eq!(att.models.len(), 1);
+        let m = &att.models[0];
+        assert_eq!(m.traced, 100);
+        assert!((m.envelope_queue_ms - 10.0).abs() < 1e-9); // 3 + 7
+        assert!((m.envelope_exec_ms - 10.0).abs() < 1e-9);
+        assert_eq!(m.budget_ms, 40.0); // tightest member
+        assert_eq!(m.dominant, "queue");
+        // e2e p99 = 6.7 ms <= 20 ms envelope at time_scale 1
+        assert_eq!(m.within_envelope, Some(true));
+    }
+
+    #[test]
+    fn pacing_off_yields_no_envelope_verdict() {
+        let att = BudgetAttribution::from_obs(&cm(), &plan(0), &traced_obs(0), 0.0);
+        assert_eq!(att.models[0].within_envelope, None);
+    }
+
+    #[test]
+    fn json_and_text_render() {
+        let att = BudgetAttribution::from_obs(&cm(), &plan(0), &traced_obs(0), 1.0);
+        let j = att.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        let models = parsed.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(
+            models[0].get("dominant").unwrap().as_str().unwrap(),
+            "queue"
+        );
+        assert!(models[0].get("components").unwrap().get("exec").is_ok());
+        let text = att.render_text();
+        assert!(text.contains("dominant"));
+        assert!(text.contains("within envelope"));
+    }
+
+    #[test]
+    fn untraced_unplanned_models_are_skipped() {
+        let obs = ServerObs::new(
+            TraceOptions { sample_every: 1 },
+            cm().config().model_names().iter().map(|s| s.to_string()).collect(),
+        );
+        let att = BudgetAttribution::from_obs(&cm(), &plan(1), &obs, 1.0);
+        // model 1 is planned (shows up with zero traces); others skipped
+        assert_eq!(att.models.len(), 1);
+        assert_eq!(att.models[0].traced, 0);
+    }
+}

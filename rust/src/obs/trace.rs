@@ -1,0 +1,410 @@
+//! Per-request tracing: span kinds, sampled traces, and the per-model
+//! latency accumulators the serving core records into.
+//!
+//! A [`Trace`] is attached to a request's server-side context when the
+//! deterministic sampler selects it (see [`TraceOptions`]) and follows
+//! the request through every hop of the pipeline.  Each instrumentation
+//! point appends a [`Span`] — a kind tag plus a monotonic microsecond
+//! timestamp from [`crate::obs::now_us`] — so a finished trace is an
+//! ordered walk: `Enqueue → ShardPop → BatchForm → Execute →
+//! PaceRelease → Deliver`, repeated once per hop for multi-stage
+//! (alignment → shared) requests.  Traces are recorded into
+//! [`ServerObs`] only when the request is *served*; drop notices and
+//! rejections discard the trace so tracing can never change responses.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::obs::hist::Histogram;
+use crate::obs::now_us;
+use crate::util::Json;
+
+/// Pipeline stations a request passes through, in order within a hop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Pushed into a stage queue (`Server::submit` or the forward path
+    /// of `deliver` for downstream stages).
+    Enqueue,
+    /// Popped off the shard/batch queue by a worker.
+    ShardPop,
+    /// Batch formed and SLO-filtered, about to execute.
+    BatchForm,
+    /// Kernel execution finished.
+    Execute,
+    /// Released by the pacing gate (deadline wheel park or sleep done).
+    PaceRelease,
+    /// Handed to the reply channel or forwarded downstream.
+    Deliver,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::ShardPop => "shard_pop",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::Execute => "execute",
+            SpanKind::PaceRelease => "pace_release",
+            SpanKind::Deliver => "deliver",
+        }
+    }
+
+    /// All kinds, in within-hop order.
+    pub const ALL: [SpanKind; 6] = [
+        SpanKind::Enqueue,
+        SpanKind::ShardPop,
+        SpanKind::BatchForm,
+        SpanKind::Execute,
+        SpanKind::PaceRelease,
+        SpanKind::Deliver,
+    ];
+}
+
+/// One timestamped station visit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Monotonic microseconds since process start ([`now_us`]).
+    pub t_us: u64,
+}
+
+/// A request's span log while it is in flight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub client_id: u32,
+    pub seq: u32,
+    /// Model index (into `Config::models`).
+    pub model: u16,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn new(client_id: u32, seq: u32, model: u16) -> Trace {
+        Trace { client_id, seq, model, spans: Vec::with_capacity(12) }
+    }
+
+    /// Append a span stamped now.  Timestamps are monotonic by
+    /// construction (single monotonic clock, spans appended in event
+    /// order by the thread holding the request).
+    pub fn stamp(&mut self, kind: SpanKind) {
+        self.spans.push(Span { kind, t_us: now_us() });
+    }
+
+    /// End-to-end server-side latency (first to last span), ms.
+    pub fn e2e_ms(&self) -> f64 {
+        match (self.spans.first(), self.spans.last()) {
+            (Some(a), Some(b)) => (b.t_us - a.t_us) as f64 / 1e3,
+            _ => 0.0,
+        }
+    }
+
+    /// Per-component durations (ms), summed across hops: time from each
+    /// span to its predecessor, attributed to the *later* station —
+    /// `ShardPop` time is queueing, `BatchForm` is formation wait,
+    /// `Execute` is kernel time, `PaceRelease` is pacing wait,
+    /// `Deliver` is handoff.  `Enqueue` opens a hop and absorbs the
+    /// inter-hop forward gap on multi-stage paths (reported as queue
+    /// time of the next hop's `ShardPop`, since `Deliver`→`Enqueue` is
+    /// back-to-back in the forwarding worker).
+    pub fn components_ms(&self) -> BTreeMap<SpanKind, f64> {
+        let mut out = BTreeMap::new();
+        for w in self.spans.windows(2) {
+            let dt = (w[1].t_us - w[0].t_us) as f64 / 1e3;
+            if w[1].kind != SpanKind::Enqueue {
+                *out.entry(w[1].kind).or_insert(0.0) += dt;
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("kind".to_string(), Json::Str(s.kind.name().into()));
+                m.insert("t_us".to_string(), Json::Num(s.t_us as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("client_id".to_string(), Json::Num(self.client_id as f64));
+        m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        m.insert("model".to_string(), Json::Num(self.model as f64));
+        m.insert("spans".to_string(), Json::Arr(spans));
+        Json::Obj(m)
+    }
+}
+
+/// Tracing configuration carried in `ServerOptions`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOptions {
+    /// Trace one request in `sample_every` (deterministic on
+    /// `(client_id, seq)` — identical across runs and executor modes).
+    /// `0` disables tracing entirely (the default).
+    pub sample_every: u32,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        TraceOptions { sample_every: 0 }
+    }
+}
+
+impl TraceOptions {
+    pub fn enabled(&self) -> bool {
+        self.sample_every > 0
+    }
+
+    /// Deterministic sampling decision: a pure function of the request
+    /// identity, so the same requests are traced in both executor
+    /// modes and across repeated runs.
+    pub fn sample(&self, client_id: u32, seq: u32) -> bool {
+        self.sample_every > 0
+            && (((client_id as u64) << 32) | seq as u64) % self.sample_every as u64
+                == 0
+    }
+}
+
+/// Per-model streaming latency components fed by finished traces.
+#[derive(Debug, Default)]
+pub struct ModelLatencyObs {
+    /// Enqueue → ShardPop (queueing), summed across hops.
+    pub queue: Histogram,
+    /// ShardPop → BatchForm (batch-formation wait).
+    pub form: Histogram,
+    /// BatchForm → Execute (kernel time).
+    pub exec: Histogram,
+    /// Execute → PaceRelease (pacing wait).
+    pub pace: Histogram,
+    /// PaceRelease → Deliver (handoff).
+    pub deliver: Histogram,
+    /// First span → last span.
+    pub e2e: Histogram,
+}
+
+impl ModelLatencyObs {
+    pub fn components(&self) -> [(&'static str, &Histogram); 6] {
+        [
+            ("queue", &self.queue),
+            ("form", &self.form),
+            ("exec", &self.exec),
+            ("pace", &self.pace),
+            ("deliver", &self.deliver),
+            ("e2e", &self.e2e),
+        ]
+    }
+}
+
+/// Cap on retained finished traces; beyond this, traces still feed the
+/// histograms but the span logs are dropped (`truncated` is set).
+const TRACE_RETAIN_CAP: usize = 16_384;
+
+/// The serving core's observability sink: per-model latency histograms
+/// plus a bounded buffer of finished sampled traces.  Shared by every
+/// worker thread of a `Server`; all recording is `&self`.
+#[derive(Debug)]
+pub struct ServerObs {
+    pub opts: TraceOptions,
+    model_names: Vec<String>,
+    lat: Vec<ModelLatencyObs>,
+    traces: Mutex<Vec<Trace>>,
+    truncated: AtomicBool,
+}
+
+impl ServerObs {
+    pub fn new(opts: TraceOptions, model_names: Vec<String>) -> ServerObs {
+        let lat = (0..model_names.len()).map(|_| ModelLatencyObs::default()).collect();
+        ServerObs {
+            opts,
+            model_names,
+            lat,
+            traces: Mutex::new(Vec::new()),
+            truncated: AtomicBool::new(false),
+        }
+    }
+
+    /// Disabled sink (no models, sampling off) — the default when
+    /// tracing is not configured; `record` is a no-op.
+    pub fn disabled() -> ServerObs {
+        ServerObs::new(TraceOptions::default(), Vec::new())
+    }
+
+    pub fn model_names(&self) -> &[String] {
+        &self.model_names
+    }
+
+    pub fn model_name(&self, model: u16) -> &str {
+        self.model_names
+            .get(model as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("unknown")
+    }
+
+    /// Latency components for one model (None if out of range).
+    pub fn model_lat(&self, model: u16) -> Option<&ModelLatencyObs> {
+        self.lat.get(model as usize)
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = (u16, &str, &ModelLatencyObs)> {
+        self.lat
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (i as u16, self.model_names[i].as_str(), l))
+    }
+
+    /// Ingest a finished trace from a *served* request: fold its
+    /// component durations into the per-model histograms and retain the
+    /// span log (up to the cap).
+    pub fn record(&self, trace: Trace) {
+        let Some(lat) = self.lat.get(trace.model as usize) else {
+            return;
+        };
+        for (kind, ms) in trace.components_ms() {
+            match kind {
+                SpanKind::ShardPop => lat.queue.record(ms),
+                SpanKind::BatchForm => lat.form.record(ms),
+                SpanKind::Execute => lat.exec.record(ms),
+                SpanKind::PaceRelease => lat.pace.record(ms),
+                SpanKind::Deliver => lat.deliver.record(ms),
+                SpanKind::Enqueue => {}
+            }
+        }
+        lat.e2e.record(trace.e2e_ms());
+        let mut buf = self.traces.lock().unwrap_or_else(|e| e.into_inner());
+        if buf.len() < TRACE_RETAIN_CAP {
+            buf.push(trace);
+        } else {
+            self.truncated.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Number of finished traces ingested into the histograms.
+    pub fn traced_count(&self) -> u64 {
+        self.lat.iter().map(|l| l.e2e.count()).sum()
+    }
+
+    /// Snapshot of the retained span logs.
+    pub fn traces(&self) -> Vec<Trace> {
+        self.traces.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    pub fn truncated(&self) -> bool {
+        self.truncated.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_with(offsets: &[(SpanKind, u64)]) -> Trace {
+        let base = now_us();
+        Trace {
+            client_id: 1,
+            seq: 0,
+            model: 0,
+            spans: offsets
+                .iter()
+                .map(|&(kind, dt)| Span { kind, t_us: base + dt })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_off_by_default() {
+        let off = TraceOptions::default();
+        assert!(!off.enabled());
+        assert!(!off.sample(0, 0));
+        let on = TraceOptions { sample_every: 3 };
+        for c in 0..5u32 {
+            for s in 0..50u32 {
+                assert_eq!(on.sample(c, s), on.sample(c, s));
+            }
+        }
+        // client 0: key == seq, so every 3rd seq is sampled
+        assert!(on.sample(0, 0) && on.sample(0, 3) && !on.sample(0, 1));
+        let n: usize =
+            (0..300u32).filter(|&s| on.sample(0, s)).count();
+        assert_eq!(n, 100);
+    }
+
+    #[test]
+    fn components_attribute_gaps_to_later_station() {
+        use SpanKind::*;
+        let t = trace_with(&[
+            (Enqueue, 0),
+            (ShardPop, 1_000),
+            (BatchForm, 1_500),
+            (Execute, 4_500),
+            (PaceRelease, 5_000),
+            (Deliver, 5_100),
+        ]);
+        let c = t.components_ms();
+        assert_eq!(c[&ShardPop], 1.0);
+        assert_eq!(c[&BatchForm], 0.5);
+        assert_eq!(c[&Execute], 3.0);
+        assert_eq!(c[&PaceRelease], 0.5);
+        assert!((c[&Deliver] - 0.1).abs() < 1e-9);
+        assert!((t.e2e_ms() - 5.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_hop_trace_sums_components_across_hops() {
+        use SpanKind::*;
+        let t = trace_with(&[
+            (Enqueue, 0),
+            (ShardPop, 1_000),
+            (BatchForm, 1_200),
+            (Execute, 2_200),
+            (PaceRelease, 2_300),
+            (Deliver, 2_400),
+            (Enqueue, 2_450),
+            (ShardPop, 3_450),
+            (BatchForm, 3_650),
+            (Execute, 4_650),
+            (PaceRelease, 4_750),
+            (Deliver, 4_850),
+        ]);
+        let c = t.components_ms();
+        assert_eq!(c[&ShardPop], 2.0); // 1.0 + 1.0, inter-hop gap excluded
+        assert!((c[&Execute] - 2.0).abs() < 1e-9);
+        assert!((t.e2e_ms() - 4.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn server_obs_records_into_model_histograms() {
+        use SpanKind::*;
+        let obs = ServerObs::new(
+            TraceOptions { sample_every: 1 },
+            vec!["resnet".into(), "vgg".into()],
+        );
+        obs.record(trace_with(&[
+            (Enqueue, 0),
+            (ShardPop, 2_000),
+            (BatchForm, 2_100),
+            (Execute, 7_100),
+            (PaceRelease, 7_200),
+            (Deliver, 7_300),
+        ]));
+        let lat = obs.model_lat(0).unwrap();
+        assert_eq!(lat.e2e.count(), 1);
+        assert!((lat.queue.max() - 2.0).abs() < 1e-9);
+        assert!((lat.exec.max() - 5.0).abs() < 1e-9);
+        assert!(obs.model_lat(1).unwrap().e2e.is_empty());
+        assert_eq!(obs.traced_count(), 1);
+        assert_eq!(obs.traces().len(), 1);
+        assert!(!obs.truncated());
+    }
+
+    #[test]
+    fn out_of_range_model_is_ignored() {
+        let obs = ServerObs::new(TraceOptions { sample_every: 1 }, vec!["m".into()]);
+        let mut t = trace_with(&[(SpanKind::Enqueue, 0)]);
+        t.model = 9;
+        obs.record(t);
+        assert_eq!(obs.traced_count(), 0);
+    }
+}

@@ -273,6 +273,51 @@ impl LiveServer {
         }
     }
 
+    /// Emit the live front's metrics under the canonical registry
+    /// names: the current core's metrics with the retired cores' totals
+    /// folded in, so the serving counters stay *monotonic across hot
+    /// swaps* (a swap installs a fresh core whose counters start at 0),
+    /// plus the swap counter itself.
+    pub fn collect_metrics(&self, out: &mut Vec<crate::obs::Metric>) {
+        use crate::obs::{Metric, MetricValue};
+        let cur = self.server();
+        let mut inner = Vec::new();
+        cur.collect_metrics(&mut inner);
+        for m in &mut inner {
+            let add = match m.name.as_str() {
+                "graft_serving_served_total" => {
+                    self.retired_served.load(Ordering::Relaxed)
+                }
+                "graft_serving_dropped_total" => {
+                    self.retired_dropped.load(Ordering::Relaxed)
+                }
+                "graft_serving_batches_total" => {
+                    self.retired_batches.load(Ordering::Relaxed)
+                }
+                _ => 0,
+            };
+            if add > 0 {
+                if let MetricValue::Counter(v) = &mut m.value {
+                    *v += add;
+                }
+            }
+        }
+        out.append(&mut inner);
+        // rejected is per-stage labeled; retired cores contribute one
+        // extra series so `counter_sum` matches `totals().rejected`
+        let rr = self.retired_rejected.load(Ordering::Relaxed);
+        if rr > 0 {
+            out.push(
+                Metric::counter("graft_queue_rejected_total", rr)
+                    .with_label("stage", "retired"),
+            );
+        }
+        out.push(Metric::counter(
+            "graft_transition_swaps_total",
+            self.swaps.load(Ordering::Relaxed),
+        ));
+    }
+
     /// Hot-swap to `new_plan`: prepare the new core, switch the routing
     /// atomically, drain the old core gracefully.  In-flight requests
     /// finish on the old core (their reply channels are per-request, so

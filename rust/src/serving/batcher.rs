@@ -21,18 +21,16 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::util::lock::{lock_counted, wait_recover, wait_timeout_recover};
 
-/// Process-wide monotonic epoch for the lock-free arrival-rate EWMA
-/// (an `Instant` cannot live in an atomic, so arrivals are stamped as
-/// microseconds since the first use).
+/// Monotonic stamp for the lock-free arrival-rate EWMA, on the same
+/// process-wide epoch as span timestamps ([`crate::obs::now_us`]).
 fn epoch_us() -> u64 {
-    static EPOCH: OnceLock<Instant> = OnceLock::new();
     // +1 so a stamp of 0 can mean "no arrival recorded yet"
-    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64 + 1
+    crate::obs::now_us() + 1
 }
 
 /// An item travelling through the serving pipeline.

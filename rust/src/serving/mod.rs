@@ -25,4 +25,5 @@ pub use server::{
     ExecutorMode, FragmentExecutor, KillWorker, MockExecutor, RequestSink,
     Server, ServerCounters, ServerOptions,
 };
+pub use crate::obs::{ServerObs, SpanKind, TraceOptions};
 pub use tcp::{FrontOptions, RetryPolicy, TcpClient, TcpFront};

@@ -43,6 +43,7 @@ use super::batcher::{BatchQueue, ShardedBatchQueue, WorkItem};
 use super::health::HealthRegistry;
 use super::messages::{Request, Response};
 use crate::coordinator::plan::ExecutionPlan;
+use crate::obs::{Metric, ServerObs, SpanKind, Trace, TraceOptions};
 use crate::profiler::{Alloc, CostModel, FragmentId};
 use crate::runtime::{Engine, ExecOutput};
 use crate::util::lock::{
@@ -134,6 +135,10 @@ pub struct ServerOptions {
     /// the adaptive window always stays within the SLO headroom).  Off
     /// by default: the static window remains the reference behaviour.
     pub adaptive_window: bool,
+    /// Per-request tracing (deterministic sampling; off by default).
+    /// Sampled requests carry a span log through every pipeline hop;
+    /// finished traces feed the server's [`ServerObs`] histograms.
+    pub trace: TraceOptions,
 }
 
 impl Default for ServerOptions {
@@ -143,6 +148,7 @@ impl Default for ServerOptions {
             drop_on_slo: true,
             mode: ExecutorMode::default(),
             adaptive_window: false,
+            trace: TraceOptions::default(),
         }
     }
 }
@@ -153,6 +159,9 @@ struct Ctx {
     seq: u32,
     upstream_ms: f64,
     reply: mpsc::Sender<Response>,
+    /// Sampled span log (None for untraced requests).  Boxed so the
+    /// unsampled common case pays one pointer, not the span vector.
+    trace: Option<Box<Trace>>,
 }
 
 /// A stage's queue: single-lock reference queue (Threads mode) or
@@ -404,6 +413,12 @@ pub struct Server {
     pub counters: Arc<ServerCounters>,
     /// Failure ledger: instance/GPU deaths, heartbeats, epochs.
     health: Arc<HealthRegistry>,
+    /// Tracing sink: sampled span logs + per-model latency histograms.
+    obs: Arc<ServerObs>,
+    /// The pacing scale this core runs under (0 = pacing off); the
+    /// replan controller needs it to put the modeled envelope and the
+    /// observed wall-clock latencies on the same axis.
+    time_scale: f64,
 }
 
 impl Server {
@@ -421,12 +436,20 @@ impl Server {
             plan.placed_gpus().unwrap_or(0),
         ));
         let health = Arc::new(HealthRegistry::default());
+        let obs = Arc::new(ServerObs::new(
+            opts.trace,
+            cm.config()
+                .model_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        ));
         match opts.mode {
             ExecutorMode::Threads => Self::start_threads(
-                executor, cm, opts, stages, routes, counters, health,
+                executor, cm, opts, stages, routes, counters, health, obs,
             ),
             ExecutorMode::Pool => Self::start_pool(
-                executor, cm, opts, stages, routes, counters, health,
+                executor, cm, opts, stages, routes, counters, health, obs,
             ),
         }
     }
@@ -440,6 +463,7 @@ impl Server {
         routes: HashMap<u32, usize>,
         counters: Arc<ServerCounters>,
         health: Arc<HealthRegistry>,
+        obs: Arc<ServerObs>,
     ) -> Server {
         let mut handles = Vec::new();
         for (idx, stage) in stages.iter().enumerate() {
@@ -454,6 +478,7 @@ impl Server {
                 let cm = cm.clone();
                 let counters = counters.clone();
                 let health = health.clone();
+                let obs = obs.clone();
                 let h = std::thread::Builder::new()
                     .name(format!("graft-inst-{idx}.{inst}"))
                     // modest stacks keep thread-per-instance viable as a
@@ -467,6 +492,7 @@ impl Server {
                             opts,
                             counters: &counters,
                             health: &health,
+                            obs: &obs,
                             notify: None,
                         };
                         instance_loop(idx, inst as usize, gpu, &env);
@@ -484,6 +510,8 @@ impl Server {
             pool: None,
             counters,
             health,
+            obs,
+            time_scale: opts.time_scale,
         }
     }
 
@@ -496,6 +524,7 @@ impl Server {
         routes: HashMap<u32, usize>,
         counters: Arc<ServerCounters>,
         health: Arc<HealthRegistry>,
+        obs: Arc<ServerObs>,
     ) -> Server {
         // GPU-affinity slot order: instances placed on the same GPU are
         // contiguous, so the even worker→cursor split below hands each
@@ -537,6 +566,7 @@ impl Server {
             let cm = cm.clone();
             let counters = counters.clone();
             let health = health.clone();
+            let obs = obs.clone();
             let cursor = if n_slots == 0 { 0 } else { w * n_slots / workers };
             let h = std::thread::Builder::new()
                 .name(format!("graft-pool-{w}"))
@@ -548,6 +578,7 @@ impl Server {
                         opts,
                         counters: &counters,
                         health: &health,
+                        obs: &obs,
                         notify: Some(&pool.notifier),
                     };
                     pool_worker(&pool, &env, cursor);
@@ -564,6 +595,8 @@ impl Server {
             pool: Some(pool),
             counters,
             health,
+            obs,
+            time_scale: opts.time_scale,
         }
     }
 
@@ -588,6 +621,16 @@ impl Server {
                     ));
                     return;
                 }
+                // deterministic sampling: identical across runs and
+                // executor modes, no effect on the response path
+                let trace = if self.obs.opts.sample(req.client_id, req.seq) {
+                    let mut t =
+                        Trace::new(req.client_id, req.seq, req.model);
+                    t.stamp(SpanKind::Enqueue);
+                    Some(Box::new(t))
+                } else {
+                    None
+                };
                 let refused = stage.queue.push_or_return(WorkItem {
                     payload: req.payload,
                     server_arrival: Instant::now(),
@@ -598,6 +641,7 @@ impl Server {
                         seq: req.seq,
                         upstream_ms: req.upstream_ms,
                         reply,
+                        trace,
                     },
                 });
                 match refused {
@@ -683,6 +727,127 @@ impl Server {
     /// The server's failure ledger (instance/GPU deaths, heartbeats).
     pub fn health(&self) -> Arc<HealthRegistry> {
         self.health.clone()
+    }
+
+    /// The server's tracing sink (sampled span logs + per-model
+    /// latency histograms).
+    pub fn obs(&self) -> Arc<ServerObs> {
+        self.obs.clone()
+    }
+
+    /// The pacing scale this core was started with (0 = pacing off).
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
+    }
+
+    /// Emit this server's metrics under the canonical registry names —
+    /// the ONE place serving/queue/health/trace counters are named, so
+    /// the `[serve]` stats line, bench JSON dumps and the `/metrics`
+    /// endpoint can never disagree.  Registered into a
+    /// [`crate::obs::MetricsRegistry`] by the embedding code.
+    pub fn collect_metrics(&self, out: &mut Vec<Metric>) {
+        let c = |n: &str| format!("graft_serving_{n}_total");
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        out.push(Metric::counter(c("served"), load(&self.counters.served)));
+        out.push(Metric::counter(c("dropped"), load(&self.counters.dropped)));
+        out.push(Metric::counter(c("batches"), load(&self.counters.batches)));
+        out.push(Metric::counter(
+            c("batched_requests"),
+            load(&self.counters.batched_requests),
+        ));
+        out.push(Metric::counter(
+            c("budget_violations"),
+            load(&self.counters.budget_violations),
+        ));
+        out.push(Metric::counter(c("rejected"), load(&self.counters.rejected)));
+        out.push(Metric::counter(c("evicted"), load(&self.counters.evicted)));
+        out.push(Metric::counter(
+            c("exec_panics"),
+            load(&self.counters.exec_panics),
+        ));
+        out.push(Metric::counter(
+            c("poison_recoveries"),
+            self.poison_recoveries(),
+        ));
+        for (i, s) in self.stages.iter().enumerate() {
+            let m = s.queue.metrics();
+            let stage = i.to_string();
+            out.push(
+                Metric::counter("graft_queue_pushed_total", m.pushed())
+                    .with_label("stage", &stage),
+            );
+            out.push(
+                Metric::counter("graft_queue_popped_total", m.popped())
+                    .with_label("stage", &stage),
+            );
+            out.push(
+                Metric::counter("graft_queue_rejected_total", m.rejected())
+                    .with_label("stage", &stage),
+            );
+            out.push(
+                Metric::gauge("graft_queue_depth", s.queue.len() as f64)
+                    .with_label("stage", &stage),
+            );
+            out.push(
+                Metric::gauge(
+                    "graft_queue_arrival_rate_rps",
+                    m.arrival_rate_rps(),
+                )
+                .with_label("stage", &stage),
+            );
+        }
+        for (gpu, busy) in self.counters.gpu_busy_share_us.iter().enumerate() {
+            out.push(
+                Metric::counter("graft_gpu_busy_share_us_total", load(busy))
+                    .with_label("gpu", gpu.to_string()),
+            );
+        }
+        // health ledger
+        out.push(Metric::counter(
+            "graft_health_failure_epoch_total",
+            self.health.failure_epoch(),
+        ));
+        out.push(Metric::counter(
+            "graft_health_recovery_epoch_total",
+            self.health.recovery_epoch(),
+        ));
+        out.push(Metric::gauge(
+            "graft_health_dead_instances",
+            self.health.dead_instance_count() as f64,
+        ));
+        out.push(Metric::gauge(
+            "graft_health_dead_gpus",
+            self.health.failed_gpus().len() as f64,
+        ));
+        out.push(Metric::gauge(
+            "graft_health_degraded_gpus",
+            self.health.gpu_degradations().len() as f64,
+        ));
+        for (gpu, score) in self.health.gpu_scores() {
+            out.push(
+                Metric::gauge("graft_health_gpu_score", score)
+                    .with_label("gpu", gpu.to_string()),
+            );
+        }
+        // tracing: finished sampled traces + per-model components
+        out.push(Metric::counter(
+            "graft_trace_requests_total",
+            self.obs.traced_count(),
+        ));
+        for (_, name, lat) in self.obs.models() {
+            if lat.e2e.is_empty() {
+                continue;
+            }
+            for (comp, h) in lat.components() {
+                out.push(
+                    Metric::histogram(
+                        format!("graft_trace_{comp}_ms"),
+                        h.snapshot(),
+                    )
+                    .with_label("model", name),
+                );
+            }
+        }
     }
 
     /// Instance counts per stage, in stage order (chaos targeting).
@@ -1000,6 +1165,7 @@ struct ExecEnv<'a> {
     opts: ServerOptions,
     counters: &'a ServerCounters,
     health: &'a HealthRegistry,
+    obs: &'a ServerObs,
     /// Pool notifier for inter-stage forwards (None in Threads mode:
     /// the BatchQueue condvar wakes the consumer directly).
     notify: Option<&'a Notifier>,
@@ -1021,8 +1187,13 @@ fn bucket_for(cm: &CostModel, n: usize) -> u32 {
 fn slo_filter(
     env: &ExecEnv<'_>,
     stage: &Stage,
-    batch: Vec<WorkItem<Ctx>>,
+    mut batch: Vec<WorkItem<Ctx>>,
 ) -> Vec<WorkItem<Ctx>> {
+    for item in batch.iter_mut() {
+        if let Some(t) = item.ctx.trace.as_deref_mut() {
+            t.stamp(SpanKind::BatchForm);
+        }
+    }
     let exec_ms_probe = env.cm.latency_ms(
         stage.frag,
         bucket_for(env.cm, batch.len()),
@@ -1081,7 +1252,7 @@ fn execute_batch(
     stage_idx: usize,
     inst: usize,
     gpu: u32,
-    live: &[WorkItem<Ctx>],
+    live: &mut [WorkItem<Ctx>],
 ) -> (Result<ExecOutput>, f64, bool) {
     let rows: Vec<Vec<f32>> = live.iter().map(|i| i.payload.clone()).collect();
     let exec_ms = env.cm.latency_ms(
@@ -1119,6 +1290,11 @@ fn execute_batch(
         .batched_requests
         .fetch_add(rows.len() as u64, Ordering::Relaxed);
     env.counters.record_gpu_busy(gpu, exec_ms, stage.alloc.share);
+    for item in live.iter_mut() {
+        if let Some(t) = item.ctx.trace.as_deref_mut() {
+            t.stamp(SpanKind::Execute);
+        }
+    }
     (out, exec_ms, kill)
 }
 
@@ -1127,10 +1303,17 @@ fn execute_batch(
 fn deliver(
     env: &ExecEnv<'_>,
     stage: &Stage,
-    live: Vec<WorkItem<Ctx>>,
+    mut live: Vec<WorkItem<Ctx>>,
     out: Result<ExecOutput>,
     exec_ms: f64,
 ) {
+    // deliver() runs after the pacing gate in both executor modes
+    // (Threads: the post-execute sleep; Pool: the wheel's BatchDone)
+    for item in live.iter_mut() {
+        if let Some(t) = item.ctx.trace.as_deref_mut() {
+            t.stamp(SpanKind::PaceRelease);
+        }
+    }
     // every item of this batch reaches a final outcome below (respond,
     // forward, or drop) — count them all as completed for the drain
     // accounting once the outcomes are delivered
@@ -1153,7 +1336,7 @@ fn deliver(
         }
     };
     let mut forwarded = false;
-    for (i, item) in live.into_iter().enumerate() {
+    for (i, mut item) in live.into_iter().enumerate() {
         let row = out.data[i * out.dim_out..(i + 1) * out.dim_out].to_vec();
         let acc = item.accumulated_ms + exec_ms;
         match stage.next {
@@ -1171,6 +1354,12 @@ fn deliver(
                         upstream + acc,
                     ));
                     continue;
+                }
+                if let Some(t) = item.ctx.trace.as_deref_mut() {
+                    // the hop closes with Deliver; the next hop opens
+                    // with Enqueue at the downstream push
+                    t.stamp(SpanKind::Deliver);
+                    t.stamp(SpanKind::Enqueue);
                 }
                 let refused = ns.queue.push_or_return(WorkItem {
                     payload: row,
@@ -1231,6 +1420,13 @@ fn deliver(
                     dropped: false,
                     output: row,
                 });
+                // only *served* requests feed the trace sink; drop and
+                // reject paths discard their trace, so tracing can
+                // never perturb the response stream
+                if let Some(mut t) = item.ctx.trace.take() {
+                    t.stamp(SpanKind::Deliver);
+                    env.obs.record(*t);
+                }
             }
         }
     }
@@ -1268,17 +1464,22 @@ fn instance_loop(stage_idx: usize, inst: usize, gpu: u32, env: &ExecEnv<'_>) {
         } else {
             queue.pop_batch_window(stage.alloc.batch as usize, window)
         };
-        let Some(batch) = batch else { break };
+        let Some(mut batch) = batch else { break };
         if batch.is_empty() {
             continue;
         }
-        let live = slo_filter(env, stage, batch);
+        for item in batch.iter_mut() {
+            if let Some(t) = item.ctx.trace.as_deref_mut() {
+                t.stamp(SpanKind::ShardPop);
+            }
+        }
+        let mut live = slo_filter(env, stage, batch);
         if live.is_empty() {
             continue;
         }
         let t0 = Instant::now();
         let (out, exec_ms, kill) =
-            execute_batch(env, stage, stage_idx, inst, gpu, &live);
+            execute_batch(env, stage, stage_idx, inst, gpu, &mut live);
         // pace to the modeled MPS latency
         if env.opts.time_scale > 0.0 {
             let target = exec_ms * env.opts.time_scale / 1e3;
@@ -1713,18 +1914,23 @@ fn run_pool_batch(
     pool: &PoolShared,
     env: &ExecEnv<'_>,
     slot_idx: usize,
-    batch: Vec<WorkItem<Ctx>>,
+    mut batch: Vec<WorkItem<Ctx>>,
 ) {
     let slot = &pool.slots[slot_idx];
     let stage = &pool.stages[slot.stage];
-    let live = slo_filter(env, stage, batch);
+    for item in batch.iter_mut() {
+        if let Some(t) = item.ctx.trace.as_deref_mut() {
+            t.stamp(SpanKind::ShardPop);
+        }
+    }
+    let mut live = slo_filter(env, stage, batch);
     if live.is_empty() {
         free_slot(pool, env, slot_idx);
         return;
     }
     let t0 = Instant::now();
     let (out, exec_ms, kill) =
-        execute_batch(env, stage, slot.stage, slot.shard, slot.gpu, &live);
+        execute_batch(env, stage, slot.stage, slot.shard, slot.gpu, &mut live);
     if kill {
         // injected/real worker death: retire the instance (closing its
         // shard reroutes the backlog), doom the slot, deliver the

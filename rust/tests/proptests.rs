@@ -1449,3 +1449,157 @@ fn prop_worker_kill_contained_survivors_serve_exactly_once() {
         }
     }
 }
+
+/// The log-bucketed streaming histogram stays within its documented 1%
+/// relative error of the exact-sample oracle, across distributions with
+/// very different shapes (uniform, heavy-tailed, bimodal).
+#[test]
+fn prop_histogram_tracks_exact_percentiles_within_one_percent() {
+    use graft::metrics::LatencyStats;
+    use graft::obs::Histogram;
+
+    for case in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(11_000 + case);
+        let n = 200 + rng.below(5000);
+        let shape = rng.below(3);
+        let h = Histogram::new();
+        let mut exact = LatencyStats::new();
+        for _ in 0..n {
+            // keep values inside the interior bucket range [1e-3, 1e7)
+            let v = match shape {
+                // uniform milliseconds
+                0 => rng.range(0.05, 500.0),
+                // heavy tail: exp of a normal, spans several decades
+                1 => (rng.normal() * 2.0).exp().clamp(1e-2, 1e6),
+                // bimodal: fast path vs slow path
+                _ => {
+                    if rng.below(4) == 0 {
+                        rng.range(80.0, 120.0)
+                    } else {
+                        rng.range(0.5, 2.0)
+                    }
+                }
+            };
+            h.record(v);
+            exact.record(v);
+        }
+        assert_eq!(h.count(), n as u64, "case {case}");
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let approx = h.percentile(p);
+            let truth = exact.percentile(p);
+            assert!(
+                (approx - truth).abs() / truth <= 0.01,
+                "case {case} shape {shape} p{p}: approx {approx} vs exact {truth}"
+            );
+        }
+        // extremes are exact, mean within the same bound
+        assert_eq!(h.percentile(0.0), exact.percentile(0.0), "case {case}");
+        assert_eq!(h.percentile(100.0), exact.percentile(100.0), "case {case}");
+        assert!(
+            (h.mean() - exact.mean()).abs() / exact.mean() <= 0.01,
+            "case {case}"
+        );
+    }
+}
+
+/// Sampled tracing is pure observation: for any sampling rate the
+/// response multiset (exact output bits, drop verdicts) is identical to
+/// an untraced run of the same workload.
+#[test]
+fn prop_sampled_tracing_never_changes_responses() {
+    use std::sync::mpsc;
+
+    use graft::serving::{ExecutorMode, Server, ServerOptions, TraceOptions};
+
+    let _wd = common::watchdog(
+        "prop_tracing_response_invariance",
+        Duration::from_secs(240),
+    );
+    let cm = cm();
+    let mi = cm.model_index("inc").unwrap();
+    let dims = cm.config().models[mi].dims.clone();
+    let specs: [(u32, usize, f64, f64); 3] =
+        [(0, 2, 150.0, 30.0), (1, 3, 150.0, 30.0), (2, 3, 150.0, 30.0)];
+
+    for case in 0..3u64 {
+        for mode in [ExecutorMode::Threads, ExecutorMode::Pool] {
+            let mut run = |sample_every: u32| -> Vec<(u32, u32, bool, Vec<u32>)> {
+                let mut rng = Rng::seed_from_u64(12_000 + case);
+                let plan = common::plan_for(&cm, "inc", &specs);
+                let server = Server::start(
+                    common::mock_executor(&cm),
+                    &cm,
+                    &plan,
+                    ServerOptions {
+                        time_scale: 0.0,
+                        drop_on_slo: false,
+                        mode,
+                        trace: TraceOptions { sample_every },
+                        ..Default::default()
+                    },
+                );
+                let (tx, rx) = mpsc::channel();
+                let mut total = 0;
+                for c in 0..3u32 {
+                    let p = if c == 0 { 2 } else { 3 };
+                    let m = 5 + rng.below(15) as u32;
+                    for seq in 0..m {
+                        server.submit(
+                            Request {
+                                client_id: c,
+                                model: mi as u16,
+                                p: p as u16,
+                                seq,
+                                t_capture_ms: 0.0,
+                                upstream_ms: 0.0,
+                                budget_ms: 1e9,
+                                payload: (0..dims[p])
+                                    .map(|_| rng.normal() as f32)
+                                    .collect(),
+                            },
+                            tx.clone(),
+                        );
+                        total += 1;
+                    }
+                }
+                drop(tx);
+                let mut got: Vec<(u32, u32, bool, Vec<u32>)> = rx
+                    .iter()
+                    .take(total)
+                    .map(|r| {
+                        (
+                            r.client_id,
+                            r.seq,
+                            r.dropped,
+                            r.output.iter().map(|x| x.to_bits()).collect(),
+                        )
+                    })
+                    .collect();
+                assert_eq!(got.len(), total, "case {case} {mode:?}");
+                let obs = server.obs();
+                server.shutdown();
+                if sample_every == 1 {
+                    // everything sampled → everything traced
+                    assert_eq!(
+                        obs.traced_count(),
+                        total as u64,
+                        "case {case} {mode:?}"
+                    );
+                } else if sample_every == 0 {
+                    assert_eq!(obs.traced_count(), 0, "case {case} {mode:?}");
+                }
+                got.sort();
+                got
+            };
+            let untraced = run(0);
+            for sample_every in [1u32, 3u32] {
+                assert_eq!(
+                    untraced,
+                    run(sample_every),
+                    "case {case} {mode:?} sample_every {sample_every}: \
+                     tracing changed responses"
+                );
+            }
+        }
+    }
+}

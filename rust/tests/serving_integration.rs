@@ -12,7 +12,8 @@ use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use graft::serving::{
-    ExecutorMode, Request, Server, ServerOptions, TcpClient, TcpFront,
+    ExecutorMode, Request, Server, ServerOptions, SpanKind, TcpClient,
+    TcpFront, TraceOptions,
 };
 use graft::util::Rng;
 
@@ -353,6 +354,94 @@ fn batching_actually_forms_batches_threads() {
 #[test]
 fn batching_actually_forms_batches_pool() {
     batching_forms_batches(ExecutorMode::Pool);
+}
+
+/// Run a small mixed workload with every request traced and return the
+/// per-request span-kind multiset, keyed by (client_id, seq).
+fn traced_span_kinds(
+    mode: ExecutorMode,
+) -> std::collections::BTreeMap<(u32, u32), Vec<SpanKind>> {
+    let cm = cm();
+    // client 0 takes the two-hop path (alignment stage at p=2, then the
+    // shared stage), clients 1 and 2 feed the shared stage directly
+    let plan = plan_for(
+        &cm,
+        "inc",
+        &[(0, 2, 150.0, 30.0), (1, 3, 150.0, 30.0), (2, 3, 150.0, 30.0)],
+    );
+    let server = Server::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        ServerOptions {
+            time_scale: 0.0,
+            drop_on_slo: false,
+            mode,
+            trace: TraceOptions { sample_every: 1 },
+            ..Default::default()
+        },
+    );
+    let mi = cm.model_index("inc").unwrap();
+    let dims = &cm.config().models[mi].dims;
+    let (tx, rx) = mpsc::channel();
+    let total = 3 * 10;
+    for c in 0..3u32 {
+        for seq in 0..10u32 {
+            let p = if c == 0 { 2 } else { 3 };
+            server.submit(
+                Request {
+                    client_id: c,
+                    model: mi as u16,
+                    p: p as u16,
+                    seq,
+                    t_capture_ms: 0.0,
+                    upstream_ms: 0.0,
+                    budget_ms: 1e9,
+                    payload: vec![0.5; dims[p]],
+                },
+                tx.clone(),
+            );
+        }
+    }
+    drop(tx);
+    assert_eq!(rx.iter().take(total).count(), total);
+    let obs = server.obs();
+    // shutdown joins the workers, so every trace has been recorded
+    server.shutdown();
+    assert_eq!(obs.traced_count(), total as u64, "{mode:?}");
+    let mut by_req = std::collections::BTreeMap::new();
+    for t in obs.traces() {
+        // timestamps are monotone along the span log
+        assert!(
+            t.spans.windows(2).all(|w| w[0].t_us <= w[1].t_us),
+            "{mode:?}: non-monotone trace {t:?}"
+        );
+        let mut kinds: Vec<SpanKind> = t.spans.iter().map(|s| s.kind).collect();
+        kinds.sort();
+        by_req.insert((t.client_id, t.seq), kinds);
+    }
+    assert_eq!(by_req.len(), total, "{mode:?}");
+    by_req
+}
+
+/// Both executor cores must stamp the same span-kind multiset for every
+/// request: the six within-hop kinds once per hop, twice for the
+/// two-hop (alignment → shared) path.
+#[test]
+fn span_kinds_identical_across_modes() {
+    let _wd = watchdog("span_kinds_across_modes", Duration::from_secs(120));
+    let threads = traced_span_kinds(ExecutorMode::Threads);
+    let pool = traced_span_kinds(ExecutorMode::Pool);
+    assert_eq!(threads, pool, "span-kind multisets diverged across modes");
+    for ((client, seq), kinds) in &threads {
+        let hops = if *client == 0 { 2 } else { 1 };
+        let mut want: Vec<SpanKind> = SpanKind::ALL
+            .iter()
+            .flat_map(|&k| std::iter::repeat(k).take(hops))
+            .collect();
+        want.sort();
+        assert_eq!(kinds, &want, "client {client} seq {seq}");
+    }
 }
 
 #[test]

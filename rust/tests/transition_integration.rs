@@ -396,6 +396,7 @@ fn adaptive_batch_window_serves_the_same_workload() {
             drop_on_slo: false,
             mode: ExecutorMode::Pool,
             adaptive_window: true,
+            ..Default::default()
         },
     );
     let mi = cm.model_index("vgg").unwrap();
@@ -427,4 +428,93 @@ fn adaptive_batch_window_serves_the_same_workload() {
         "arrival-rate EWMA never populated: {rates:?}"
     );
     live.shutdown();
+}
+
+/// The controller's second drift signal: observed e2e latency blowing
+/// past the planned wall-clock envelope fires a replan even when the
+/// arrival counters look perfectly on-plan.
+#[test]
+fn controller_replans_on_observed_latency_drift() {
+    use graft::obs::{Span, SpanKind, Trace};
+    use graft::serving::TraceOptions;
+
+    let _wd = watchdog("controller_latency_drift", Duration::from_secs(180));
+    let cm = cm();
+    let mi = cm.model_index("inc").unwrap();
+    let specs: Vec<FragmentSpec> = (0..4)
+        .map(|i| {
+            FragmentSpec::single(ClientId(i), mi, 3, 130.0 + i as f64, 1.0)
+        })
+        .collect();
+    let sched =
+        Arc::new(Scheduler::new(cm.clone(), SchedulerOptions::default()));
+    let (plan, _) = sched.plan(&specs);
+    let live = Arc::new(LiveServer::start(
+        mock_executor(&cm),
+        &cm,
+        &plan,
+        // pacing on: the modeled envelope has a wall-clock meaning,
+        // which is the precondition for the latency-drift check
+        ServerOptions {
+            time_scale: 0.02,
+            drop_on_slo: false,
+            mode: ExecutorMode::Pool,
+            trace: TraceOptions { sample_every: 1 },
+            ..Default::default()
+        },
+    ));
+    let ctrl = ReplanController::new(
+        sched,
+        live.clone(),
+        specs,
+        ControllerOptions {
+            latency_drift_factor: Some(1.5),
+            latency_min_samples: 20,
+            rate_clamp: (0.2, 10.0),
+            ..Default::default()
+        },
+    );
+    // feed the observability sink traces whose e2e latency dwarfs any
+    // plausible envelope — the arrival counters stay empty throughout
+    let obs = live.server().obs();
+    for seq in 0..60u32 {
+        let base = 1_000 + seq as u64;
+        obs.record(Trace {
+            client_id: 0,
+            seq,
+            model: mi as u16,
+            spans: vec![
+                Span { kind: SpanKind::Enqueue, t_us: base },
+                Span { kind: SpanKind::ShardPop, t_us: base + 50_000_000 },
+                Span { kind: SpanKind::Deliver, t_us: base + 60_000_000 },
+            ],
+        });
+    }
+    match ctrl.tick() {
+        TickOutcome::LatencyReplanned { model, e2e_p99_ms, envelope_ms, report } => {
+            assert_eq!(model, "inc");
+            assert!(
+                e2e_p99_ms > envelope_ms * 1.5,
+                "p99 {e2e_p99_ms} vs envelope {envelope_ms}"
+            );
+            assert_eq!(report.old_rejected, 0);
+            assert_eq!(live.swap_count(), 1);
+            // the latency signal argued for more capacity
+            assert!(ctrl.demands().iter().all(|s| s.rate_rps > 1.0));
+            let t = diff_plans(&plan, &live.plan());
+            assert!(
+                t.updated_sets + t.added_sets + t.removed_sets > 0,
+                "deployed plan did not change"
+            );
+        }
+        other => panic!("expected a latency replan, got {other:?}"),
+    }
+    // the swap installed a fresh core with empty histograms: the next
+    // tick must fall through to the arrival path, not re-fire
+    assert!(matches!(ctrl.tick(), TickOutcome::Baseline));
+    drop(ctrl);
+    match Arc::try_unwrap(live) {
+        Ok(l) => l.shutdown(),
+        Err(_) => panic!("live server still shared"),
+    }
 }

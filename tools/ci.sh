@@ -6,10 +6,12 @@
 # self-checks), serving
 # (n=100, both executors), placement (n=200, integrated-vs-oracle GPU
 # counts + cap checks), transition (n=200, live hot-swap: zero-drop
-# + delta-vs-repack migration bounds) and faults (n=200, single-GPU
+# + delta-vs-repack migration bounds), faults (n=200, single-GPU
 # failure: zero silent losses + emergency replan avoids the dead GPU,
 # plus the predictive-vs-reactive comparison: health-score-driven
-# proactive migration strictly reduces degraded-window drops).
+# proactive migration strictly reduces degraded-window drops) and the
+# observability round-trip (bench-serving schema v3 attribution +
+# tracing-overhead verdict, obs-report /metrics endpoint scrape).
 #
 #   tools/ci.sh            full pipeline
 #   tools/ci.sh --fast     build + test only
@@ -93,9 +95,46 @@ grep -q '"planner_shards"' target/BENCH_scheduler_smoke.json
 grep -q '"shards_ok":true' target/BENCH_scheduler_smoke.json
 
 echo "== serving bench smoke (n=100, both executors) =="
+# schema v3 self-checks inside the bench: zero lost responses and the
+# tracing-overhead bail (sampled tracing must not inflate pool p99 by
+# >5% + 0.5 ms at the largest size); the greps assert the
+# registry-snapshot counter dump, the SLO-budget attribution (with a
+# dominant-component flag per model) and the overhead verdict landed
 timeout 600 cargo run --release -p graft -- bench-serving \
     --sizes 100 --requests 2000 --out target/BENCH_serving_smoke.json
 test -s target/BENCH_serving_smoke.json
+grep -q '"counters"' target/BENCH_serving_smoke.json
+grep -q '"graft_serving_served_total"' target/BENCH_serving_smoke.json
+grep -q '"attribution"' target/BENCH_serving_smoke.json
+grep -q '"dominant"' target/BENCH_serving_smoke.json
+grep -q '"trace_overhead_ok":true' target/BENCH_serving_smoke.json
+
+echo "== metrics exposition smoke (obs-report endpoint) =="
+# drive a synthetic traced run, serve its registry snapshot over HTTP,
+# and scrape it: the exposition must carry at least one counter and
+# one histogram bucket line
+OBS_PORT="${OBS_PORT:-9464}"
+timeout 120 cargo run --release -p graft -- obs-report \
+    --clients 32 --requests 800 \
+    --out target/obs_report_smoke.prom \
+    --metrics-addr "127.0.0.1:${OBS_PORT}" --serve-for 10 &
+OBS_PID=$!
+SCRAPED=0
+for _ in $(seq 1 100); do
+    if curl -sf "http://127.0.0.1:${OBS_PORT}/metrics" \
+        -o target/obs_scrape_smoke.prom 2>/dev/null; then
+        SCRAPED=1
+        break
+    fi
+    sleep 0.25
+done
+wait "$OBS_PID"
+[[ "$SCRAPED" == "1" ]] || { echo "ci: metrics endpoint never came up"; exit 1; }
+grep -q '_total ' target/obs_scrape_smoke.prom
+grep -q '_bucket{.*le="' target/obs_scrape_smoke.prom
+# the --out exposition is the same snapshot written to disk
+grep -q '_total ' target/obs_report_smoke.prom
+grep -q '_bucket{.*le="' target/obs_report_smoke.prom
 
 echo "== placement bench smoke (n=200, integrated vs post-hoc FFD) =="
 timeout 600 cargo run --release -p graft -- bench-placement \
